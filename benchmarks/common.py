@@ -1,0 +1,31 @@
+"""Shared benchmark plumbing."""
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+os.makedirs(RESULTS_DIR, exist_ok=True)
+
+
+def save_json(name, data):
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, default=str)
+    return path
+
+
+def timeit(fn, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    try:
+        import jax
+        jax.block_until_ready(out)
+    except Exception:
+        pass
+    return (time.perf_counter() - t0) / iters * 1e6  # us

@@ -1,0 +1,99 @@
+"""§Roofline — three-term roofline table from the dry-run artifacts.
+
+  compute    = HLO_FLOPs / (chips * 197e12)        [s, per step]
+  memory     = HLO_bytes / (chips * 819e9)
+  collective = coll_bytes / (chips * 50e9)
+
+The dry-run stores loop-corrected PER-DEVICE totals (roofline_collect.py),
+so each term is simply per-device quantity / per-chip rate.  The table also
+reports MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (inference) and
+the usefulness ratio MODEL_FLOPS / (HLO_FLOPs * chips).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+from .common import RESULTS_DIR, save_json
+
+PEAK = 197e12        # bf16 FLOP/s per chip
+HBM = 819e9          # B/s per chip
+ICI = 50e9           # B/s per link (conservative: 1 link)
+
+DRYRUN = os.path.join(RESULTS_DIR, "dryrun.json")
+
+
+def model_flops(arch: str, shape: str) -> float:
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.configs import SHAPES, get_config
+    cfg = get_config(arch)
+    info = SHAPES[shape]
+    n = cfg.active_param_count()
+    if info["kind"] == "train":
+        tokens = info["global_batch"] * info["seq_len"]
+        return 6.0 * n * tokens
+    if info["kind"] == "prefill":
+        tokens = info["global_batch"] * info["seq_len"]
+        return 2.0 * n * tokens
+    return 2.0 * n * info["global_batch"]       # decode: 1 new token
+
+
+def run(emit=print, path: str = DRYRUN):
+    if not os.path.exists(path):
+        raise FileNotFoundError(path)
+    with open(path) as f:
+        data = json.load(f)
+
+    rows = []
+    emit("arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+         "model_flops,useful_ratio,note")
+    for key, e in sorted(data.items()):
+        if e.get("skipped"):
+            emit(f"{e['arch']},{e['shape']},-,-,-,-,skipped,,,{e['reason']}")
+            continue
+        if not e.get("ok"):
+            emit(f"{e['arch']},{e['shape']},{e.get('mesh')},-,-,-,FAILED,,,"
+                 f"{e.get('error', '')[:60]}")
+            continue
+        roof = e.get("roofline", {})
+        tot = roof.get("total")
+        if not tot:
+            continue
+        chips = e["devices"]
+        ct = tot["flops"] / PEAK
+        mt = tot["bytes"] / HBM
+        lt = tot["coll"] / ICI
+        dom = max(("compute", ct), ("memory", mt), ("collective", lt),
+                  key=lambda kv: kv[1])[0]
+        mf = model_flops(e["arch"], e["shape"])
+        useful = mf / max(tot["flops"] * chips, 1e-9)
+        note = _advice(dom, e)
+        rows.append({
+            "arch": e["arch"], "shape": e["shape"], "mesh": e["mesh"],
+            "chips": chips, "compute_s": ct, "memory_s": mt,
+            "collective_s": lt, "dominant": dom, "model_flops": mf,
+            "useful_ratio": useful,
+            "roofline_fraction": min(1.0, (mf / chips / PEAK)
+                                     / max(ct, mt, lt, 1e-12)),
+            "note": note,
+        })
+        emit(f"{e['arch']},{e['shape']},{e['mesh']},{ct:.4f},{mt:.4f},"
+             f"{lt:.4f},{dom},{mf:.3e},{useful:.3f},{note}")
+    save_json("roofline_table.json", rows)
+    return rows
+
+
+def _advice(dom: str, e: Dict) -> str:
+    kind = e.get("kind")
+    if dom == "collective":
+        return ("overlap TP collectives with compute / shrink with "
+                "reduce-scatter matmul fusion")
+    if dom == "memory":
+        if kind == "decode":
+            return "quantize KV cache or widen decode batch per chip"
+        return "fuse elementwise chains (generated kernels) / recompute less"
+    if kind == "train":
+        return "raise MFU: bigger microbatch or less remat recompute"
+    return "compute-bound: close to roofline; tune matmul tiling"

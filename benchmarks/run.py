@@ -1,0 +1,38 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  table1_correctness  — paper Table 1 (Comp@1 / Pass@1 by category)
+  table2_performance  — paper Table 2 (Fast_x by category, v5e model)
+  rq3_mhc             — paper §5.4 (mHC kernels + expert optimization)
+  roofline            — EXPERIMENTS.md §Roofline (reads dry-run artifacts)
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import sys
+
+from . import common  # noqa: F401  (sets sys.path)
+
+
+def main() -> None:
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "table1"):
+        from . import table1_correctness
+        table1_correctness.run()
+    if which in ("all", "table2"):
+        from . import table2_performance
+        table2_performance.run()
+    if which in ("all", "rq3"):
+        from . import rq3_mhc
+        rq3_mhc.run()
+    if which in ("all", "roofline"):
+        try:
+            from . import roofline
+            roofline.run()
+        except FileNotFoundError as e:
+            print(f"roofline: dry-run artifacts missing ({e}); run "
+                  f"PYTHONPATH=src python -m repro.launch.dryrun first")
+
+
+if __name__ == "__main__":
+    main()

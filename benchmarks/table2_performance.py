@@ -1,0 +1,76 @@
+"""Paper Table 2 — Fast_0.2 / Fast_0.8 / Fast_1.0 per category.
+
+Fast_x is reported from the deterministic v5e roofline model
+(bench/model.py): generated-kernel traffic is computed exactly from the DSL
+program at BENCH shapes; the eager baseline models the canonical
+framework-eager kernel sequence.  A CPU wall-clock sanity number for the
+reference op is printed per kernel (us_per_call).
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+
+import numpy as np
+
+from .common import save_json, timeit
+
+PAPER_TABLE2 = {
+    "activation": (100.0, 80.0, 40.0), "loss": (85.7, 85.7, 85.7),
+    "math": (83.3, 66.7, 66.7), "normalization": (50.0, 37.5, 37.5),
+    "optimizer": (100.0, 100.0, 100.0), "reduce": (100.0, 0.0, 0.0),
+    "pooling": (50.0, 0.0, 0.0),
+}
+
+
+def run(emit=print):
+    from repro.bench import suite
+    from repro.bench.model import (analyze_program, eager_traffic,
+                                   fast_ratio, _padded_shapes_for)
+    from repro.core.planner import generate, default_inputs
+
+    rows = []
+    for task in suite():
+        r = generate(task, verify=False)
+        if not r.comp_ok or r.artifact is None:
+            rows.append({"name": task.name, "category": task.category,
+                         "ratio": 0.0, "ok": False})
+            continue
+        prog = r.artifact.program
+        ratio = fast_ratio(task, prog)
+        gen = analyze_program(prog, _padded_shapes_for(prog, task.shapes))
+        eag = eager_traffic(task, task.shapes)
+        # CPU wall-clock of the numpy reference at check shapes (sanity)
+        inputs = default_inputs(task, task.check_shapes)
+        arrays = [inputs[tp.name] for tp in task.input_specs]
+        us = timeit(task.ref, *arrays, warmup=1, iters=2)
+        rows.append({
+            "name": task.name, "category": task.category, "ok": True,
+            "ratio": ratio,
+            "gen_bytes": gen.bytes_total, "eager_bytes": eag.bytes_total,
+            "gen_time_us": gen.time_s() * 1e6,
+            "eager_time_us": eag.time_s() * 1e6,
+            "backend": r.artifact.backend,
+        })
+        emit(f"table2,{task.name},{us:.1f},ratio={ratio:.2f};"
+             f"gen_us={gen.time_s()*1e6:.0f};eager_us={eag.time_s()*1e6:.0f}")
+
+    cats = defaultdict(list)
+    for row in rows:
+        cats[row["category"]].append(row["ratio"] if row["ok"] else 0.0)
+    emit("category,n,Fast0.2,Fast0.8,Fast1.0,paper(0.2/0.8/1.0)")
+    allr = []
+    for cat, ratios in sorted(cats.items()):
+        n = len(ratios)
+        f02 = 100 * sum(x >= 0.2 for x in ratios) / n
+        f08 = 100 * sum(x >= 0.8 for x in ratios) / n
+        f10 = 100 * sum(x >= 1.0 for x in ratios) / n
+        p = PAPER_TABLE2[cat]
+        emit(f"{cat},{n},{f02:.1f},{f08:.1f},{f10:.1f},"
+             f"{p[0]}/{p[1]}/{p[2]}")
+        allr.extend(ratios)
+    n = len(allr)
+    emit(f"TOTAL,{n},{100*sum(x >= 0.2 for x in allr)/n:.1f},"
+         f"{100*sum(x >= 0.8 for x in allr)/n:.1f},"
+         f"{100*sum(x >= 1.0 for x in allr)/n:.1f},82.7/57.7/46.2")
+    save_json("table2.json", rows)
+    return rows

@@ -1,0 +1,2 @@
+"""MultiKernelBench-style benchmark suite (paper §5)."""
+from .tasks import suite, build_suite

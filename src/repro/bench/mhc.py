@@ -1,0 +1,92 @@
+"""RQ3 tasks: mHC_post and mHC_post_grad (outside the 52-kernel suite)."""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.dsl.ast import DType
+from ..core.task import KernelTask, TensorSpec
+
+F32 = DType.f32
+N_STREAMS = 4
+SINKHORN_ITERS = 5
+
+
+def sinkhorn_ref(logits, iters=SINKHORN_ITERS):
+    M = np.exp(np.asarray(logits, np.float64))
+    for _ in range(iters):
+        M = M / M.sum(1, keepdims=True)
+        M = M / M.sum(0, keepdims=True)
+    return M
+
+
+def mhc_post_ref(h, o, logits, beta):
+    h = np.asarray(h, np.float64)
+    o = np.asarray(o, np.float64)
+    M = sinkhorn_ref(logits)
+    y = np.einsum("ij,rjd->rid", M, h) \
+        + np.asarray(beta, np.float64)[None, :, None] * o[:, None, :]
+    return y
+
+
+def mhc_post_grad_ref(g, logits, beta):
+    g = np.asarray(g, np.float64)
+    M = sinkhorn_ref(logits)
+    dh = np.einsum("ij,rid->rjd", M, g)
+    do = np.einsum("i,rid->rd", np.asarray(beta, np.float64), g)
+    return dh, do
+
+
+def mhc_tasks():
+    n = N_STREAMS
+    R_BIG, D_BIG = 16384, 2048
+    R_SMALL, D_SMALL = 64, 256
+    big3, small3 = (R_BIG, n, D_BIG), (R_SMALL, n, D_SMALL)
+
+    post = KernelTask(
+        name="mhc_post", category="mhc", op="mhc_post",
+        tensors=[TensorSpec("h", F32, "in", 3), TensorSpec("o", F32, "in", 2),
+                 TensorSpec("logits", F32, "in", 2),
+                 TensorSpec("beta", F32, "in", 1),
+                 TensorSpec("out", F32, "out", 3)],
+        shapes={"h": big3, "o": (R_BIG, D_BIG), "logits": (n, n),
+                "beta": (n,), "out": big3},
+        check_shapes={"h": small3, "o": (R_SMALL, D_SMALL),
+                      "logits": (n, n), "beta": (n,), "out": small3},
+        ref=mhc_post_ref, attrs={"sinkhorn_iters": SINKHORN_ITERS},
+        notes="fused sinkhorn + n-stream hyper-connection post-mix")
+
+    grad = KernelTask(
+        name="mhc_post_grad", category="mhc", op="mhc_post_grad",
+        tensors=[TensorSpec("g", F32, "in", 3),
+                 TensorSpec("logits", F32, "in", 2),
+                 TensorSpec("beta", F32, "in", 1),
+                 TensorSpec("dh", F32, "out", 3),
+                 TensorSpec("do", F32, "out", 2)],
+        shapes={"g": big3, "logits": (n, n), "beta": (n,), "dh": big3,
+                "do": (R_BIG, D_BIG)},
+        check_shapes={"g": small3, "logits": (n, n), "beta": (n,),
+                      "dh": small3, "do": (R_SMALL, D_SMALL)},
+        ref=mhc_post_grad_ref, attrs={"sinkhorn_iters": SINKHORN_ITERS},
+        notes="data-path gradient of mhc_post (dM/dlogits handled by small "
+              "XLA ops outside the kernel — DESIGN.md §7)")
+    return [post, grad]
+
+
+def mhc_eager_seq(task, shapes):
+    """Eager kernel sequence model: per (i, j) stream pair one mul + one
+    add over (R, d), plus the beta rank-1 adds and the tiny sinkhorn ops."""
+    n = N_STREAMS
+    R, _, d = shapes[task.tensors[0].name]
+    N = R * d
+    seq = []
+    if task.op == "mhc_post":
+        for _ in range(n * n):          # M[i,j] * h_j  (+ accumulate)
+            seq.append((2 * N, N))
+        for _ in range(n):              # + beta_i * o
+            seq.append((2 * N, N))
+    else:
+        for _ in range(n * n):
+            seq.append((2 * N, N))
+        for _ in range(n):
+            seq.append((2 * N, N))
+    return seq

@@ -1,0 +1,192 @@
+"""Performance model for generated kernels vs framework-eager execution.
+
+The container has no NPU/TPU, so Fast_x is reported from a deterministic
+two-term roofline model on TPU v5e constants (DESIGN.md §2, §7):
+
+  time(kernel) = max(HBM traffic / BW,  vector flops / peak)
+
+* Generated-kernel traffic/flops are computed EXACTLY from the DSL program:
+  every Load/Store contributes its span times the enclosing loop trip
+  counts and the grid size; compute ops contribute elementwise flops.
+* The eager baseline models the canonical PyTorch-eager kernel sequence for
+  the operator (one kernel per aten op; each reads its inputs from HBM and
+  writes its output back).  This mirrors the paper's baseline: single-op
+  tasks compare 1:1, while optimizer/loss tasks show the fusion win the
+  paper reports.
+
+All ops in the suite are memory-bound on v5e (arithmetic intensity << 240
+flops/byte), so the model is dominated by the traffic term.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+from ..core.dsl import ast as A
+from ..core.dsl.language import eval_host
+
+# TPU v5e per-chip constants (same as §Roofline)
+PEAK_FLOPS = 197e12        # bf16; f32 vector ~ 1/4 of this, use vector peak:
+VPU_FLOPS = 49e12          # f32 VPU estimate (197/4)
+HBM_BW = 819e9             # B/s
+
+
+@dataclass
+class Traffic:
+    loaded: int = 0      # bytes
+    stored: int = 0
+    flops: int = 0
+
+    @property
+    def bytes_total(self) -> int:
+        return self.loaded + self.stored
+
+    def time_s(self) -> float:
+        return max(self.bytes_total / HBM_BW, self.flops / VPU_FLOPS)
+
+
+def analyze_program(prog: A.Program,
+                    shapes: Optional[Dict[str, Tuple[int, ...]]] = None
+                    ) -> Traffic:
+    """Exact traffic/flops of a DSL program at `shapes` (default: the
+    generation shapes)."""
+    shapes = shapes or prog.meta.get("task_shapes", {})
+    plan = eval_host(prog.host, shapes)
+    grid = plan[prog.host.grid]
+    t = Traffic()
+
+    def visit(body, mult: int):
+        for st in body:
+            if isinstance(st, A.ForRange):
+                visit(st.body, mult * st.count)
+            elif isinstance(st, A.CopyIn):
+                for ld in st.body:
+                    t.loaded += ld.dst.size * ld.dst.dtype.nbytes * mult
+            elif isinstance(st, A.CopyOut):
+                for s in st.body:
+                    t.stored += s.src.size * s.src.dtype.nbytes * mult
+            elif isinstance(st, A.ComputeBlock):
+                for op in st.body:
+                    if isinstance(op, A.Op):
+                        t.flops += op.dst.size * mult
+
+    visit(prog.kernel.body, grid)
+    return t
+
+
+# --------------------------------------------------------------------------
+# Eager baseline: canonical per-op kernel sequences.
+# Each entry: fn(numel_in_dict, attrs) -> list of (read_bytes, write_bytes)
+# numel dict maps tensor name -> numel; 'N' is the primary numel.
+# --------------------------------------------------------------------------
+
+def _n(shapes, name):
+    n = 1
+    for s in shapes[name]:
+        n *= int(s)
+    return n
+
+
+def eager_traffic(task, shapes: Dict[str, Tuple[int, ...]]) -> Traffic:
+    """Model of the framework-eager kernel sequence for this operator."""
+    B = 4  # f32
+    names = [t.name for t in task.input_specs]
+    N = _n(shapes, names[0])
+    cat, op = task.category, task.op
+    seq = []  # (read_elems, write_elems)
+
+    if cat in ("activation", "math") and op not in ("cumsum",
+                                                    "masked_cumsum"):
+        seq = [(N, N)]                       # one aten kernel
+    elif op == "cumsum":
+        seq = [(N, N)]
+    elif op == "masked_cumsum":
+        # eager: mask.to(f32) -> mul -> cumsum  (3 kernels)
+        seq = [(N, N), (2 * N, N), (N, N)]
+    elif cat == "normalization" or op in (
+            "softmax", "log_softmax", "rmsnorm", "layernorm"):
+        # aten has fused softmax/layernorm kernels: read once, write once
+        extra = sum(_n(shapes, nm) for nm in names[1:])
+        seq = [(N + extra, N)]
+        if op == "rmsnorm":
+            # no fused aten rmsnorm in eager torch (<=2.6): pow, mean,
+            # add, rsqrt, mul, mul  — 2 full passes + vector ops
+            seq = [(N, N), (N, N // max(1, int(shapes[names[0]][-1]))),
+                   (N, N), (N + extra, N)]
+        if op in ("l2norm", "l1norm", "minmax_norm"):
+            # norm -> clamp -> div (3 kernels, reductions write row vectors)
+            R = N // max(1, int(shapes[names[0]][-1]))
+            seq = [(N, R), (R, R), (N + R, N)]
+    elif cat == "reduce" or op == "global_avg_pool":
+        R = 1
+        for s in shapes.get("output", (1,)):
+            R *= int(s)
+        seq = [(N, R)]
+    elif cat == "optimizer":
+        state = [nm for nm in names if nm not in ("grad",)]
+        Np = _n(shapes, "param")
+        if op == "sgd":
+            seq = [(2 * Np, Np)]
+        elif op == "sgd_momentum":
+            # mul_, add_, add_ (p update)  -> 3 kernels
+            seq = [(Np, Np), (2 * Np, Np), (2 * Np, Np)]
+        elif op in ("adam", "adamw"):
+            # torch eager adam: ~9 elementwise kernels over param-sized data
+            k = 9 if op == "adam" else 10
+            seq = [(2 * Np, Np)] * k
+        elif op == "adagrad":
+            seq = [(2 * Np, Np)] * 4
+        elif op == "rmsprop":
+            seq = [(2 * Np, Np)] * 5
+    elif cat == "loss":
+        if op == "mse":      # sub, pow, mean
+            seq = [(2 * N, N), (N, N), (N, 1)]
+        elif op == "l1_loss":  # sub, abs, mean
+            seq = [(2 * N, N), (N, N), (N, 1)]
+        elif op == "smooth_l1":  # sub, abs, where+arith (~4), mean
+            seq = [(2 * N, N), (N, N), (2 * N, N), (N, N), (N, 1)]
+        elif op == "kl_div":   # log, sub, mul, mean
+            seq = [(N, N), (2 * N, N), (2 * N, N), (N, 1)]
+        elif op == "bce":      # log, log1p(neg), 2 muls, add, neg, mean
+            seq = [(N, N), (N, N), (2 * N, N), (2 * N, N), (2 * N, N),
+                   (N, N), (N, 1)]
+        elif op == "hinge":    # mul, rsub, clamp, mean
+            seq = [(2 * N, N), (N, N), (N, N), (N, 1)]
+        elif op == "cosine_sim_loss":
+            R = N // max(1, int(shapes[names[0]][-1]))
+            # mul+sum, pow+sum x2, sqrt, mul, div, rsub, mean
+            seq = [(2 * N, R), (N, R), (N, R), (R, R), (2 * R, R),
+                   (2 * R, R), (R, R), (R, 1)]
+    elif cat == "pooling":
+        No = _n(shapes, "output") if "output" in shapes else N
+        seq = [(N, No)]                      # aten pooling: one kernel
+    if not seq:
+        seq = [(N, N)]
+
+    t = Traffic()
+    for r, w in seq:
+        t.loaded += r * B
+        t.stored += w * B
+        t.flops += max(r, w)
+    return t
+
+
+def fast_ratio(task, prog: A.Program,
+               shapes: Optional[Dict[str, Tuple[int, ...]]] = None) -> float:
+    """speedup = eager_time / generated_time (>1 means faster than eager);
+    Fast_x <=> ratio >= x."""
+    shapes = shapes or task.shapes
+    gen = analyze_program(prog, _padded_shapes_for(prog, shapes))
+    eag = eager_traffic(task, shapes)
+    return eag.time_s() / max(gen.time_s(), 1e-30)
+
+
+def _padded_shapes_for(prog: A.Program, shapes):
+    from ..core.examples.common import apply_gm_layout
+    layout = prog.meta.get("gm_layout", {})
+    if any(spec.get("flatten") for spec in layout.values()):
+        shapes = {k: (int(_n(shapes, k)),) for k in shapes}
+    if not layout:
+        return shapes
+    plan = eval_host(prog.host, shapes)
+    return apply_gm_layout(shapes, layout, plan)

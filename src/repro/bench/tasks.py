@@ -1,0 +1,500 @@
+"""MultiKernelBench-style task suite — 52 kernels across 7 categories.
+
+Category counts match the paper's Table 1 exactly:
+  Activation 15, Loss 7, Math 6, Normalization 8, Optimizer 5, Reduce 5,
+  Pooling 6  (total 52).
+
+``shapes`` follow the updated KernelBench-v0.1 scaling (tensors sized so an
+NPU kernel runs >15 ms — O(10^8) elements); ``check_shapes`` are reduced
+same-aspect shapes for numeric verification on the CPU container (see
+DESIGN.md §7).  References are float64 numpy ("framework eager" ground
+truth).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from ..core.dsl.ast import DType
+from ..core.task import KernelTask, TensorSpec
+
+F32 = DType.f32
+
+# --------------------------------------------------------------------------
+# numpy reference helpers (float64)
+# --------------------------------------------------------------------------
+
+def _f64(x):
+    return np.asarray(x, dtype=np.float64)
+
+
+def _erf(x):
+    x = _f64(x)
+    sign = np.sign(x)
+    ax = np.abs(x)
+    t = 1.0 / (1.0 + 0.3275911 * ax)
+    y = 1.0 - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t
+                - 0.284496736) * t + 0.254829592) * t * np.exp(-ax * ax)
+    return sign * y
+
+
+_ACT_REFS = {
+    "relu": lambda x: np.maximum(_f64(x), 0),
+    "leaky_relu": lambda x: np.where(_f64(x) > 0, _f64(x), 0.01 * _f64(x)),
+    "relu6": lambda x: np.clip(_f64(x), 0, 6),
+    "sigmoid": lambda x: 1 / (1 + np.exp(-_f64(x))),
+    "tanh": lambda x: np.tanh(_f64(x)),
+    "gelu": lambda x: 0.5 * _f64(x) * (1 + _erf(_f64(x) / math.sqrt(2))),
+    "silu": lambda x: _f64(x) / (1 + np.exp(-_f64(x))),
+    "softplus": lambda x: np.logaddexp(0, _f64(x)),
+    "elu": lambda x: np.where(_f64(x) > 0, _f64(x), np.expm1(_f64(x))),
+    "selu": lambda x: 1.0507009873554805 * np.where(
+        _f64(x) > 0, _f64(x), 1.6732632423543772 * np.expm1(_f64(x))),
+    "hardsigmoid": lambda x: np.clip(_f64(x) / 6 + 0.5, 0, 1),
+    "hardswish": lambda x: _f64(x) * np.clip(_f64(x) + 3, 0, 6) / 6,
+    "mish": lambda x: _f64(x) * np.tanh(np.logaddexp(0, _f64(x))),
+    "softsign": lambda x: _f64(x) / (1 + np.abs(_f64(x))),
+    "hardtanh": lambda x: np.clip(_f64(x), -1, 1),
+}
+
+_MATH_REFS = {
+    "exp": lambda x: np.exp(_f64(x)),
+    "log": lambda x: np.log(_f64(x)),
+    "sqrt": lambda x: np.sqrt(_f64(x)),
+    "rsqrt": lambda x: 1 / np.sqrt(_f64(x)),
+}
+
+
+def _softmax(x):
+    x = _f64(x)
+    e = np.exp(x - x.max(-1, keepdims=True))
+    return e / e.sum(-1, keepdims=True)
+
+
+def _log_softmax(x):
+    x = _f64(x)
+    m = x.max(-1, keepdims=True)
+    return x - m - np.log(np.exp(x - m).sum(-1, keepdims=True))
+
+
+def _layernorm(x, w, b):
+    x = _f64(x)
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / np.sqrt(var + 1e-5) * _f64(w) + _f64(b)
+
+
+def _rmsnorm(x, w):
+    x = _f64(x)
+    rms = np.sqrt((x * x).mean(-1, keepdims=True) + 1e-6)
+    return x / rms * _f64(w)
+
+
+def _pool1d_ref(x, k, s, mode):
+    x = _f64(x)
+    B, C, L = x.shape
+    Lo = (L - k) // s + 1
+    out = np.zeros((B, C, Lo))
+    for j in range(k):
+        sl = x[:, :, j: j + (Lo - 1) * s + 1: s]
+        if mode == "avg":
+            out += sl
+        elif mode == "max":
+            out = sl if j == 0 else np.maximum(out, sl)
+        elif mode == "lp2":
+            out += sl * sl
+    if mode == "avg":
+        out /= k
+    elif mode == "lp2":
+        out = np.sqrt(out)
+    return out
+
+
+def _pool2d_ref(x, k, s, mode):
+    x = _f64(x)
+    B, C, H, W = x.shape
+    Ho, Wo = (H - k) // s + 1, (W - k) // s + 1
+    init = 0.0 if mode == "avg" else -np.inf
+    out = np.full((B, C, Ho, Wo), init)
+    for kh in range(k):
+        for kw in range(k):
+            sl = x[:, :, kh: kh + (Ho - 1) * s + 1: s,
+                   kw: kw + (Wo - 1) * s + 1: s]
+            out = out + sl if mode == "avg" else np.maximum(out, sl)
+    if mode == "avg":
+        out /= k * k
+    return out
+
+
+# --------------------------------------------------------------------------
+# task constructors
+# --------------------------------------------------------------------------
+
+def _io(names_roles, rank_map):
+    return [TensorSpec(n, F32, r, rank_map.get(n, 1))
+            for n, r in names_roles]
+
+
+def _unary_task(op, category, ref, big, small, make_inputs=None, attrs=None):
+    return KernelTask(
+        name=op, category=category, op=op,
+        tensors=_io([("input", "in"), ("output", "out")],
+                    {"input": len(big), "output": len(big)}),
+        shapes={"input": big, "output": big},
+        check_shapes={"input": small, "output": small},
+        ref=ref, attrs=dict(attrs or {}, input="input", output="output"),
+        make_inputs=make_inputs)
+
+
+def _pos_inputs(lo=0.1, hi=4.0):
+    def mk(rng, shapes):
+        return {"input": rng.uniform(lo, hi, shapes["input"])
+                .astype(np.float32)}
+    return mk
+
+
+def build_suite() -> List[KernelTask]:
+    tasks: List[KernelTask] = []
+    A_BIG, A_SMALL = (2048, 65536), (64, 384)
+
+    # ---------------- Activation (15) ----------------------------------
+    for op, ref in _ACT_REFS.items():
+        tasks.append(_unary_task(op, "activation", ref, A_BIG, A_SMALL))
+
+    # ---------------- Math (6) ------------------------------------------
+    tasks.append(_unary_task("exp", "math", _MATH_REFS["exp"], A_BIG, A_SMALL))
+    tasks.append(_unary_task("log", "math", _MATH_REFS["log"], A_BIG, A_SMALL,
+                             make_inputs=_pos_inputs()))
+    tasks.append(_unary_task("sqrt", "math", _MATH_REFS["sqrt"], A_BIG,
+                             A_SMALL, make_inputs=_pos_inputs()))
+    tasks.append(_unary_task("rsqrt", "math", _MATH_REFS["rsqrt"], A_BIG,
+                             A_SMALL, make_inputs=_pos_inputs()))
+    C_BIG, C_SMALL = (8192, 16384), (48, 640)
+    tasks.append(KernelTask(
+        name="cumsum", category="math", op="cumsum",
+        tensors=_io([("input", "in"), ("output", "out")],
+                    {"input": 2, "output": 2}),
+        shapes={"input": C_BIG, "output": C_BIG},
+        check_shapes={"input": C_SMALL, "output": C_SMALL},
+        ref=lambda x: np.cumsum(_f64(x), axis=-1)))
+    tasks.append(KernelTask(
+        name="masked_cumsum", category="math", op="masked_cumsum",
+        tensors=_io([("input", "in"), ("mask", "in"), ("output", "out")],
+                    {"input": 2, "mask": 2, "output": 2}),
+        shapes={"input": C_BIG, "mask": C_BIG, "output": C_BIG},
+        check_shapes={"input": C_SMALL, "mask": C_SMALL, "output": C_SMALL},
+        ref=lambda x, m: np.cumsum(_f64(x) * _f64(m), axis=-1),
+        make_inputs=lambda rng, shp: {
+            "input": rng.randn(*shp["input"]).astype(np.float32),
+            "mask": (rng.rand(*shp["mask"]) > 0.5).astype(np.float32)},
+        notes="mask carried as f32 over GM; boolean DMA is the failure the "
+              "paper reports for this kernel"))
+
+    # ---------------- Loss (7) -------------------------------------------
+    L_BIG, L_SMALL = (4096, 32768), (64, 384)
+    mean_epi = "({out}.sum() / _numel(shapes['pred'])).reshape((1,))"
+
+    def loss_task(op, ref, tensors=("pred", "target"), attrs=None,
+                  make_inputs=None, epilogue=mean_epi):
+        names = list(tensors)
+        tns = _io([(n, "in") for n in names] + [("partials", "out")],
+                  {n: 2 for n in names})
+        shp = {n: L_BIG for n in names}
+        shp["partials"] = (32 * 8,)     # resized by out_shape_code at runtime
+        chk = {n: L_SMALL for n in names}
+        chk["partials"] = (32 * 8,)
+        a = dict(attrs or {})
+        a["epilogue"] = epilogue.replace("'pred'", repr(names[0]))
+        return KernelTask(name=op, category="loss", op=op, tensors=tns,
+                          shapes=shp, check_shapes=chk, ref=ref, attrs=a,
+                          make_inputs=make_inputs)
+
+    tasks.append(loss_task(
+        "mse", lambda p, t: np.mean((_f64(p) - _f64(t)) ** 2)
+        .reshape((1,))))
+    tasks.append(loss_task(
+        "l1_loss", lambda p, t: np.mean(np.abs(_f64(p) - _f64(t)))
+        .reshape((1,))))
+
+    def _smooth_l1(p, t):
+        d = _f64(p) - _f64(t)
+        ad = np.abs(d)
+        return np.mean(np.where(ad < 1, 0.5 * d * d, ad - 0.5)).reshape((1,))
+    tasks.append(loss_task("smooth_l1", _smooth_l1))
+
+    def _mk_kl(rng, shp):
+        p = rng.rand(*shp["log_pred"]).astype(np.float32) + 0.05
+        p /= p.sum(-1, keepdims=True)
+        t = rng.rand(*shp["target"]).astype(np.float32) + 0.05
+        t /= t.sum(-1, keepdims=True)
+        return {"log_pred": np.log(p).astype(np.float32), "target": t}
+    tasks.append(loss_task(
+        "kl_div",
+        lambda lp, t: np.mean(_f64(t) * (np.log(_f64(t)) - _f64(lp)))
+        .reshape((1,)),
+        tensors=("log_pred", "target"),
+        attrs={"pad_values": {"log_pred": 0.0, "target": 1.0}},
+        make_inputs=_mk_kl,
+        epilogue="({out}.sum() / _numel(shapes['log_pred'])).reshape((1,))"))
+
+    def _mk_bce(rng, shp):
+        return {"pred": rng.uniform(0.02, 0.98, shp["pred"])
+                .astype(np.float32),
+                "target": (rng.rand(*shp["target"]) > 0.5)
+                .astype(np.float32)}
+    tasks.append(loss_task(
+        "bce",
+        lambda p, t: np.mean(-(_f64(t) * np.log(_f64(p))
+                               + (1 - _f64(t)) * np.log1p(-_f64(p))))
+        .reshape((1,)),
+        attrs={"pad_values": {"pred": 0.5, "target": 0.5}},
+        make_inputs=_mk_bce,
+        epilogue="(({out}.sum() - 0.6931471805599453 * "
+                 "(_numel(padded['pred']) - _numel(shapes['pred']))) "
+                 "/ _numel(shapes['pred'])).reshape((1,))"))
+
+    def _mk_hinge(rng, shp):
+        return {"pred": rng.randn(*shp["pred"]).astype(np.float32),
+                "target": np.sign(rng.randn(*shp["target"]))
+                .astype(np.float32)}
+    tasks.append(loss_task(
+        "hinge",
+        lambda p, t: np.mean(np.maximum(0, 1 - _f64(p) * _f64(t)))
+        .reshape((1,)),
+        attrs={"pad_values": {"pred": 1.0, "target": 1.0}},
+        make_inputs=_mk_hinge))
+
+    CS_BIG, CS_SMALL = (131072, 1024), (64, 384)
+    tasks.append(KernelTask(
+        name="cosine_sim_loss", category="loss", op="cosine_sim_loss",
+        tensors=_io([("pred", "in"), ("target", "in"), ("output", "out")],
+                    {"pred": 2, "target": 2, "output": 1}),
+        shapes={"pred": CS_BIG, "target": CS_BIG, "output": (CS_BIG[0],)},
+        check_shapes={"pred": CS_SMALL, "target": CS_SMALL,
+                      "output": (CS_SMALL[0],)},
+        ref=lambda p, t: np.mean(1 - (np.sum(_f64(p) * _f64(t), -1)
+                                      / (np.linalg.norm(_f64(p), axis=-1)
+                                         * np.linalg.norm(_f64(t), axis=-1)
+                                         + 1e-8))).reshape((1,)),
+        attrs={"row_input": "pred",
+               "postprocess": {"output": "({out}.mean()).reshape((1,))"}}))
+
+    # ---------------- Normalization (8) ----------------------------------
+    N_BIG, N_SMALL = (8192, 8192), (64, 384)
+    W_BIG, W_SMALL = (65536, 2048), (64, 384)
+
+    def norm_task(op, ref, big, small, with_w=False, with_b=False,
+                  attrs=None, rank=2):
+        names = [("input", "in")]
+        rk = {"input": rank, "output": rank}
+        shp = {"input": big, "output": big}
+        chk = {"input": small, "output": small}
+        if with_w:
+            names.append(("weight", "in"))
+            rk["weight"] = 1
+            shp["weight"] = (big[-1],)
+            chk["weight"] = (small[-1],)
+        if with_b:
+            names.append(("bias", "in"))
+            rk["bias"] = 1
+            shp["bias"] = (big[-1],)
+            chk["bias"] = (small[-1],)
+        names.append(("output", "out"))
+        return KernelTask(name=op, category="normalization", op=op,
+                          tensors=_io(names, rk), shapes=shp,
+                          check_shapes=chk, ref=ref, attrs=dict(attrs or {}))
+
+    tasks.append(norm_task("softmax", _softmax, N_BIG, N_SMALL,
+                           attrs={"pad_value": -3.0e38}))
+    tasks.append(norm_task("log_softmax", _log_softmax, N_BIG, N_SMALL,
+                           attrs={"pad_value": -3.0e38}))
+    tasks.append(norm_task("layernorm", _layernorm, W_BIG, W_SMALL,
+                           with_w=True, with_b=True))
+    tasks.append(norm_task("rmsnorm", _rmsnorm, W_BIG, W_SMALL, with_w=True))
+    tasks.append(norm_task(
+        "l2norm", lambda x: _f64(x) / (np.linalg.norm(_f64(x), axis=-1,
+                                                      keepdims=True) + 1e-12),
+        W_BIG, W_SMALL))
+    tasks.append(norm_task(
+        "l1norm", lambda x: _f64(x) / (np.abs(_f64(x)).sum(-1, keepdims=True)
+                                       + 1e-12),
+        W_BIG, W_SMALL))
+    tasks.append(norm_task(
+        "minmax_norm",
+        lambda x: (_f64(x) - _f64(x).min(-1, keepdims=True))
+        / (_f64(x).max(-1, keepdims=True) - _f64(x).min(-1, keepdims=True)
+           + 1e-12),
+        N_BIG, N_SMALL))
+    I_BIG, I_SMALL = (64, 32, 16384), (4, 8, 384)
+    tasks.append(KernelTask(
+        name="instance_norm", category="normalization", op="instance_norm",
+        tensors=_io([("input", "in"), ("output", "out")],
+                    {"input": 3, "output": 3}),
+        shapes={"input": I_BIG, "output": I_BIG},
+        check_shapes={"input": I_SMALL, "output": I_SMALL},
+        ref=lambda x: (_f64(x) - _f64(x).mean(-1, keepdims=True))
+        / np.sqrt(((_f64(x) - _f64(x).mean(-1, keepdims=True)) ** 2)
+                  .mean(-1, keepdims=True) + 1e-5),
+        notes="input pre-flattened to (N, C, H*W); spatial stats per (n,c)"))
+
+    # ---------------- Optimizer (5) ---------------------------------------
+    O_BIG, O_SMALL = (67108864,), (8192,)
+
+    def opt_task(op, state_names, ref, attrs):
+        names = [("param", "inout"), ("grad", "in")] + \
+                [(n, "inout") for n in state_names]
+        shp = {n: O_BIG for n, _ in names}
+        chk = {n: O_SMALL for n, _ in names}
+
+        def mk(rng, shapes):
+            out = {}
+            for n, _ in names:
+                if n in ("v", "acc", "sq"):   # second moments must be >= 0
+                    out[n] = rng.uniform(0.0, 0.5, shapes[n]) \
+                        .astype(np.float32)
+                else:
+                    out[n] = rng.randn(*shapes[n]).astype(np.float32)
+            return out
+        return KernelTask(name=op, category="optimizer", op=op,
+                          tensors=_io(names, {}), shapes=shp,
+                          check_shapes=chk, ref=ref, attrs=attrs,
+                          make_inputs=mk)
+
+    lr = 1e-3
+    tasks.append(opt_task(
+        "sgd", [], lambda p, g: _f64(p) - lr * _f64(g), {"lr": lr}))
+
+    def _sgdm_ref(p, g, m):
+        nm = 0.9 * _f64(m) + _f64(g)
+        return _f64(p) - lr * nm, nm
+    tasks.append(opt_task("sgd_momentum", ["mom"], _sgdm_ref,
+                          {"lr": lr, "momentum": 0.9}))
+
+    def _adam_ref(wd):
+        b1, b2, eps, step = 0.9, 0.999, 1e-8, 10
+
+        def ref(p, g, m, v):
+            p64, g64 = _f64(p), _f64(g)
+            nm = b1 * _f64(m) + (1 - b1) * g64
+            nv = b2 * _f64(v) + (1 - b2) * g64 * g64
+            up = (lr * (nm / (1 - b1 ** step))
+                  / (np.sqrt(nv / (1 - b2 ** step)) + eps))
+            if wd:
+                up = up + lr * wd * p64
+            return p64 - up, nm, nv
+        return ref
+
+    adam_attrs = {"lr": lr, "beta1": 0.9, "beta2": 0.999, "eps": 1e-8,
+                  "step": 10}
+    tasks.append(opt_task("adam", ["m", "v"], _adam_ref(0.0), adam_attrs))
+    tasks.append(opt_task("adamw", ["m", "v"], _adam_ref(0.01),
+                          dict(adam_attrs, weight_decay=0.01)))
+
+    def _adagrad_ref(p, g, acc):
+        na = _f64(acc) + _f64(g) ** 2
+        return _f64(p) - lr * _f64(g) / (np.sqrt(na) + 1e-10), na
+    tasks.append(opt_task("adagrad", ["acc"], _adagrad_ref,
+                          {"lr": lr, "eps": 1e-10}))
+
+    # ---------------- Reduce (5) ------------------------------------------
+    R_BIG, R_SMALL = (16384, 16384), (64, 384)
+
+    def reduce_task(op, ref, make_inputs=None, attrs=None):
+        return KernelTask(
+            name=op, category="reduce", op=op,
+            tensors=_io([("input", "in"), ("output", "out")],
+                        {"input": 2, "output": 1}),
+            shapes={"input": R_BIG, "output": (R_BIG[0],)},
+            check_shapes={"input": R_SMALL, "output": (R_SMALL[0],)},
+            ref=ref, make_inputs=make_inputs, attrs=dict(attrs or {}))
+
+    tasks.append(reduce_task(
+        "reduce_sum", lambda x: _f64(x).sum(-1)))
+    tasks.append(reduce_task(
+        "reduce_max", lambda x: _f64(x).max(-1),
+        attrs={"pad_value": -3.0e38}))
+    tasks.append(reduce_task(
+        "reduce_mean", lambda x: _f64(x).mean(-1)))
+    tasks.append(reduce_task(
+        "reduce_prod", lambda x: _f64(x).prod(-1),
+        make_inputs=lambda rng, shp: {
+            "input": rng.uniform(0.98, 1.02, shp["input"])
+            .astype(np.float32)}))
+    M_BIG, M_SMALL = (128, 2048, 512), (8, 96, 128)
+    tasks.append(KernelTask(
+        name="mid_reduce_sum", category="reduce", op="mid_reduce_sum",
+        tensors=_io([("input", "in"), ("output", "out")],
+                    {"input": 3, "output": 2}),
+        shapes={"input": M_BIG, "output": (M_BIG[0], M_BIG[2])},
+        check_shapes={"input": M_SMALL, "output": (M_SMALL[0], M_SMALL[2])},
+        ref=lambda x: _f64(x).sum(1)))
+
+    # ---------------- Pooling (6) ------------------------------------------
+    P1_BIG, P1_SMALL = (64, 64, 32768), (4, 4, 512)
+    P2_BIG, P2_SMALL = (16, 32, 512, 512), (2, 4, 32, 32)
+
+    def pool1d_task(op, mode, k, s):
+        lo_big = (P1_BIG[2] - k) // s + 1
+        lo_small = (P1_SMALL[2] - k) // s + 1
+        return KernelTask(
+            name=op, category="pooling", op=op,
+            tensors=_io([("input", "in"), ("output", "out")],
+                        {"input": 3, "output": 3}),
+            shapes={"input": P1_BIG, "output": (*P1_BIG[:2], lo_big)},
+            check_shapes={"input": P1_SMALL,
+                          "output": (*P1_SMALL[:2], lo_small)},
+            ref=lambda x, _m=mode, _k=k, _s=s: _pool1d_ref(x, _k, _s, _m),
+            attrs={"kernel": k, "stride": s})
+
+    tasks.append(pool1d_task("avg_pool1d", "avg", 7, 4))
+    tasks.append(pool1d_task("max_pool1d", "max", 7, 4))
+    tasks.append(pool1d_task("lp_pool1d", "lp2", 4, 2))
+
+    def pool2d_task(op, mode, k, s):
+        def out_hw(hw):
+            return (hw - k) // s + 1
+        return KernelTask(
+            name=op, category="pooling", op=op,
+            tensors=_io([("input", "in"), ("output", "out")],
+                        {"input": 4, "output": 4}),
+            shapes={"input": P2_BIG,
+                    "output": (*P2_BIG[:2], out_hw(P2_BIG[2]),
+                               out_hw(P2_BIG[3]))},
+            check_shapes={"input": P2_SMALL,
+                          "output": (*P2_SMALL[:2], out_hw(P2_SMALL[2]),
+                                     out_hw(P2_SMALL[3]))},
+            ref=lambda x, _m=mode, _k=k, _s=s: _pool2d_ref(x, _k, _s, _m),
+            attrs={"kernel": k, "stride": s})
+
+    tasks.append(pool2d_task("avg_pool2d", "avg", 3, 2))
+    tasks.append(pool2d_task("max_pool2d", "max", 3, 2))
+
+    G_BIG, G_SMALL = (512, 256, 4096), (8, 8, 384)
+    tasks.append(KernelTask(
+        name="global_avg_pool", category="pooling", op="global_avg_pool",
+        tensors=_io([("input", "in"), ("output", "out")],
+                    {"input": 3, "output": 2}),
+        shapes={"input": G_BIG, "output": G_BIG[:2]},
+        check_shapes={"input": G_SMALL, "output": G_SMALL[:2]},
+        ref=lambda x: _f64(x).mean(-1)))
+
+    assert len(tasks) == 52, len(tasks)
+    counts = {}
+    for t in tasks:
+        counts[t.category] = counts.get(t.category, 0) + 1
+    assert counts == {"activation": 15, "loss": 7, "math": 6,
+                      "normalization": 8, "optimizer": 5, "reduce": 5,
+                      "pooling": 6}, counts
+    return tasks
+
+
+SUITE = None
+
+
+def suite() -> List[KernelTask]:
+    global SUITE
+    if SUITE is None:
+        SUITE = build_suite()
+    return SUITE

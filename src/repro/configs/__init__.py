@@ -1,0 +1,97 @@
+"""Architecture registry: ``--arch <id>`` -> ArchConfig, plus the
+shape-cell definitions and ``input_specs`` (ShapeDtypeStruct stand-ins, the
+shannon/kernels pattern: weak-type-correct, shardable, no allocation)."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import (qwen3_32b, internlm2_1_8b, deepseek_7b, granite_3_2b,
+               deepseek_v2_lite_16b, phi3_5_moe_42b, pixtral_12b,
+               jamba_v0_1_52b, hubert_xlarge, xlstm_1_3b)
+from ..models.config import ArchConfig
+
+_MODULES = {
+    "qwen3-32b": qwen3_32b,
+    "internlm2-1.8b": internlm2_1_8b,
+    "deepseek-7b": deepseek_7b,
+    "granite-3-2b": granite_3_2b,
+    "deepseek-v2-lite-16b": deepseek_v2_lite_16b,
+    "phi3.5-moe-42b-a6.6b": phi3_5_moe_42b,
+    "pixtral-12b": pixtral_12b,
+    "jamba-v0.1-52b": jamba_v0_1_52b,
+    "hubert-xlarge": hubert_xlarge,
+    "xlstm-1.3b": xlstm_1_3b,
+}
+
+ARCH_NAMES = list(_MODULES)
+
+# assigned input shapes (seq_len, global_batch)
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+# families for cell validity (DESIGN.md §4)
+SUBQUADRATIC = {"jamba-v0.1-52b", "xlstm-1.3b"}
+ENCODER_ONLY = {"hubert-xlarge"}
+
+
+def get_config(name: str, smoke: bool = False) -> ArchConfig:
+    key = name.replace("_", "-").lower()
+    if key not in _MODULES:
+        raise KeyError(f"unknown arch '{name}'; choose from {ARCH_NAMES}")
+    mod = _MODULES[key]
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def cell_valid(arch: str, shape: str) -> Tuple[bool, str]:
+    """Is (arch x shape) a runnable dry-run cell?  Returns (ok, reason)."""
+    kind = SHAPES[shape]["kind"]
+    if arch in ENCODER_ONLY and kind == "decode":
+        return False, "encoder-only: no decode step"
+    if shape == "long_500k" and arch not in SUBQUADRATIC:
+        return False, ("full quadratic attention at 524k context; run only "
+                       "for SSM/hybrid archs")
+    return True, ""
+
+
+def valid_cells():
+    for arch in ARCH_NAMES:
+        for shape in SHAPES:
+            ok, _ = cell_valid(arch, shape)
+            if ok:
+                yield arch, shape
+
+
+def input_specs(cfg: ArchConfig, shape_name: str,
+                batch_override: Optional[int] = None) -> Dict[str, object]:
+    """ShapeDtypeStruct stand-ins for every model input of the step the
+    shape exercises (train_step for train_*, serve prefill/decode else)."""
+    info = SHAPES[shape_name]
+    S = info["seq_len"]
+    B = batch_override or info["global_batch"]
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    kind = info["kind"]
+
+    if kind in ("train", "prefill"):
+        if cfg.frontend == "audio":
+            batch = {"frames": jax.ShapeDtypeStruct((B, S, d), dt),
+                     "labels": jax.ShapeDtypeStruct((B, S), i32)}
+        elif cfg.frontend == "patch":
+            fs = cfg.frontend_seq
+            batch = {"patch_embeds": jax.ShapeDtypeStruct((B, fs, d), dt),
+                     "tokens": jax.ShapeDtypeStruct((B, S - fs), i32)}
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        return batch
+
+    # decode: one new token against a cache of length S
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+            "_cache_len": S, "_batch": B}

@@ -1,0 +1,12 @@
+"""deepseek-7b [dense]: 30L d_model=4096 32H (GQA kv=32 => MHA) d_ff=11008
+vocab=102400 — llama-arch [arXiv:2401.02954; hf]."""
+from ..models.config import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="deepseek-7b", n_layers=30, d_model=4096, n_heads=32,
+    n_kv_heads=32, d_ff=11008, vocab=102400, head_dim=128,
+    pattern=(LayerSpec("attn", "swiglu"),), rope_theta=1.0e4,
+)
+
+SMOKE = CONFIG.scaled(n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+                      d_ff=256, vocab=512, head_dim=32, remat="none")

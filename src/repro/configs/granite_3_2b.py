@@ -1,0 +1,12 @@
+"""granite-3-2b [dense]: 40L d_model=2048 32H (GQA kv=8) d_ff=8192
+vocab=49155 — GQA, tied embeddings [hf:ibm-granite/granite-3.0-2b-base]."""
+from ..models.config import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="granite-3-2b", n_layers=40, d_model=2048, n_heads=32,
+    n_kv_heads=8, d_ff=8192, vocab=49155, head_dim=64, tie_embeddings=True,
+    pattern=(LayerSpec("attn", "swiglu"),), rope_theta=1.0e4,
+)
+
+SMOKE = CONFIG.scaled(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+                      d_ff=256, vocab=512, head_dim=32, remat="none")

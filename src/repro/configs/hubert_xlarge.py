@@ -1,0 +1,16 @@
+"""hubert-xlarge [audio]: 48L d_model=1280 16H d_ff=5120 vocab=504 —
+encoder-only (w2v2 arch); frame frontend STUBBED (precomputed frame
+embeddings) [arXiv:2106.07447; unverified].  No decode step (DESIGN.md §4).
+"""
+from ..models.config import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="hubert-xlarge", n_layers=48, d_model=1280, n_heads=16,
+    n_kv_heads=16, d_ff=5120, vocab=504, head_dim=80,
+    encoder_only=True, causal=False, norm="layernorm",
+    frontend="audio",
+    pattern=(LayerSpec("attn", "gelu"),),
+)
+
+SMOKE = CONFIG.scaled(n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+                      d_ff=256, vocab=64, head_dim=32, remat="none")

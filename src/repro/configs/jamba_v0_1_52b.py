@@ -1,0 +1,31 @@
+"""jamba-v0.1-52b [hybrid]: 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=65536, MoE 16e top-2 — Mamba+attention 1:7 interleave, MoE every
+other layer [arXiv:2403.19887; hf].
+
+Period-8 pattern: attention at offset 4 (as in the released checkpoint),
+Mamba elsewhere; MoE FFN on odd offsets, dense SwiGLU on even.
+"""
+from ..models.config import ArchConfig, LayerSpec
+
+
+def _jamba_period():
+    specs = []
+    for i in range(8):
+        block = "attn" if i == 4 else "mamba"
+        ffn = "moe" if i % 2 == 1 else "swiglu"
+        specs.append(LayerSpec(block, ffn))
+    return tuple(specs)
+
+
+CONFIG = ArchConfig(
+    name="jamba-v0.1-52b", n_layers=32, d_model=4096, n_heads=32,
+    n_kv_heads=8, d_ff=14336, vocab=65536, head_dim=128,
+    n_experts=16, top_k=2, d_ff_expert=14336,
+    mamba_d_state=16, mamba_conv=4, mamba_expand=2,
+    pattern=_jamba_period(), rope_theta=1.0e4,
+)
+
+SMOKE = CONFIG.scaled(n_layers=8, d_model=64, n_heads=4, n_kv_heads=2,
+                      d_ff=128, vocab=512, head_dim=16, n_experts=4,
+                      top_k=2, d_ff_expert=128, mamba_d_state=8,
+                      remat="none")

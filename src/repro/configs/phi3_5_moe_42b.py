@@ -1,0 +1,14 @@
+"""phi3.5-moe-42b-a6.6b [moe]: 32L d_model=4096 32H (GQA kv=8) d_ff=6400
+vocab=32064, MoE 16 experts top-2 [hf:microsoft/Phi-3.5-MoE-instruct]."""
+from ..models.config import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="phi3.5-moe-42b-a6.6b", n_layers=32, d_model=4096, n_heads=32,
+    n_kv_heads=8, d_ff=6400, vocab=32064, head_dim=128,
+    n_experts=16, top_k=2, n_shared_experts=0, d_ff_expert=6400,
+    pattern=(LayerSpec("attn", "moe"),), rope_theta=1.0e4,
+)
+
+SMOKE = CONFIG.scaled(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+                      d_ff=256, vocab=512, head_dim=32, n_experts=4,
+                      top_k=2, d_ff_expert=128, remat="none")

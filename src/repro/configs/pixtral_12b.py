@@ -1,0 +1,15 @@
+"""pixtral-12b [vlm]: 40L d_model=5120 32H (GQA kv=8) d_ff=14336
+vocab=131072 — pixtral-ViT frontend (STUB: precomputed patch embeddings)
++ mistral-nemo backbone [hf:mistralai/Pixtral-12B-2409; unverified]."""
+from ..models.config import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="pixtral-12b", n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab=131072, head_dim=128,
+    frontend="patch", frontend_seq=256,
+    pattern=(LayerSpec("attn", "swiglu"),), rope_theta=1.0e6,
+)
+
+SMOKE = CONFIG.scaled(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+                      d_ff=256, vocab=512, head_dim=32, frontend_seq=8,
+                      remat="none")

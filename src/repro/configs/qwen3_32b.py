@@ -1,0 +1,12 @@
+"""qwen3-32b [dense]: 64L d_model=5120 64H (GQA kv=8) d_ff=25600
+vocab=151936 — qk_norm, GQA [hf:Qwen/Qwen3-8B; hf]."""
+from ..models.config import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="qwen3-32b", n_layers=64, d_model=5120, n_heads=64, n_kv_heads=8,
+    d_ff=25600, vocab=151936, head_dim=128, qk_norm=True,
+    pattern=(LayerSpec("attn", "swiglu"),), rope_theta=1.0e6,
+)
+
+SMOKE = CONFIG.scaled(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+                      d_ff=256, vocab=512, head_dim=32, remat="none")

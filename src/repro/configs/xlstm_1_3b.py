@@ -1,0 +1,15 @@
+"""xlstm-1.3b [ssm]: 48L d_model=2048 4H vocab=50304, d_ff=0 (blocks carry
+their own projections) — xLSTM[7:1]: 7 mLSTM per 1 sLSTM
+[arXiv:2405.04517; unverified].  Fully recurrent: runs long_500k."""
+from ..models.config import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="xlstm-1.3b", n_layers=48, d_model=2048, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab=50304,
+    xlstm_proj_factor=2.0,
+    pattern=tuple([LayerSpec("mlstm", "none")] * 7
+                  + [LayerSpec("slstm", "none")]),
+)
+
+SMOKE = CONFIG.scaled(n_layers=8, d_model=64, n_heads=2, n_kv_heads=2,
+                      vocab=256, remat="none")

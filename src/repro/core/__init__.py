@@ -1,0 +1,10 @@
+"""repro.core — the paper's contribution: an Ascend-style kernel DSL and a
+structured multi-pass transcompiler that lowers it to Pallas TPU kernels.
+
+Pipeline (paper Fig. 3):  task -> planner (category expert example,
+shape-specialized) -> DSL program -> validate -> multi-pass lowering
+(host / init / compute / alignment) with per-pass correction feedback ->
+generated Pallas source -> compile-check + oracle verification.
+"""
+from . import dsl
+from .lowering import transcompile, generate_with_feedback, Artifact, Knobs

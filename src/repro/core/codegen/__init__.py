@@ -1,0 +1,2 @@
+"""Source emission for generated Pallas kernel modules."""
+from .emit import emit_module

@@ -1,0 +1,73 @@
+"""Expression -> Python source emission (shared by all lowering passes)."""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+from ..dsl import ast as A
+
+
+def emit_const(v) -> str:
+    """Emit a constant, preferring its host-plan name (StaticInt) for
+    shape-polymorphic, readable generated source."""
+    name = getattr(v, "name", None)
+    if name:
+        return str(name)
+    if isinstance(v, bool):
+        return repr(v)
+    if isinstance(v, int):
+        return repr(int(v))
+    return repr(float(v))
+
+
+def emit_sexpr(e: A.SExpr, rename: Optional[Dict[str, str]] = None) -> str:
+    """Emit a scalar expression; `rename` maps SVar names to python code."""
+    rn = rename or {}
+
+    def rec(x: A.SExpr, prec: int = 0) -> str:
+        if isinstance(x, A.SConst):
+            return emit_const(x.value)
+        if isinstance(x, A.SVar):
+            return rn.get(x.name, x.name)
+        if isinstance(x, A.SExtract):
+            return f"{rn.get(x.buf.name, x.buf.name)}.reshape(-1)[{x.index}]"
+        if isinstance(x, A.SBin):
+            if x.op in ("min", "max"):
+                fn = "jnp.minimum" if x.op == "min" else "jnp.maximum"
+                return f"{fn}({rec(x.lhs)}, {rec(x.rhs)})"
+            sym, p = {
+                "add": ("+", 1), "sub": ("-", 1), "mul": ("*", 2),
+                "div": ("/", 2), "floordiv": ("//", 2), "mod": ("%", 2),
+            }[x.op]
+            s = f"{rec(x.lhs, p)} {sym} {rec(x.rhs, p + (1 if x.op in ('sub', 'div', 'floordiv', 'mod') else 0))}"
+            return f"({s})" if p < prec else s
+        raise TypeError(f"cannot emit {x}")
+
+    return rec(e)
+
+
+def sexpr_is_static(e: A.SExpr) -> bool:
+    """True if the expression references no runtime vars (pure plan consts)."""
+    if isinstance(e, A.SConst):
+        return True
+    if isinstance(e, A.SBin):
+        return sexpr_is_static(e.lhs) and sexpr_is_static(e.rhs)
+    return False
+
+
+def emit_hexpr(e: A.HExpr) -> str:
+    if isinstance(e, A.HConst):
+        return repr(int(e.value))
+    if isinstance(e, A.HDim):
+        return f"shapes[{e.tensor!r}][{e.axis}]"
+    if isinstance(e, A.HVar):
+        return e.name
+    if isinstance(e, A.HBin):
+        a, b = emit_hexpr(e.lhs), emit_hexpr(e.rhs)
+        if e.op == "cdiv":
+            return f"-(-({a}) // ({b}))"
+        if e.op in ("min", "max"):
+            return f"{e.op}({a}, {b})"
+        sym = {"add": "+", "sub": "-", "mul": "*", "floordiv": "//",
+               "mod": "%"}[e.op]
+        return f"({a} {sym} {b})"
+    raise TypeError(f"cannot emit host expr {e}")

@@ -1,0 +1,14 @@
+"""The Ascend-style kernel DSL (TPU adaptation) — paper §3.
+
+Modules:
+  ast        — typed AST (host IR + kernel IR)
+  language   — the ``tl`` builder front-end (paper Fig. 2 style)
+  validate   — structural/semantic checks + alignment/OOB diagnostics
+  interp     — numpy reference interpreter (DSL-level oracle)
+  spec       — the human/LLM-readable DSL specification document
+"""
+from . import ast
+from . import language
+from .ast import Program, DType, f32, bf16, f16, i32, b8
+from .interp import interpret
+from .validate import validate, DSLValidationError

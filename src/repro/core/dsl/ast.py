@@ -1,0 +1,519 @@
+"""Typed AST for the Ascend-style kernel DSL (TPU adaptation).
+
+The DSL mirrors the paper's Figure 2: a *host function* (core partitioning +
+tiling strategy, expressed over input tensor dimensions) and a *kernel
+function* (on-chip execution) whose body is organized into explicit
+``copyin`` / ``compute`` / ``copyout`` stage blocks operating on explicitly
+allocated on-chip buffers (the Ascend Unified Buffer; VMEM on TPU).
+
+Design decisions (see DESIGN.md §2):
+
+* GM (global-memory) tensors are addressed through *flat, contiguous* spans:
+  ``Load(dst_buf, tensor, start)`` fills ``dst_buf`` row-major from
+  ``tensor.flat[start : start + dst_buf.size]``.  Strided/windowed access is
+  expressed with static in-buffer ops (``static_slice``), never with strided
+  GM traffic — matching Ascend's DataCopy (contiguous bursts) and TPU DMA
+  preferences.
+* ``start`` expressions must be affine in ``{program_id, loop vars, params}``
+  so that lowering can derive BlockSpec index maps (pipelined backend) or
+  dynamic-slice offsets (explicit backend).
+* Loop trip counts are static Python ints (known at generation time, like
+  the paper's shape-specialized kernels); loop *origins* may be symbolic.
+* Compute ops use an explicit *destination* style (``op(dst, srcs)``) as in
+  AscendC (``Adds``, ``Mul``…), which keeps buffer usage transparent for the
+  transcompiler.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+
+# --------------------------------------------------------------------------
+# Dtypes
+# --------------------------------------------------------------------------
+
+class DType(enum.Enum):
+    f32 = "float32"
+    bf16 = "bfloat16"
+    f16 = "float16"
+    i32 = "int32"
+    b8 = "bool"
+
+    @property
+    def nbytes(self) -> int:
+        return {"float32": 4, "bfloat16": 2, "float16": 2, "int32": 4, "bool": 1}[self.value]
+
+    @property
+    def jnp_name(self) -> str:
+        return self.value
+
+    def __repr__(self) -> str:  # keep codegen headers tidy
+        return f"DType.{self.name}"
+
+
+f32 = DType.f32
+bf16 = DType.bf16
+f16 = DType.f16
+i32 = DType.i32
+b8 = DType.b8
+
+
+# --------------------------------------------------------------------------
+# Scalar expressions (index arithmetic + running scalars)
+# --------------------------------------------------------------------------
+
+class SVarKind(enum.Enum):
+    PARAM = "param"          # kernel scalar parameter (from the host plan)
+    PROGRAM_ID = "pid"       # tl.program_id(axis)
+    LOOP = "loop"            # tl.for_range induction variable
+    SCALAR = "scalar"        # tl.scalar(...) running value (loop carried)
+
+
+@dataclass(frozen=True)
+class SExpr:
+    """Base scalar expression."""
+
+    def _bin(self, op: str, other: "SExprLike", swap: bool = False) -> "SBin":
+        o = as_sexpr(other)
+        return SBin(op, o, self) if swap else SBin(op, self, o)
+
+    def __add__(self, o): return self._bin("add", o)
+    def __radd__(self, o): return self._bin("add", o, swap=True)
+    def __sub__(self, o): return self._bin("sub", o)
+    def __rsub__(self, o): return self._bin("sub", o, swap=True)
+    def __mul__(self, o): return self._bin("mul", o)
+    def __rmul__(self, o): return self._bin("mul", o, swap=True)
+    def __floordiv__(self, o): return self._bin("floordiv", o)
+    def __truediv__(self, o): return self._bin("div", o)
+    def __mod__(self, o): return self._bin("mod", o)
+    def __neg__(self): return SBin("sub", SConst(0), self)
+
+
+@dataclass(frozen=True)
+class SConst(SExpr):
+    value: Union[int, float]
+
+
+@dataclass(frozen=True)
+class SVar(SExpr):
+    name: str
+    kind: SVarKind
+    axis: int = 0  # for PROGRAM_ID
+
+
+@dataclass(frozen=True)
+class SBin(SExpr):
+    op: str  # add sub mul div floordiv mod min max
+    lhs: SExpr
+    rhs: SExpr
+
+
+@dataclass(frozen=True)
+class SExtract(SExpr):
+    """tl.extract_scalar(buf, flat_index) — read one element of a UB buffer."""
+    buf: "Buffer"
+    index: int
+
+
+SExprLike = Union[SExpr, int, float]
+
+
+def as_sexpr(v: SExprLike) -> SExpr:
+    if isinstance(v, SExpr):
+        return v
+    if isinstance(v, (int, float)):
+        return SConst(v)
+    raise TypeError(f"cannot convert {type(v).__name__} to scalar expr")
+
+
+def smin(a: SExprLike, b: SExprLike) -> SExpr:
+    return SBin("min", as_sexpr(a), as_sexpr(b))
+
+
+def smax(a: SExprLike, b: SExprLike) -> SExpr:
+    return SBin("max", as_sexpr(a), as_sexpr(b))
+
+
+# --------------------------------------------------------------------------
+# Buffers and tensors
+# --------------------------------------------------------------------------
+
+class MemSpace(enum.Enum):
+    UB = "ub"     # Unified Buffer -> VMEM
+    L1 = "l1"     # L1 -> VMEM (larger granularity; same target on TPU)
+
+
+@dataclass(frozen=True, eq=False)
+class Buffer:
+    """An explicitly allocated on-chip buffer (UB/VMEM)."""
+    name: str
+    shape: Tuple[int, ...]
+    dtype: DType
+    space: MemSpace = MemSpace.UB
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    @property
+    def nbytes(self) -> int:
+        return self.size * self.dtype.nbytes
+
+    def __repr__(self):
+        return f"Buffer({self.name}, {self.shape}, {self.dtype.name})"
+
+
+class Role(enum.Enum):
+    IN = "in"
+    OUT = "out"
+    INOUT = "inout"   # aliased in/out (optimizer updates)
+
+
+@dataclass(frozen=True, eq=False)
+class TensorParam:
+    """A GM (HBM) tensor argument of the kernel."""
+    name: str
+    dtype: DType
+    role: Role = Role.IN
+    # Logical rank used by the host function for dim queries; the kernel
+    # addresses the tensor flat.  ``shape`` is filled at plan time.
+    rank: int = 1
+
+
+# --------------------------------------------------------------------------
+# Statements
+# --------------------------------------------------------------------------
+
+@dataclass
+class Stmt:
+    pass
+
+
+@dataclass
+class AllocUB(Stmt):
+    buf: Buffer
+
+
+@dataclass
+class Load(Stmt):
+    """copyin: dst[...] <- tensor.flat[start : start + dst.size] (row-major).
+
+    ``valid`` (optional) marks how many leading elements are in-bounds; the
+    remainder is filled with ``pad_value``.  Pass 4 (alignment/padding
+    refinement) is responsible for introducing/checking these.
+    """
+    dst: Buffer
+    tensor: str
+    start: SExpr
+    valid: Optional[SExpr] = None
+    pad_value: float = 0.0
+
+
+@dataclass
+class Store(Stmt):
+    """copyout: tensor.flat[start : start + src.size] <- src (first ``valid``)."""
+    tensor: str
+    start: SExpr
+    src: Buffer
+    valid: Optional[SExpr] = None
+
+
+@dataclass
+class Op(Stmt):
+    """compute: dst = op(*srcs, **attrs); destination-style like AscendC."""
+    op: str
+    dst: Buffer
+    srcs: List[Union[Buffer, SExpr]]
+    attrs: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class ScalarDecl(Stmt):
+    var: SVar
+    init: SExpr
+
+
+@dataclass
+class ScalarAssign(Stmt):
+    var: SVar
+    expr: SExpr
+
+
+@dataclass
+class CopyIn(Stmt):
+    body: List[Stmt] = field(default_factory=list)   # Load only
+
+
+@dataclass
+class ComputeBlock(Stmt):
+    body: List[Stmt] = field(default_factory=list)   # Op / ScalarAssign / ScalarDecl
+
+
+@dataclass
+class CopyOut(Stmt):
+    body: List[Stmt] = field(default_factory=list)   # Store only
+
+
+@dataclass
+class ForRange(Stmt):
+    """``for var in range(start, start + count)`` with static ``count``."""
+    var: SVar
+    start: SExpr
+    count: int
+    body: List[Stmt] = field(default_factory=list)
+
+
+# --------------------------------------------------------------------------
+# Host IR — tiny expression language over input dimensions
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class HExpr:
+    def _bin(self, op, other, swap=False):
+        o = as_hexpr(other)
+        return HBin(op, o, self) if swap else HBin(op, self, o)
+
+    def __add__(self, o): return self._bin("add", o)
+    def __radd__(self, o): return self._bin("add", o, swap=True)
+    def __sub__(self, o): return self._bin("sub", o)
+    def __mul__(self, o): return self._bin("mul", o)
+    def __rmul__(self, o): return self._bin("mul", o, swap=True)
+    def __floordiv__(self, o): return self._bin("floordiv", o)
+    def __mod__(self, o): return self._bin("mod", o)
+
+
+@dataclass(frozen=True)
+class HConst(HExpr):
+    value: int
+
+
+@dataclass(frozen=True)
+class HDim(HExpr):
+    """shape[axis] of a kernel input tensor."""
+    tensor: str
+    axis: int
+
+
+@dataclass(frozen=True)
+class HVar(HExpr):
+    name: str
+
+
+@dataclass(frozen=True)
+class HBin(HExpr):
+    op: str  # add sub mul floordiv mod min max cdiv
+    lhs: HExpr
+    rhs: HExpr
+
+
+HExprLike = Union[HExpr, int]
+
+
+def as_hexpr(v: HExprLike) -> HExpr:
+    if isinstance(v, HExpr):
+        return v
+    if isinstance(v, int):
+        return HConst(v)
+    raise TypeError(f"cannot convert {type(v).__name__} to host expr")
+
+
+def hmin(a: HExprLike, b: HExprLike) -> HExpr:
+    return HBin("min", as_hexpr(a), as_hexpr(b))
+
+
+def hmax(a: HExprLike, b: HExprLike) -> HExpr:
+    return HBin("max", as_hexpr(a), as_hexpr(b))
+
+
+def hcdiv(a: HExprLike, b: HExprLike) -> HExpr:
+    return HBin("cdiv", as_hexpr(a), as_hexpr(b))
+
+
+@dataclass
+class HostAssign:
+    name: str
+    expr: HExpr
+    rationale: str = ""   # the paper requires tiling decisions to carry a rationale
+
+
+@dataclass
+class HostFn:
+    """Host function: computes the plan (n_cores + kernel scalar params) and
+    launches ``kernel[n_cores](*tensors, *params)``."""
+    stmts: List[HostAssign]
+    grid: str                      # name of the assign holding n_cores
+    kernel_args: List[str]         # names (subset of assigns) passed as kernel params
+
+
+@dataclass
+class KernelFn:
+    name: str
+    tensors: List[TensorParam]
+    params: List[str]              # scalar params, bound from host kernel_args
+    body: List[Stmt] = field(default_factory=list)
+
+
+@dataclass
+class Program:
+    """A complete DSL program: host + kernel (paper Fig. 2)."""
+    name: str
+    host: HostFn
+    kernel: KernelFn
+    category: str = ""
+    rationale: str = ""
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+
+# --------------------------------------------------------------------------
+# Op registry: name -> (arity check, shape/dtype inference)
+# --------------------------------------------------------------------------
+
+UNARY_OPS = (
+    "exp", "log", "abs", "neg", "relu", "sigmoid", "tanh", "sqrt", "rsqrt",
+    "reciprocal", "erf", "floor", "square", "softplus", "sign", "log1p",
+    "expm1", "gelu", "silu", "mish", "hardswish", "hardsigmoid", "elu",
+    "selu", "softsign", "isnan", "logistic",
+)
+BINARY_OPS = (
+    "add", "sub", "mul", "div", "max", "min", "pow", "mod",
+    "lt", "le", "gt", "ge", "eq", "ne", "atan2",
+)
+REDUCE_OPS = ("reduce_sum", "reduce_max", "reduce_min", "reduce_prod", "reduce_mean")
+REDUCE_IDENTITY = {
+    "reduce_sum": 0.0, "reduce_mean": 0.0, "reduce_max": -3.0e38,
+    "reduce_min": 3.0e38, "reduce_prod": 1.0,
+}
+OTHER_OPS = (
+    "copy",           # dst = src (dtype cast allowed)
+    "where",          # dst = where(cond, a, b)
+    "iota",           # dst = iota along attrs['axis']
+    "full",           # dst = scalar broadcast
+    "static_slice",   # dst = src[attrs['slices']] (static start/stop/step per axis)
+    "reshape",        # dst = src.reshape(dst.shape)
+    "transpose",      # dst = src.transpose(attrs['perm'])
+    "cumsum",         # dst = cumsum(src, axis)
+    "clamp",          # dst = clip(src, lo, hi) — lo/hi scalar operands
+    "broadcast",      # dst = broadcast src (compatible shapes)
+    "cast",           # dst = src.astype(dst.dtype)
+    "rev",            # dst = flip(src, axis)
+    "concat",         # dst = concatenate(srcs, axis)
+)
+ALL_OPS = UNARY_OPS + BINARY_OPS + REDUCE_OPS + OTHER_OPS
+
+
+def broadcast_shapes(a: Tuple[int, ...], b: Tuple[int, ...]) -> Tuple[int, ...]:
+    out = []
+    for x, y in zip(reversed((1,) * max(0, len(b) - len(a)) + a),
+                    reversed((1,) * max(0, len(a) - len(b)) + b)):
+        if x != y and 1 not in (x, y):
+            raise ValueError(f"incompatible broadcast {a} vs {b}")
+        out.append(max(x, y))
+    return tuple(reversed(out))
+
+
+def infer_shape(op: Op) -> Tuple[int, ...]:
+    """Infer the result shape of ``op`` from its sources (buffer operands)."""
+    bufs = [s for s in op.srcs if isinstance(s, Buffer)]
+    name = op.op
+    if name in UNARY_OPS or name in ("copy", "cast", "clamp"):
+        return bufs[0].shape
+    if name in BINARY_OPS:
+        if len(bufs) == 2:
+            return broadcast_shapes(bufs[0].shape, bufs[1].shape)
+        if len(bufs) == 1:
+            return bufs[0].shape
+        raise ValueError(f"{name}: needs at least one buffer operand")
+    if name in REDUCE_OPS:
+        axis = op.attrs.get("axis")
+        keepdims = op.attrs.get("keepdims", True)
+        src = bufs[0].shape
+        if axis is None:
+            return tuple(1 for _ in src) if keepdims else (1,)
+        axes = (axis,) if isinstance(axis, int) else tuple(axis)
+        axes = tuple(a % len(src) for a in axes)
+        if keepdims:
+            return tuple(1 if i in axes else s for i, s in enumerate(src))
+        out = tuple(s for i, s in enumerate(src) if i not in axes)
+        return out or (1,)
+    if name == "where":
+        s = bufs[0].shape
+        for b in bufs[1:]:
+            s = broadcast_shapes(s, b.shape)
+        return s
+    if name in ("iota", "full"):
+        return op.dst.shape
+    if name == "static_slice":
+        slices = op.attrs["slices"]
+        src = bufs[0].shape
+        out = []
+        for dim, sl in zip(src, slices):
+            start, stop, step = sl
+            stop = dim if stop is None else min(stop, dim)
+            out.append(max(0, -(-(stop - start) // step)))
+        return tuple(out)
+    if name == "reshape":
+        if bufs[0].size != op.dst.size:
+            raise ValueError(
+                f"reshape: size mismatch {bufs[0].shape} -> {op.dst.shape}")
+        return op.dst.shape
+    if name == "transpose":
+        perm = op.attrs["perm"]
+        return tuple(bufs[0].shape[p] for p in perm)
+    if name == "cumsum":
+        return bufs[0].shape
+    if name == "broadcast":
+        return op.dst.shape
+    if name == "rev":
+        return bufs[0].shape
+    if name == "concat":
+        axis = op.attrs.get("axis", 0) % len(bufs[0].shape)
+        out = list(bufs[0].shape)
+        out[axis] = sum(b.shape[axis] for b in bufs)
+        return tuple(out)
+    raise ValueError(f"unknown op {name}")
+
+
+# --------------------------------------------------------------------------
+# Traversal helpers
+# --------------------------------------------------------------------------
+
+def walk_stmts(body: Sequence[Stmt]):
+    """Yield (stmt, stage) depth-first; ``stage`` is 'copyin'/'compute'/'copyout'
+    for statements inside a stage block, else None."""
+    for st in body:
+        if isinstance(st, CopyIn):
+            yield st, None
+            for s in st.body:
+                yield s, "copyin"
+        elif isinstance(st, ComputeBlock):
+            yield st, None
+            for s in st.body:
+                yield s, "compute"
+        elif isinstance(st, CopyOut):
+            yield st, None
+            for s in st.body:
+                yield s, "copyout"
+        elif isinstance(st, ForRange):
+            yield st, None
+            yield from walk_stmts(st.body)
+        else:
+            yield st, None
+
+
+def scalar_vars_in(e: SExpr) -> List[SVar]:
+    out: List[SVar] = []
+
+    def rec(x: SExpr):
+        if isinstance(x, SVar):
+            out.append(x)
+        elif isinstance(x, SBin):
+            rec(x.lhs)
+            rec(x.rhs)
+    rec(e)
+    return out

@@ -1,0 +1,325 @@
+"""Reference interpreter for DSL programs (numpy; the DSL-level oracle).
+
+Executes a :class:`Program` sequentially, one core at a time, with exact
+Load/Store masking semantics.  The transcompiler's output is property-tested
+against this interpreter (lowered Pallas kernel ≡ DSL interpretation), which
+is the moral equivalent of the paper's per-pass compile-and-verify loop with
+the LLM removed.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from . import ast as A
+from .language import eval_host
+
+
+class DSLInterpError(Exception):
+    pass
+
+
+def _np_dtype(dt: A.DType):
+    return np.dtype(dt.value)
+
+
+def _eval_scalar(e: A.SExpr, env: Dict[str, Any], bufs: Dict[str, np.ndarray]):
+    if isinstance(e, A.SConst):
+        return e.value
+    if isinstance(e, A.SVar):
+        try:
+            return env[e.name]
+        except KeyError:
+            raise DSLInterpError(f"unbound scalar '{e.name}'")
+    if isinstance(e, A.SBin):
+        a = _eval_scalar(e.lhs, env, bufs)
+        b = _eval_scalar(e.rhs, env, bufs)
+        if e.op == "add":
+            return a + b
+        if e.op == "sub":
+            return a - b
+        if e.op == "mul":
+            return a * b
+        if e.op == "div":
+            return a / b
+        if e.op == "floordiv":
+            return a // b
+        if e.op == "mod":
+            return a % b
+        if e.op == "min":
+            return min(a, b)
+        if e.op == "max":
+            return max(a, b)
+        raise DSLInterpError(f"bad scalar op {e.op}")
+    if isinstance(e, A.SExtract):
+        arr = bufs[e.buf.name]
+        return arr.reshape(-1)[e.index]
+    raise DSLInterpError(f"bad scalar expr {e}")
+
+
+_F32 = np.float32
+
+
+def _erf(x):
+    from scipy import special  # pragma: no cover — scipy may be absent
+    return special.erf(x)
+
+
+def _erf_np(x):
+    # vectorized erf without scipy (Abramowitz–Stegun 7.1.26, enough for tests
+    # at f32 tolerance)
+    x = np.asarray(x, dtype=np.float64)
+    sign = np.sign(x)
+    ax = np.abs(x)
+    t = 1.0 / (1.0 + 0.3275911 * ax)
+    y = 1.0 - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t
+                - 0.284496736) * t + 0.254829592) * t * np.exp(-ax * ax)
+    return sign * y
+
+
+def _apply_unary(name: str, x: np.ndarray) -> np.ndarray:
+    f64 = x.astype(np.float64) if x.dtype.kind == "f" else x
+    if name == "exp":
+        return np.exp(f64)
+    if name == "log":
+        return np.log(f64)
+    if name == "log1p":
+        return np.log1p(f64)
+    if name == "expm1":
+        return np.expm1(f64)
+    if name == "abs":
+        return np.abs(x)
+    if name == "neg":
+        return -x
+    if name == "relu":
+        return np.maximum(x, 0)
+    if name in ("sigmoid", "logistic"):
+        return 1.0 / (1.0 + np.exp(-f64))
+    if name == "tanh":
+        return np.tanh(f64)
+    if name == "sqrt":
+        return np.sqrt(f64)
+    if name == "rsqrt":
+        return 1.0 / np.sqrt(f64)
+    if name == "reciprocal":
+        return 1.0 / f64
+    if name == "erf":
+        return _erf_np(f64)
+    if name == "floor":
+        return np.floor(f64)
+    if name == "square":
+        return x * x
+    if name == "softplus":
+        return np.logaddexp(0.0, f64)
+    if name == "sign":
+        return np.sign(x)
+    if name == "gelu":
+        return 0.5 * f64 * (1.0 + _erf_np(f64 / math.sqrt(2.0)))
+    if name == "silu":
+        return f64 / (1.0 + np.exp(-f64))
+    if name == "mish":
+        return f64 * np.tanh(np.logaddexp(0.0, f64))
+    if name == "hardswish":
+        return f64 * np.clip(f64 + 3.0, 0.0, 6.0) / 6.0
+    if name == "hardsigmoid":
+        return np.clip(f64 / 6.0 + 0.5, 0.0, 1.0)
+    if name == "elu":
+        return np.where(f64 > 0, f64, np.expm1(f64))
+    if name == "selu":
+        lam, alpha = 1.0507009873554805, 1.6732632423543772
+        return lam * np.where(f64 > 0, f64, alpha * np.expm1(f64))
+    if name == "softsign":
+        return f64 / (1.0 + np.abs(f64))
+    if name == "isnan":
+        return np.isnan(x)
+    raise DSLInterpError(f"unary {name}")
+
+
+def _apply_binary(name: str, a, b):
+    if name == "add":
+        return a + b
+    if name == "sub":
+        return a - b
+    if name == "mul":
+        return a * b
+    if name == "div":
+        return a / b
+    if name == "max":
+        return np.maximum(a, b)
+    if name == "min":
+        return np.minimum(a, b)
+    if name == "pow":
+        return np.power(a, b)
+    if name == "mod":
+        return np.mod(a, b)
+    if name == "atan2":
+        return np.arctan2(a, b)
+    if name == "lt":
+        return a < b
+    if name == "le":
+        return a <= b
+    if name == "gt":
+        return a > b
+    if name == "ge":
+        return a >= b
+    if name == "eq":
+        return a == b
+    if name == "ne":
+        return a != b
+    raise DSLInterpError(f"binary {name}")
+
+
+def _exec_op(op: A.Op, bufs: Dict[str, np.ndarray], env: Dict[str, Any]):
+    def val(s):
+        if isinstance(s, A.Buffer):
+            return bufs[s.name]
+        return _eval_scalar(s, env, bufs)
+
+    name = op.op
+    srcs = [val(s) for s in op.srcs]
+    dst_dt = _np_dtype(op.dst.dtype)
+    if name in A.UNARY_OPS:
+        out = _apply_unary(name, srcs[0])
+    elif name in A.BINARY_OPS:
+        out = _apply_binary(name, srcs[0], srcs[1])
+    elif name in A.REDUCE_OPS:
+        axis = op.attrs.get("axis")
+        keep = op.attrs.get("keepdims", True)
+        x = srcs[0].astype(np.float64) if srcs[0].dtype.kind == "f" else srcs[0]
+        fn = {"reduce_sum": np.sum, "reduce_max": np.max, "reduce_min": np.min,
+              "reduce_prod": np.prod, "reduce_mean": np.mean}[name]
+        out = fn(x, axis=axis, keepdims=keep)
+        out = np.asarray(out)
+    elif name == "copy" or name == "cast" or name == "broadcast":
+        out = np.broadcast_to(srcs[0], op.dst.shape)
+    elif name == "where":
+        out = np.where(srcs[0], srcs[1], srcs[2])
+    elif name == "iota":
+        axis = op.attrs.get("axis", len(op.dst.shape) - 1)
+        shape = op.dst.shape
+        out = np.arange(shape[axis]).reshape(
+            [shape[axis] if i == axis else 1 for i in range(len(shape))])
+        out = np.broadcast_to(out, shape)
+    elif name == "full":
+        out = np.full(op.dst.shape, srcs[0])
+    elif name == "static_slice":
+        sl = tuple(slice(a, b, c) for (a, b, c) in op.attrs["slices"])
+        out = srcs[0][sl]
+    elif name == "reshape":
+        out = srcs[0].reshape(op.dst.shape)
+    elif name == "transpose":
+        out = srcs[0].transpose(op.attrs["perm"])
+    elif name == "cumsum":
+        axis = op.attrs.get("axis", -1)
+        x = srcs[0].astype(np.float64) if srcs[0].dtype.kind == "f" else srcs[0]
+        out = np.cumsum(x, axis=axis)
+    elif name == "clamp":
+        out = np.clip(srcs[0], srcs[1], srcs[2])
+    elif name == "rev":
+        out = np.flip(srcs[0], axis=op.attrs.get("axis", -1))
+    elif name == "concat":
+        out = np.concatenate(srcs, axis=op.attrs.get("axis", 0))
+    else:
+        raise DSLInterpError(f"op {name}")
+    out = np.asarray(out)
+    bufs[op.dst.name] = np.ascontiguousarray(
+        np.broadcast_to(out, op.dst.shape).astype(dst_dt, copy=False)
+        if out.shape != tuple(op.dst.shape) and out.size == op.dst.size
+        else out.reshape(op.dst.shape).astype(dst_dt, copy=False))
+
+
+def interpret(prog: A.Program, inputs: Dict[str, np.ndarray],
+              out_shapes: Dict[str, Tuple[int, ...]],
+              out_dtypes: Optional[Dict[str, Any]] = None) -> Dict[str, np.ndarray]:
+    """Run the program; returns dict of output-tensor name -> array."""
+    shapes = {k: tuple(v.shape) for k, v in inputs.items()}
+    shapes.update({k: tuple(v) for k, v in out_shapes.items()})
+    plan = eval_host(prog.host, shapes)
+    grid = plan[prog.host.grid]
+
+    flat_in = {k: np.ascontiguousarray(v).reshape(-1) for k, v in inputs.items()}
+    outs: Dict[str, np.ndarray] = {}
+    for tp in prog.kernel.tensors:
+        if tp.role in (A.Role.OUT, A.Role.INOUT):
+            dt = (out_dtypes or {}).get(tp.name, _np_dtype(tp.dtype))
+            base = flat_in.get(tp.name)
+            if base is not None:
+                outs[tp.name] = base.astype(dt, copy=True)
+            else:
+                n = 1
+                for s in out_shapes[tp.name]:
+                    n *= s
+                outs[tp.name] = np.zeros(n, dtype=dt)
+
+    def tensor_flat(name):
+        if name in outs:
+            return outs[name]
+        return flat_in[name]
+
+    for core in range(grid):
+        env: Dict[str, Any] = {f"pid{ax}": core for ax in range(3)}
+        bufs: Dict[str, np.ndarray] = {}
+
+        def run(body):
+            for st in body:
+                if isinstance(st, A.AllocUB):
+                    bufs[st.buf.name] = np.zeros(st.buf.shape,
+                                                 dtype=_np_dtype(st.buf.dtype))
+                elif isinstance(st, A.CopyIn):
+                    for ld in st.body:
+                        start = int(_eval_scalar(ld.start, env, bufs))
+                        size = ld.dst.size
+                        arr = tensor_flat(ld.tensor)
+                        if ld.valid is not None:
+                            v = int(_eval_scalar(ld.valid, env, bufs))
+                            v = max(0, min(v, size))
+                        else:
+                            v = size
+                        if start < 0 or start + v > arr.size:
+                            raise DSLInterpError(
+                                f"load OOB on '{ld.tensor}': [{start},{start + v})"
+                                f" vs numel {arr.size}")
+                        tile = np.full(size, ld.pad_value,
+                                       dtype=_np_dtype(ld.dst.dtype))
+                        tile[:v] = arr[start:start + v]
+                        bufs[ld.dst.name] = tile.reshape(ld.dst.shape)
+                elif isinstance(st, A.ComputeBlock):
+                    for op in st.body:
+                        if isinstance(op, A.ScalarDecl):
+                            env[op.var.name] = _eval_scalar(op.init, env, bufs)
+                        elif isinstance(op, A.ScalarAssign):
+                            env[op.var.name] = _eval_scalar(op.expr, env, bufs)
+                        elif isinstance(op, A.Op):
+                            _exec_op(op, bufs, env)
+                elif isinstance(st, A.CopyOut):
+                    for s in st.body:
+                        start = int(_eval_scalar(s.start, env, bufs))
+                        size = s.src.size
+                        if s.valid is not None:
+                            v = int(_eval_scalar(s.valid, env, bufs))
+                            v = max(0, min(v, size))
+                        else:
+                            v = size
+                        arr = tensor_flat(s.tensor)
+                        if start < 0 or start + v > arr.size:
+                            raise DSLInterpError(
+                                f"store OOB on '{s.tensor}': [{start},{start + v})"
+                                f" vs numel {arr.size}")
+                        arr[start:start + v] = (
+                            bufs[s.src.name].reshape(-1)[:v].astype(arr.dtype))
+                elif isinstance(st, A.ForRange):
+                    start = int(_eval_scalar(st.start, env, bufs))
+                    for i in range(start, start + st.count):
+                        env[st.var.name] = i
+                        run(st.body)
+                    env.pop(st.var.name, None)
+                elif isinstance(st, A.ScalarDecl):
+                    env[st.var.name] = _eval_scalar(st.init, env, bufs)
+                else:
+                    raise DSLInterpError(f"stmt {type(st).__name__}")
+
+        run(prog.kernel.body)
+
+    return {k: v.reshape(out_shapes[k]) for k, v in outs.items()}

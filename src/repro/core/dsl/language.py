@@ -1,0 +1,398 @@
+"""``tl`` — the builder front-end of the DSL (paper Fig. 2 style).
+
+Expert examples and the planner construct :class:`~repro.core.dsl.ast.Program`
+values through this module.  The surface syntax intentionally mirrors the
+paper::
+
+    P = tl.ProgramBuilder("softmax", category="normalization", task=task)
+    h = P.host()
+    rows  = h.dim("input", 0)
+    cols  = h.dim("input", 1)
+    n_cores       = h.let("n_cores", tl.hmin(tl.NUM_CORES, rows),
+                          rationale="partition rows across cores")
+    rows_per_core = h.let("rows_per_core", tl.hcdiv(rows, n_cores))
+    tile_length   = h.let("tile_length", tl.hmin(4096, cols),
+                          rationale="tile columns so one row-tile fits UB/VMEM")
+    h.launch(grid="n_cores")
+
+    with P.kernel(tensors=[...]) as k:
+        pid = tl.program_id(0)
+        row_tile = tl.alloc_ub("row_tile", (tile_length,), tl.f32)
+        with tl.for_range("r", pid * rows_per_core, rows_per_core) as r:
+            with tl.copyin():
+                tl.load("input", r * cols, row_tile)
+            with tl.compute():
+                tl.exp(row_tile, row_tile)
+            with tl.copyout():
+                tl.store("output", r * cols, row_tile)
+    prog = P.build()
+
+All host-computed quantities are *static* at build time (shape-specialized
+generation, as in the paper) but carry their **names** so that codegen emits
+shape-polymorphic, readable source.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+from . import ast as A
+from .ast import (  # re-exported for convenience
+    DType, f32, bf16, f16, i32, b8,
+    SExpr, SConst, SVar, SVarKind, SExtract, as_sexpr, smin, smax,
+    HExpr, HConst, HDim, HVar, HBin, as_hexpr, hmin, hmax, hcdiv,
+    Buffer, MemSpace, Role, TensorParam,
+)
+
+# Number of parallel cores we plan for by default.  Ascend 910B has 20/24
+# vector cores per die; a TPU v5e chip has 1 TensorCore but pallas grids also
+# deliver per-core parallelism across sequential grid steps with pipelining.
+# We keep the Ascend-style "n_cores" concept: it becomes the leading grid
+# axis.  On a real TPU the megacore/grid pipelining makes this a tiling
+# decision rather than a physical core count.
+NUM_CORES = 32
+
+# VMEM budget (bytes) available for UB allocations per program instance.
+# v5e VMEM is ~128 MiB/core total but the pipelined backend needs headroom
+# for double buffering; we give generated kernels the same discipline the
+# paper gives the Ascend UB (192 KiB) scaled to TPU: 8 MiB.
+VMEM_BUDGET = 8 * 1024 * 1024
+
+
+class StaticInt(int):
+    """An int that remembers the host-IR name it was computed under."""
+    name: Optional[str]
+
+    def __new__(cls, value: int, name: Optional[str] = None):
+        obj = super().__new__(cls, int(value))
+        obj.name = name
+        return obj
+
+
+# --------------------------------------------------------------------------
+# Builder context plumbing
+# --------------------------------------------------------------------------
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.builder: Optional["ProgramBuilder"] = None
+        self.block_stack: List[List[A.Stmt]] = []
+        self.stage: Optional[str] = None
+
+
+_ctx = _Ctx()
+
+
+def _cur() -> "ProgramBuilder":
+    if _ctx.builder is None:
+        raise RuntimeError("tl.* used outside of a ProgramBuilder.kernel() block")
+    return _ctx.builder
+
+
+def _emit(stmt: A.Stmt):
+    _ctx.block_stack[-1].append(stmt)
+
+
+class DSLBuildError(Exception):
+    pass
+
+
+# --------------------------------------------------------------------------
+# Host builder
+# --------------------------------------------------------------------------
+
+class HostBuilder:
+    def __init__(self, pb: "ProgramBuilder"):
+        self._pb = pb
+        self.stmts: List[A.HostAssign] = []
+        self.values: Dict[str, int] = {}
+        self.grid_name: Optional[str] = None
+
+    # -- shape queries --------------------------------------------------
+    def dim(self, tensor: str, axis: int) -> StaticInt:
+        shape = self._pb.task_shapes[tensor]
+        name = f"{tensor}_dim{axis}"
+        if name not in self.values:
+            self.stmts.append(A.HostAssign(name, A.HDim(tensor, axis)))
+            self.values[name] = int(shape[axis])
+        return StaticInt(shape[axis], name)
+
+    def numel(self, tensor: str) -> StaticInt:
+        shape = self._pb.task_shapes[tensor]
+        n = 1
+        for s in shape:
+            n *= int(s)
+        name = f"{tensor}_numel"
+        if name not in self.values:
+            e: A.HExpr = A.HDim(tensor, 0)
+            for ax in range(1, len(shape)):
+                e = A.HBin("mul", e, A.HDim(tensor, ax))
+            self.stmts.append(A.HostAssign(name, e))
+            self.values[name] = n
+        return StaticInt(n, name)
+
+    # -- plan assignments ------------------------------------------------
+    def let(self, name: str, expr: Union[A.HExprLike, StaticInt], rationale: str = "") -> StaticInt:
+        hexpr = self._to_hexpr(expr)
+        val = _eval_hexpr(hexpr, self.values, self._pb.task_shapes)
+        self.stmts.append(A.HostAssign(name, hexpr, rationale))
+        self.values[name] = val
+        return StaticInt(val, name)
+
+    def _to_hexpr(self, expr) -> A.HExpr:
+        if isinstance(expr, StaticInt) and expr.name is not None:
+            return A.HVar(expr.name)
+        return as_hexpr(int(expr) if isinstance(expr, StaticInt) else expr)
+
+    def launch(self, grid: str):
+        if grid not in self.values:
+            raise DSLBuildError(f"launch grid '{grid}' was never assigned")
+        self.grid_name = grid
+
+    def build(self) -> A.HostFn:
+        if self.grid_name is None:
+            raise DSLBuildError("host function never called launch()")
+        return A.HostFn(stmts=list(self.stmts), grid=self.grid_name, kernel_args=[])
+
+
+def _eval_hexpr(e: A.HExpr, env: Dict[str, int], shapes: Dict[str, Tuple[int, ...]]) -> int:
+    if isinstance(e, A.HConst):
+        return int(e.value)
+    if isinstance(e, A.HDim):
+        return int(shapes[e.tensor][e.axis])
+    if isinstance(e, A.HVar):
+        return int(env[e.name])
+    if isinstance(e, A.HBin):
+        import builtins
+        a = _eval_hexpr(e.lhs, env, shapes)
+        b = _eval_hexpr(e.rhs, env, shapes)
+        return {
+            "add": lambda: a + b, "sub": lambda: a - b, "mul": lambda: a * b,
+            "floordiv": lambda: a // b, "mod": lambda: a % b,
+            "min": lambda: builtins.min(a, b), "max": lambda: builtins.max(a, b),
+            "cdiv": lambda: -(-a // b),
+        }[e.op]()
+    raise TypeError(f"bad host expr {e}")
+
+
+def eval_host(host: A.HostFn, shapes: Dict[str, Tuple[int, ...]]) -> Dict[str, int]:
+    """Re-evaluate a host function against (possibly new) input shapes."""
+    env: Dict[str, int] = {}
+    for st in host.stmts:
+        env[st.name] = _eval_hexpr(st.expr, env, shapes)
+    return env
+
+
+# --------------------------------------------------------------------------
+# Program builder
+# --------------------------------------------------------------------------
+
+class ProgramBuilder:
+    def __init__(self, name: str, category: str = "",
+                 task_shapes: Optional[Dict[str, Tuple[int, ...]]] = None,
+                 rationale: str = ""):
+        self.name = name
+        self.category = category
+        self.rationale = rationale
+        self.task_shapes: Dict[str, Tuple[int, ...]] = dict(task_shapes or {})
+        self._host: Optional[HostBuilder] = None
+        self._kernel: Optional[A.KernelFn] = None
+        self._buffers: Dict[str, Buffer] = {}
+        self._scalars: Dict[str, SVar] = {}
+        self._loops: List[str] = []
+
+    # ------------------------------------------------------------------
+    def host(self) -> HostBuilder:
+        if self._host is None:
+            self._host = HostBuilder(self)
+        return self._host
+
+    @contextlib.contextmanager
+    def kernel(self, tensors: Sequence[Tuple[str, DType, str, int]]):
+        """tensors: sequence of (name, dtype, role 'in'/'out'/'inout', rank)."""
+        if self._host is None or self._host.grid_name is None:
+            raise DSLBuildError("define and launch() the host before the kernel")
+        tps = [TensorParam(n, dt, Role(r), rank) for (n, dt, r, rank) in tensors]
+        kf = A.KernelFn(name=f"{self.name}_kernel", tensors=tps, params=[])
+        self._kernel = kf
+        prev = _ctx.builder
+        _ctx.builder = self
+        _ctx.block_stack.append(kf.body)
+        _ctx.stage = None
+        try:
+            yield kf
+        finally:
+            _ctx.block_stack.pop()
+            _ctx.builder = prev
+
+    def build(self) -> A.Program:
+        if self._kernel is None:
+            raise DSLBuildError("no kernel was defined")
+        return A.Program(
+            name=self.name, host=self._host.build(), kernel=self._kernel,
+            category=self.category, rationale=self.rationale,
+            meta={"plan": dict(self._host.values),
+                  "task_shapes": dict(self.task_shapes)},
+        )
+
+
+# --------------------------------------------------------------------------
+# Kernel-side tl.* API
+# --------------------------------------------------------------------------
+
+def program_id(axis: int = 0) -> SVar:
+    _cur()
+    return SVar(f"pid{axis}", SVarKind.PROGRAM_ID, axis)
+
+
+def alloc_ub(name: str, shape: Sequence[Union[int, StaticInt]], dtype: DType,
+             space: MemSpace = MemSpace.UB) -> Buffer:
+    pb = _cur()
+    if name in pb._buffers:
+        raise DSLBuildError(f"buffer '{name}' already allocated")
+    shp = tuple(int(s) for s in shape)
+    names = tuple(s.name if isinstance(s, StaticInt) else None for s in shape)
+    buf = Buffer(name, shp, dtype, space)
+    # remember provenance for codegen (shape-polymorphic emission)
+    object.__setattr__(buf, "shape_names", names)
+    pb._buffers[name] = buf
+    _emit(A.AllocUB(buf))
+    return buf
+
+
+def alloc_l1(name, shape, dtype):
+    return alloc_ub(name, shape, dtype, MemSpace.L1)
+
+
+@contextlib.contextmanager
+def for_range(name: str, start: A.SExprLike, count: Union[int, StaticInt]):
+    pb = _cur()
+    if _ctx.stage is not None:
+        raise DSLBuildError("for_range cannot be nested inside a stage block")
+    var = SVar(name, SVarKind.LOOP)
+    node = A.ForRange(var=var, start=as_sexpr(start), count=int(count))
+    object.__setattr__(var, "_count_name",
+                       count.name if isinstance(count, StaticInt) else None)
+    node_count_name = count.name if isinstance(count, StaticInt) else None
+    node.count_name = node_count_name  # type: ignore[attr-defined]
+    _emit(node)
+    _ctx.block_stack.append(node.body)
+    pb._loops.append(name)
+    try:
+        yield var
+    finally:
+        pb._loops.pop()
+        _ctx.block_stack.pop()
+
+
+@contextlib.contextmanager
+def _stage(kind: str, cls):
+    _cur()
+    if _ctx.stage is not None:
+        raise DSLBuildError(f"cannot open {kind} inside {_ctx.stage}")
+    node = cls()
+    _emit(node)
+    _ctx.block_stack.append(node.body)
+    _ctx.stage = kind
+    try:
+        yield node
+    finally:
+        _ctx.stage = None
+        _ctx.block_stack.pop()
+
+
+def copyin():
+    return _stage("copyin", A.CopyIn)
+
+
+def compute():
+    return _stage("compute", A.ComputeBlock)
+
+
+def copyout():
+    return _stage("copyout", A.CopyOut)
+
+
+def load(tensor: str, start: A.SExprLike, dst: Buffer,
+         valid: Optional[A.SExprLike] = None, pad_value: float = 0.0):
+    if _ctx.stage != "copyin":
+        raise DSLBuildError("tl.load must appear inside a copyin block")
+    _emit(A.Load(dst=dst, tensor=tensor, start=as_sexpr(start),
+                 valid=None if valid is None else as_sexpr(valid),
+                 pad_value=pad_value))
+
+
+def store(tensor: str, start: A.SExprLike, src: Buffer,
+          valid: Optional[A.SExprLike] = None):
+    if _ctx.stage != "copyout":
+        raise DSLBuildError("tl.store must appear inside a copyout block")
+    _emit(A.Store(tensor=tensor, start=as_sexpr(start), src=src,
+                  valid=None if valid is None else as_sexpr(valid)))
+
+
+def scalar(name: str, init: A.SExprLike) -> SVar:
+    pb = _cur()
+    if _ctx.stage not in (None, "compute"):
+        raise DSLBuildError("tl.scalar must be at kernel scope or in compute")
+    var = SVar(name, SVarKind.SCALAR)
+    pb._scalars[name] = var
+    _emit(A.ScalarDecl(var, as_sexpr(init)))
+    return var
+
+
+def assign(var: SVar, expr: A.SExprLike):
+    if var.kind is not SVarKind.SCALAR:
+        raise DSLBuildError("can only assign tl.scalar() variables")
+    if _ctx.stage != "compute":
+        raise DSLBuildError("tl.assign must appear inside a compute block")
+    _emit(A.ScalarAssign(var, as_sexpr(expr)))
+
+
+def extract_scalar(buf: Buffer, index: int = 0) -> SExtract:
+    return SExtract(buf, index)
+
+
+# -- compute ops (destination style), generated from the registry ----------
+
+def _op(opname: str, dst: Buffer, *srcs, **attrs):
+    if _ctx.stage != "compute":
+        raise DSLBuildError(f"tl.{opname} must appear inside a compute block")
+    norm_srcs: List[Union[Buffer, SExpr]] = []
+    for s in srcs:
+        if isinstance(s, Buffer):
+            norm_srcs.append(s)
+        else:
+            norm_srcs.append(as_sexpr(s))
+    node = A.Op(op=opname, dst=dst, srcs=norm_srcs, attrs=dict(attrs))
+    # shape check happens in the validator; do a cheap early sanity check here
+    _emit(node)
+    return dst
+
+
+def _make_op(opname):
+    def fn(dst: Buffer, *srcs, **attrs):
+        return _op(opname, dst, *srcs, **attrs)
+    fn.__name__ = opname
+    fn.__qualname__ = opname
+    fn.__doc__ = f"DSL compute op '{opname}' (destination style)."
+    return fn
+
+
+for _name in A.ALL_OPS:
+    globals()[_name] = _make_op(_name)
+
+# `max`/`min` collide with builtins only inside this module's namespace —
+# that is intended: tl.max(dst, a, b) is the elementwise AscendC-style op.
+# Scalar min/max on index expressions use tl.smin/tl.smax.
+
+__all__ = [
+    "DType", "f32", "bf16", "f16", "i32", "b8",
+    "NUM_CORES", "VMEM_BUDGET", "StaticInt",
+    "ProgramBuilder", "HostBuilder", "DSLBuildError",
+    "program_id", "alloc_ub", "alloc_l1", "for_range",
+    "copyin", "compute", "copyout", "load", "store",
+    "scalar", "assign", "extract_scalar",
+    "smin", "smax", "hmin", "hmax", "hcdiv", "as_sexpr",
+    "eval_host",
+] + list(A.ALL_OPS)

@@ -1,0 +1,67 @@
+"""The DSL specification document (paper §4.1: prompt component 1).
+
+This is the exact specification text a generation front-end (LLM or the
+deterministic planner) is given.  Kept as data so that an LLM front-end can
+be swapped in without code changes.
+"""
+
+DSL_SPEC = """
+ASCEND-STYLE KERNEL DSL — SPECIFICATION (TPU adaptation)
+========================================================
+
+A program has two parts:
+
+1. HOST FUNCTION — global planning.
+   * Declare input dims:            h.dim(tensor, axis), h.numel(tensor)
+   * Core partitioning + tiling:    h.let(name, expr, rationale=...)
+     Exprs use +, -, *, //, %, tl.hmin, tl.hmax, tl.hcdiv over dims/consts.
+     EVERY tiling decision must carry a rationale string (memory constraint
+     it satisfies).
+   * Launch:                        h.launch(grid="n_cores")
+     `n_cores` becomes the leading grid axis (one program instance per core).
+
+2. KERNEL FUNCTION — on-chip execution.
+   * GM tensors are addressed FLAT and CONTIGUOUSLY:
+       tl.load(tensor, start, dst_buf [, valid=, pad_value=])
+       tl.store(tensor, start, src_buf [, valid=])
+     `start` must be affine in {tl.program_id(0), loop variables} with
+     host-computed (static) coefficients.
+   * On-chip buffers (Unified Buffer -> VMEM) must be allocated explicitly:
+       buf = tl.alloc_ub(name, shape, dtype)
+     Total UB bytes per core must stay under tl.VMEM_BUDGET.
+   * STAGED EXECUTION (strict):
+       with tl.copyin():  ...only tl.load...
+       with tl.compute(): ...only compute ops / tl.assign...
+       with tl.copyout(): ...only tl.store...
+     Multiple stage blocks may appear, including inside loops.
+   * Loops:  with tl.for_range(name, start, count) as i: ...
+     `count` is host-static; `start` may depend on program_id/loop vars.
+   * Running scalars:  s = tl.scalar(name, init); tl.assign(s, expr)
+     Scalar exprs may use tl.extract_scalar(buf, flat_index) and
+     tl.smin/tl.smax.
+   * Compute ops are DESTINATION-STYLE (AscendC style):
+       tl.exp(dst, src); tl.add(dst, a, b); tl.reduce_max(dst, src, axis=...)
+     Available: {unary} | {binary} | {reduce} | {other}
+
+ALIGNMENT RULES (TPU)
+  * Prefer transfer sizes that are multiples of 128 elements.
+  * When a dimension does not tile evenly, request the padded layout
+    (pad=True) — the transcompiler pads GM layout and masks reductions with
+    the op's identity element (Pass 4: alignment & padding refinement).
+
+EXECUTION MODEL MAPPING (Ascend -> TPU)
+  core            -> leading Pallas grid axis
+  Unified Buffer  -> VMEM (BlockSpec blocks for transfer buffers / values
+                     for temporaries)
+  MTE queues      -> Pallas pipeline (double-buffered) or explicit DMA
+  copyin/compute/copyout -> pipeline stages
+"""
+
+from .ast import UNARY_OPS, BINARY_OPS, REDUCE_OPS, OTHER_OPS
+
+# the spec text contains literal braces; substitute placeholders explicitly
+DSL_SPEC = (DSL_SPEC
+            .replace("{unary}", ", ".join(UNARY_OPS))
+            .replace("{binary}", ", ".join(BINARY_OPS))
+            .replace("{reduce}", ", ".join(REDUCE_OPS))
+            .replace("{other}", ", ".join(OTHER_OPS)))

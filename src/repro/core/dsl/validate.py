@@ -1,0 +1,307 @@
+"""Structural validation of DSL programs — the DSL's "semantic checker".
+
+This is the first line of the transcompiler's *per-pass correction feedback*
+(paper §4.2): any diagnostic raised here is fed back to the program author
+(the planner, or an LLM front-end) before lowering begins.
+
+Checks
+------
+1.  Stage discipline: loads only in ``copyin``, ops/scalar assignments only
+    in ``compute``, stores only in ``copyout`` (prevents the illegal
+    interleavings the paper's Pass 3 guards against).
+2.  Buffer discipline: alloc-before-use, single allocation, shape/dtype
+    inference per op matches the declared destination.
+3.  VMEM (UB) budget: total allocated on-chip bytes within budget.
+4.  Out-of-bounds analysis: interval arithmetic over affine index
+    expressions proves every unmasked Load/Store stays within the GM
+    tensor; failures produce ``OutOfBounds`` diagnostics which the pipeline
+    repairs by engaging Pass 4 (alignment & padding refinement).
+5.  Alignment diagnostics (non-fatal): tile sizes that violate TPU lane
+    alignment (multiples of 128 elements on the last axis) are reported so
+    Pass 4 / the planner can pad.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from . import ast as A
+
+LANE = 128          # TPU lane count; preferred innermost multiple
+MIN_DMA_BYTES = 512  # efficient HBM<->VMEM transfer granularity
+
+
+class DSLValidationError(Exception):
+    def __init__(self, diags: List["Diag"]):
+        self.diags = diags
+        super().__init__("\n".join(str(d) for d in diags))
+
+
+@dataclass
+class Diag:
+    severity: str       # "error" | "warning"
+    code: str           # e.g. "stage", "oob", "shape", "align", "budget"
+    message: str
+
+    def __str__(self):
+        return f"[{self.severity}:{self.code}] {self.message}"
+
+
+@dataclass
+class Report:
+    diags: List[Diag] = field(default_factory=list)
+
+    @property
+    def errors(self) -> List[Diag]:
+        return [d for d in self.diags if d.severity == "error"]
+
+    @property
+    def warnings(self) -> List[Diag]:
+        return [d for d in self.diags if d.severity == "warning"]
+
+    def error(self, code, msg):
+        self.diags.append(Diag("error", code, msg))
+
+    def warn(self, code, msg):
+        self.diags.append(Diag("warning", code, msg))
+
+    def raise_if_errors(self):
+        if self.errors:
+            raise DSLValidationError(self.errors)
+
+
+# --------------------------------------------------------------------------
+# Interval arithmetic over scalar expressions
+# --------------------------------------------------------------------------
+
+Interval = Tuple[float, float]
+
+
+def _iv_bin(op: str, a: Interval, b: Interval) -> Interval:
+    lo1, hi1 = a
+    lo2, hi2 = b
+    if op == "add":
+        return (lo1 + lo2, hi1 + hi2)
+    if op == "sub":
+        return (lo1 - hi2, hi1 - lo2)
+    if op == "mul":
+        cands = (lo1 * lo2, lo1 * hi2, hi1 * lo2, hi1 * hi2)
+        return (min(cands), max(cands))
+    if op in ("div", "floordiv"):
+        if lo2 <= 0 <= hi2:
+            return (float("-inf"), float("inf"))
+        cands = (lo1 / lo2, lo1 / hi2, hi1 / lo2, hi1 / hi2)
+        lo, hi = min(cands), max(cands)
+        if op == "floordiv":
+            import math
+            return (math.floor(lo), math.floor(hi))
+        return (lo, hi)
+    if op == "mod":
+        if lo2 == hi2 and lo2 > 0:
+            return (0, lo2 - 1)
+        return (float("-inf"), float("inf"))
+    if op == "min":
+        return (min(lo1, lo2), min(hi1, hi2))
+    if op == "max":
+        return (max(lo1, lo2), max(hi1, hi2))
+    raise ValueError(op)
+
+
+def expr_interval(e: A.SExpr, env: Dict[str, Interval]) -> Interval:
+    if isinstance(e, A.SConst):
+        v = float(e.value)
+        return (v, v)
+    if isinstance(e, A.SVar):
+        if e.name in env:
+            return env[e.name]
+        return (float("-inf"), float("inf"))
+    if isinstance(e, A.SBin):
+        return _iv_bin(e.op, expr_interval(e.lhs, env), expr_interval(e.rhs, env))
+    if isinstance(e, A.SExtract):
+        return (float("-inf"), float("inf"))  # data dependent
+    raise TypeError(f"bad scalar expr {e}")
+
+
+# --------------------------------------------------------------------------
+# Validator
+# --------------------------------------------------------------------------
+
+def validate(prog: A.Program, vmem_budget: Optional[int] = None) -> Report:
+    from .language import VMEM_BUDGET
+    budget = vmem_budget if vmem_budget is not None else VMEM_BUDGET
+    rep = Report()
+    shapes = prog.meta.get("task_shapes", {})
+    plan = prog.meta.get("plan", {})
+    tensor_sizes: Dict[str, int] = {}
+    for tp in prog.kernel.tensors:
+        if tp.name in shapes:
+            n = 1
+            for s in shapes[tp.name]:
+                n *= int(s)
+            tensor_sizes[tp.name] = n
+
+    grid = plan.get(prog.host.grid, None)
+    tensors = {tp.name: tp for tp in prog.kernel.tensors}
+    declared: Dict[str, A.Buffer] = {}
+    scalars: Dict[str, A.ScalarDecl] = {}
+
+    # interval env: pid in [0, grid), loop vars bound during traversal
+    env: Dict[str, Interval] = {}
+    if grid is not None:
+        for ax in range(3):
+            env[f"pid{ax}"] = (0, max(0, grid - 1))
+
+    total_ub = 0
+
+    def visit(body, in_stage: Optional[str]):
+        nonlocal total_ub
+        for st in body:
+            if isinstance(st, A.AllocUB):
+                if in_stage is not None:
+                    rep.error("stage", f"alloc_ub('{st.buf.name}') inside a {in_stage} block")
+                if st.buf.name in declared:
+                    rep.error("buffer", f"buffer '{st.buf.name}' allocated twice")
+                declared[st.buf.name] = st.buf
+                total_ub += st.buf.nbytes
+            elif isinstance(st, A.CopyIn):
+                for s in st.body:
+                    if not isinstance(s, A.Load):
+                        rep.error("stage", f"{type(s).__name__} inside copyin block")
+                visit_loads(st.body)
+            elif isinstance(st, A.ComputeBlock):
+                for s in st.body:
+                    if isinstance(s, A.Load):
+                        rep.error("stage", "tl.load inside compute block")
+                    elif isinstance(s, A.Store):
+                        rep.error("stage", "tl.store inside compute block")
+                visit_compute(st.body)
+            elif isinstance(st, A.CopyOut):
+                for s in st.body:
+                    if not isinstance(s, A.Store):
+                        rep.error("stage", f"{type(s).__name__} inside copyout block")
+                visit_stores(st.body)
+            elif isinstance(st, A.ForRange):
+                lo, hi = expr_interval(st.start, env)
+                env[st.var.name] = (lo, hi + st.count - 1)
+                visit(st.body, in_stage)
+                del env[st.var.name]
+            elif isinstance(st, A.ScalarDecl):
+                scalars[st.var.name] = st
+                env.setdefault(st.var.name, expr_interval(st.init, env))
+            elif isinstance(st, (A.Load, A.Store, A.Op, A.ScalarAssign)):
+                rep.error("stage", f"{type(st).__name__} outside of any stage block")
+            else:
+                rep.error("ast", f"unknown statement {type(st).__name__}")
+
+    def check_buf(buf: A.Buffer, what: str):
+        if buf.name not in declared:
+            rep.error("buffer", f"{what} uses undeclared buffer '{buf.name}'")
+
+    def visit_loads(body):
+        for ld in body:
+            if not isinstance(ld, A.Load):
+                continue
+            check_buf(ld.dst, "load")
+            if ld.tensor not in tensors:
+                rep.error("tensor", f"load from unknown tensor '{ld.tensor}'")
+                continue
+            _check_span(ld.tensor, ld.start, ld.dst.size, ld.valid, "load")
+            _check_align(ld.dst.size, ld.dst.dtype, f"load into '{ld.dst.name}'")
+
+    def visit_stores(body):
+        for stn in body:
+            if not isinstance(stn, A.Store):
+                continue
+            check_buf(stn.src, "store")
+            if stn.tensor not in tensors:
+                rep.error("tensor", f"store to unknown tensor '{stn.tensor}'")
+                continue
+            if tensors[stn.tensor].role is A.Role.IN:
+                rep.error("tensor", f"store to read-only tensor '{stn.tensor}'")
+            _check_span(stn.tensor, stn.start, stn.src.size, stn.valid, "store")
+            _check_align(stn.src.size, stn.src.dtype, f"store from '{stn.src.name}'")
+
+    def _check_span(tensor, start, size, valid, what):
+        n = tensor_sizes.get(tensor)
+        if n is None:
+            return
+        lo, hi = expr_interval(start, env)
+        if lo < 0:
+            rep.error("oob", f"{what} on '{tensor}': start may be negative (min {lo})")
+        if valid is None:
+            if hi + size > n:
+                rep.error(
+                    "oob",
+                    f"{what} on '{tensor}': span may reach {int(hi) + size} > numel {n} "
+                    f"(unmasked); add a `valid` mask or fix tiling",
+                )
+        else:
+            vlo, vhi = expr_interval(valid, env)
+            if vhi > size:
+                rep.warn("oob-masked",
+                         f"{what} on '{tensor}': valid clamps to buffer size "
+                         f"{size}")
+            if hi + min(vhi, size) > n:
+                # masked transfers are tail-guarded by the generated wrapper
+                # (explicit backend pads GM by the max masked span)
+                rep.warn("oob-masked",
+                         f"{what} on '{tensor}': masked span may reach "
+                         f"{int(hi + min(vhi, size))} > numel {n} "
+                         f"(covered by the wrapper tail guard)")
+
+    def _check_align(size, dtype, what):
+        if size % LANE != 0:
+            rep.warn("align", f"{what}: transfer of {size} elems is not a multiple "
+                              f"of {LANE} lanes")
+        if size * dtype.nbytes < MIN_DMA_BYTES:
+            rep.warn("align", f"{what}: transfer of {size * dtype.nbytes} B below "
+                              f"efficient DMA granularity ({MIN_DMA_BYTES} B)")
+
+    def visit_compute(body):
+        for op in body:
+            if isinstance(op, A.ScalarDecl):
+                scalars[op.var.name] = op
+                env.setdefault(op.var.name, expr_interval(op.init, env))
+                continue
+            if isinstance(op, A.ScalarAssign):
+                if op.var.name not in scalars:
+                    rep.error("scalar", f"assignment to undeclared scalar "
+                                        f"'{op.var.name}'")
+                env[op.var.name] = (float("-inf"), float("inf"))
+                continue
+            if not isinstance(op, A.Op):
+                continue
+            if op.op not in A.ALL_OPS:
+                rep.error("op", f"unknown op '{op.op}'")
+                continue
+            check_buf(op.dst, f"op {op.op}")
+            for s in op.srcs:
+                if isinstance(s, A.Buffer):
+                    check_buf(s, f"op {op.op}")
+            try:
+                out_shape = A.infer_shape(op)
+            except ValueError as e:
+                rep.error("shape", f"op {op.op} -> '{op.dst.name}': {e}")
+                continue
+            if tuple(out_shape) != tuple(op.dst.shape):
+                # allow writing a keepdims reduce into a flat buffer of same size
+                osz = 1
+                for s in out_shape:
+                    osz *= s
+                if osz != op.dst.size:
+                    rep.error("shape",
+                              f"op {op.op}: inferred {out_shape} != dst "
+                              f"'{op.dst.name}' {op.dst.shape}")
+
+    visit(prog.kernel.body, None)
+
+    if total_ub > budget:
+        rep.error("budget", f"UB/VMEM allocations total {total_ub} B "
+                            f"> budget {budget} B — shrink tile_length")
+    if grid is None:
+        rep.error("host", f"host grid variable '{prog.host.grid}' not in plan")
+    elif grid <= 0:
+        rep.error("host", f"grid must be positive, got {grid}")
+
+    return rep

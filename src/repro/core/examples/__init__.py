@@ -1,0 +1,11 @@
+"""Category-specific expert examples (paper §4.1).
+
+One module per category pattern; the planner specializes these to tasks:
+  elementwise   — activation / pointwise math / optimizer updates
+  normalization — row-resident + streaming normalization & row stats/reduce
+  loss          — pointwise contribution + per-tile partial sums + epilogue
+  scan          — cumulative ops with running-scalar carries
+  reduction     — mid-axis reduction with VMEM accumulator
+  pooling       — windowed reductions via static strided slices
+"""
+from . import common, elementwise, normalization, loss, scan, reduction, pooling

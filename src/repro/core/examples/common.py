@@ -1,0 +1,115 @@
+"""Shared machinery for category-specific expert examples (paper §4.1).
+
+Each expert example is a *pattern builder*: it encodes the category's tiling
+strategy, dataflow organization and buffer usage, and is specialized to a
+concrete task (op + shapes) by a small *recipe* that emits the compute ops.
+This factoring mirrors the paper: the example carries the category-level
+optimization pattern; the per-task generation step (the LLM's job there,
+the planner's here) fills in the computation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from ..dsl import ast as A
+from ..dsl import language as tl
+
+
+@dataclass
+class RecipeCtx:
+    """Handle given to op recipes while the example builds the compute stage."""
+    pb: tl.ProgramBuilder
+    attrs: Dict[str, Any]
+    bufs: Dict[str, A.Buffer]              # tensor name -> loaded tile buffer
+    tile_shape: Tuple                      # logical tile shape (with names)
+    dtype: A.DType = A.f32
+    _outs: Dict[str, A.Buffer] = field(default_factory=dict)
+    _tmp_n: int = 0
+    extras: Dict[str, Any] = field(default_factory=dict)
+
+    def buf(self, tensor: str) -> A.Buffer:
+        return self.bufs[tensor]
+
+    def tmp(self, stem: str = "tmp", shape: Optional[Sequence] = None,
+            dtype: Optional[A.DType] = None) -> A.Buffer:
+        """Allocate a TBuf-style temporary at kernel scope."""
+        self._tmp_n += 1
+        name = f"{stem}{self._tmp_n}"
+        shape = tuple(shape) if shape is not None else tuple(self.tile_shape)
+        dtype = dtype or self.dtype
+        buf = A.Buffer(name, tuple(int(s) for s in shape), dtype)
+        object.__setattr__(buf, "shape_names",
+                           tuple(getattr(s, "name", None) for s in shape))
+        self.pb._buffers[name] = buf
+        # insert the alloc at kernel scope, after existing allocs
+        body = self.pb._kernel.body
+        pos = 0
+        while pos < len(body) and isinstance(body[pos], A.AllocUB):
+            pos += 1
+        body.insert(pos, A.AllocUB(buf))
+        return buf
+
+    def out(self, tensor: str, buf: A.Buffer):
+        """Declare that `buf` holds the tile to store into `tensor`."""
+        self._outs[tensor] = buf
+
+    def result(self, tensor: str) -> A.Buffer:
+        return self._outs[tensor]
+
+
+# Recipe signature: fn(ctx) -> None; must call ctx.out(...) for every output.
+Recipe = Callable[[RecipeCtx], None]
+
+
+def _rup(x: int, m: int) -> int:
+    return -(-int(x) // int(m)) * int(m)
+
+
+def apply_gm_layout(shapes: Dict[str, Tuple[int, ...]],
+                    layout: Dict[str, Dict[str, Any]],
+                    plan: Dict[str, int]) -> Dict[str, Tuple[int, ...]]:
+    """Compute padded shapes exactly as the generated wrapper will (Pass 4).
+
+    ``flatten: True`` specs flatten the tensor to 1-D before padding (used
+    by shape-agnostic elementwise patterns so padding is bounded by one
+    core_span instead of one per trailing row)."""
+    padded = {k: tuple(v) for k, v in shapes.items()}
+    for t, spec in layout.items():
+        m = spec["pad_multiple"]
+        mval = plan[m] if isinstance(m, str) else int(m)
+        if spec.get("flatten"):
+            n = 1
+            for s in shapes[t]:
+                n *= int(s)
+            padded[t] = (_rup(n, mval),)
+            continue
+        ax = spec.get("pad_axis", -1)
+        s = list(padded[t])
+        s[ax] = _rup(s[ax], mval)
+        padded[t] = tuple(s)
+    return padded
+
+
+def two_phase_build(core_build: Callable[[Dict[str, Tuple[int, ...]]], A.Program],
+                    shapes: Dict[str, Tuple[int, ...]],
+                    layout: Dict[str, Dict[str, Any]]) -> A.Program:
+    """Build once against original shapes to learn the plan, apply the Pass-4
+    GM layout, and rebuild against the padded shapes (so validation and the
+    DSL interpreter see the same GM the kernel addresses)."""
+    prog0 = core_build(shapes)
+    padded = apply_gm_layout(shapes, layout, prog0.meta["plan"])
+    prog = core_build(padded) if padded != shapes else prog0
+    prog.meta["gm_layout"] = layout
+    prog.meta["orig_shapes"] = {k: tuple(v) for k, v in shapes.items()}
+    return prog
+
+
+def divisor_cores(n: int, cap: int = 32) -> int:
+    """Largest core count <= cap that divides n exactly (so per-core row
+    ranges tile the row space with no tail)."""
+    n = max(1, int(n))
+    for d in range(min(cap, n), 0, -1):
+        if n % d == 0:
+            return d
+    return 1

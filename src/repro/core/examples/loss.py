@@ -1,0 +1,157 @@
+"""Expert example — LOSS pattern (pointwise contribution + partial reduce).
+
+Strategy: elementwise tiles exactly like the activation pattern, but each
+tile's contribution is reduced to a single partial that is stored to a
+``partials`` output (one slot per grid step).  The cross-core combine is a
+tiny host-side epilogue in the generated wrapper (the Ascend equivalent
+would be a SyncAll + second stage; on TPU the host add is cheaper than a
+cross-core semaphore dance for a single scalar).
+
+Padding correctness: each loss picks GM pad values whose pointwise
+contribution is exactly zero (e.g. pred=target=0 for MSE); BCE has no
+zero-contribution pad, so its epilogue subtracts the analytically known
+pad contribution (ln 2 per padded element).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from ..dsl import ast as A
+from ..dsl import language as tl
+from ..lowering.pipeline import Knobs
+from .common import RecipeCtx, Recipe, two_phase_build
+
+
+def build_loss_partials(task, shapes, knobs: Knobs, recipe: Recipe) -> A.Program:
+    pad_values = task.attrs.get("pad_values", {})
+    layout = {
+        t.name: {"flatten": True, "pad_multiple": "core_span",
+                 "pad_value": float(pad_values.get(t.name, 0.0))}
+        for t in task.tensors if t.role != "out"
+    }
+
+    def core(shp):
+        return _loss_core(task, shp, knobs, recipe)
+
+    prog = two_phase_build(core, shapes, layout)
+    prog.meta["out_shape_code"] = {
+        "partials": "(_p0['n_cores'] * _p0['n_tiles'],)"}
+    prog.meta["postprocess"] = {"partials": task.attrs["epilogue"]}
+    return prog
+
+
+def _loss_core(task, shapes, knobs: Knobs, recipe: Recipe) -> A.Program:
+    ins = [t for t in task.tensors if t.role in ("in", "inout")]
+    first = ins[0].name
+    P = tl.ProgramBuilder(task.name, category=task.category,
+                          task_shapes=dict(shapes),
+                          rationale="loss: elementwise tiles -> per-tile "
+                                    "partial sums -> host epilogue")
+    h = P.host()
+    numel = h.numel(first)
+    n_cores = h.let("n_cores", tl.NUM_CORES)
+    tile_length = h.let("tile_length",
+                        tl.hmin(knobs.max_tile, tl.hcdiv(numel, n_cores)),
+                        rationale="tile fits UB/VMEM with all loss operands")
+    core_span = h.let("core_span", n_cores * tile_length,
+                      rationale="GM padded to a multiple of this (pass 4)")
+    padded_numel = h.let("padded_numel",
+                         tl.hcdiv(numel, core_span) * core_span)
+    per_core = h.let("per_core", padded_numel // n_cores)
+    n_tiles = h.let("n_tiles", per_core // tile_length)
+    h.launch(grid="n_cores")
+    # the partials output has one slot per (core, tile)
+    P.task_shapes["partials"] = (int(n_cores) * int(n_tiles),)
+
+    with P.kernel(tensors=[(t.name, t.dtype, t.role, t.rank)
+                           for t in task.tensors]):
+        pid = tl.program_id(0)
+        bufs = {t.name: tl.alloc_ub(f"{t.name}_t", (tile_length,), t.dtype)
+                for t in ins}
+        part = tl.alloc_ub("part", (1,), tl.f32)
+        ctx = RecipeCtx(pb=P, attrs=dict(task.attrs), bufs=bufs,
+                        tile_shape=(tile_length,))
+        with tl.for_range("t", 0, n_tiles) as t:
+            off = pid * per_core + t * tile_length
+            with tl.copyin():
+                for tp in ins:
+                    tl.load(tp.name, off, bufs[tp.name])
+            with tl.compute():
+                recipe(ctx)                      # -> contribution tile
+                tl.reduce_sum(part, ctx.result("contrib"))
+            with tl.copyout():
+                tl.store("partials", pid * n_tiles + t, part)
+    return P.build()
+
+
+# --------------------------------------------------------------------------
+# Loss recipes: write the pointwise contribution tile to ctx.out("contrib")
+# --------------------------------------------------------------------------
+
+def mse_recipe(ctx: RecipeCtx):
+    p, t = ctx.buf("pred"), ctx.buf("target")
+    d = ctx.tmp("d")
+    tl.sub(d, p, t)
+    tl.square(d, d)
+    ctx.out("contrib", d)
+
+
+def l1_recipe(ctx: RecipeCtx):
+    p, t = ctx.buf("pred"), ctx.buf("target")
+    d = ctx.tmp("d")
+    tl.sub(d, p, t)
+    tl.abs(d, d)
+    ctx.out("contrib", d)
+
+
+def smooth_l1_recipe(ctx: RecipeCtx):
+    """huber with beta=1: 0.5 d^2 if |d|<1 else |d|-0.5"""
+    p, t = ctx.buf("pred"), ctx.buf("target")
+    d, ad, q, lin, m, c = (ctx.tmp("d"), ctx.tmp("ad"), ctx.tmp("q"),
+                           ctx.tmp("lin"), ctx.tmp("m"), ctx.tmp("c"))
+    tl.sub(d, p, t)
+    tl.abs(ad, d)
+    tl.square(q, d)
+    tl.mul(q, q, 0.5)
+    tl.sub(lin, ad, 0.5)
+    tl.lt(m, ad, 1.0)
+    tl.where(c, m, q, lin)
+    ctx.out("contrib", c)
+
+
+def kl_div_recipe(ctx: RecipeCtx):
+    """KLDiv with log-space input (like torch.nn.KLDivLoss):
+    contribution = target * (log(target) - log_pred)."""
+    lp, t = ctx.buf("log_pred"), ctx.buf("target")
+    lt_, d = ctx.tmp("lt"), ctx.tmp("d")
+    tl.log(lt_, t)
+    tl.sub(d, lt_, lp)
+    tl.mul(d, d, t)
+    ctx.out("contrib", d)
+
+
+def bce_recipe(ctx: RecipeCtx):
+    p, t = ctx.buf("pred"), ctx.buf("target")
+    lp, l1p, a, b, c, one_t = (ctx.tmp("lp"), ctx.tmp("l1p"), ctx.tmp("a"),
+                               ctx.tmp("b"), ctx.tmp("c"), ctx.tmp("one_t"))
+    tl.log(lp, p)
+    tl.sub(one_t, p, 1.0)        # p - 1
+    tl.neg(one_t, one_t)         # 1 - p
+    tl.log(l1p, one_t)
+    tl.mul(a, t, lp)
+    tl.sub(b, t, 1.0)
+    tl.neg(b, b)                 # 1 - t
+    tl.mul(b, b, l1p)
+    tl.add(c, a, b)
+    tl.neg(c, c)
+    ctx.out("contrib", c)
+
+
+def hinge_recipe(ctx: RecipeCtx):
+    p, t = ctx.buf("pred"), ctx.buf("target")
+    m, z = ctx.tmp("m"), ctx.tmp("z")
+    tl.mul(m, p, t)
+    tl.sub(m, m, 1.0)
+    tl.neg(m, m)                 # 1 - p*t
+    tl.relu(z, m)
+    ctx.out("contrib", z)

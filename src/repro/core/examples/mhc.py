@@ -1,0 +1,276 @@
+"""Expert examples — mHC kernels (paper RQ3: Manifold-Constrained
+Hyper-Connections, DeepSeek arXiv:2512.24880).
+
+Semantics implemented (DESIGN.md §7.1): with n residual streams,
+
+  M = sinkhorn(exp(logits), K iters)           # (n, n) doubly stochastic
+  mhc_post:      y[r, i, :] = sum_j M[i, j] * h[r, j, :] + beta[i] * o[r, :]
+  mhc_post_grad: dh[r, j, :] = sum_i M[i, j] * g[r, i, :]
+                 do[r, :]    = sum_i beta[i] * g[r, i, :]
+
+The Sinkhorn projection is tiny ((n, n), n=4) and is *fused into the
+kernel* — recomputed per grid step, negligible next to the (n, d) row
+traffic.  Stream mixing is expressed with static slices + extract_scalar
+(no matmul: this is a vector kernel, not a Cube kernel).
+
+The eager baseline launches ~n^2 + n elementwise kernels over (R, d) data;
+the fused kernel touches each element once — this is where the paper's
+6.6x/3.0x speedups come from.
+"""
+from __future__ import annotations
+
+from math import prod
+from typing import Dict, Tuple
+
+from ..dsl import ast as A
+from ..dsl import language as tl
+from ..lowering.pipeline import Knobs
+from .common import two_phase_build, divisor_cores
+
+LANE = 128
+
+
+def _sinkhorn_ops(Mb, rs, cs, iters: int):
+    """Emit in-kernel Sinkhorn-Knopp: exp + alternating row/col normalize."""
+    tl.exp(Mb, Mb)
+    for _ in range(iters):
+        tl.reduce_sum(rs, Mb, axis=1)     # (n, 1)
+        tl.div(Mb, Mb, rs)
+        tl.reduce_sum(cs, Mb, axis=0)     # (1, n)
+        tl.div(Mb, Mb, cs)
+
+
+def build_mhc_post(task, shapes, knobs: Knobs) -> A.Program:
+    layout = {t: {"pad_axis": -1, "pad_multiple": "lane", "pad_value": 0.0}
+              for t in ("h", "o", "out")}
+
+    def core(shp):
+        return _mhc_post_core(task, shp, knobs)
+
+    prog = two_phase_build(core, shapes, layout)
+    prog.meta["out_shape_code"] = {"out": "tuple(_arrs[0].shape)"}
+    return prog
+
+
+def _mhc_post_core(task, shapes, knobs: Knobs) -> A.Program:
+    n = int(shapes["h"][1])
+    iters = int(task.attrs.get("sinkhorn_iters", 5))
+    R = int(shapes["h"][0])
+
+    P = tl.ProgramBuilder(task.name, category="mhc",
+                          task_shapes=dict(shapes),
+                          rationale=f"fused sinkhorn({iters}) + {n}-stream "
+                                    f"mix + rank-1 output add")
+    h = P.host()
+    h.let("lane", LANE)
+    d = h.dim("h", 2)
+    rows = h.dim("h", 0)
+    n_cores = h.let("n_cores", divisor_cores(R, tl.NUM_CORES),
+                    rationale="largest core count dividing rows")
+    rows_per_core = h.let("rows_per_core", rows // n_cores)
+    h.launch(grid="n_cores")
+
+    with P.kernel(tensors=[("h", tl.f32, "in", 3), ("o", tl.f32, "in", 2),
+                           ("logits", tl.f32, "in", 2),
+                           ("beta", tl.f32, "in", 1),
+                           ("out", tl.f32, "out", 3)]):
+        pid = tl.program_id(0)
+        Mb = tl.alloc_ub("Mb", (n, n), tl.f32)
+        rs = tl.alloc_ub("rs", (n, 1), tl.f32)
+        cs = tl.alloc_ub("cs", (1, n), tl.f32)
+        bb = tl.alloc_ub("bb", (n,), tl.f32)
+        hb = tl.alloc_ub("hb", (n, d), tl.f32)
+        ob = tl.alloc_ub("ob", (1, d), tl.f32)
+        sl = tl.alloc_ub("sl", (1, d), tl.f32)
+        t = tl.alloc_ub("t", (1, d), tl.f32)
+        accs = [tl.alloc_ub(f"acc{i}", (1, d), tl.f32) for i in range(n)]
+        with tl.copyin():
+            tl.load("logits", 0, Mb)
+            tl.load("beta", 0, bb)
+        with tl.compute():
+            _sinkhorn_ops(Mb, rs, cs, iters)
+        with tl.for_range("r", pid * rows_per_core, rows_per_core) as r:
+            with tl.copyin():
+                tl.load("h", r * n * d, hb)
+                tl.load("o", r * d, ob)
+            with tl.compute():
+                for i in range(n):
+                    tl.mul(accs[i], ob, tl.extract_scalar(bb, i))
+                    for j in range(n):
+                        tl.static_slice(sl, hb, slices=[(j, j + 1, 1),
+                                                        (0, None, 1)])
+                        tl.mul(t, sl, tl.extract_scalar(Mb, i * n + j))
+                        tl.add(accs[i], accs[i], t)
+            with tl.copyout():
+                for i in range(n):
+                    # i * d must stay symbolic in d (python-int * StaticInt
+                    # folds to a nameless literal and bakes the dimension)
+                    tl.store("out", r * n * d + i * tl.as_sexpr(d), accs[i])
+    return P.build()
+
+
+def build_mhc_post_blocked(task, shapes, knobs: Knobs) -> A.Program:
+    """Expert-optimized mhc_post (paper RQ3 second stage): process Rb rows
+    per grid step.  The (Rb*n, d) block is loaded with ONE transfer; stream
+    j of every row is a static strided slice (stride n across the row axis);
+    the output block is assembled with concat and stored with ONE transfer.
+    Transfers drop from 6 per row to 3 per Rb rows — this is the
+    "bigger DMA bursts" optimization a human would request in natural
+    language after reading the generated kernel."""
+    layout = {t: {"pad_axis": -1, "pad_multiple": "lane", "pad_value": 0.0}
+              for t in ("h", "o", "out")}
+
+    def core(shp):
+        return _mhc_post_blocked_core(task, shp, knobs)
+
+    prog = two_phase_build(core, shapes, layout)
+    prog.meta["out_shape_code"] = {"out": "tuple(_arrs[0].shape)"}
+    return prog
+
+
+def _mhc_post_blocked_core(task, shapes, knobs: Knobs) -> A.Program:
+    n = int(shapes["h"][1])
+    d_int = int(shapes["h"][2])
+    iters = int(task.attrs.get("sinkhorn_iters", 5))
+    R = int(shapes["h"][0])
+    # (3n + 4) live (Rb, d)-sized buffers (+ small sinkhorn buffers)
+    # must fit the UB/VMEM budget
+    cap = max(1, (tl.VMEM_BUDGET - 65536)
+              // ((3 * n + 4) * max(1, d_int) * 4))
+    Rb = 1
+    for dv in range(min(cap, R), 0, -1):
+        if R % dv == 0:
+            Rb = dv
+            break
+
+    P = tl.ProgramBuilder(task.name + "_opt", category="mhc",
+                          task_shapes=dict(shapes),
+                          rationale=f"row-blocked (Rb={Rb}) fused sinkhorn + "
+                                    f"{n}-stream mix: 3 transfers / {Rb} rows")
+    h = P.host()
+    h.let("lane", LANE)
+    d = h.dim("h", 2)
+    rows = h.dim("h", 0)
+    block_rows = h.let("block_rows", Rb,
+                       rationale="largest divisor of rows whose working set "
+                                 "fits UB/VMEM")
+    n_blocks = h.let("n_blocks", rows // block_rows)
+    h.launch(grid="n_blocks")
+
+    with P.kernel(tensors=[("h", tl.f32, "in", 3), ("o", tl.f32, "in", 2),
+                           ("logits", tl.f32, "in", 2),
+                           ("beta", tl.f32, "in", 1),
+                           ("out", tl.f32, "out", 3)]):
+        pid = tl.program_id(0)
+        r0 = pid * block_rows
+        Mb = tl.alloc_ub("Mb", (n, n), tl.f32)
+        rs = tl.alloc_ub("rs", (n, 1), tl.f32)
+        cs = tl.alloc_ub("cs", (1, n), tl.f32)
+        bb = tl.alloc_ub("bb", (n,), tl.f32)
+        hb = tl.alloc_ub("hb", (Rb * n, d), tl.f32)
+        ob = tl.alloc_ub("ob", (Rb, d), tl.f32)
+        sl = tl.alloc_ub("sl", (Rb, d), tl.f32)
+        t = tl.alloc_ub("t", (Rb, d), tl.f32)
+        accs = [tl.alloc_ub(f"acc{i}", (Rb, 1, d), tl.f32) for i in range(n)]
+        a2 = tl.alloc_ub("a2", (Rb, d), tl.f32)
+        blk = tl.alloc_ub("blk", (Rb, n, d), tl.f32)
+        with tl.copyin():
+            tl.load("logits", 0, Mb)
+            tl.load("beta", 0, bb)
+            tl.load("h", r0 * n * d, hb)
+            tl.load("o", r0 * d, ob)
+        with tl.compute():
+            _sinkhorn_ops(Mb, rs, cs, iters)
+            for i in range(n):
+                tl.mul(a2, ob, tl.extract_scalar(bb, i))
+                for j in range(n):
+                    # stream j of every row: static stride-n slice
+                    tl.static_slice(sl, hb,
+                                    slices=[(j, (Rb - 1) * n + j + 1, n),
+                                            (0, None, 1)])
+                    tl.mul(t, sl, tl.extract_scalar(Mb, i * n + j))
+                    tl.add(a2, a2, t)
+                tl.reshape(accs[i], a2)
+            tl.concat(blk, *accs, axis=1)
+        with tl.copyout():
+            tl.store("out", r0 * n * d, blk)
+    prog = P.build()
+    prog.meta["make_guards"] = [
+        (f"shapes['h'][0] % {Rb} == 0",
+         "row count must divide the generated block size; regenerate"),
+    ]
+    return prog
+
+
+def build_mhc_post_grad(task, shapes, knobs: Knobs) -> A.Program:
+    layout = {t: {"pad_axis": -1, "pad_multiple": "lane", "pad_value": 0.0}
+              for t in ("g", "dh", "do")}
+
+    def core(shp):
+        return _mhc_post_grad_core(task, shp, knobs)
+
+    prog = two_phase_build(core, shapes, layout)
+    prog.meta["out_shape_code"] = {
+        "dh": "tuple(_arrs[0].shape)",
+        "do": "(tuple(_arrs[0].shape)[0], tuple(_arrs[0].shape)[2])",
+    }
+    return prog
+
+
+def _mhc_post_grad_core(task, shapes, knobs: Knobs) -> A.Program:
+    n = int(shapes["g"][1])
+    iters = int(task.attrs.get("sinkhorn_iters", 5))
+    R = int(shapes["g"][0])
+
+    P = tl.ProgramBuilder(task.name, category="mhc",
+                          task_shapes=dict(shapes),
+                          rationale=f"fused sinkhorn({iters}) + transposed "
+                                    f"{n}-stream mix + beta combine")
+    h = P.host()
+    h.let("lane", LANE)
+    d = h.dim("g", 2)
+    rows = h.dim("g", 0)
+    n_cores = h.let("n_cores", divisor_cores(R, tl.NUM_CORES))
+    rows_per_core = h.let("rows_per_core", rows // n_cores)
+    h.launch(grid="n_cores")
+
+    with P.kernel(tensors=[("g", tl.f32, "in", 3),
+                           ("logits", tl.f32, "in", 2),
+                           ("beta", tl.f32, "in", 1),
+                           ("dh", tl.f32, "out", 3),
+                           ("do", tl.f32, "out", 2)]):
+        pid = tl.program_id(0)
+        Mb = tl.alloc_ub("Mb", (n, n), tl.f32)
+        rs = tl.alloc_ub("rs", (n, 1), tl.f32)
+        cs = tl.alloc_ub("cs", (1, n), tl.f32)
+        bb = tl.alloc_ub("bb", (n,), tl.f32)
+        gb = tl.alloc_ub("gb", (n, d), tl.f32)
+        sl = tl.alloc_ub("sl", (1, d), tl.f32)
+        t = tl.alloc_ub("t", (1, d), tl.f32)
+        dob = tl.alloc_ub("dob", (1, d), tl.f32)
+        dhs = [tl.alloc_ub(f"dh{j}", (1, d), tl.f32) for j in range(n)]
+        with tl.copyin():
+            tl.load("logits", 0, Mb)
+            tl.load("beta", 0, bb)
+        with tl.compute():
+            _sinkhorn_ops(Mb, rs, cs, iters)
+        with tl.for_range("r", pid * rows_per_core, rows_per_core) as r:
+            with tl.copyin():
+                tl.load("g", r * n * d, gb)
+            with tl.compute():
+                tl.full(dob, 0.0)
+                for j in range(n):
+                    tl.full(dhs[j], 0.0)
+                for i in range(n):
+                    tl.static_slice(sl, gb, slices=[(i, i + 1, 1),
+                                                    (0, None, 1)])
+                    tl.mul(t, sl, tl.extract_scalar(bb, i))
+                    tl.add(dob, dob, t)
+                    for j in range(n):
+                        tl.mul(t, sl, tl.extract_scalar(Mb, i * n + j))
+                        tl.add(dhs[j], dhs[j], t)
+            with tl.copyout():
+                for j in range(n):
+                    tl.store("dh", r * n * d + j * tl.as_sexpr(d), dhs[j])
+                tl.store("do", r * d, dob)
+    return P.build()

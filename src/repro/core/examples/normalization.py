@@ -1,0 +1,616 @@
+"""Expert examples — ROW-WISE patterns (normalization / reduce / row stats).
+
+Two strategies, chosen by the planner from the VMEM budget (exactly the
+decision the paper's host function documents with a rationale):
+
+* ``rowwise_resident`` — when a block of whole rows fits UB/VMEM: grid over
+  row-blocks, each core loads an (R, C) block, computes row statistics with
+  keepdims reductions and applies the transform in one visit.  Eligible for
+  the BlockSpec-pipelined backend (the fast path).
+* ``rowwise_streaming`` — long rows: the paper's Fig. 2 multi-pass pattern
+  with running scalars across column tiles (explicit backend).
+
+Recipes receive the (R, C) block and must produce either a same-shape
+transform (normalization) or an (R, 1) per-row statistic (reduce/row-stat).
+"""
+from __future__ import annotations
+
+from math import prod as np_prod
+from typing import Any, Dict, Optional, Tuple
+
+from ..dsl import ast as A
+from ..dsl import language as tl
+from ..lowering.pipeline import Knobs
+from .common import RecipeCtx, Recipe, two_phase_build, divisor_cores
+
+LANE = 128
+
+
+def _layout(task, pad_value_in: float):
+    """Pad every tensor's trailing axis to the lane multiple (Pass 4);
+    the row input gets the op's neutral pad value, everything else 0."""
+    row_in = task.attrs.get("row_input", "input")
+    lay = {}
+    for t in task.tensors:
+        lay[t.name] = {"pad_axis": -1, "pad_multiple": "cols_padded_unit",
+                       "pad_value": pad_value_in if t.name == row_in else 0.0}
+    return lay
+
+
+def build_rowwise_map(task, shapes, knobs: Knobs, recipe: Recipe) -> A.Program:
+    """Normalization-style: out[r, :] = f(x[r, :]) with row statistics."""
+    pad_in = float(task.attrs.get("pad_value", 0.0))
+    layout = _layout(task, pad_in)
+
+    def core(shp):
+        return _rowwise_core(task, shp, knobs, recipe, stat_out=False)
+
+    return _finish(task, two_phase_build(core, shapes, layout), stat=False)
+
+
+def build_rowwise_stat(task, shapes, knobs: Knobs, recipe: Recipe) -> A.Program:
+    """Reduce-style: out[r] = g(x[r, :]).  Output is (rows,)."""
+    pad_in = float(task.attrs.get("pad_value", 0.0))
+    layout = {task.attrs.get("row_input", "input"):
+              {"pad_axis": -1, "pad_multiple": "cols_padded_unit",
+               "pad_value": pad_in}}
+
+    def core(shp):
+        return _rowwise_core(task, shp, knobs, recipe, stat_out=True)
+
+    return _finish(task, two_phase_build(core, shapes, layout), stat=True)
+
+
+def _finish(task, prog, stat: bool):
+    if stat:
+        code = task.attrs.get(
+            "out_shape_code",
+            "tuple(_arrs[0].shape[:-1])")
+        prog.meta["out_shape_code"] = {
+            t.name: code for t in task.tensors if t.role == "out"}
+        if "postprocess" in task.attrs:
+            prog.meta["postprocess"] = dict(task.attrs["postprocess"])
+    else:
+        prog.meta["out_shape_code"] = {
+            t.name: "tuple(_arrs[0].shape)" for t in task.tensors
+            if t.role == "out"}
+    return prog
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    cap = max(1, min(int(cap), int(n)))
+    for d in range(cap, 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def _rowwise_core(task, shapes, knobs: Knobs, recipe: Recipe,
+                  stat_out: bool) -> A.Program:
+    in_name = task.attrs.get("row_input", "input")
+    out_t = [t for t in task.tensors if t.role == "out"][0]
+    ins = [t for t in task.tensors if t.role in ("in", "inout")]
+    rows = 1
+    for s in shapes[in_name][:-1]:
+        rows *= int(s)
+    cols = int(shapes[in_name][-1])
+
+    # residency decision: bytes for one (R, C) block * live buffers
+    # (recipes allocate several same-shape temporaries: budget generously)
+    live = max(12, len(ins) + 8)
+    if cols * 4 > tl.VMEM_BUDGET // live:
+        raise NotImplementedError(
+            "row does not fit VMEM; use the op's streaming builder")
+    budget_rows = max(1, (tl.VMEM_BUDGET // live) // max(1, cols * 4))
+    br = _largest_divisor_leq(rows, budget_rows)
+
+    P = tl.ProgramBuilder(task.name, category=task.category,
+                          task_shapes=dict(shapes),
+                          rationale="rowwise resident: one (R, C) row-block "
+                                    "per grid step, R | rows")
+    h = P.host()
+    numel = h.numel(in_name)
+    cols_v = h.dim(in_name, len(shapes[in_name]) - 1)
+    h.let("cols_padded_unit", LANE,
+          rationale="lane alignment for the trailing axis (pass 4)")
+    rows_v = h.let("rows", numel // cols_v)
+    block_rows = h.let(
+        "block_rows", br,
+        rationale=f"largest divisor of rows with (R x cols) x {live} live "
+                  f"buffers fitting the UB/VMEM budget")
+    n_blocks = h.let("n_blocks", rows_v // block_rows,
+                     rationale="one row-block per core/grid step")
+    h.launch(grid="n_blocks")
+
+    with P.kernel(tensors=[(t.name, t.dtype, t.role, t.rank)
+                           for t in task.tensors]):
+        pid = tl.program_id(0)
+        row0 = pid * block_rows
+        bufs = {}
+        for t in ins:
+            shp = tuple(shapes[t.name])
+            if len(shp) >= 1 and int(np_prod(shp)) == cols:
+                # broadcast operand (e.g. a (cols,) affine weight): load once
+                bufs[t.name] = tl.alloc_ub(f"{t.name}_t", (1, cols_v), t.dtype)
+            else:
+                bufs[t.name] = tl.alloc_ub(f"{t.name}_t",
+                                           (block_rows, cols_v), t.dtype)
+        ctx = RecipeCtx(pb=P, attrs=dict(task.attrs), bufs=bufs,
+                        tile_shape=(block_rows, cols_v), dtype=out_t.dtype)
+        ctx.extras["cols"] = cols
+        ctx.extras["block_rows"] = block_rows
+        with tl.copyin():
+            for t in ins:
+                if bufs[t.name].shape[0] == 1 and int(np_prod(shapes[t.name])) == cols:
+                    tl.load(t.name, 0, bufs[t.name])
+                else:
+                    tl.load(t.name, row0 * cols_v, bufs[t.name])
+        with tl.compute():
+            recipe(ctx)
+        with tl.copyout():
+            if stat_out:
+                tl.store(out_t.name, row0, ctx.result(out_t.name))
+            else:
+                tl.store(out_t.name, row0 * cols_v, ctx.result(out_t.name))
+    prog = P.build()
+    prog.meta["make_guards"] = [
+        ("p['rows'] % p['block_rows'] == 0",
+         "rows must be a multiple of the generated block_rows; regenerate "
+         "the kernel for this shape"),
+        (f"padded[{in_name!r}][-1] == {int(cols)}",
+         "kernel was specialized for a different trailing dimension; "
+         "regenerate for this shape"),
+    ]
+    return prog
+
+
+def build_add_rmsnorm(task, shapes, knobs: Knobs) -> A.Program:
+    """Fused residual-add + RMSNorm (transformer hot path): one visit over
+    the row block produces BOTH the normed output and the updated residual
+    stream — eager needs 2 extra full passes for the add."""
+    layout = _layout(task, 0.0)
+
+    def core(shp):
+        return _add_rmsnorm_core(task, shp, knobs)
+
+    prog = two_phase_build(core, shapes, layout)
+    prog.meta["out_shape_code"] = {
+        "output": "tuple(_arrs[0].shape)",
+        "new_residual": "tuple(_arrs[0].shape)",
+    }
+    return prog
+
+
+def _add_rmsnorm_core(task, shapes, knobs: Knobs) -> A.Program:
+    rows = 1
+    for v in shapes["input"][:-1]:
+        rows *= int(v)
+    cols = int(shapes["input"][-1])
+    live = 8
+    if cols * 4 > tl.VMEM_BUDGET // live:
+        raise NotImplementedError("row too long; use streaming")
+    budget_rows = max(1, (tl.VMEM_BUDGET // live) // max(1, cols * 4))
+    br = _largest_divisor_leq(rows, budget_rows)
+    eps = float(task.attrs.get("eps", 1e-6))
+
+    P = tl.ProgramBuilder(task.name, category="normalization",
+                          task_shapes=dict(shapes),
+                          rationale="fused residual-add + rmsnorm: one "
+                                    "row-block visit, two outputs")
+    h = P.host()
+    numel = h.numel("input")
+    cols_v = h.dim("input", len(shapes["input"]) - 1)
+    h.let("cols_padded_unit", LANE)
+    rows_v = h.let("rows", numel // cols_v)
+    block_rows = h.let("block_rows", br)
+    n_blocks = h.let("n_blocks", rows_v // block_rows)
+    h.launch(grid="n_blocks")
+
+    with P.kernel(tensors=[("input", tl.f32, "in", 2),
+                           ("residual", tl.f32, "in", 2),
+                           ("weight", tl.f32, "in", 1),
+                           ("output", tl.f32, "out", 2),
+                           ("new_residual", tl.f32, "out", 2)]):
+        pid = tl.program_id(0)
+        row0 = pid * block_rows
+        xt = tl.alloc_ub("xt", (block_rows, cols_v), tl.f32)
+        rt = tl.alloc_ub("rt", (block_rows, cols_v), tl.f32)
+        wt = tl.alloc_ub("wt", (1, cols_v), tl.f32)
+        red = tl.alloc_ub("red", (block_rows, 1), tl.f32)
+        sq = tl.alloc_ub("sq", (block_rows, cols_v), tl.f32)
+        y = tl.alloc_ub("y", (block_rows, cols_v), tl.f32)
+        with tl.copyin():
+            tl.load("input", row0 * cols_v, xt)
+            tl.load("residual", row0 * cols_v, rt)
+            tl.load("weight", 0, wt)
+        with tl.compute():
+            tl.add(xt, xt, rt)                    # new residual stream
+            tl.square(sq, xt)
+            tl.reduce_sum(red, sq, axis=1)
+            tl.mul(red, red, 1.0 / cols)
+            tl.add(red, red, eps)
+            tl.rsqrt(red, red)
+            tl.mul(y, xt, red)
+            tl.mul(y, y, wt)
+        with tl.copyout():
+            tl.store("output", row0 * cols_v, y)
+            tl.store("new_residual", row0 * cols_v, xt)
+    prog = P.build()
+    prog.meta["make_guards"] = [
+        ("p['rows'] % p['block_rows'] == 0",
+         "rows must be a multiple of the generated block_rows; regenerate"),
+        (f"padded['input'][-1] == {-(-cols // LANE) * LANE}",
+         "kernel specialized for a different trailing dim; regenerate"),
+    ]
+    return prog
+
+
+# --------------------------------------------------------------------------
+# Streaming builders (paper Fig. 2 — long rows that do not fit VMEM)
+# --------------------------------------------------------------------------
+
+def build_softmax_streaming(task, shapes, knobs: Knobs) -> A.Program:
+    """Three-pass streaming softmax with running max/sum scalars — the
+    paper's Figure-2 program, verbatim in our tl.* surface syntax."""
+    layout = _layout(task, -3.0e38)
+
+    def core(shp):
+        P = tl.ProgramBuilder(task.name, category=task.category,
+                              task_shapes=dict(shp),
+                              rationale="streaming softmax: 3 passes with "
+                                        "running scalars (Fig. 2)")
+        h = P.host()
+        numel = h.numel("input")
+        c = h.dim("input", len(shp["input"]) - 1)
+        h.let("cols_padded_unit", LANE)
+        rows = h.let("rows", numel // c)
+        import math as _m
+        _rows = int(_m.prod(shp["input"][:-1]))
+        n_cores = h.let("n_cores", divisor_cores(_rows, tl.NUM_CORES),
+                        rationale="largest core count dividing rows exactly")
+        rows_per_core = h.let("rows_per_core", rows // n_cores)
+        tile_length = h.let("tile_length", tl.hmin(knobs.max_tile, c),
+                            rationale="column tile fits UB/VMEM")
+        n_tiles = h.let("n_tiles", tl.hcdiv(c, tile_length))
+        h.launch(grid="n_cores")
+        with P.kernel(tensors=[(t.name, t.dtype, t.role, t.rank)
+                               for t in task.tensors]):
+            pid = tl.program_id(0)
+            row_tile = tl.alloc_ub("row_tile", (tile_length,), tl.f32)
+            red = tl.alloc_ub("red", (1,), tl.f32)
+            with tl.for_range("row", pid * rows_per_core,
+                              rows_per_core) as row:
+                rmax = tl.scalar("row_max", -3.0e38)
+                with tl.for_range("t1", 0, n_tiles) as t:
+                    off = row * c + t * tile_length
+                    with tl.copyin():
+                        tl.load("input", off, row_tile, pad_value=-3.0e38)
+                    with tl.compute():
+                        tl.reduce_max(red, row_tile)
+                        tl.assign(rmax, tl.smax(rmax,
+                                                tl.extract_scalar(red, 0)))
+                rsum = tl.scalar("row_sum", 0.0)
+                with tl.for_range("t2", 0, n_tiles) as t:
+                    off = row * c + t * tile_length
+                    with tl.copyin():
+                        tl.load("input", off, row_tile)
+                    with tl.compute():
+                        tl.sub(row_tile, row_tile, rmax)
+                        tl.exp(row_tile, row_tile)
+                        tl.reduce_sum(red, row_tile)
+                        tl.assign(rsum, rsum + tl.extract_scalar(red, 0))
+                with tl.for_range("t3", 0, n_tiles) as t:
+                    off = row * c + t * tile_length
+                    with tl.copyin():
+                        tl.load("input", off, row_tile)
+                    with tl.compute():
+                        tl.sub(row_tile, row_tile, rmax)
+                        tl.exp(row_tile, row_tile)
+                        tl.div(row_tile, row_tile, rsum)
+                    with tl.copyout():
+                        tl.store("output", off, row_tile)
+        return P.build()
+
+    # pad columns to a tile multiple so streaming tiles are exact
+    for spec in layout.values():
+        spec["pad_multiple"] = "tile_length"
+    prog = two_phase_build(core, shapes, layout)
+    prog.meta["out_shape_code"] = {"output": "tuple(_arrs[0].shape)"}
+    return prog
+
+
+def build_rmsnorm_streaming(task, shapes, knobs: Knobs) -> A.Program:
+    """Two-pass streaming RMSNorm: pass 1 accumulates a running
+    sum-of-squares scalar across column tiles; 1/rms is computed through a
+    1-element UB buffer (vector rsqrt + extract); pass 2 rescales."""
+    layout = _layout(task, 0.0)
+    has_w = any(t.name == "weight" for t in task.tensors)
+    eps = float(task.attrs.get("eps", 1e-6))
+    cols_real = int(shapes["input"][-1])
+
+    def core(shp):
+        P = tl.ProgramBuilder(task.name, category=task.category,
+                              task_shapes=dict(shp),
+                              rationale="streaming rmsnorm: 2 passes with a "
+                                        "running sum-of-squares scalar")
+        h = P.host()
+        numel = h.numel("input")
+        c = h.dim("input", len(shp["input"]) - 1)
+        h.let("cols_padded_unit", LANE)
+        rows = h.let("rows", numel // c)
+        import math as _m
+        _rows = int(_m.prod(shp["input"][:-1]))
+        n_cores = h.let("n_cores", divisor_cores(_rows, tl.NUM_CORES),
+                        rationale="largest core count dividing rows exactly")
+        rows_per_core = h.let("rows_per_core", rows // n_cores)
+        tile_length = h.let("tile_length", tl.hmin(knobs.max_tile, c),
+                            rationale="column tile fits UB/VMEM")
+        n_tiles = h.let("n_tiles", tl.hcdiv(c, tile_length))
+        h.launch(grid="n_cores")
+        with P.kernel(tensors=[(t.name, t.dtype, t.role, t.rank)
+                               for t in task.tensors]):
+            pid = tl.program_id(0)
+            xt = tl.alloc_ub("xt", (tile_length,), tl.f32)
+            if has_w:
+                wt = tl.alloc_ub("wt", (tile_length,), tl.f32)
+            red = tl.alloc_ub("red", (1,), tl.f32)
+            with tl.for_range("row", pid * rows_per_core,
+                              rows_per_core) as row:
+                ss = tl.scalar("sum_sq", 0.0)
+                with tl.for_range("t1", 0, n_tiles) as t:
+                    off = row * c + t * tile_length
+                    with tl.copyin():
+                        tl.load("input", off, xt)
+                    with tl.compute():
+                        tl.square(xt, xt)
+                        tl.reduce_sum(red, xt)
+                        tl.assign(ss, ss + tl.extract_scalar(red, 0))
+                inv = tl.scalar("inv_rms", 0.0)
+                with tl.compute():
+                    # scalar rsqrt through a 1-element UB buffer
+                    tl.full(red, ss * (1.0 / cols_real) + eps)
+                    tl.rsqrt(red, red)
+                    tl.assign(inv, tl.extract_scalar(red, 0))
+                with tl.for_range("t2", 0, n_tiles) as t:
+                    off = row * c + t * tile_length
+                    with tl.copyin():
+                        tl.load("input", off, xt)
+                        if has_w:
+                            tl.load("weight", t * tile_length, wt)
+                    with tl.compute():
+                        tl.mul(xt, xt, inv)
+                        if has_w:
+                            tl.mul(xt, xt, wt)
+                    with tl.copyout():
+                        tl.store("output", off, xt)
+        return P.build()
+
+    for spec in layout.values():
+        spec["pad_multiple"] = "tile_length"
+    prog = two_phase_build(core, shapes, layout)
+    prog.meta["out_shape_code"] = {"output": "tuple(_arrs[0].shape)"}
+    return prog
+
+
+# --------------------------------------------------------------------------
+# Normalization recipes (resident form)
+# --------------------------------------------------------------------------
+
+def softmax_recipe(ctx: RecipeCtx):
+    x = ctx.buf("input")
+    R, C = ctx.tile_shape
+    red = ctx.tmp("red", (R, 1))
+    y = ctx.tmp("y")
+    tl.reduce_max(red, x, axis=1)
+    tl.sub(y, x, red)
+    tl.exp(y, y)
+    tl.reduce_sum(red, y, axis=1)
+    tl.div(y, y, red)
+    ctx.out("output", y)
+
+
+def log_softmax_recipe(ctx: RecipeCtx):
+    x = ctx.buf("input")
+    R, C = ctx.tile_shape
+    red = ctx.tmp("red", (R, 1))
+    y, e = ctx.tmp("y"), ctx.tmp("e")
+    tl.reduce_max(red, x, axis=1)
+    tl.sub(y, x, red)
+    tl.exp(e, y)
+    tl.reduce_sum(red, e, axis=1)
+    tl.log(red, red)
+    tl.sub(y, y, red)
+    ctx.out("output", y)
+
+
+def rmsnorm_recipe(ctx: RecipeCtx):
+    x = ctx.buf("input")
+    g = ctx.bufs.get("weight")
+    R, C = ctx.tile_shape
+    cols = float(ctx.extras["cols"])
+    eps = float(ctx.attrs.get("eps", 1e-6))
+    red = ctx.tmp("red", (R, 1))
+    y, t = ctx.tmp("y"), ctx.tmp("t")
+    tl.square(t, x)
+    tl.reduce_sum(red, t, axis=1)
+    tl.mul(red, red, 1.0 / cols)
+    tl.add(red, red, eps)
+    tl.rsqrt(red, red)
+    tl.mul(y, x, red)
+    if g is not None:
+        tl.mul(y, y, g)
+    ctx.out("output", y)
+
+
+def layernorm_recipe(ctx: RecipeCtx):
+    x = ctx.buf("input")
+    g = ctx.bufs.get("weight")
+    b = ctx.bufs.get("bias")
+    R, C = ctx.tile_shape
+    cols = float(ctx.extras["cols"])
+    eps = float(ctx.attrs.get("eps", 1e-5))
+    mu, var = ctx.tmp("mu", (R, 1)), ctx.tmp("var", (R, 1))
+    y, t = ctx.tmp("y"), ctx.tmp("t")
+    tl.reduce_sum(mu, x, axis=1)
+    tl.mul(mu, mu, 1.0 / cols)
+    tl.sub(y, x, mu)
+    # masked centering: padded cols hold -mu after centering; square+sum
+    # would pollute the variance, so re-mask with an iota column mask.
+    m = ctx.tmp("m")
+    tl.iota(m, axis=1)
+    mk = ctx.tmp("mk")
+    tl.lt(mk, m, cols)
+    tl.mul(y, y, mk)
+    tl.square(t, y)
+    tl.reduce_sum(var, t, axis=1)
+    tl.mul(var, var, 1.0 / cols)
+    tl.add(var, var, eps)
+    tl.rsqrt(var, var)
+    tl.mul(y, y, var)
+    if g is not None:
+        tl.mul(y, y, g)
+    if b is not None:
+        tl.add(y, y, b)
+    ctx.out("output", y)
+
+
+def l2norm_recipe(ctx: RecipeCtx):
+    x = ctx.buf("input")
+    R, C = ctx.tile_shape
+    eps = float(ctx.attrs.get("eps", 1e-12))
+    red = ctx.tmp("red", (R, 1))
+    y, t = ctx.tmp("y"), ctx.tmp("t")
+    tl.square(t, x)
+    tl.reduce_sum(red, t, axis=1)
+    tl.sqrt(red, red)
+    tl.add(red, red, eps)
+    tl.div(y, x, red)
+    ctx.out("output", y)
+
+
+def l1norm_recipe(ctx: RecipeCtx):
+    x = ctx.buf("input")
+    R, C = ctx.tile_shape
+    eps = float(ctx.attrs.get("eps", 1e-12))
+    red = ctx.tmp("red", (R, 1))
+    y, t = ctx.tmp("y"), ctx.tmp("t")
+    tl.abs(t, x)
+    tl.reduce_sum(red, t, axis=1)
+    tl.add(red, red, eps)
+    tl.div(y, x, red)
+    ctx.out("output", y)
+
+
+def minmax_norm_recipe(ctx: RecipeCtx):
+    x = ctx.buf("input")
+    R, C = ctx.tile_shape
+    cols = float(ctx.extras["cols"])
+    eps = float(ctx.attrs.get("eps", 1e-12))
+    m = ctx.tmp("m")
+    tl.iota(m, axis=1)
+    mk = ctx.tmp("mk")
+    tl.lt(mk, m, cols)
+    xmax_in, xmin_in = ctx.tmp("xmax_in"), ctx.tmp("xmin_in")
+    big = 3.0e38
+    tl.mul(xmax_in, x, mk)           # pad -> 0; then shift pad to -inf/+inf
+    inv = ctx.tmp("inv")
+    tl.sub(inv, mk, 1.0)             # pad -> -1, valid -> 0
+    t = ctx.tmp("t")
+    tl.mul(t, inv, -big)             # pad -> +big, valid -> 0
+    tl.sub(xmax_in, xmax_in, t)      # pad -> -big
+    tl.mul(xmin_in, x, mk)
+    tl.add(xmin_in, xmin_in, t)      # pad -> +big
+    rmax, rmin = ctx.tmp("rmax", (R, 1)), ctx.tmp("rmin", (R, 1))
+    tl.reduce_max(rmax, xmax_in, axis=1)
+    tl.reduce_min(rmin, xmin_in, axis=1)
+    y, rng = ctx.tmp("y"), ctx.tmp("rng", (R, 1))
+    tl.sub(rng, rmax, rmin)
+    tl.add(rng, rng, eps)
+    tl.sub(y, x, rmin)
+    tl.div(y, y, rng)
+    ctx.out("output", y)
+
+
+def instance_norm_recipe(ctx: RecipeCtx):
+    # identical math to layernorm over the (H*W) trailing axis, no affine
+    layernorm_recipe(ctx)
+
+
+# --------------------------------------------------------------------------
+# Reduce / row-stat recipes (resident form) — produce (R, 1)
+# --------------------------------------------------------------------------
+
+def _reduce_recipe(kind: str) -> Recipe:
+    def recipe(ctx: RecipeCtx):
+        x = ctx.buf("input")
+        R, C = ctx.tile_shape
+        red = ctx.tmp("red", (R, 1))
+        getattr(tl, kind)(red, x, axis=1)
+        if kind == "reduce_mean":
+            pass  # handled via reduce_sum + scale below for pad correctness
+        ctx.out("output", red)
+    recipe.__name__ = f"recipe_{kind}"
+    return recipe
+
+
+reduce_sum_recipe = _reduce_recipe("reduce_sum")
+reduce_max_recipe = _reduce_recipe("reduce_max")
+reduce_min_recipe = _reduce_recipe("reduce_min")
+
+
+def reduce_mean_recipe(ctx: RecipeCtx):
+    x = ctx.buf("input")
+    R, C = ctx.tile_shape
+    cols = float(ctx.extras["cols"])
+    red = ctx.tmp("red", (R, 1))
+    tl.reduce_sum(red, x, axis=1)
+    tl.mul(red, red, 1.0 / cols)     # divide by the REAL column count
+    ctx.out("output", red)
+
+
+def reduce_prod_recipe(ctx: RecipeCtx):
+    x = ctx.buf("input")
+    R, C = ctx.tile_shape
+    cols = float(ctx.extras["cols"])
+    # pad region must be 1 for prod: mask it explicitly
+    m = ctx.tmp("m")
+    tl.iota(m, axis=1)
+    mk = ctx.tmp("mk")
+    tl.lt(mk, m, cols)
+    one = ctx.tmp("one")
+    tl.full(one, 1.0)
+    xm = ctx.tmp("xm")
+    tl.where(xm, mk, x, one)
+    red = ctx.tmp("red", (R, 1))
+    tl.reduce_prod(red, xm, axis=1)
+    ctx.out("output", red)
+
+
+def global_avg_pool_recipe(ctx: RecipeCtx):
+    reduce_mean_recipe(ctx)
+
+
+def cosine_sim_recipe(ctx: RecipeCtx):
+    """Per-row cosine similarity between two inputs -> (R, 1)."""
+    a, b = ctx.buf("pred"), ctx.buf("target")
+    R, C = ctx.tile_shape
+    eps = float(ctx.attrs.get("eps", 1e-8))
+    dot, na, nb = (ctx.tmp("dot", (R, 1)), ctx.tmp("na", (R, 1)),
+                   ctx.tmp("nb", (R, 1)))
+    t = ctx.tmp("t")
+    tl.mul(t, a, b)
+    tl.reduce_sum(dot, t, axis=1)
+    tl.square(t, a)
+    tl.reduce_sum(na, t, axis=1)
+    tl.square(t, b)
+    tl.reduce_sum(nb, t, axis=1)
+    tl.sqrt(na, na)
+    tl.sqrt(nb, nb)
+    tl.mul(na, na, nb)
+    tl.add(na, na, eps)
+    tl.div(dot, dot, na)
+    # loss = 1 - cos
+    one = ctx.tmp("one", (R, 1))
+    tl.full(one, 1.0)
+    tl.sub(dot, one, dot)
+    ctx.out("output", dot)

@@ -1,0 +1,291 @@
+"""Expert example — POOLING patterns (windowed reductions).
+
+Key Ascend/TPU adaptation: window access is NEVER strided GM traffic.
+Each core loads whole contiguous rows into UB/VMEM and forms the windows
+with *static strided slices of the on-chip value* (free relayouts on the
+VPU), accumulating across the (small, unrolled) kernel taps:
+
+  pool1d:  out[i] = comb_{j<k} x[i*s + j]       — k strided slices of a row
+  pool2d:  out[ho,wo] = comb_{kh,kw} x[ho*s+kh, wo*s+kw]
+           — per output row: k row loads, k*k strided slices
+
+The paper reports pooling as its weakest category (66.7 % Pass@1, Fast
+scores of 0) because of exactly this windowing complexity; the pattern
+above is the expert knowledge that fixes it.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from ..dsl import ast as A
+from ..dsl import language as tl
+from ..lowering.pipeline import Knobs
+from .common import two_phase_build, divisor_cores
+
+LANE = 128
+
+_COMB = {"avg": tl.add, "max": tl.max, "lp2": tl.add}
+_INIT = {"avg": 0.0, "max": -3.0e38, "lp2": 0.0}
+
+
+def build_pool1d(task, shapes, knobs: Knobs, mode: str) -> A.Program:
+    layout = {
+        "input": {"pad_axis": -1, "pad_multiple": "lane", "pad_value": 0.0},
+        "output": {"pad_axis": -1, "pad_multiple": "lane", "pad_value": 0.0},
+    }
+
+    def core(shp):
+        return _pool1d_core(task, shp, knobs, mode, orig_shapes=shapes)
+
+    prog = two_phase_build(core, shapes, layout)
+    prog.meta["out_shape_code"] = {
+        "output": "(shapes['input'][0], shapes['input'][1], "
+                  "(shapes['input'][2] - %d) // %d + 1)"
+                  % (int(task.attrs["kernel"]), int(task.attrs["stride"]))}
+    _lp = -(-int(shapes["input"][-1]) // LANE) * LANE
+    prog.meta["make_guards"] = [
+        (f"shapes['input'][-1] <= {_lp}",
+         "pool kernel was specialized for a different input length; "
+         "regenerate for this shape"),
+    ]
+    return prog
+
+
+def _pool1d_core(task, shapes, knobs: Knobs, mode: str,
+                 orig_shapes=None) -> A.Program:
+    k = int(task.attrs["kernel"])
+    s = int(task.attrs["stride"])
+    orig_shapes = orig_shapes or shapes
+    L = int(orig_shapes["input"][-1])
+    l_out = (L - k) // s + 1
+
+    P = tl.ProgramBuilder(task.name, category=task.category,
+                          task_shapes=dict(shapes),
+                          rationale=f"pool1d(k={k},s={s}): resident row, "
+                                    f"{k} static strided slices")
+    h = P.host()
+    h.let("lane", LANE, rationale="trailing-axis lane alignment (pass 4)")
+    numel = h.numel("input")
+    c = h.dim("input", 2)
+    rows = h.let("rows", numel // c)
+    # padded output row stride (baked; the host may only read INPUT dims)
+    out_c = h.let("out_row_stride", -(-l_out // LANE) * LANE,
+                  rationale="lane-padded output row stride")
+    import math as _m
+    _rows = int(shapes["input"][0]) * int(shapes["input"][1])
+    n_cores = h.let("n_cores", divisor_cores(_rows, tl.NUM_CORES),
+                    rationale="largest core count dividing rows exactly")
+    rows_per_core = h.let("rows_per_core", rows // n_cores)
+    h.launch(grid="n_cores")
+
+    with P.kernel(tensors=[(t.name, t.dtype, t.role, t.rank)
+                           for t in task.tensors]):
+        pid = tl.program_id(0)
+        xt = tl.alloc_ub("xt", (c,), tl.f32)
+        win = tl.alloc_ub("win", (l_out,), tl.f32)
+        acc = tl.alloc_ub("acc", (l_out,), tl.f32)
+        with tl.for_range("row", pid * rows_per_core, rows_per_core) as row:
+            with tl.copyin():
+                tl.load("input", row * c, xt)
+            with tl.compute():
+                tl.full(acc, _INIT[mode])
+                for j in range(k):
+                    tl.static_slice(win, xt,
+                                    slices=[(j, j + (l_out - 1) * s + 1, s)])
+                    if mode == "lp2":
+                        tl.square(win, win)
+                    _COMB[mode](acc, acc, win)
+                if mode == "avg":
+                    tl.mul(acc, acc, 1.0 / k)
+                elif mode == "lp2":
+                    tl.sqrt(acc, acc)
+            with tl.copyout():
+                tl.store("output", row * out_c, acc)
+    return P.build()
+
+
+def build_pool2d(task, shapes, knobs: Knobs, mode: str) -> A.Program:
+    layout = {
+        "input": {"pad_axis": -1, "pad_multiple": "lane", "pad_value": 0.0},
+        "output": {"pad_axis": -1, "pad_multiple": "lane", "pad_value": 0.0},
+    }
+
+    def core(shp):
+        return _pool2d_core(task, shp, knobs, mode, orig_shapes=shapes)
+
+    prog = two_phase_build(core, shapes, layout)
+    k = int(task.attrs["kernel"])
+    s = int(task.attrs["stride"])
+    prog.meta["out_shape_code"] = {
+        "output": "(shapes['input'][0], shapes['input'][1], "
+                  f"(shapes['input'][2] - {k}) // {s} + 1, "
+                  f"(shapes['input'][3] - {k}) // {s} + 1)"}
+    return prog
+
+
+def build_pool2d_rowreuse(task, shapes, knobs: Knobs, mode: str) -> A.Program:
+    """SPerf iteration (kernel-level): row-reuse pool2d.
+
+    The baseline loads k input rows per output row (k/s = 1.5x redundant
+    input traffic for k=3, s=2).  This variant carries the k-s overlapping
+    rows in UB across output-row iterations and loads only the s new rows:
+    input traffic drops from k*Hout rows to ~H rows per plane — the DMA
+    pattern an Ascend expert would write by hand."""
+    layout = {
+        "input": {"pad_axis": -1, "pad_multiple": "lane", "pad_value": 0.0},
+        "output": {"pad_axis": -1, "pad_multiple": "lane", "pad_value": 0.0},
+    }
+
+    def core(shp):
+        return _pool2d_rowreuse_core(task, shp, knobs, mode,
+                                     orig_shapes=shapes)
+
+    prog = two_phase_build(core, shapes, layout)
+    k = int(task.attrs["kernel"])
+    s = int(task.attrs["stride"])
+    prog.meta["out_shape_code"] = {
+        "output": "(shapes['input'][0], shapes['input'][1], "
+                  f"(shapes['input'][2] - {k}) // {s} + 1, "
+                  f"(shapes['input'][3] - {k}) // {s} + 1)"}
+    return prog
+
+
+def _pool2d_rowreuse_core(task, shapes, knobs: Knobs, mode: str,
+                          orig_shapes=None) -> A.Program:
+    k = int(task.attrs["kernel"])
+    s = int(task.attrs["stride"])
+    assert 0 < s <= k, (k, s)
+    n_carry = k - s
+    orig_shapes = orig_shapes or shapes
+    H, W = (int(x) for x in orig_shapes["input"][2:])
+    h_out = (H - k) // s + 1
+    w_out = (W - k) // s + 1
+
+    P = tl.ProgramBuilder(task.name + "_rowreuse", category=task.category,
+                          task_shapes=dict(shapes),
+                          rationale=f"pool2d(k={k},s={s}) with row reuse: "
+                                    f"{s} new row loads per output row "
+                                    f"({n_carry} carried in UB)")
+    h = P.host()
+    h.let("lane", LANE, rationale="trailing-axis lane alignment (pass 4)")
+    b_dim = h.dim("input", 0)
+    ch = h.dim("input", 1)
+    h_in = h.dim("input", 2)
+    w_in = h.dim("input", 3)
+    h_outv = h.let("h_out", h_out)
+    w_outv = h.let("out_w_stride", -(-w_out // LANE) * LANE,
+                   rationale="lane-padded output row stride")
+    planes = h.let("planes", b_dim * ch)
+    _planes = int(shapes["input"][0]) * int(shapes["input"][1])
+    n_cores = h.let("n_cores", divisor_cores(_planes, tl.NUM_CORES),
+                    rationale="largest core count dividing planes exactly")
+    planes_per_core = h.let("planes_per_core", planes // n_cores)
+    h.launch(grid="n_cores")
+
+    with P.kernel(tensors=[(t.name, t.dtype, t.role, t.rank)
+                           for t in task.tensors]):
+        pid = tl.program_id(0)
+        carry = [tl.alloc_ub(f"c{j}", (w_in,), tl.f32)
+                 for j in range(n_carry)]
+        new = [tl.alloc_ub(f"n{j}", (w_in,), tl.f32) for j in range(s)]
+        win = tl.alloc_ub("win", (w_out,), tl.f32)
+        acc = tl.alloc_ub("acc", (w_out,), tl.f32)
+        with tl.for_range("p", pid * planes_per_core,
+                          planes_per_core) as p:
+            if n_carry:
+                with tl.copyin():   # prologue: rows 0..k-s-1 of the plane
+                    for j in range(n_carry):
+                        tl.load("input", p * h_in * w_in + j * w_in,
+                                carry[j])
+            with tl.for_range("ho", 0, h_outv) as ho:
+                with tl.copyin():   # only the s NEW rows of this window
+                    for j in range(s):
+                        tl.load("input",
+                                p * h_in * w_in
+                                + (ho * s + n_carry + j) * w_in, new[j])
+                with tl.compute():
+                    window = list(carry) + list(new)
+                    tl.full(acc, _INIT[mode])
+                    for kh in range(k):
+                        for kw in range(k):
+                            tl.static_slice(
+                                win, window[kh],
+                                slices=[(kw, kw + (w_out - 1) * s + 1, s)])
+                            _COMB[mode](acc, acc, win)
+                    if mode == "avg":
+                        tl.mul(acc, acc, 1.0 / (k * k))
+                    # rotate: next window's carried rows are this window's
+                    # rows s..k-1
+                    for j in range(n_carry):
+                        tl.copy(carry[j], window[s + j])
+                with tl.copyout():
+                    tl.store("output",
+                             p * h_outv * w_outv + ho * w_outv, acc)
+    prog = P.build()
+    _lp = -(-int(shapes["input"][-1]) // LANE) * LANE
+    prog.meta["make_guards"] = [
+        (f"shapes['input'][-1] <= {_lp}",
+         "pool kernel was specialized for a different input length; "
+         "regenerate for this shape"),
+    ]
+    return prog
+
+
+def _pool2d_core(task, shapes, knobs: Knobs, mode: str,
+                 orig_shapes=None) -> A.Program:
+    k = int(task.attrs["kernel"])
+    s = int(task.attrs["stride"])
+    orig_shapes = orig_shapes or shapes
+    H, W = (int(x) for x in orig_shapes["input"][2:])
+    h_out = (H - k) // s + 1
+    w_out = (W - k) // s + 1
+
+    P = tl.ProgramBuilder(task.name, category=task.category,
+                          task_shapes=dict(shapes),
+                          rationale=f"pool2d(k={k},s={s}): per output row, "
+                                    f"{k} row loads + {k * k} static slices")
+    h = P.host()
+    h.let("lane", LANE, rationale="trailing-axis lane alignment (pass 4)")
+    b_dim = h.dim("input", 0)
+    ch = h.dim("input", 1)
+    h_in = h.dim("input", 2)
+    w_in = h.dim("input", 3)
+    # baked output extents (the host may only read INPUT dims)
+    h_outv = h.let("h_out", h_out)
+    w_outv = h.let("out_w_stride", -(-w_out // LANE) * LANE,
+                   rationale="lane-padded output row stride")
+    planes = h.let("planes", b_dim * ch)
+    _planes = int(shapes["input"][0]) * int(shapes["input"][1])
+    n_cores = h.let("n_cores", divisor_cores(_planes, tl.NUM_CORES),
+                    rationale="largest core count dividing planes exactly")
+    planes_per_core = h.let("planes_per_core", planes // n_cores)
+    h.launch(grid="n_cores")
+
+    with P.kernel(tensors=[(t.name, t.dtype, t.role, t.rank)
+                           for t in task.tensors]):
+        pid = tl.program_id(0)
+        rows = [tl.alloc_ub(f"r{j}", (w_in,), tl.f32) for j in range(k)]
+        win = tl.alloc_ub("win", (w_out,), tl.f32)
+        acc = tl.alloc_ub("acc", (w_out,), tl.f32)
+        with tl.for_range("p", pid * planes_per_core,
+                          planes_per_core) as p:
+            with tl.for_range("ho", 0, h_outv) as ho:
+                with tl.copyin():
+                    for kh in range(k):
+                        tl.load("input",
+                                p * h_in * w_in + (ho * s + kh) * w_in,
+                                rows[kh])
+                with tl.compute():
+                    tl.full(acc, _INIT[mode])
+                    for kh in range(k):
+                        for kw in range(k):
+                            tl.static_slice(
+                                win, rows[kh],
+                                slices=[(kw, kw + (w_out - 1) * s + 1, s)])
+                            _COMB[mode](acc, acc, win)
+                    if mode == "avg":
+                        tl.mul(acc, acc, 1.0 / (k * k))
+                with tl.copyout():
+                    tl.store("output",
+                             p * h_outv * w_outv + ho * w_outv, acc)
+    return P.build()

@@ -1,0 +1,98 @@
+"""Expert example — MID-AXIS REDUCE pattern (reduce over a non-trailing axis).
+
+For ``out[b, :] = reduce(x[b, :, :], axis=0)`` (input (B, D1, D2)): each
+core owns a range of ``b``; for each ``b`` it streams D1 in tiles of
+contiguous (d1_tile, D2) blocks, reduces axis 0 with keepdims into a
+VMEM-resident accumulator, and stores the (D2,) result.  Loads stay
+contiguous (the DSL's DataCopy discipline); the "strided" view is a free
+reshape of the loaded block.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from ..dsl import ast as A
+from ..dsl import language as tl
+from ..lowering.pipeline import Knobs
+from .common import RecipeCtx, Recipe, two_phase_build, divisor_cores
+
+LANE = 128
+
+
+def build_mid_reduce(task, shapes, knobs: Knobs, kind: str = "reduce_sum",
+                     mean: bool = False) -> A.Program:
+    neutral = {"reduce_sum": 0.0, "reduce_max": -3.0e38,
+               "reduce_min": 3.0e38}[kind]
+    layout = {
+        t.name: {"pad_axis": -1, "pad_multiple": "cols_pad_unit",
+                 "pad_value": neutral if t.role != "out" else 0.0}
+        for t in task.tensors
+    }
+
+    def core(shp):
+        return _mid_reduce_core(task, shp, knobs, kind, mean)
+
+    prog = two_phase_build(core, shapes, layout)
+    prog.meta["out_shape_code"] = {
+        "output": "(shapes['input'][0], shapes['input'][2])"}
+    return prog
+
+
+def _mid_reduce_core(task, shapes, knobs: Knobs, kind: str,
+                     mean: bool) -> A.Program:
+    B, D1, D2 = (int(s) for s in shapes["input"])
+    P = tl.ProgramBuilder(task.name, category=task.category,
+                          task_shapes=dict(shapes),
+                          rationale="mid-axis reduce: stream (d1_tile, D2) "
+                                    "blocks into a VMEM accumulator")
+    h = P.host()
+    b_dim = h.dim("input", 0)
+    d1 = h.dim("input", 1)
+    d2 = h.dim("input", 2)
+    h.let("cols_pad_unit", LANE,
+          rationale="lane alignment of the trailing axis (pass 4)")
+    n_cores = h.let("n_cores", divisor_cores(B, tl.NUM_CORES),
+                    rationale="largest core count dividing batch exactly")
+    b_per_core = h.let("b_per_core", b_dim // n_cores)
+    # d1 tile so (d1_tile x D2) + accumulator fit the budget
+    cap = max(1, (tl.VMEM_BUDGET // 3) // max(1, D2 * 4))
+    d1_tile = h.let("d1_tile", tl.hmin(int(cap), d1),
+                    rationale="(d1_tile x D2) block + accumulator fit "
+                              "UB/VMEM")
+    n_tiles = h.let("n_tiles", tl.hcdiv(d1, d1_tile))
+    padded_d1 = h.let("padded_d1", n_tiles * d1_tile)
+    h.launch(grid="n_cores")
+
+    op = {"reduce_sum": tl.reduce_sum, "reduce_max": tl.reduce_max,
+          "reduce_min": tl.reduce_min}[kind]
+    acc_init = {"reduce_sum": 0.0, "reduce_max": -3.0e38,
+                "reduce_min": 3.0e38}[kind]
+    comb = {"reduce_sum": tl.add, "reduce_max": tl.max,
+            "reduce_min": tl.min}[kind]
+
+    with P.kernel(tensors=[(t.name, t.dtype, t.role, t.rank)
+                           for t in task.tensors]):
+        pid = tl.program_id(0)
+        blk = tl.alloc_ub("blk", (d1_tile, d2), tl.f32)
+        red = tl.alloc_ub("red", (1, d2), tl.f32)
+        acc = tl.alloc_ub("acc", (1, d2), tl.f32)
+        with tl.for_range("b", pid * b_per_core, b_per_core) as b:
+            with tl.compute():
+                tl.full(acc, acc_init)
+            with tl.for_range("t", 0, n_tiles) as t:
+                off = b * d1 * d2 + t * d1_tile * d2
+                with tl.copyin():
+                    tl.load("input", off, blk,
+                            valid=tl.smin(
+                                (d1 - t * d1_tile) * d2,
+                                int(d1_tile) * 1 * d2),
+                            pad_value=acc_init)
+                with tl.compute():
+                    op(red, blk, axis=0)
+                    comb(acc, acc, red)
+            with tl.compute():
+                if mean:
+                    tl.mul(acc, acc, 1.0 / float(D1))
+            with tl.copyout():
+                tl.store("output", b * d2, acc)
+    return P.build()

@@ -1,0 +1,91 @@
+"""Expert example — SCAN pattern (cumulative ops along the trailing axis).
+
+Strategy: rows across cores (Fig. 2 partitioning); within a row, stream
+column tiles left-to-right carrying the running total as a scalar:
+
+    carry = 0
+    for tile:  y = cumsum(x_tile) + carry;  carry = y[-1];  store y
+
+The tail is padded with zeros (Pass 4), which is the identity for cumsum,
+so the carry stays exact and the padded columns are sliced off on the way
+out.  ``masked_cumsum`` multiplies by the mask before scanning — this is
+the operator whose boolean dtype broke the paper's Math category (§5.2);
+we carry the mask as f32 over GM and document the bool variant in the
+bench notes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from ..dsl import ast as A
+from ..dsl import language as tl
+from ..lowering.pipeline import Knobs
+from .common import RecipeCtx, Recipe, two_phase_build, divisor_cores
+
+LANE = 128
+
+
+def build_scan_row(task, shapes, knobs: Knobs, masked: bool) -> A.Program:
+    layout = {
+        t.name: {"pad_axis": -1, "pad_multiple": "tile_length",
+                 "pad_value": 0.0}
+        for t in task.tensors
+    }
+
+    def core(shp):
+        return _scan_core(task, shp, knobs, masked)
+
+    prog = two_phase_build(core, shapes, layout)
+    prog.meta["out_shape_code"] = {"output": "tuple(_arrs[0].shape)"}
+    tile = prog.meta["plan"]["tile_length"]
+    prog.meta["make_guards"] = [
+        (f"p['tile_length'] == {int(tile)}",
+         "scan carry index was specialized for a different tile length; "
+         "regenerate for this shape"),
+    ]
+    return prog
+
+
+def _scan_core(task, shapes, knobs: Knobs, masked: bool) -> A.Program:
+    P = tl.ProgramBuilder(task.name, category=task.category,
+                          task_shapes=dict(shapes),
+                          rationale="row scan: stream column tiles with a "
+                                    "running-total scalar carry")
+    h = P.host()
+    numel = h.numel("input")
+    c = h.dim("input", len(shapes["input"]) - 1)
+    rows = h.let("rows", numel // c)
+    import math as _m
+    _rows = int(_m.prod(shapes["input"][:-1]))
+    n_cores = h.let("n_cores", divisor_cores(_rows, tl.NUM_CORES),
+                    rationale="largest core count dividing rows exactly")
+    rows_per_core = h.let("rows_per_core", rows // n_cores)
+    tile_length = h.let("tile_length", tl.hmin(knobs.max_tile, c),
+                        rationale="column tile fits UB/VMEM")
+    n_tiles = h.let("n_tiles", tl.hcdiv(c, tile_length))
+    h.launch(grid="n_cores")
+
+    last = int(tile_length) - 1
+    with P.kernel(tensors=[(t.name, t.dtype, t.role, t.rank)
+                           for t in task.tensors]):
+        pid = tl.program_id(0)
+        xt = tl.alloc_ub("xt", (tile_length,), tl.f32)
+        if masked:
+            mt = tl.alloc_ub("mt", (tile_length,), tl.f32)
+        with tl.for_range("row", pid * rows_per_core, rows_per_core) as row:
+            carry = tl.scalar("carry", 0.0)
+            with tl.for_range("t", 0, n_tiles) as t:
+                off = row * c + t * tile_length
+                with tl.copyin():
+                    tl.load("input", off, xt)
+                    if masked:
+                        tl.load("mask", off, mt)
+                with tl.compute():
+                    if masked:
+                        tl.mul(xt, xt, mt)
+                    tl.cumsum(xt, xt, axis=0)
+                    tl.add(xt, xt, carry)
+                    tl.assign(carry, tl.extract_scalar(xt, last))
+                with tl.copyout():
+                    tl.store("output", off, xt)
+    return P.build()

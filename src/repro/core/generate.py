@@ -1,0 +1,95 @@
+"""Regenerate the checked-in framework kernel artifacts.
+
+    PYTHONPATH=src python -m repro.core.generate [--out DIR]
+
+Each artifact under ``src/repro/kernels/generated/`` is the transcompiler's
+output for one framework hot-spot (readable, standalone — paper RQ3).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import numpy as np
+
+from .dsl.ast import DType
+from .task import KernelTask, TensorSpec
+from .planner import generate, PLANNER_REGISTRY
+from .examples import elementwise as EW
+from .examples.common import RecipeCtx
+
+F32 = DType.f32
+
+
+def swiglu_recipe(ctx: RecipeCtx):
+    g, u = ctx.buf("gate"), ctx.buf("up")
+    y = ctx.tmp("y")
+    import repro.core.dsl.language as tl
+    tl.silu(y, g)
+    tl.mul(y, y, u)
+    ctx.out("output", y)
+
+
+PLANNER_REGISTRY["swiglu"] = lambda t, s, k: EW.build_elementwise(
+    t, s, k, swiglu_recipe)
+
+
+def framework_tasks():
+    from ..bench.tasks import suite as bench_suite
+    from ..bench.mhc import mhc_tasks
+    by_name = {t.name: t for t in bench_suite()}
+    sw = KernelTask(
+        name="swiglu", category="activation", op="swiglu",
+        tensors=[TensorSpec("gate", F32, "in", 2),
+                 TensorSpec("up", F32, "in", 2),
+                 TensorSpec("output", F32, "out", 2)],
+        shapes={"gate": (16384, 8192), "up": (16384, 8192),
+                "output": (16384, 8192)},
+        check_shapes={"gate": (64, 384), "up": (64, 384),
+                      "output": (64, 384)},
+        ref=lambda g, u: (np.asarray(g, np.float64)
+                          / (1 + np.exp(-np.asarray(g, np.float64)))
+                          * np.asarray(u, np.float64)))
+    arn = KernelTask(
+        name="add_rmsnorm", category="normalization", op="add_rmsnorm",
+        tensors=[TensorSpec("input", F32, "in", 2),
+                 TensorSpec("residual", F32, "in", 2),
+                 TensorSpec("weight", F32, "in", 1),
+                 TensorSpec("output", F32, "out", 2),
+                 TensorSpec("new_residual", F32, "out", 2)],
+        shapes={"input": (65536, 2048), "residual": (65536, 2048),
+                "weight": (2048,), "output": (65536, 2048),
+                "new_residual": (65536, 2048)},
+        check_shapes={"input": (64, 384), "residual": (64, 384),
+                      "weight": (384,), "output": (64, 384),
+                      "new_residual": (64, 384)},
+        ref=lambda x, r, w: (
+            (lambda s: (s / np.sqrt((s * s).mean(-1, keepdims=True) + 1e-6)
+                        * np.asarray(w, np.float64), s))(
+                np.asarray(x, np.float64) + np.asarray(r, np.float64))))
+    picks = [by_name["rmsnorm"], by_name["softmax"], by_name["adamw"], sw,
+             arn]
+    picks += mhc_tasks()
+    return picks
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "kernels", "generated"))
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    for task in framework_tasks():
+        r = generate(task)
+        status = "PASS" if r.pass_ok else ("COMP" if r.comp_ok else "FAIL")
+        print(f"{status} {task.name:16s} backend="
+              f"{r.artifact.backend if r.artifact else '-'} {r.error[:80]}")
+        if r.artifact is not None:
+            path = os.path.join(args.out, f"{task.name}.py")
+            with open(path, "w") as f:
+                f.write(r.artifact.source)
+            print(f"  -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Multi-pass DSL -> Pallas transcompilation (paper §4.2)."""
+from .pipeline import transcompile, generate_with_feedback, Artifact, Knobs, TranscompileError
+from .pass2_init import run_pass2, InitPlan

@@ -1,0 +1,401 @@
+"""Static analyses shared by the lowering passes.
+
+* affine decomposition of index expressions (for BlockSpec derivation),
+* buffer classification (TQue-like transfer buffers vs TBuf-like temps),
+* loop-carry analysis (scalars/buffers live across iterations),
+* pipelined-backend eligibility (paper Pass 2: queue/buffer initialization).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple, Union
+
+from ..dsl import ast as A
+
+
+# --------------------------------------------------------------------------
+# Affine decomposition:  expr == const + sum(coef[var] * var)
+# --------------------------------------------------------------------------
+
+@dataclass
+class Affine:
+    coeffs: Dict[str, int] = field(default_factory=dict)
+    const: int = 0
+
+    def __add__(self, o: "Affine") -> "Affine":
+        c = dict(self.coeffs)
+        for k, v in o.coeffs.items():
+            c[k] = c.get(k, 0) + v
+        return Affine({k: v for k, v in c.items() if v != 0}, self.const + o.const)
+
+    def scale(self, s: int) -> "Affine":
+        return Affine({k: v * s for k, v in self.coeffs.items()}, self.const * s)
+
+
+def affine_of(e: A.SExpr) -> Optional[Affine]:
+    """Decompose ``e`` into an affine form over SVar names; None if non-affine."""
+    if isinstance(e, A.SConst):
+        if isinstance(e.value, bool) or not isinstance(e.value, int):
+            if isinstance(e.value, float) and e.value.is_integer():
+                return Affine(const=int(e.value))
+            return None
+        return Affine(const=int(e.value))
+    if isinstance(e, A.SVar):
+        if e.kind is A.SVarKind.SCALAR:
+            return None  # data-dependent
+        return Affine(coeffs={e.name: 1})
+    if isinstance(e, A.SBin):
+        a = affine_of(e.lhs)
+        b = affine_of(e.rhs)
+        if e.op == "add" and a and b:
+            return a + b
+        if e.op == "sub" and a and b:
+            return a + b.scale(-1)
+        if e.op == "mul" and a and b:
+            if not a.coeffs:
+                return b.scale(a.const)
+            if not b.coeffs:
+                return a.scale(b.const)
+            return None
+        if e.op in ("floordiv", "div") and a and b and not b.coeffs and b.const != 0:
+            if not a.coeffs and a.const % b.const == 0:
+                return Affine(const=a.const // b.const)
+            if all(v % b.const == 0 for v in a.coeffs.values()) \
+                    and a.const % b.const == 0:
+                return Affine({k: v // b.const for k, v in a.coeffs.items()},
+                              a.const // b.const)
+            return None
+        return None
+    return None
+
+
+# --------------------------------------------------------------------------
+# Affine with source-code provenance (for shape-polymorphic BlockSpecs)
+# --------------------------------------------------------------------------
+
+@dataclass
+class AffineCode:
+    """Affine form where every coefficient also carries the Python source
+    expression that recomputes it from host-plan variables (StaticInt names),
+    so generated index maps stay shape-polymorphic."""
+    coeffs: Dict[str, Tuple[int, str]] = field(default_factory=dict)
+    const: Tuple[int, str] = (0, "0")
+
+    def __add__(self, o: "AffineCode") -> "AffineCode":
+        c = dict(self.coeffs)
+        for k, (v, code) in o.coeffs.items():
+            if k in c:
+                v0, c0 = c[k]
+                c[k] = (v0 + v, f"({c0} + {code})")
+            else:
+                c[k] = (v, code)
+        return AffineCode(
+            c, (self.const[0] + o.const[0],
+                f"({self.const[1]} + {o.const[1]})"))
+
+    def scale(self, s: int, code: str) -> "AffineCode":
+        return AffineCode(
+            {k: (v * s, f"(({c}) * ({code}))") for k, (v, c) in self.coeffs.items()},
+            (self.const[0] * s, f"(({self.const[1]}) * ({code}))"))
+
+
+def _const_code(v) -> str:
+    name = getattr(v, "name", None)
+    return str(name) if name else repr(int(v))
+
+
+def affine_with_code(e: A.SExpr) -> Optional[AffineCode]:
+    if isinstance(e, A.SConst):
+        if isinstance(e.value, int) and not isinstance(e.value, bool):
+            return AffineCode(const=(int(e.value), _const_code(e.value)))
+        if isinstance(e.value, float) and e.value.is_integer():
+            return AffineCode(const=(int(e.value), repr(int(e.value))))
+        return None
+    if isinstance(e, A.SVar):
+        if e.kind is A.SVarKind.SCALAR:
+            return None
+        return AffineCode(coeffs={e.name: (1, "1")})
+    if isinstance(e, A.SBin):
+        a = affine_with_code(e.lhs)
+        b = affine_with_code(e.rhs)
+        if a is None or b is None:
+            return None
+        if e.op == "add":
+            return a + b
+        if e.op == "sub":
+            return a + b.scale(-1, "-1")
+        if e.op == "mul":
+            if not a.coeffs:
+                return b.scale(a.const[0], a.const[1])
+            if not b.coeffs:
+                return a.scale(b.const[0], b.const[1])
+            return None
+        if e.op in ("floordiv", "div") and not b.coeffs and b.const[0] != 0:
+            d, dc = b.const
+            ok = (a.const[0] % d == 0
+                  and all(v % d == 0 for v, _ in a.coeffs.values()))
+            if ok:
+                return AffineCode(
+                    {k: (v // d, f"(({c}) // ({dc}))")
+                     for k, (v, c) in a.coeffs.items()},
+                    (a.const[0] // d, f"(({a.const[1]}) // ({dc}))"))
+            return None
+        return None
+    return None
+
+
+# --------------------------------------------------------------------------
+# Body analyses
+# --------------------------------------------------------------------------
+
+def assigned_scalars(body) -> Set[str]:
+    out: Set[str] = set()
+    for st, _ in A.walk_stmts(body):
+        if isinstance(st, A.ScalarAssign):
+            out.add(st.var.name)
+    return out
+
+
+def declared_scalars(body) -> Set[str]:
+    out: Set[str] = set()
+    for st, _ in A.walk_stmts(body):
+        if isinstance(st, A.ScalarDecl):
+            out.add(st.var.name)
+    return out
+
+
+def written_buffers(body) -> Set[str]:
+    out: Set[str] = set()
+    for st, _ in A.walk_stmts(body):
+        if isinstance(st, A.Load):
+            out.add(st.dst.name)
+        elif isinstance(st, A.Op):
+            out.add(st.dst.name)
+    return out
+
+
+def read_buffers(body) -> Set[str]:
+    out: Set[str] = set()
+    for st, _ in A.walk_stmts(body):
+        if isinstance(st, A.Op):
+            for s in st.srcs:
+                if isinstance(s, A.Buffer):
+                    out.add(s.name)
+                else:
+                    for v in _extracts(s):
+                        out.add(v)
+        elif isinstance(st, A.Store):
+            out.add(st.src.name)
+        elif isinstance(st, (A.ScalarDecl, A.ScalarAssign)):
+            e = st.init if isinstance(st, A.ScalarDecl) else st.expr
+            for v in _extracts(e):
+                out.add(v)
+        elif isinstance(st, A.Load) and st.valid is not None:
+            for v in _extracts(st.valid):
+                out.add(v)
+    return out
+
+
+def _extracts(e: A.SExpr) -> List[str]:
+    out: List[str] = []
+
+    def rec(x):
+        if isinstance(x, A.SExtract):
+            out.append(x.buf.name)
+        elif isinstance(x, A.SBin):
+            rec(x.lhs)
+            rec(x.rhs)
+    rec(e)
+    return out
+
+
+@dataclass
+class BufferClass:
+    """Paper Pass 2: transfer buffers map to queues (TQue), temps to TBuf."""
+    tque_in: Set[str] = field(default_factory=set)    # filled by tl.load
+    tque_out: Set[str] = field(default_factory=set)   # consumed by tl.store
+    tbuf: Set[str] = field(default_factory=set)       # pure temporaries
+
+
+def classify_buffers(kernel: A.KernelFn) -> BufferClass:
+    cls = BufferClass()
+    all_bufs: Set[str] = set()
+    for st, _ in A.walk_stmts(kernel.body):
+        if isinstance(st, A.AllocUB):
+            all_bufs.add(st.buf.name)
+        elif isinstance(st, A.Load):
+            cls.tque_in.add(st.dst.name)
+        elif isinstance(st, A.Store):
+            cls.tque_out.add(st.src.name)
+    cls.tbuf = all_bufs - cls.tque_in - cls.tque_out
+    return cls
+
+
+# --------------------------------------------------------------------------
+# Pipelined-backend eligibility (BlockSpec derivation)
+# --------------------------------------------------------------------------
+
+@dataclass
+class BlockMap:
+    """A derived BlockSpec for one GM tensor access."""
+    tensor: str
+    buffer: A.Buffer
+    # flat form: block = (size,), index = affine in grid vars, unit = size
+    # row form:  block = buffer.shape (rank 2), row index affine, col index 0
+    form: str                     # "flat" | "row"
+    index_affine: Affine          # in units of blocks (flat) or row-blocks (row)
+    is_store: bool = False
+    index_code: Optional[AffineCode] = None  # shape-polymorphic coefficients
+
+
+@dataclass
+class PipelinedPlan:
+    grid_vars: List[str]          # e.g. ["pid0", "t"] -> grid dims in order
+    grid_sizes: List[Union[int, str]]
+    loop: Optional[A.ForRange]
+    blockmaps: List[BlockMap]
+    compute_stmts: List[A.Stmt]
+
+
+def _stage_blocks_only(body) -> bool:
+    return all(isinstance(s, (A.AllocUB, A.CopyIn, A.ComputeBlock, A.CopyOut))
+               for s in body)
+
+
+def pipelined_eligible(prog: A.Program) -> Optional[PipelinedPlan]:
+    """Return a PipelinedPlan if the kernel matches the single-loop streaming
+    pattern the BlockSpec backend supports; else None (explicit backend).
+
+    Pattern: at kernel scope, AllocUBs plus either
+      (a) stage blocks only (one unit of work per core), or
+      (b) stage blocks + exactly one ForRange whose body has stage blocks only.
+    No running scalars, no `valid` masks (Pass 4 must have padded), loads and
+    stores affine with block-divisible coefficients.
+    """
+    k = prog.kernel
+    plan = prog.meta.get("plan", {})
+    shapes = prog.meta.get("task_shapes", {})
+    if declared_scalars(k.body):
+        return None
+
+    loops = [s for s in k.body if isinstance(s, A.ForRange)]
+    non_loops = [s for s in k.body if not isinstance(s, A.ForRange)]
+    if len(loops) > 1 or not _stage_blocks_only(non_loops):
+        return None
+    loop = loops[0] if loops else None
+    inner = loop.body if loop else []
+    if loop is not None:
+        if not _stage_blocks_only(inner):
+            return None
+        la = affine_of(loop.start)
+        if la is None:
+            return None
+
+    grid_vars = ["pid0"] + ([loop.var.name] if loop else [])
+    # loop var in [start, start+count); BlockSpec index maps receive the raw
+    # grid index j in [0, count) — rewrite var = start + j
+    stmts = [s for s in non_loops if not isinstance(s, A.AllocUB)] + inner
+
+    blockmaps: List[BlockMap] = []
+    compute: List[A.Stmt] = []
+    loaded: Set[str] = set()
+    for st in stmts:
+        if isinstance(st, A.CopyIn):
+            for ld in st.body:
+                if ld.valid is not None:
+                    return None
+                bm = _derive_blockmap(ld.tensor, ld.start, ld.dst, False,
+                                      loop, shapes)
+                if bm is None:
+                    return None
+                if ld.dst.name in loaded:
+                    return None  # re-loading the same buffer: streaming reuse
+                loaded.add(ld.dst.name)
+                blockmaps.append(bm)
+        elif isinstance(st, A.CopyOut):
+            for s2 in st.body:
+                if s2.valid is not None:
+                    return None
+                bm = _derive_blockmap(s2.tensor, s2.start, s2.src, True,
+                                      loop, shapes)
+                if bm is None:
+                    return None
+                blockmaps.append(bm)
+        elif isinstance(st, A.ComputeBlock):
+            compute.extend(st.body)
+
+    # each output tensor must be stored exactly once
+    stores = [b for b in blockmaps if b.is_store]
+    if len({b.tensor for b in stores}) != len(stores):
+        return None
+
+    grid_sizes: List[Union[int, str]] = [plan.get(prog.host.grid)]
+    if loop:
+        grid_sizes.append(loop.count)
+    return PipelinedPlan(grid_vars=grid_vars, grid_sizes=grid_sizes, loop=loop,
+                         blockmaps=blockmaps, compute_stmts=compute)
+
+
+def _derive_blockmap(tensor: str, start: A.SExpr, buf: A.Buffer, is_store: bool,
+                     loop: Optional[A.ForRange],
+                     shapes: Dict[str, Tuple[int, ...]]) -> Optional[BlockMap]:
+    aff = affine_of(start)
+    ac = affine_with_code(start)
+    if aff is None or ac is None:
+        return None
+    # substitute loop var = loop.start + j so the affine is over (pid0, j)
+    if loop is not None and loop.var.name in aff.coeffs:
+        la = affine_of(loop.start)
+        lac = affine_with_code(loop.start)
+        if la is None or lac is None:
+            return None
+        c = aff.coeffs.pop(loop.var.name)
+        cv, cc = ac.coeffs.pop(loop.var.name)
+        aff = aff + la.scale(c)
+        ac = ac + lac.scale(cv, cc)
+        aff.coeffs[loop.var.name] = c  # now means the raw grid index j
+        ac.coeffs[loop.var.name] = (cv, cc)
+    allowed = {"pid0"} | ({loop.var.name} if loop else set())
+    if not set(aff.coeffs) <= allowed:
+        return None
+
+    def _div(unit: int, unit_code: str) -> AffineCode:
+        return AffineCode(
+            {k: (v // unit, f"(({c}) // ({unit_code}))")
+             for k, (v, c) in ac.coeffs.items()},
+            (ac.const[0] // unit, f"(({ac.const[1]}) // ({unit_code}))"))
+
+    def _size_code(b: A.Buffer) -> str:
+        names = getattr(b, "shape_names", None) or (None,) * len(b.shape)
+        parts = [n if n else repr(int(s)) for s, n in zip(b.shape, names)]
+        return " * ".join(parts)
+
+    tshape = shapes.get(tensor)
+    # row form: 2-D buffer whose trailing dim equals the tensor's trailing dim
+    if (tshape is not None and len(tshape) >= 1 and len(buf.shape) == 2
+            and buf.shape[1] == _trailing(tshape)
+            and _divisible(aff, buf.shape[0] * buf.shape[1])):
+        unit = buf.shape[0] * buf.shape[1]
+        return BlockMap(tensor, buf, "row",
+                        Affine({k: v // unit for k, v in aff.coeffs.items()},
+                               aff.const // unit), is_store,
+                        _div(unit, _size_code(buf)))
+    # flat form
+    if _divisible(aff, buf.size):
+        unit = buf.size
+        return BlockMap(tensor, buf, "flat",
+                        Affine({k: v // unit for k, v in aff.coeffs.items()},
+                               aff.const // unit), is_store,
+                        _div(unit, _size_code(buf)))
+    return None
+
+
+def _trailing(shape: Tuple[int, ...]) -> int:
+    return int(shape[-1]) if shape else 1
+
+
+def _divisible(aff: Affine, unit: int) -> bool:
+    if unit <= 0:
+        return False
+    return (aff.const % unit == 0
+            and all(v % unit == 0 for v in aff.coeffs.values()))

@@ -1,0 +1,30 @@
+"""Pass 1 — host-side translation (paper §4.2).
+
+Turns the host IR into the generated module's ``_plan(shapes)`` function:
+tiling-related parameters are computed from runtime input shapes with the
+exact formulas the DSL host function declared, each carrying its rationale
+comment.  This is the analogue of emitting AscendC host tiling structs +
+``SetTiling`` calls.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from ..dsl import ast as A
+from ..codegen.sexpr import emit_hexpr
+
+
+def emit_plan_fn(host: A.HostFn) -> List[str]:
+    lines = [
+        "def _plan(shapes):",
+        '    """Host function: core partitioning + tiling strategy '
+        '(pass 1)."""',
+    ]
+    names = []
+    for st in host.stmts:
+        comment = f"  # {st.rationale}" if st.rationale else ""
+        lines.append(f"    {st.name} = {emit_hexpr(st.expr)}{comment}")
+        names.append(st.name)
+    inner = ", ".join(f"{n}={n}" for n in names)
+    lines.append(f"    return dict({inner})")
+    return lines

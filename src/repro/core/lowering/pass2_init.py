@@ -1,0 +1,46 @@
+"""Pass 2 — kernel initialization (paper §4.2).
+
+Decides how DSL buffers map onto the TPU memory machinery:
+
+* buffers filled by ``tl.load``/consumed by ``tl.store`` are the analogue of
+  AscendC **TQue** transfer queues.  When the whole kernel matches the
+  streaming pattern, these become **BlockSpec-pipelined VMEM blocks** (the
+  Pallas pipeline provides the double buffering the paper gets from queue
+  capacity 2).
+* temporary working buffers are the analogue of **TBuf** and become plain
+  VMEM-resident values inside the kernel.
+
+The pass therefore selects the lowering backend:
+  ``pipelined`` — BlockSpec grid (idiomatic TPU; automatic overlap), or
+  ``explicit``  — ``pl.ANY`` refs + explicit in-kernel transfers
+                  (the literal CopyIn/Compute/CopyOut execution structure;
+                  general fallback for multi-pass/streaming kernels).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from ..dsl import ast as A
+from .analysis import BufferClass, PipelinedPlan, classify_buffers, pipelined_eligible
+
+
+@dataclass
+class InitPlan:
+    backend: str                       # "pipelined" | "explicit"
+    bufcls: BufferClass
+    pplan: Optional[PipelinedPlan]
+
+
+def run_pass2(prog: A.Program, force_backend: Optional[str] = None) -> InitPlan:
+    bufcls = classify_buffers(prog.kernel)
+    pplan = pipelined_eligible(prog)
+    if force_backend == "pipelined":
+        if pplan is None:
+            raise ValueError("kernel is not eligible for the pipelined backend")
+        return InitPlan("pipelined", bufcls, pplan)
+    if force_backend == "explicit":
+        return InitPlan("explicit", bufcls, None)
+    if pplan is not None:
+        return InitPlan("pipelined", bufcls, pplan)
+    return InitPlan("explicit", bufcls, None)

@@ -1,0 +1,93 @@
+"""Pass 4 — alignment & padding refinement (paper §4.2).
+
+AscendC needs ``DataCopyPad`` (+ stride/layout configuration) whenever
+tiling does not naturally satisfy the 32-byte UB alignment.  The TPU
+analogue implemented here:
+
+* the GM **layout is padded** on the tensor's trailing axis up to a tile
+  multiple (so every DMA span is full-size, lane-aligned and in-bounds), and
+* values in the padded region are the **identity element** of whatever
+  reduction consumes them (``-inf`` for max, ``0`` for sum, ``1`` for prod),
+  so compute stays mask-free, and
+* the generated wrapper performs the pad on the way in and the slice on the
+  way out (the "layout transformation" half of DataCopyPad).
+
+The pass is *optional* exactly as in the paper: the pipeline first lowers
+without it; validation OOB/alignment diagnostics trigger a rebuild with the
+``pad`` knob, which causes the expert-example builder to register a
+``gm_layout`` in ``Program.meta``:
+
+    prog.meta["gm_layout"] = {
+        tensor_name: {"pad_axis": -1,
+                      "pad_multiple": "tile_length",   # plan var or int
+                      "pad_value": 0.0},
+        ...
+    }
+
+This module holds the decision logic + the neutral-pad-value inference used
+by builders; the wrapper emission lives in ``codegen/emit.py``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from ..dsl import ast as A
+from ..dsl.validate import Report
+
+
+def needs_refinement(report: Report) -> bool:
+    """Does the validation report indicate Pass 4 must be engaged?"""
+    return any(d.code == "oob" for d in report.errors)
+
+
+def neutral_pad_value(prog: A.Program, tensor: str) -> float:
+    """Infer the identity element for the padded region of ``tensor`` by
+    looking at which reductions (transitively) consume buffers loaded from
+    it.  Conservative: if both max- and sum-style reductions consume it,
+    ``0.0`` is returned and the builder is expected to mask explicitly."""
+    loaded_bufs = set()
+    for st, _ in A.walk_stmts(prog.kernel.body):
+        if isinstance(st, A.Load) and st.tensor == tensor:
+            loaded_bufs.add(st.dst.name)
+    if not loaded_bufs:
+        return 0.0
+
+    # propagate "tainted by pad" through ops, collect reduce kinds
+    tainted = set(loaded_bufs)
+    kinds = set()
+    changed = True
+    while changed:
+        changed = False
+        for st, _ in A.walk_stmts(prog.kernel.body):
+            if not isinstance(st, A.Op):
+                continue
+            src_tainted = any(isinstance(s, A.Buffer) and s.name in tainted
+                              for s in st.srcs)
+            if not src_tainted:
+                continue
+            if st.op in A.REDUCE_OPS:
+                kinds.add(st.op)
+            if st.dst.name not in tainted:
+                tainted.add(st.dst.name)
+                changed = True
+    if kinds == {"reduce_max"}:
+        return -3.0e38
+    if kinds == {"reduce_min"}:
+        return 3.0e38
+    if kinds == {"reduce_prod"}:
+        return 1.0
+    return 0.0
+
+
+def default_gm_layout(prog: A.Program, pad_multiple: str = "tile_length",
+                      ) -> Dict[str, Dict]:
+    """Build a gm_layout padding every rank>=1 tensor's trailing axis."""
+    layout = {}
+    for tp in prog.kernel.tensors:
+        layout[tp.name] = {
+            "pad_axis": -1,
+            "pad_multiple": pad_multiple,
+            "pad_value": neutral_pad_value(prog, tp.name)
+            if tp.role is not A.Role.OUT else 0.0,
+        }
+    return layout

@@ -1,0 +1,46 @@
+"""Kernel task specification (the benchmark-facing contract).
+
+A :class:`KernelTask` is what MultiKernelBench hands the generator: the
+operator, its category, concrete tensor shapes (KernelBench-style large
+shapes), and a reference implementation ("PyTorch eager" analogue, here
+numpy/jnp).  ``check_shapes`` are reduced same-aspect shapes used for
+numeric verification on the CPU container; the large shapes drive the
+performance model and trace-compilation checks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from .dsl.ast import DType
+
+
+@dataclass(frozen=True)
+class TensorSpec:
+    name: str
+    dtype: DType
+    role: str           # "in" | "out" | "inout"
+    rank: int
+
+
+@dataclass
+class KernelTask:
+    name: str
+    category: str       # activation/loss/math/normalization/optimizer/reduce/pooling
+    op: str             # planner registry key
+    tensors: List[TensorSpec]
+    shapes: Dict[str, Tuple[int, ...]]          # bench shapes (large)
+    check_shapes: Dict[str, Tuple[int, ...]]    # verification shapes (small)
+    ref: Callable[..., Any]                     # numpy reference over inputs
+    attrs: Dict[str, Any] = field(default_factory=dict)
+    # input generator override: fn(rng, shapes) -> dict name -> np array
+    make_inputs: Optional[Callable] = None
+    notes: str = ""
+
+    @property
+    def input_specs(self) -> List[TensorSpec]:
+        return [t for t in self.tensors if t.role in ("in", "inout")]
+
+    @property
+    def output_specs(self) -> List[TensorSpec]:
+        return [t for t in self.tensors if t.role in ("out", "inout")]

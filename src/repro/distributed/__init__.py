@@ -1,0 +1,2 @@
+"""Distribution: sharding rules, compressed collectives, pipeline parallel."""
+from . import sharding, compress, pipeline

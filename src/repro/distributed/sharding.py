@@ -1,0 +1,212 @@
+"""Sharding rules: parameter/activation PartitionSpecs for the production
+mesh (pod, data, model).
+
+Policy (DESIGN.md §5):
+  * TP over `model`: attention head projections, FFN hidden, MoE experts
+    (EP), vocab/embedding.
+  * DP over (`pod`, `data`): batch axis; `pod` composes as outer DP so
+    cross-pod traffic is only the hierarchical gradient reduction.
+  * ZeRO-1: optimizer moments additionally sharded over `data` along each
+    parameter's largest divisible unsharded axis.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_spec(mesh: Mesh, rank: int) -> P:
+    return P(data_axes(mesh), *([None] * (rank - 1)))
+
+
+# --------------------------------------------------------------------------
+# parameter rules, keyed on the flattened path (joined with '/')
+# --------------------------------------------------------------------------
+
+_RULES = [
+    # (path regex, spec builder given array rank)
+    (r".*embed$",               lambda r: P("model", None)),
+    (r".*(lm_head|head)$",      lambda r: P(None, "model")),
+    (r".*/(wq|wk|wv)$",         lambda r: P(None, "model")),
+    (r".*/wkv_a$",              lambda r: P(None, None)),
+    (r".*/wkv_b$",              lambda r: P(None, "model")),
+    (r".*/wo$",                 lambda r: P("model", None)),
+    # EP rules MUST precede the generic MLP projections (longest match)
+    (r".*/experts/(w_gate|w_up)$", lambda r: P("model", None, None)),  # EP
+    (r".*/experts/w_down$",     lambda r: P("model", None, None)),
+    (r".*/(w_gate|w_up)$",      lambda r: P(None, "model")),
+    (r".*/w_down$",             lambda r: P("model", None)),
+    (r".*/router$",             lambda r: P(None, None)),
+    (r".*/in_proj$",            lambda r: P(None, "model")),
+    (r".*/x_proj$",             lambda r: P("model", None)),
+    (r".*/dt_proj$",            lambda r: P(None, "model")),
+    (r".*/out_proj$",           lambda r: P("model", None)),
+    (r".*/conv_w$",             lambda r: P(None, "model")),
+    (r".*/A_log$",              lambda r: P("model", None)),
+    (r".*/(up)$",               lambda r: P(None, "model")),
+    (r".*/(down)$",             lambda r: P("model", None)),
+    (r".*/(w|r)$",              lambda r: P(None, "model")),   # slstm
+]
+
+_SCAN_PREFIX = re.compile(r"body/")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_spec(path_str: str, arr) -> P:
+    rank = np.ndim(arr) if not hasattr(arr, "ndim") else arr.ndim
+    shape = arr.shape
+    stacked = path_str.startswith("body/")     # scan-stacked: leading repeats
+    for pat, build in _RULES:
+        if re.match(pat, path_str):
+            spec = build(rank)
+            if stacked:
+                spec = P(None, *spec)
+            # drop 'model' from axes whose dim isn't divisible (safety)
+            return _validate(spec, shape)
+    # default: replicated
+    return P(*([None] * rank))
+
+
+def _validate(spec: P, shape) -> P:
+    out = []
+    for ax, dim in zip(tuple(spec) + (None,) * (len(shape) - len(spec)),
+                       shape):
+        out.append(ax)
+    return P(*out)
+
+
+def param_shardings(mesh: Mesh, params) -> Any:
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+
+    def one(path, arr):
+        spec = param_spec(_path_str(path), arr)
+        # drop axes that do not divide
+        fixed = []
+        for ax, dim in zip(spec, arr.shape):
+            if ax == "model" and dim % model_size != 0:
+                fixed.append(None)
+            else:
+                fixed.append(ax)
+        return NamedSharding(mesh, P(*fixed))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# --------------------------------------------------------------------------
+# ZeRO-1: shard optimizer moments further along `data`
+# --------------------------------------------------------------------------
+
+def zero_shardings(mesh: Mesh, params) -> Any:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dsize = sizes.get("data", 1)
+    model_size = sizes.get("model", 1)
+
+    def one(path, arr):
+        spec = list(param_spec(_path_str(path), arr))
+        spec += [None] * (arr.ndim - len(spec))
+        for ax, dim in enumerate(arr.shape):
+            if spec[ax] == "model" and dim % model_size != 0:
+                spec[ax] = None
+        # choose the largest unsharded axis divisible by `data`
+        best, best_dim = None, 0
+        for ax, dim in enumerate(arr.shape):
+            if spec[ax] is None and dim % dsize == 0 and dim > best_dim:
+                best, best_dim = ax, dim
+        if best is not None and dsize > 1:
+            spec[best] = "data"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def opt_state_shardings(mesh: Mesh, opt_state, params):
+    from ..training.optimizer import AdamWState
+    zs = zero_shardings(mesh, params)
+    scalar = NamedSharding(mesh, P())
+    return AdamWState(step=scalar, m=zs, v=jax.tree.map(lambda s: s, zs))
+
+
+def batch_shardings(mesh: Mesh, batch_specs: Dict[str, Any]):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dsize = 1
+    for a in data_axes(mesh):
+        dsize *= sizes[a]
+    out = {}
+    for k, v in batch_specs.items():
+        if hasattr(v, "shape"):
+            if v.shape and v.shape[0] % dsize == 0:
+                out[k] = NamedSharding(mesh, batch_spec(mesh, len(v.shape)))
+            else:
+                out[k] = NamedSharding(mesh, P(*([None] * len(v.shape))))
+        else:
+            out[k] = None
+    return out
+
+
+# --------------------------------------------------------------------------
+# decode-cache shardings
+# --------------------------------------------------------------------------
+
+def cache_shardings(mesh: Mesh, caches_abstract):
+    """Sharding rules for decode caches.  Batch axis over (pod, data) when
+    divisible; for global-batch-1 long-context decode the KV *sequence*
+    axis is sharded over data instead (sequence-parallel decode); head/dim
+    axes over `model` when divisible."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    daxes = data_axes(mesh)
+    dsize = 1
+    for a in daxes:
+        dsize *= sizes[a]
+    msize = sizes.get("model", 1)
+
+    def one(path, leaf):
+        if not hasattr(leaf, "shape"):
+            return None
+        ps = _path_str(path)
+        name = ps.rsplit("/", 1)[-1]
+        shape = leaf.shape
+        rank = len(shape)
+        spec = [None] * rank
+        # stacked body caches ("body/...") have a leading `repeats` axis;
+        # unrolled caches ("body_layers/<i>/...") do not
+        off = 1 if (ps.startswith("body/")
+                    and not ps.startswith("body_layers/")) else 0
+        bax = off                       # batch axis position
+        if rank > bax:
+            if shape[bax] % dsize == 0 and dsize > 1:
+                spec[bax] = daxes
+            elif name in ("k", "v", "c_kv", "k_pe") and rank > bax + 1 \
+                    and shape[bax + 1] % dsize == 0 and dsize > 1:
+                spec[bax + 1] = daxes      # sequence-parallel KV
+        if name in ("k", "v") and rank >= bax + 3 \
+                and shape[bax + 2] % msize == 0:
+            spec[bax + 2] = "model"        # kv heads
+        if name in ("conv", "ssm", "C", "n", "h", "c", "m") and rank >= 1:
+            # recurrent states: shard the feature axis over model if divisible
+            fax = rank - 2 if name in ("C",) else rank - 1
+            if spec[fax] is None and shape[fax] % msize == 0 and msize > 1:
+                spec[fax] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(
+        one, caches_abstract,
+        is_leaf=lambda x: x is None or isinstance(x, int))

@@ -1,0 +1,12 @@
+"""Framework kernels.
+
+  flash_attention/  hand-written Pallas MXU kernel (Cube-class: outside the
+                    DSL pipeline per the paper's footnote 1)
+  dma_pipeline/     explicit make_async_copy double-buffered kernel (the
+                    literal Ascend MTE/TQue analogue)
+  generated/        checked-in transcompiler artifacts (rmsnorm, softmax,
+                    adamw, swiglu, add_rmsnorm, mhc_post, mhc_post_grad)
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper) and ref.py (pure-jnp oracle); generated artifacts embed their
+host plan + pass log instead.
+"""

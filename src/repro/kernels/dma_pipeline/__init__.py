@@ -1,0 +1,2 @@
+from .ops import scale_bias_gelu
+from .ref import scale_bias_gelu_ref

@@ -1,0 +1,101 @@
+"""Explicit-DMA pipeline kernel — the literal Ascend MTE/TQue analogue.
+
+Where the generated kernels use Pallas's implicit BlockSpec pipeline
+(DESIGN.md §2: queue-capacity-2 == automatic double buffering), this
+hand-lowered kernel demonstrates the explicit form:
+
+  GM (pl.ANY refs)  --make_async_copy-->  2-slot VMEM scratch  (CopyIn)
+  compute on the resident slot while the next tile's DMA is in flight
+  VMEM  --make_async_copy-->  GM                               (CopyOut)
+
+i.e. CopyIn/Compute/CopyOut stage functions with DMA semaphores as the
+queues — exactly AscendC's TQue discipline.  Validated in interpret mode
+against ref.py; op here: fused scale+bias+gelu (elementwise pipeline).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_hbm, o_hbm, v_in, v_out, in_sems, out_sems, *, n_tiles, tile,
+            scale, bias):
+    pid = pl.program_id(0)
+    base = pid * n_tiles * tile
+
+    def in_copy(t, slot):
+        return pltpu.make_async_copy(
+            x_hbm.at[pl.dslice(base + t * tile, tile)], v_in.at[slot],
+            in_sems.at[slot])
+
+    def out_copy(t, slot):
+        return pltpu.make_async_copy(
+            v_out.at[slot], o_hbm.at[pl.dslice(base + t * tile, tile)],
+            out_sems.at[slot])
+
+    # prologue: enqueue tile 0 (queue depth 2 == double buffering)
+    in_copy(0, 0).start()
+
+    def body(t, _):
+        slot = jax.lax.rem(t, 2)
+        nxt = jax.lax.rem(t + 1, 2)
+
+        # CopyIn wait: tile t resident
+        in_copy(t, slot).wait()
+
+        # prefetch tile t+1 while computing t (MTE || Vector overlap)
+        @pl.when(t + 1 < n_tiles)
+        def _():
+            in_copy(t + 1, nxt).start()
+
+        # drain the previous CopyOut using this slot before overwriting
+        @pl.when(t >= 2)
+        def _():
+            out_copy(t - 2, slot).wait()
+
+        # Compute stage
+        xv = v_in[slot]
+        v_out[slot] = jax.nn.gelu(xv.astype(jnp.float32) * scale
+                                  + bias).astype(v_out.dtype)
+
+        # CopyOut start
+        out_copy(t, slot).start()
+        return 0
+
+    jax.lax.fori_loop(0, n_tiles, body, 0)
+    # epilogue: drain outstanding copy-outs
+    @pl.when(n_tiles >= 2)
+    def _():
+        out_copy(n_tiles - 2, jax.lax.rem(n_tiles - 2, 2)).wait()
+    out_copy(n_tiles - 1, jax.lax.rem(n_tiles - 1, 2)).wait()
+
+
+def dma_scale_bias_gelu(x, scale: float = 1.0, bias: float = 0.0,
+                        n_cores: int = 8, tile: int = 512,
+                        interpret: bool | None = None):
+    """x: flat f32 array with numel % (n_cores * tile) == 0."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    numel = x.size
+    assert numel % (n_cores * tile) == 0, (numel, n_cores, tile)
+    n_tiles = numel // (n_cores * tile)
+    fn = pl.pallas_call(
+        functools.partial(_kernel, n_tiles=n_tiles, tile=tile, scale=scale,
+                          bias=bias),
+        grid=(n_cores,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        out_shape=jax.ShapeDtypeStruct((numel,), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((2, tile), x.dtype),      # CopyIn queue (depth 2)
+            pltpu.VMEM((2, tile), x.dtype),      # CopyOut queue (depth 2)
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+    )
+    return fn(x.reshape(-1)).reshape(x.shape)

@@ -1,0 +1,10 @@
+"""jit'd wrapper for the explicit-DMA pipeline kernel."""
+import jax
+
+from .kernel import dma_scale_bias_gelu
+from .ref import scale_bias_gelu_ref
+
+
+def scale_bias_gelu(x, scale=1.0, bias=0.0, interpret=None):
+    return dma_scale_bias_gelu(x, scale=scale, bias=bias,
+                               interpret=interpret)

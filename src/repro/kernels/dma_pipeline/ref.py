@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the explicit-DMA pipeline kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def scale_bias_gelu_ref(x, scale: float = 1.0, bias: float = 0.0):
+    return jax.nn.gelu(x.astype(jnp.float32) * scale + bias).astype(x.dtype)

@@ -1,0 +1,3 @@
+from .ops import attention, flash_attention
+from .kernel import flash_attention_fwd
+from .ref import mha_reference, decode_reference

@@ -1,0 +1,131 @@
+"""Flash attention forward — hand-written Pallas TPU kernel.
+
+Cube-class (MXU) kernel: per the paper's footnote 1, matrix kernels are
+outside the DSL pipeline; this is the framework's hand-written counterpart
+(the CATLASS analogue).  Online-softmax streaming over KV blocks with
+  * BlockSpec VMEM tiling: Q block (Bq, D) resident; K/V streamed (Bk, D),
+  * f32 running (m, l, acc) scratch carried across the KV grid dimension,
+  * causal masking via block-level iota, GQA by mapping q-head -> kv-head
+    in the index_map.
+
+Grid: (B, Hq, Sq/Bq, Skv/Bk); the KV axis is the minormost (sequential)
+dimension so the scratch carry is legal on TPU.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 256
+DEFAULT_BK = 512
+NEG_INF = -1.0e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               sm_scale: float, causal: bool, seq_q: int, seq_kv: int,
+               block_q: int, block_kv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)         # (Bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)         # (Bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)         # (Bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale   # (Bq, Bk)
+        if causal:
+            rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) \
+                + qi * block_q + (seq_kv - seq_q)
+            cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) \
+                + ki * block_kv
+            s = jnp.where(rows >= cols, s, NEG_INF)
+
+        m_prev = m_ref[...]                          # (Bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                       # (Bq, Bk)
+        alpha = jnp.exp(m_prev - m_new)              # (Bq, 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # skip fully-masked KV blocks: kv_start > q_block_end
+        q_end = qi * block_q + (seq_kv - seq_q) + block_q - 1
+        pl.when(ki * block_kv <= q_end)(_body)
+    else:
+        _body()
+
+    @pl.when(ki == pl.num_programs(3) - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True,
+                        sm_scale: float | None = None,
+                        block_q: int = DEFAULT_BQ, block_kv: int = DEFAULT_BK,
+                        interpret: bool | None = None):
+    """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D).  Returns (B, Sq, Hq, D)."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    group = Hq // Hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(D)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    assert Sq % block_q == 0 and Skv % block_kv == 0
+
+    # layout: (B, H, S, D) views for clean 4-D blocking
+    qv = q.transpose(0, 2, 1, 3)      # (B, Hq, Sq, D)
+    kv_ = k.transpose(0, 2, 1, 3)     # (B, Hkv, Skv, D)
+    vv = v.transpose(0, 2, 1, 3)
+
+    grid = (B, Hq, Sq // block_q, Skv // block_kv)
+
+    out = pl.pallas_call(
+        functools.partial(_fa_kernel, sm_scale=sm_scale, causal=causal,
+                          seq_q=Sq, seq_kv=Skv, block_q=block_q,
+                          block_kv=block_kv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D),
+                         lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+    )(qv, kv_, vv)
+    return out.transpose(0, 2, 1, 3)
+
+
+def _block_kernel_4d(q_ref, *a, **kw):  # pragma: no cover — reserved
+    raise NotImplementedError

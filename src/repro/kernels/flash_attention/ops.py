@@ -1,0 +1,55 @@
+"""jit'd public wrapper for flash attention.
+
+Forward runs the hand-written Pallas kernel (interpret mode on CPU);
+backward is a custom VJP through the reference implementation with
+recompute (flash-style: no attention matrix is saved).  Model code selects
+`impl="pallas" | "xla"`; the CPU dry-run uses "xla" so the compiled HLO and
+cost analysis reflect what XLA will run (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_fwd
+from .ref import mha_reference
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, causal: bool = True,
+                    sm_scale: float | None = None):
+    return flash_attention_fwd(q, k, v, causal=causal, sm_scale=sm_scale)
+
+
+def _fwd(q, k, v, causal, sm_scale):
+    out = flash_attention_fwd(q, k, v, causal=causal, sm_scale=sm_scale)
+    return out, (q, k, v)
+
+
+def _bwd(causal, sm_scale, res, g):
+    q, k, v = res
+    # recompute-based VJP through the reference (flash-style backward)
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: mha_reference(q_, k_, v_, causal=causal,
+                                         sm_scale=sm_scale), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)
+
+
+def attention(q, k, v, *, causal: bool = True, sm_scale=None,
+              impl: str = "auto", logit_cap: float = 0.0):
+    """Framework entry point; `impl` in {"auto", "pallas", "xla"}."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "pallas" and logit_cap == 0.0:
+        return flash_attention(q, k, v, causal, sm_scale)
+    return mha_reference(q, k, v, causal=causal, sm_scale=sm_scale,
+                         logit_cap=logit_cap)
+
+
+# decode path (single token vs KV cache) — reference impl is the XLA path
+from .ref import decode_reference as mha_decode  # noqa: E402

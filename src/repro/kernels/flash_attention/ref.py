@@ -1,0 +1,60 @@
+"""Pure-jnp oracle for flash attention (GQA + causal + optional logit soft-cap).
+
+This is also the path used by model code when Pallas is unavailable
+(CPU dry-run container) — see DESIGN.md §7: the Pallas kernel swaps in on
+real TPU; matrix-unit kernels are hand-written, outside the DSL pipeline,
+matching the paper's Cube-kernel scope boundary.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_reference(q, k, v, *, causal: bool = True, sm_scale: float | None = None,
+                  logit_cap: float = 0.0):
+    """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D) with Hq % Hkv == 0.
+    Returns (B, Sq, Hq, D).  float32 accumulation."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (D ** 0.5)
+
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, group, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) * sm_scale
+    if logit_cap and logit_cap > 0:
+        logits = logit_cap * jnp.tanh(logits / logit_cap)
+    if causal:
+        qi = jnp.arange(Sq)[:, None] + (Skv - Sq)
+        ki = jnp.arange(Skv)[None, :]
+        mask = qi >= ki
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def decode_reference(q, k_cache, v_cache, cache_len, *, sm_scale=None,
+                     logit_cap: float = 0.0):
+    """Single-token decode: q (B, 1, Hq, D); caches (B, S, Hkv, D); positions
+    >= cache_len are masked out."""
+    B, S, Hkv, D = k_cache.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / (D ** 0.5)
+    Hq = q.shape[2]
+    group = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, group, D)
+    kf = k_cache.astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qf, kf) * sm_scale
+    if logit_cap and logit_cap > 0:
+        logits = logit_cap * jnp.tanh(logits / logit_cap)
+    pos = jnp.arange(S)[None, None, None, :]
+    mask = pos < cache_len[:, None, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)

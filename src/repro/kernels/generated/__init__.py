@@ -1,0 +1,8 @@
+"""Checked-in artifacts of the AscendCraft-style transcompiler.
+
+Regenerate with:  PYTHONPATH=src python -m repro.core.generate
+Each module is standalone and readable (paper RQ3): `make(shapes)` builds a
+jitted callable; `<name>(*arrays)` is the cached convenience entry.
+"""
+from . import (rmsnorm, softmax, adamw, swiglu, add_rmsnorm,
+               mhc_post, mhc_post_grad)

@@ -1,0 +1,168 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run (deliverable e): lower + compile EVERY valid
+(architecture x input-shape) cell against the production meshes and record
+memory/cost/collective statistics for §Roofline.
+
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        [--arch qwen3-32b] [--shape train_4k] [--mesh single|multi|both]
+        [--out benchmarks/results/dryrun.json]
+
+Results are written incrementally so a long sweep is resumable; existing
+entries are skipped unless --force.
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from ..configs import ARCH_NAMES, SHAPES, cell_valid, get_config  # noqa: E402
+from .mesh import make_production_mesh                            # noqa: E402
+from .steps import build_cell                                     # noqa: E402
+from .hlo_stats import collective_bytes                           # noqa: E402
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun.json")
+
+
+def _load(path):
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def _save(path, data):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=1)
+    os.replace(tmp, path)
+
+
+def run_cell(arch: str, shape: str, mesh, mesh_name: str) -> dict:
+    t0 = time.time()
+    with mesh:
+        fn, aargs, meta = build_cell(arch, shape, mesh)
+        lowered = fn.lower(*aargs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        ma = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+
+    n_dev = mesh.devices.size
+    entry = {
+        "arch": arch, "shape": shape, "mesh": mesh_name,
+        "devices": n_dev,
+        "kind": meta["kind"],
+        "grad_accum": meta.get("grad_accum"),
+        "flops": float(ca.get("flops", 0.0)),
+        "hlo_bytes": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                ma, "generated_code_size_in_bytes", None),
+        },
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "ok": True,
+    }
+
+    # loop-corrected roofline measurement (see roofline_collect.py)
+    try:
+        from .roofline_collect import measure_cell
+        meas = measure_cell(arch, shape, mesh)
+        if meas.get("use_full"):
+            meas["total"] = {"flops": entry["flops"],
+                             "bytes": entry["hlo_bytes"],
+                             "coll": float(coll["total"])}
+        else:
+            resid = max(0.0, coll["total"] - meas["stem"]["coll"]
+                        - meas["body_per_period"]["coll"])
+            meas["total"]["coll"] += resid
+            meas["coll_residual_outside_loops"] = resid
+        entry["roofline"] = meas
+    except Exception as e:  # noqa: BLE001
+        entry["roofline"] = {"error": f"{type(e).__name__}: {e}"}
+    return entry
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    results = _load(args.out)
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh()))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16",
+                       make_production_mesh(multi_pod=True)))
+
+    archs = [args.arch] if args.arch else ARCH_NAMES
+    shapes = [args.shape] if args.shape else list(SHAPES)
+
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        for shape in shapes:
+            ok, reason = cell_valid(arch, shape)
+            key_base = f"{arch}|{shape}"
+            if not ok:
+                results[key_base + "|skipped"] = {
+                    "arch": arch, "shape": shape, "skipped": True,
+                    "reason": reason}
+                _save(args.out, results)
+                n_skip += 1
+                print(f"SKIP {arch:24s} {shape:12s} — {reason}", flush=True)
+                continue
+            for mesh_name, mesh in meshes:
+                key = f"{key_base}|{mesh_name}"
+                if key in results and results[key].get("ok") \
+                        and not args.force:
+                    print(f"HAVE {arch:24s} {shape:12s} {mesh_name}",
+                          flush=True)
+                    continue
+                try:
+                    entry = run_cell(arch, shape, mesh, mesh_name)
+                    n_ok += 1
+                    print(f"OK   {arch:24s} {shape:12s} {mesh_name:18s} "
+                          f"flops={entry['flops']:.3e} "
+                          f"bytes={entry['hlo_bytes']:.3e} "
+                          f"coll={entry['collectives']['total']:.3e} "
+                          f"compile={entry['compile_s']}s", flush=True)
+                except Exception as e:  # noqa: BLE001
+                    entry = {"arch": arch, "shape": shape,
+                             "mesh": mesh_name, "ok": False,
+                             "error": f"{type(e).__name__}: {e}",
+                             "trace": traceback.format_exc()[-2000:]}
+                    n_fail += 1
+                    print(f"FAIL {arch:24s} {shape:12s} {mesh_name}: "
+                          f"{type(e).__name__}: {str(e)[:160]}", flush=True)
+                results[key] = entry
+                _save(args.out, results)
+    print(f"\ndry-run complete: {n_ok} ok, {n_fail} failed, "
+          f"{n_skip} skipped cells -> {args.out}")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,93 @@
+"""Collective-traffic extraction from compiled HLO text (§Roofline).
+
+``cost_analysis`` has no collective bytes, so we parse the optimized HLO:
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op contributes its operand bytes (result bytes for
+all-gather, since the operand is the pre-gather shard).
+
+Accounting (per-device bytes on the wire, ring algorithms):
+  all-gather:         result_bytes * (n-1)/n       ~ result_bytes
+  reduce-scatter:     operand_bytes * (n-1)/n      ~ result_bytes*(n-1)
+  all-reduce:         2 * bytes * (n-1)/n          (RS + AG)
+  all-to-all:         bytes * (n-1)/n
+  collective-permute: bytes
+We conservatively use factor 1 of the RESULT bytes for AG/CP/A2A, 2x for
+AR, and (n-1)x result for RS is folded into operand parsing -> use operand
+result bytes directly.  The dominant term comparisons in §Roofline are
+insensitive to these O(1) factors; they are recorded with the table.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+# e.g.:  %all-reduce.42 = bf16[8,128]{1,0} all-reduce(...)
+_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_RE_TUPLE = re.compile(
+    r"=\s*\(([^)]*)\)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _bytes_of(dtype: str, dims: str) -> int:
+    nb = _DTYPE_BYTES.get(dtype)
+    if nb is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nb
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Returns {op_kind: summed result bytes} + {'total': grand total with
+    the all-reduce 2x factor}."""
+    out = {k: 0 for k in _COLL}
+    counts = {k: 0 for k in _COLL}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _RE.search(line)
+        kinds = []
+        if m:
+            dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+            if "-done(" in line:
+                continue            # started op already counted
+            out[kind] += _bytes_of(dtype, dims)
+            counts[kind] += 1
+            continue
+        mt = _RE_TUPLE.search(line)
+        if mt:
+            if "-done(" in line:
+                continue
+            kind = mt.group(2)
+            # tuple result: sum shapes in the tuple (async pairs double-
+            # count operand+result; take the second half = results)
+            shapes = _SHAPE.findall(mt.group(1))
+            if not shapes:
+                continue
+            half = shapes[len(shapes) // 2:] if len(shapes) > 1 else shapes
+            out[kind] += sum(_bytes_of(dt, dm) for dt, dm in half)
+            counts[kind] += 1
+    total = (out["all-gather"] + 2 * out["all-reduce"]
+             + out["reduce-scatter"] + out["all-to-all"]
+             + out["collective-permute"])
+    res = {k: v for k, v in out.items()}
+    res["counts"] = counts
+    res["total"] = total
+    return res

@@ -1,0 +1,211 @@
+"""Roofline-term measurement (§Roofline) — loop-corrected HLO statistics.
+
+``compiled.cost_analysis()`` counts every while/scan BODY exactly once, so
+a step with grad-accum a and layer-scan repeats r under-reports by up to
+a*r.  We therefore measure three separately-lowered units per cell and
+recombine with the *known static trip counts*:
+
+  stem  — embed + head + loss (counted once per microbatch)   -> C
+  body  — one layer-period (fwd[+bwd] through cfg.pattern)    -> B
+  full  — the real step (memory analysis + outside-loop collectives)
+
+  train:   total = a*C + a*r*B + opt        (opt: analytic, ~20 flops/param)
+  prefill: total = C' + r*B'                (forward-only variants)
+  decode:  total = C' + r*B'                (token=1, cache-length KV)
+
+Collectives: total = a*r*B.coll + a*C.coll + max(0, full.coll - B - C)
+(the residual is the out-of-loop gradient reduction + optimizer traffic).
+
+xLSTM corrections: the chunkwise mLSTM scan and the sLSTM time scan are
+inner loops; bodies are measured at one chunk and scaled linearly, and the
+sLSTM recurrent matmul is added analytically (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, get_config
+from ..distributed import sharding as S
+from ..models import transformer as T
+from ..models import layers as L
+from ..models.config import ArchConfig
+from .hlo_stats import collective_bytes
+from .steps import dp_size, grad_accum_for
+
+
+def _measure(fn, *aargs, mesh) -> Dict[str, float]:
+    with mesh:
+        lowered = jax.jit(fn).lower(*aargs) if not hasattr(fn, "lower") \
+            else fn.lower(*aargs)
+        compiled = lowered.compile()
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        coll = collective_bytes(compiled.as_text())
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": float(coll["total"])}
+
+
+def _body_cfg(cfg: ArchConfig) -> ArchConfig:
+    return cfg.scaled(prelude=(), n_layers=len(cfg.pattern))
+
+
+def _abstract_body_params(cfg1: ArchConfig):
+    ap = jax.eval_shape(lambda k: T.init_params(k, cfg1),
+                        jax.random.PRNGKey(0))
+    return ap["body"]
+
+
+def _x_spec(mesh, B, Sq, d, dt):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dsz = dp_size(mesh)
+    spec = P(tuple(a for a in ("pod", "data") if a in mesh.axis_names),
+             None, None) if B % dsz == 0 else P(None, None, None)
+    return (jax.ShapeDtypeStruct((B, Sq, d), dt), NamedSharding(mesh, spec))
+
+
+def measure_cell(arch: str, shape: str, mesh: Mesh) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    info = SHAPES[shape]
+    kind = info["kind"]
+    Sq = info["seq_len"]
+    Bg = info["global_batch"]
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    r = cfg.repeats
+    n_prelude = len(cfg.prelude)
+    cfg1 = _body_cfg(cfg)
+    abody = _abstract_body_params(cfg1)
+    # wrap under "body/" so the stacked-parameter sharding rules apply
+    bshard = S.param_shardings(mesh, {"body": abody})["body"]
+
+    # ---- sequence-length handling for inner-scan archs ------------------
+    seq_scale = 1.0
+    S_meas = Sq
+    if arch == "xlstm-1.3b" and kind != "decode":
+        S_meas = 128                      # one mLSTM chunk: no inner loop
+        seq_scale = Sq / S_meas
+
+    train = kind == "train"
+    accum = grad_accum_for(cfg, shape, mesh) if train else 1
+    B_micro = max(1, Bg // accum) if train else Bg
+
+    # ---------------- body: one layer period ----------------------------
+    if kind == "decode" and cfg.serve_unroll_layers:
+        # decode is fully unrolled (no layer scan): the full-step compile
+        # already reports true totals — no loop correction needed.
+        return {"method": "unrolled-full", "use_full": True}
+    if kind == "decode":
+        acaches1 = jax.eval_shape(lambda: T.init_caches(cfg1, Bg, Sq))
+        cshard1 = S.cache_shardings(mesh, acaches1)
+        ax, xshard = _x_spec(mesh, Bg, 1, d, dt)
+
+        def body_fn(bp, x, caches):
+            st, nc = T._body_scan({"body": bp}, cfg1, x,
+                                  jnp.zeros((Bg, 1), jnp.int32),
+                                  caches["body"])
+            return st
+        jfn = jax.jit(body_fn, in_shardings=(bshard, xshard, cshard1))
+        body = _measure(jfn, abody, ax, acaches1, mesh=mesh)
+    else:
+        ax, xshard = _x_spec(mesh, B_micro, S_meas, d, dt)
+
+        if train:
+            def body_fn(bp, x):
+                def loss(bp_, x_):
+                    st, _ = T._body_scan({"body": bp_}, cfg1, x_,
+                                         jnp.arange(S_meas), None)
+                    return st.astype(jnp.float32).mean()
+                l, g = jax.value_and_grad(loss, argnums=(0, 1))(bp, x)
+                return l, g
+        else:
+            def body_fn(bp, x):
+                st, _ = T._body_scan({"body": bp}, cfg1, x,
+                                     jnp.arange(S_meas), None)
+                return st
+        jfn = jax.jit(body_fn, in_shardings=(bshard, xshard))
+        body = _measure(jfn, abody, ax, mesh=mesh)
+    body = {k: v * seq_scale for k, v in body.items()}
+
+    # sLSTM recurrent correction (h @ r matmul runs S times, counted once)
+    if arch == "xlstm-1.3b" and kind != "decode":
+        n_slstm = sum(1 for s in cfg.pattern if s.block == "slstm")
+        step_flops = 2 * B_micro * d * 4 * d        # fwd h@r
+        fact = 3 if train else 1                    # bwd ~ 2x fwd
+        body["flops"] += n_slstm * (Sq - 1) * step_flops * fact
+
+    # ---------------- stem: embed + head + loss --------------------------
+    astem = {
+        "embed": jax.ShapeDtypeStruct((cfg.vocab, d), dt),
+        "final_norm": jax.eval_shape(lambda: L.init_norm(cfg)),
+    }
+    head_key = None
+    if cfg.encoder_only:
+        head_key = "head"
+    elif not cfg.tie_embeddings:
+        head_key = "lm_head"
+    if head_key:
+        astem[head_key] = jax.ShapeDtypeStruct((d, cfg.vocab), dt)
+    sshard = S.param_shardings(mesh, astem)
+
+    if kind == "decode":
+        tok = jax.ShapeDtypeStruct((Bg, 1), jnp.int32)
+        tshard = S.batch_shardings(mesh, {"t": tok})["t"]
+
+        def stem_fn(sp, t):
+            x = sp["embed"][t]
+            h = L.apply_norm(sp["final_norm"], x, cfg)
+            w = sp[head_key] if head_key else sp["embed"].T
+            return h @ w
+        jfn = jax.jit(stem_fn, in_shardings=(sshard, tshard))
+        stem = _measure(jfn, astem, tok, mesh=mesh)
+    else:
+        if cfg.frontend == "audio":
+            inp = jax.ShapeDtypeStruct((B_micro, Sq, d), dt)
+        else:
+            inp = jax.ShapeDtypeStruct((B_micro, Sq), jnp.int32)
+        ishard = S.batch_shardings(mesh, {"t": inp})["t"]
+        lbl = jax.ShapeDtypeStruct((B_micro, Sq), jnp.int32)
+        lshard = S.batch_shardings(mesh, {"t": lbl})["t"]
+
+        def stem_loss(sp, t, labels):
+            x = t if cfg.frontend == "audio" else sp["embed"][t]
+            h = L.apply_norm(sp["final_norm"], x, cfg)
+            w = sp[head_key] if head_key else sp["embed"].T
+            lg = (h @ w).astype(jnp.float32)
+            logz = jax.scipy.special.logsumexp(lg, axis=-1)
+            gold = jnp.take_along_axis(lg, labels[..., None], -1)[..., 0]
+            return (logz - gold).mean()
+
+        if train:
+            def stem_fn(sp, t, labels):
+                return jax.value_and_grad(stem_loss)(sp, t, labels)
+        else:
+            stem_fn = stem_loss
+        jfn = jax.jit(stem_fn, in_shardings=(sshard, ishard, lshard))
+        stem = _measure(jfn, astem, inp, lbl, mesh=mesh)
+
+    # ---------------- recombine -----------------------------------------
+    layers_total = r + n_prelude
+    layer_mult = (accum * layers_total) if train else layers_total
+    stem_mult = accum if train else 1
+    opt_flops = 20.0 * cfg.param_count() if train else 0.0
+
+    total = {
+        "flops": stem_mult * stem["flops"] + layer_mult * body["flops"]
+        + opt_flops,
+        "bytes": stem_mult * stem["bytes"] + layer_mult * body["bytes"],
+        "coll": stem_mult * stem["coll"] + layer_mult * body["coll"],
+    }
+    return {
+        "stem": stem, "body_per_period": body,
+        "accum": accum, "repeats": layers_total, "total": total,
+        "method": "loop-corrected (stem + a*r*period)",
+    }

@@ -1,0 +1,40 @@
+"""Serving launcher.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
+        --requests 4
+
+Single-host slot engine on the container; the decode step is the same unit
+the dry-run lowers against the production mesh (launch/steps.py).
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from ..configs import get_config
+from ..models import transformer as T
+from ..serving import ServeEngine, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(params, cfg, batch_slots=args.slots, max_len=64)
+    rng = np.random.RandomState(0)
+    reqs = [Request(uid=i, prompt=rng.randint(0, cfg.vocab, 8)
+                    .astype(np.int32), max_new_tokens=args.max_new)
+            for i in range(args.requests)]
+    engine.run(reqs)
+    for r in reqs:
+        print(f"req {r.uid}: {r.generated}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Per-cell step builders for the dry-run and launchers.
+
+For every (arch x input-shape) cell this returns the jitted step with
+explicit shardings plus abstract (ShapeDtypeStruct) arguments — the
+``.lower().compile()`` unit the multi-pod dry-run exercises.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, get_config, input_specs
+from ..distributed import sharding as S
+from ..models import transformer as T
+from ..models.config import ArchConfig
+from ..training import optimizer as opt
+from ..training.train import make_train_step
+
+
+def _mesh_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def dp_size(mesh: Mesh) -> int:
+    sizes = _mesh_sizes(mesh)
+    n = 1
+    for a in ("pod", "data"):
+        n *= sizes.get(a, 1)
+    return n
+
+
+def grad_accum_for(cfg: ArchConfig, shape_name: str, mesh: Mesh) -> int:
+    """Microbatching policy: keep per-device microbatch at 1 sequence for
+    the big training cells (activation memory ~ one microbatch layer)."""
+    B = SHAPES[shape_name]["global_batch"]
+    per_shard = max(1, B // dp_size(mesh))
+    return per_shard
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               ocfg: Optional[opt.AdamWConfig] = None):
+    """Returns (jitted_fn, abstract_args: tuple, meta: dict)."""
+    cfg = get_config(arch)
+    kind = SHAPES[shape_name]["kind"]
+    specs = input_specs(cfg, shape_name)
+    ocfg = ocfg or opt.AdamWConfig()
+
+    aparams = jax.eval_shape(lambda k: T.init_params(k, cfg),
+                             jax.random.PRNGKey(0))
+    pshard = S.param_shardings(mesh, aparams)
+
+    if kind == "train":
+        accum = grad_accum_for(cfg, shape_name, mesh)
+        step = make_train_step(cfg, ocfg, grad_accum=accum)
+        astate = jax.eval_shape(opt.init, aparams)
+        oshard = S.opt_state_shardings(mesh, astate, aparams)
+        bshard = S.batch_shardings(mesh, specs)
+        mshard = {"grad_norm": NamedSharding(mesh, P()),
+                  "lr": NamedSharding(mesh, P()),
+                  "loss": NamedSharding(mesh, P())}
+        fn = jax.jit(step,
+                     in_shardings=(pshard, oshard, bshard),
+                     out_shardings=(pshard, oshard, mshard),
+                     donate_argnums=(0, 1))
+        return fn, (aparams, astate, specs), {
+            "kind": "train", "grad_accum": accum, "cfg": cfg}
+
+    if kind == "prefill":
+        def prefill_step(params, batch):
+            logits, _ = T.forward(params, cfg, batch)
+            return logits
+        bshard = S.batch_shardings(mesh, specs)
+        fn = jax.jit(prefill_step, in_shardings=(pshard, bshard))
+        return fn, (aparams, specs), {"kind": "prefill", "cfg": cfg}
+
+    # decode: one token against a cache of length S
+    B = specs["_batch"]
+    cache_len = specs["_cache_len"]
+    acaches = jax.eval_shape(
+        lambda: T.init_caches(cfg, B, cache_len))
+    cshard = S.cache_shardings(mesh, acaches)
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tshard = S.batch_shardings(mesh, {"tokens": tok})["tokens"]
+
+    def decode(params, tokens, caches):
+        return T.decode_step(params, cfg, tokens, caches)
+
+    fn = jax.jit(decode,
+                 in_shardings=(pshard, tshard, cshard),
+                 out_shardings=(None, cshard),
+                 donate_argnums=(2,))
+    return fn, (aparams, tok, acaches), {"kind": "decode", "cfg": cfg,
+                                         "cache_len": cache_len}

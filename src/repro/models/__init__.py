@@ -1,0 +1,3 @@
+"""Model zoo: unified layer library + transformer assembly + configs."""
+from .config import ArchConfig, LayerSpec
+from . import layers, transformer

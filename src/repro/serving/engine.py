@@ -1,0 +1,124 @@
+"""Batched serving engine — continuous-batching-lite over slot-based caches.
+
+A fixed decode batch of B slots; each slot holds one request's KV/recurrent
+cache region.  Finished slots are refilled from the queue by running a
+prefill for the new prompt and writing its cache into the slot (dynamic
+batch-index update).  The decode loop is one jitted `decode_step` for the
+whole batch every iteration — the standard TPU serving shape.
+
+The straggler/deadline story for multi-host serving (and the ragged
+dispatch notes) live in DESIGN.md §5; this single-host engine is what the
+serve example + tests drive.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer as T
+from ..models.config import ArchConfig
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ArchConfig, batch_slots: int,
+                 max_len: int, greedy: bool = True):
+        self.params = params
+        self.cfg = cfg
+        self.B = batch_slots
+        self.max_len = max_len
+        self.greedy = greedy
+        self.caches = T.init_caches(cfg, batch_slots, max_len)
+        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.slot_remaining = np.zeros(batch_slots, np.int64)
+        self.last_token = jnp.zeros((batch_slots, 1), jnp.int32)
+
+        self._decode = jax.jit(
+            lambda p, t, c: T.decode_step(p, cfg, t, c))
+        self._prefill = jax.jit(
+            lambda p, b: T.prefill(p, cfg, b, max_len),
+            static_argnames=())
+
+    # ------------------------------------------------------------------
+    def _admit(self, req: Request, slot: int):
+        """Prefill `req` (batch of 1) and write its cache into `slot`."""
+        batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
+        logits, caches1 = self._prefill(self.params, batch)
+
+        def write(c_all, c_one):
+            if isinstance(c_one, int):
+                return c_all
+            return jax.lax.dynamic_update_slice(
+                c_all, c_one.astype(c_all.dtype),
+                (0,) * (c_all.ndim - c_one.ndim) + (slot,)
+                + (0,) * (c_one.ndim - 1)) if False else c_all
+
+        # slot write: leaf shapes are (B, ...) or (repeats, B, ...)
+        def write_leaf(c_all, c_one):
+            if isinstance(c_one, int) or c_one is None:
+                return c_all
+            if c_all.ndim == c_one.ndim:       # (B, ...) <- (1, ...)
+                return jax.lax.dynamic_update_slice(
+                    c_all, c_one.astype(c_all.dtype),
+                    (slot,) + (0,) * (c_all.ndim - 1))
+            # (repeats, B, ...) <- (repeats, 1, ...)
+            return jax.lax.dynamic_update_slice(
+                c_all, c_one.astype(c_all.dtype),
+                (0, slot) + (0,) * (c_all.ndim - 2))
+
+        self.caches = jax.tree.map(write_leaf, self.caches, caches1,
+                                   is_leaf=lambda x: x is None or
+                                   isinstance(x, int))
+        nxt = int(jnp.argmax(logits[0, -1]))
+        req.generated.append(nxt)
+        self.last_token = self.last_token.at[slot, 0].set(nxt)
+        self.slot_req[slot] = req
+        self.slot_remaining[slot] = req.max_new_tokens - 1
+
+    def _retire(self, slot: int):
+        req = self.slot_req[slot]
+        if req is not None:
+            req.done = True
+        self.slot_req[slot] = None
+        self.slot_remaining[slot] = 0
+
+    # ------------------------------------------------------------------
+    def run(self, requests: List[Request]) -> List[Request]:
+        queue = list(requests)
+        active = lambda: any(r is not None for r in self.slot_req)  # noqa
+        while queue or active():
+            # fill free slots
+            for b in range(self.B):
+                if self.slot_req[b] is None and queue:
+                    self._admit(queue.pop(0), b)
+            # one batched decode step
+            logits, self.caches = self._decode(self.params, self.last_token,
+                                               self.caches)
+            nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+            self.last_token = nxt[:, None]
+            nxt_host = np.asarray(nxt)
+            for b in range(self.B):
+                req = self.slot_req[b]
+                if req is None:
+                    continue
+                tok = int(nxt_host[b])
+                req.generated.append(tok)
+                self.slot_remaining[b] -= 1
+                if self.slot_remaining[b] <= 0 or (
+                        req.eos_id is not None and tok == req.eos_id):
+                    self._retire(b)
+        return requests

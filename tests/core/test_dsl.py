@@ -1,0 +1,147 @@
+"""DSL builder / validator / interpreter unit tests."""
+import numpy as np
+import pytest
+
+from repro.core.dsl import ast as A
+from repro.core.dsl import language as tl
+from repro.core.dsl import interpret, validate
+from repro.core.dsl.validate import DSLValidationError
+
+
+def build_scale(shapes, factor=2.0, bad_stage=False, oob=False):
+    P = tl.ProgramBuilder("scale", category="test", task_shapes=shapes)
+    h = P.host()
+    numel = h.numel("input")
+    n_cores = h.let("n_cores", 8)
+    per_core = h.let("per_core", numel // n_cores)
+    h.launch(grid="n_cores")
+    with P.kernel(tensors=[("input", tl.f32, "in", 1),
+                           ("output", tl.f32, "out", 1)]):
+        pid = tl.program_id(0)
+        buf = tl.alloc_ub("buf", (per_core,), tl.f32)
+        off = pid * per_core + (per_core if oob else 0)
+        with tl.copyin():
+            tl.load("input", off, buf)
+        with tl.compute():
+            tl.mul(buf, buf, factor)
+        with tl.copyout():
+            tl.store("output", pid * per_core, buf)
+    return P.build()
+
+
+def test_build_and_interpret():
+    shapes = {"input": (1024,), "output": (1024,)}
+    prog = build_scale(shapes)
+    rep = validate(prog)
+    assert not rep.errors
+    x = np.random.randn(1024).astype(np.float32)
+    out = interpret(prog, {"input": x}, {"output": (1024,)})["output"]
+    np.testing.assert_allclose(out, 2.0 * x, rtol=1e-6)
+
+
+def test_stage_discipline_enforced_by_builder():
+    shapes = {"input": (64,), "output": (64,)}
+    P = tl.ProgramBuilder("bad", task_shapes=shapes)
+    h = P.host()
+    h.let("n_cores", 1)
+    h.launch(grid="n_cores")
+    with pytest.raises(tl.DSLBuildError):
+        with P.kernel(tensors=[("input", tl.f32, "in", 1),
+                               ("output", tl.f32, "out", 1)]):
+            buf = tl.alloc_ub("b", (64,), tl.f32)
+            tl.load("input", 0, buf)   # load outside copyin
+
+
+def test_compute_op_outside_stage_rejected():
+    shapes = {"input": (64,), "output": (64,)}
+    P = tl.ProgramBuilder("bad2", task_shapes=shapes)
+    h = P.host()
+    h.let("n_cores", 1)
+    h.launch(grid="n_cores")
+    with pytest.raises(tl.DSLBuildError):
+        with P.kernel(tensors=[("input", tl.f32, "in", 1),
+                               ("output", tl.f32, "out", 1)]):
+            buf = tl.alloc_ub("b", (64,), tl.f32)
+            tl.exp(buf, buf)
+
+
+def test_validator_oob_detected():
+    shapes = {"input": (1024,), "output": (1024,)}
+    prog = build_scale(shapes, oob=True)
+    rep = validate(prog)
+    assert any(d.code == "oob" for d in rep.errors)
+    with pytest.raises(DSLValidationError):
+        rep.raise_if_errors()
+
+
+def test_validator_budget():
+    shapes = {"input": (32 * 1024 * 1024,), "output": (32 * 1024 * 1024,)}
+    prog = build_scale(shapes)   # per_core = 4M f32 = 16MB > budget
+    rep = validate(prog)
+    assert any(d.code == "budget" for d in rep.errors)
+
+
+def test_validator_shape_mismatch():
+    shapes = {"input": (64,), "output": (64,)}
+    P = tl.ProgramBuilder("bad3", task_shapes=shapes)
+    h = P.host()
+    h.let("n_cores", 1)
+    h.launch(grid="n_cores")
+    with P.kernel(tensors=[("input", tl.f32, "in", 1),
+                           ("output", tl.f32, "out", 1)]):
+        a = tl.alloc_ub("a", (64,), tl.f32)
+        b = tl.alloc_ub("b", (32,), tl.f32)
+        with tl.copyin():
+            tl.load("input", 0, a)
+        with tl.compute():
+            tl.add(b, a, a)          # dst shape mismatch
+        with tl.copyout():
+            tl.store("output", 0, a)
+    rep = validate(P.build())
+    assert any(d.code == "shape" for d in rep.errors)
+
+
+def test_alloc_twice_rejected():
+    shapes = {"input": (64,), "output": (64,)}
+    P = tl.ProgramBuilder("bad4", task_shapes=shapes)
+    h = P.host()
+    h.let("n_cores", 1)
+    h.launch(grid="n_cores")
+    with pytest.raises(tl.DSLBuildError):
+        with P.kernel(tensors=[("input", tl.f32, "in", 1),
+                               ("output", tl.f32, "out", 1)]):
+            tl.alloc_ub("a", (64,), tl.f32)
+            tl.alloc_ub("a", (64,), tl.f32)
+
+
+def test_interp_masked_load_pad_value():
+    shapes = {"input": (100,), "output": (128,)}
+    P = tl.ProgramBuilder("mask", task_shapes=shapes)
+    h = P.host()
+    h.let("n_cores", 1)
+    h.launch(grid="n_cores")
+    with P.kernel(tensors=[("input", tl.f32, "in", 1),
+                           ("output", tl.f32, "out", 1)]):
+        buf = tl.alloc_ub("b", (128,), tl.f32)
+        with tl.copyin():
+            tl.load("input", 0, buf, valid=100, pad_value=-1.0)
+        with tl.compute():
+            tl.copy(buf, buf)
+        with tl.copyout():
+            tl.store("output", 0, buf)
+    prog = P.build()
+    x = np.arange(100, dtype=np.float32)
+    out = interpret(prog, {"input": x}, {"output": (128,)})["output"]
+    np.testing.assert_allclose(out[:100], x)
+    np.testing.assert_allclose(out[100:], -1.0)
+
+
+def test_dsl_spec_document_complete():
+    """The specification handed to generation front-ends lists every op."""
+    from repro.core.dsl.spec import DSL_SPEC
+    from repro.core.dsl import ast as A
+    for op in A.UNARY_OPS + A.BINARY_OPS + A.REDUCE_OPS:
+        assert op in DSL_SPEC, op
+    for kw in ("copyin", "compute", "copyout", "alloc_ub", "VMEM_BUDGET",
+               "rationale"):
+        assert kw in DSL_SPEC, kw

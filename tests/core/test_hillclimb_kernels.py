@@ -1,0 +1,26 @@
+"""§Perf kernel-level hillclimb artifacts stay correct and faster-by-model."""
+import numpy as np
+import pytest
+
+from repro.bench import suite
+from repro.bench.model import fast_ratio
+from repro.core.examples.pooling import build_pool2d_rowreuse
+from repro.core.lowering.pipeline import transcompile, Knobs
+from repro.core.planner import default_inputs, generate
+
+
+@pytest.mark.parametrize("mode,name", [("avg", "avg_pool2d"),
+                                       ("max", "max_pool2d")])
+def test_pool2d_rowreuse_correct_and_faster(mode, name):
+    task = {t.name: t for t in suite()}[name]
+    prog = build_pool2d_rowreuse(task, task.check_shapes, Knobs(), mode)
+    art = transcompile(prog)
+    inputs = default_inputs(task, task.check_shapes)
+    got = np.asarray(art.entry(inputs["input"], interpret=True))
+    want = task.ref(inputs["input"])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    base = generate(task, verify=False)
+    prog_big = build_pool2d_rowreuse(task, task.shapes, Knobs(), mode)
+    assert fast_ratio(task, prog_big) > fast_ratio(
+        task, base.artifact.program) * 1.2

@@ -1,0 +1,62 @@
+"""Property tests over pooling kernel parameters (k, s, H, W): the baseline
+and row-reuse generated kernels must agree with numpy for arbitrary
+window/stride/shape combinations."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dsl.ast import DType
+from repro.core.examples.pooling import build_pool2d_rowreuse
+from repro.core.lowering.pipeline import Knobs, transcompile
+from repro.core.planner import PLANNER_REGISTRY
+from repro.core.task import KernelTask, TensorSpec
+from tests.conftest import *  # noqa: F401,F403
+
+
+def _task(op, B, C, H, W, k, s):
+    Ho, Wo = (H - k) // s + 1, (W - k) // s + 1
+    shapes = {"input": (B, C, H, W), "output": (B, C, Ho, Wo)}
+    return KernelTask(
+        name=op, category="pooling", op=op,
+        tensors=[TensorSpec("input", DType.f32, "in", 4),
+                 TensorSpec("output", DType.f32, "out", 4)],
+        shapes=shapes, check_shapes=shapes, ref=None,
+        attrs={"kernel": k, "stride": s})
+
+
+def _np_pool2d(x, k, s, mode):
+    B, C, H, W = x.shape
+    Ho, Wo = (H - k) // s + 1, (W - k) // s + 1
+    out = np.full((B, C, Ho, Wo), 0.0 if mode == "avg" else -np.inf)
+    for kh in range(k):
+        for kw in range(k):
+            sl = x[:, :, kh: kh + (Ho - 1) * s + 1: s,
+                   kw: kw + (Wo - 1) * s + 1: s]
+            out = out + sl if mode == "avg" else np.maximum(out, sl)
+    return out / (k * k) if mode == "avg" else out
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    k=st.integers(min_value=2, max_value=4),
+    s=st.integers(min_value=1, max_value=3),
+    H=st.integers(min_value=8, max_value=24),
+    W=st.integers(min_value=8, max_value=40),
+    mode=st.sampled_from(["avg", "max"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pool2d_baseline_and_rowreuse_agree(k, s, H, W, mode, seed):
+    if s > k or H < k or W < k:
+        return
+    task = _task(f"{mode}_pool2d", 2, 2, H, W, k, s)
+    x = np.random.RandomState(seed).randn(2, 2, H, W).astype(np.float32)
+    want = _np_pool2d(x.astype(np.float64), k, s, mode)
+
+    base = transcompile(PLANNER_REGISTRY[f"{mode}_pool2d"](
+        task, task.shapes, Knobs()))
+    got = np.asarray(base.entry(x, interpret=True))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    rr = transcompile(build_pool2d_rowreuse(task, task.shapes, Knobs(),
+                                            mode))
+    got2 = np.asarray(rr.entry(x, interpret=True))
+    np.testing.assert_allclose(got2, want, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,108 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dsl import language as tl
+from repro.core.dsl.interp import interpret
+from repro.core.lowering import transcompile
+
+_SAFE_UNARY = ["tanh", "sigmoid", "softsign", "abs", "neg", "square",
+               "sign", "relu", "hardsigmoid"]
+
+_NP = {"tanh": np.tanh, "sigmoid": lambda v: 1 / (1 + np.exp(-v)),
+       "softsign": lambda v: v / (1 + np.abs(v)), "abs": np.abs,
+       "neg": lambda v: -v, "square": lambda v: v * v, "sign": np.sign,
+       "relu": lambda v: np.maximum(v, 0),
+       "hardsigmoid": lambda v: np.clip(v / 6 + 0.5, 0, 1)}
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    numel=st.integers(min_value=9, max_value=3000),
+    ops=st.lists(st.sampled_from(_SAFE_UNARY), min_size=1, max_size=4),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_random_chain_lowered_equals_numpy(numel, ops, seed):
+    """For random op chains and awkward sizes, the transcompiled Pallas
+    kernel must agree with numpy AND the DSL interpreter oracle."""
+    from tests.core.test_transcompile import (build_elementwise_chain,
+                                              _np_chain)
+    shapes = {"input": (numel,), "output": (numel,)}
+    prog = build_elementwise_chain(shapes, ops)
+    art = transcompile(prog)
+    x = np.random.RandomState(seed).randn(numel).astype(np.float32)
+    got = np.asarray(art.module.make(shapes, interpret=True)(x))
+    want = x.astype(np.float64)
+    for op in ops:
+        want = _NP[op](want)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    numel=st.integers(min_value=1, max_value=10**9),
+    max_tile=st.sampled_from([256, 1024, 4096]),
+)
+def test_host_plan_invariants(numel, max_tile):
+    """Elementwise host planning: tiles cover the padded span exactly and
+    the UB allocation stays within budget."""
+    shapes = {"input": (numel,), "output": (numel,)}
+    P = tl.ProgramBuilder("plan", task_shapes=shapes)
+    h = P.host()
+    n = h.numel("input")
+    n_cores = h.let("n_cores", tl.NUM_CORES)
+    tile = h.let("tile_length", tl.hmin(max_tile, tl.hcdiv(n, n_cores)))
+    span = h.let("core_span", n_cores * tile)
+    pn = h.let("padded_numel", tl.hcdiv(n, span) * span)
+    per_core = h.let("per_core", pn // n_cores)
+    n_tiles = h.let("n_tiles", per_core // tile)
+    h.launch(grid="n_cores")
+    v = h.values
+    assert v["padded_numel"] >= numel
+    assert v["padded_numel"] - numel < v["core_span"]
+    assert v["n_tiles"] * v["tile_length"] * v["n_cores"] == v["padded_numel"]
+    assert v["tile_length"] * 4 <= tl.VMEM_BUDGET
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_quantize_roundtrip_error_bound(data):
+    from repro.distributed.compress import quantize, dequantize
+    import jax.numpy as jnp
+    shape = data.draw(st.sampled_from([(64,), (8, 32), (130,)]))
+    scale = data.draw(st.floats(min_value=1e-3, max_value=1e3))
+    x = np.random.RandomState(data.draw(
+        st.integers(0, 2**31 - 1))).randn(*shape).astype(np.float32) * scale
+    q, s = quantize(jnp.asarray(x))
+    back = np.asarray(dequantize(q, s))
+    # error bounded by half a quantization step
+    assert np.max(np.abs(back - x)) <= float(s) * 0.5 + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    rows=st.integers(min_value=1, max_value=300),
+    cols=st.integers(min_value=3, max_value=700),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_rowwise_softmax_any_shape(rows, cols, seed):
+    """The normalization expert example must stay correct for arbitrary
+    (rows, cols), exercising Pass-4 padding and divisor block sizing."""
+    from repro.core.planner import PLANNER_REGISTRY
+    from repro.core.lowering.pipeline import Knobs
+    from repro.core.task import KernelTask, TensorSpec
+    from repro.core.dsl.ast import DType
+    shapes = {"input": (rows, cols), "output": (rows, cols)}
+    task = KernelTask(
+        name="softmax", category="normalization", op="softmax",
+        tensors=[TensorSpec("input", DType.f32, "in", 2),
+                 TensorSpec("output", DType.f32, "out", 2)],
+        shapes=shapes, check_shapes=shapes,
+        ref=None, attrs={"pad_value": -3.0e38})
+    prog = PLANNER_REGISTRY["softmax"](task, shapes, Knobs())
+    art = transcompile(prog)
+    x = np.random.RandomState(seed).randn(rows, cols).astype(np.float32)
+    got = np.asarray(art.entry(x, interpret=True))
+    e = np.exp(x - x.max(-1, keepdims=True))
+    want = e / e.sum(-1, keepdims=True)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)

@@ -1,0 +1,81 @@
+"""Serving-path correctness: prefill + step-by-step decode must reproduce
+the teacher-forced full forward (per-architecture, reduced configs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import transformer as T
+
+# decode applies to decoder LMs only
+_DECODE_ARCHS = [a for a in ARCH_NAMES if a not in ("hubert-xlarge",)]
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "deepseek-v2-lite-16b",
+                                  "jamba-v0.1-52b", "xlstm-1.3b"])
+def test_prefill_decode_matches_forward(arch):
+    # exact-math check: full-precision KV cache (int8 default is covered
+    # by test_int8_kv_decode_quantization_error below)
+    cfg = get_config(arch, smoke=True).scaled(dtype="float32",
+                                              kv_cache_dtype="model",
+                                              moe_impl="dense")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    B, S, extra = 2, 24, 6
+    rng = np.random.RandomState(0)
+    toks = jnp.asarray(rng.randint(0, cfg.vocab, (B, S + extra)), jnp.int32)
+
+    # teacher-forced full forward logits
+    full_logits, _ = T.forward(params, cfg, {"tokens": toks})
+
+    # prefill on the first S tokens, then decode the rest token by token
+    logits_pf, caches = T.prefill(params, cfg, {"tokens": toks[:, :S]},
+                                  max_len=S + extra)
+    np.testing.assert_allclose(
+        np.asarray(logits_pf, np.float32),
+        np.asarray(full_logits[:, :S], np.float32), rtol=2e-3, atol=2e-3)
+
+    for t in range(extra):
+        step_logits, caches = T.decode_step(params, cfg,
+                                            toks[:, S + t:S + t + 1], caches)
+        np.testing.assert_allclose(
+            np.asarray(step_logits[:, 0], np.float32),
+            np.asarray(full_logits[:, S + t], np.float32),
+            rtol=5e-3, atol=5e-3)
+
+
+def test_mhc_hyper_connections_run():
+    """mHC residual streams (paper RQ3 feature) train without NaNs and give
+    different logits from the vanilla model."""
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    cfg_mhc = cfg.scaled(hyper_connections=4)
+    rng = np.random.RandomState(0)
+    toks = jnp.asarray(rng.randint(0, cfg.vocab, (2, 16)), jnp.int32)
+    p0 = T.init_params(jax.random.PRNGKey(0), cfg)
+    p1 = T.init_params(jax.random.PRNGKey(0), cfg_mhc)
+    l0, _ = T.forward(p0, cfg, {"tokens": toks})
+    l1, _ = T.forward(p1, cfg_mhc, {"tokens": toks})
+    assert bool(jnp.all(jnp.isfinite(l1.astype(jnp.float32))))
+    loss, grads = jax.value_and_grad(
+        lambda p: T.loss_fn(p, cfg_mhc, {"tokens": toks}))(p1)
+    assert bool(jnp.isfinite(loss))
+    # mixing params receive gradients
+    g = grads["body"]["l0"]["mhc_block"]["logits"]
+    assert float(jnp.max(jnp.abs(g))) > 0
+
+
+def test_int8_kv_decode_quantization_error_bounded():
+    cfg = get_config("internlm2-1.8b", smoke=True).scaled(
+        dtype="float32", kv_cache_dtype="int8")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+    toks = jnp.asarray(rng.randint(0, cfg.vocab, (2, 30)), jnp.int32)
+    full, _ = T.forward(params, cfg, {"tokens": toks})
+    _, caches = T.prefill(params, cfg, {"tokens": toks[:, :24]}, max_len=30)
+    worst = 0.0
+    for t in range(6):
+        sl, caches = T.decode_step(params, cfg, toks[:, 24 + t:25 + t],
+                                   caches)
+        worst = max(worst, float(jnp.max(jnp.abs(sl[:, 0]
+                                                 - full[:, 24 + t]))))
+    assert worst < 0.15, worst          # int8 noise on pre-softmax logits

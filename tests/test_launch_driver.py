@@ -1,0 +1,30 @@
+"""End-to-end launcher test: train a few steps, kill, auto-resume (the
+fault-tolerance loop of launch/train.py)."""
+import os
+import subprocess
+import sys
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _train(ckpt_dir, steps):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train",
+         "--steps", str(steps), "--seq-len", "32", "--batch", "4",
+         "--ckpt-every", "5", "--ckpt-dir", ckpt_dir],
+        capture_output=True, text=True, timeout=420, env=env, cwd=_ROOT)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return proc.stdout
+
+
+def test_train_launcher_runs_and_resumes(tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+    out1 = _train(ckpt, steps=7)
+    assert "step    5" in out1 or "step 5" in out1.replace("   ", " ")
+    assert "done" in out1
+    # second invocation must auto-resume from the last checkpoint
+    out2 = _train(ckpt, steps=12)
+    assert "[resume] from step 7" in out2, out2
+    assert "done" in out2
