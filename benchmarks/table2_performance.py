@@ -5,6 +5,11 @@ Fast_x is reported from the deterministic v5e roofline model
 program at BENCH shapes; the eager baseline models the canonical
 framework-eager kernel sequence.  A CPU wall-clock sanity number for the
 reference op is printed per kernel (us_per_call).
+
+Beyond-paper: with ``tune=True`` (the default) every task is additionally
+run through the autotuner (DESIGN.md §8) and the tuned-vs-default ratio is
+reported per kernel and per category — this is the headroom the paper's
+repair-only feedback loop leaves on the table.
 """
 from __future__ import annotations
 
@@ -22,15 +27,28 @@ PAPER_TABLE2 = {
 }
 
 
-def run(emit=print):
+def run(emit=print, tune=True, tune_budget=6, cache=None):
+    if tune and cache is None:
+        # share one scratch cache between generate() and the tuner so the
+        # tuner's baseline trial reuses the default build instead of
+        # re-lowering it; removed again when the run ends
+        import tempfile
+        from repro.core.tuning import ArtifactCache
+        with tempfile.TemporaryDirectory(prefix="table2-cache-") as d:
+            return _run(emit, tune, tune_budget, ArtifactCache(d))
+    return _run(emit, tune, tune_budget, cache)
+
+
+def _run(emit, tune, tune_budget, cache):
     from repro.bench import suite
     from repro.bench.model import (analyze_program, eager_traffic,
                                    fast_ratio, _padded_shapes_for)
     from repro.core.planner import generate, default_inputs
+    from repro.core.tuning import tune as run_tune
 
     rows = []
     for task in suite():
-        r = generate(task, verify=False)
+        r = generate(task, verify=False, cache=cache)
         if not r.comp_ok or r.artifact is None:
             rows.append({"name": task.name, "category": task.category,
                          "ratio": 0.0, "ok": False})
@@ -39,6 +57,13 @@ def run(emit=print):
         ratio = fast_ratio(task, prog)
         gen = analyze_program(prog, _padded_shapes_for(prog, task.shapes))
         eag = eager_traffic(task, task.shapes)
+        # tuned-vs-default: what the hill climb finds beyond the planner's
+        # one-shot build (variant + knob search, correctness-gated)
+        tuned_ratio, tuned_desc = ratio, "default"
+        if tune:
+            tr = run_tune(task, budget=tune_budget, cache=cache)
+            tuned_ratio = max(tr.best.ratio, ratio)
+            tuned_desc = tr.best.candidate.describe()
         # CPU wall-clock of the numpy reference at check shapes (sanity)
         inputs = default_inputs(task, task.check_shapes)
         arrays = [inputs[tp.name] for tp in task.input_specs]
@@ -46,31 +71,49 @@ def run(emit=print):
         rows.append({
             "name": task.name, "category": task.category, "ok": True,
             "ratio": ratio,
+            "tuned_ratio": tuned_ratio,
+            "tuned_candidate": tuned_desc,
+            "tune_gain": tuned_ratio / ratio if ratio > 0 else 1.0,
             "gen_bytes": gen.bytes_total, "eager_bytes": eag.bytes_total,
             "gen_time_us": gen.time_s() * 1e6,
             "eager_time_us": eag.time_s() * 1e6,
             "backend": r.artifact.backend,
         })
         emit(f"table2,{task.name},{us:.1f},ratio={ratio:.2f};"
+             f"tuned={tuned_ratio:.2f};"
              f"gen_us={gen.time_s()*1e6:.0f};eager_us={eag.time_s()*1e6:.0f}")
 
     cats = defaultdict(list)
+    tuned_cats = defaultdict(list)
     for row in rows:
         cats[row["category"]].append(row["ratio"] if row["ok"] else 0.0)
-    emit("category,n,Fast0.2,Fast0.8,Fast1.0,paper(0.2/0.8/1.0)")
-    allr = []
+        tuned_cats[row["category"]].append(
+            row.get("tuned_ratio", row["ratio"]) if row["ok"] else 0.0)
+    emit("category,n,Fast0.2,Fast0.8,Fast1.0,tunedFast1.0,"
+         "paper(0.2/0.8/1.0)")
+    allr, allt = [], []
     for cat, ratios in sorted(cats.items()):
         n = len(ratios)
+        tuned = tuned_cats[cat]
         f02 = 100 * sum(x >= 0.2 for x in ratios) / n
         f08 = 100 * sum(x >= 0.8 for x in ratios) / n
         f10 = 100 * sum(x >= 1.0 for x in ratios) / n
+        t10 = 100 * sum(x >= 1.0 for x in tuned) / n
         p = PAPER_TABLE2[cat]
-        emit(f"{cat},{n},{f02:.1f},{f08:.1f},{f10:.1f},"
+        emit(f"{cat},{n},{f02:.1f},{f08:.1f},{f10:.1f},{t10:.1f},"
              f"{p[0]}/{p[1]}/{p[2]}")
         allr.extend(ratios)
+        allt.extend(tuned)
     n = len(allr)
     emit(f"TOTAL,{n},{100*sum(x >= 0.2 for x in allr)/n:.1f},"
          f"{100*sum(x >= 0.8 for x in allr)/n:.1f},"
-         f"{100*sum(x >= 1.0 for x in allr)/n:.1f},82.7/57.7/46.2")
+         f"{100*sum(x >= 1.0 for x in allr)/n:.1f},"
+         f"{100*sum(x >= 1.0 for x in allt)/n:.1f},82.7/57.7/46.2")
+    gains = [r["tune_gain"] for r in rows if r.get("ok") and
+             r.get("tune_gain", 1.0) > 1.0 + 1e-9]
+    if gains:
+        emit(f"tuner: improved {len(gains)}/{n} kernels, "
+             f"max gain {max(gains):.2f}x, "
+             f"mean gain (improved) {sum(gains)/len(gains):.2f}x")
     save_json("table2.json", rows)
     return rows

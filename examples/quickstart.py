@@ -1,13 +1,18 @@
 """Quickstart: generate an NPU-style kernel from the DSL and run it.
 
     PYTHONPATH=src python examples/quickstart.py
+    # or, after `pip install -e .`:  python examples/quickstart.py
 
 Walks the full AscendCraft pipeline on one operator: task spec -> planner
 (category expert example) -> DSL program -> multi-pass transcompilation ->
-generated Pallas source -> execution + verification.
+generated Pallas source -> execution + verification — then generates the
+same kernel a second time through the persistent artifact cache
+(DESIGN.md §8) to show the lowering pipeline being skipped on a hit.
 """
 import os
 import sys
+import tempfile
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -42,6 +47,24 @@ def main():
     ref = np.exp(x - x.max(-1, keepdims=True))
     ref = ref / ref.sum(-1, keepdims=True)
     print("\nmax abs err vs numpy softmax:", np.abs(out - ref).max())
+
+    # ---- artifact cache: second generate() skips the whole pipeline ----
+    from repro.core.tuning import ArtifactCache
+    from repro.core.lowering.pipeline import PIPELINE_COUNTERS
+    with tempfile.TemporaryDirectory(prefix="ascendcraft-cache-") as cdir:
+        cache = ArtifactCache(cdir)
+        t0 = time.time()
+        generate(task, cache=cache)
+        cold = time.time() - t0
+        lowerings = PIPELINE_COUNTERS["transcompile"]
+        t0 = time.time()
+        r2 = generate(task, cache=cache)
+        warm = time.time() - t0
+        print("\n---- artifact cache (DESIGN.md §8) ----")
+        print(f"cold generate: {cold*1e3:.0f} ms; warm (cached): "
+              f"{warm*1e3:.1f} ms; served from cache: {r2.cached}; "
+              f"lowering runs during warm call: "
+              f"{PIPELINE_COUNTERS['transcompile'] - lowerings}")
 
 
 if __name__ == "__main__":

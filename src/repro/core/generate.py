@@ -1,9 +1,15 @@
 """Regenerate the checked-in framework kernel artifacts.
 
-    PYTHONPATH=src python -m repro.core.generate [--out DIR]
+    PYTHONPATH=src python -m repro.core.generate [--out DIR] [--tune]
+                                                 [--cache DIR] [--budget N]
 
 Each artifact under ``src/repro/kernels/generated/`` is the transcompiler's
 output for one framework hot-spot (readable, standalone — paper RQ3).
+With ``--tune`` each kernel is regenerated through the autotuner
+(DESIGN.md §8): the hill climb picks the fastest correct (variant, knobs)
+point before emission.  ``--cache`` reuses/persists emitted sources via the
+content-addressed artifact cache, so unchanged kernels skip the lowering
+pipeline entirely on a re-run.
 """
 from __future__ import annotations
 
@@ -77,13 +83,26 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "kernels", "generated"))
+    ap.add_argument("--tune", action="store_true",
+                    help="regenerate through the autotuner (DESIGN.md §8)")
+    ap.add_argument("--budget", type=int, default=8,
+                    help="tuner evaluation budget per kernel")
+    ap.add_argument("--cache", default=None, metavar="DIR",
+                    help="artifact-cache directory ('default' for the "
+                         "user cache dir)")
     args = ap.parse_args()
+    cache = True if args.cache == "default" else args.cache
     os.makedirs(args.out, exist_ok=True)
     for task in framework_tasks():
-        r = generate(task)
+        r = generate(task, tune=args.tune, tune_budget=args.budget,
+                     cache=cache)
         status = "PASS" if r.pass_ok else ("COMP" if r.comp_ok else "FAIL")
+        origin = "cache" if r.cached else "built"
         print(f"{status} {task.name:16s} backend="
-              f"{r.artifact.backend if r.artifact else '-'} {r.error[:80]}")
+              f"{r.artifact.backend if r.artifact else '-'} [{origin}] "
+              f"{r.error[:80]}")
+        if r.tune is not None:
+            print(f"  tuner: {r.tune.summary()}")
         if r.artifact is not None:
             path = os.path.join(args.out, f"{task.name}.py")
             with open(path, "w") as f:

@@ -31,6 +31,13 @@ from .pass2_init import run_pass2
 from .pass4_align import needs_refinement
 
 
+# Lowering-work counters (observability for the artifact cache, DESIGN.md
+# §8): ``transcompile`` counts full pass-pipeline runs, ``feedback_builds``
+# counts builder invocations inside the correction loop.  A cache hit must
+# leave both untouched — tests snapshot-and-diff exactly that.
+PIPELINE_COUNTERS: Dict[str, int] = {"transcompile": 0, "feedback_builds": 0}
+
+
 class TranscompileError(Exception):
     def __init__(self, stage: str, message: str, source: Optional[str] = None):
         self.stage = stage
@@ -46,6 +53,10 @@ class Artifact:
     module: types.ModuleType
     backend: str
     pass_log: List[str] = field(default_factory=list)
+    # knobs the successful build actually used (after feedback adjustments);
+    # recorded so the artifact cache can rebuild the program without
+    # re-running the correction loop (DESIGN.md §8)
+    final_knobs: Optional["Knobs"] = None
 
     def make(self, shapes: Dict[str, Tuple[int, ...]], interpret: Optional[bool] = None):
         return self.module.make(shapes, interpret=interpret)
@@ -72,6 +83,7 @@ def transcompile(prog: A.Program, force_backend: Optional[str] = None,
                  verify_against_interp: bool = True,
                  rtol: float = 2e-5, atol: float = 1e-5) -> Artifact:
     """Lower one DSL program through passes 1-4 and compile-check it."""
+    PIPELINE_COUNTERS["transcompile"] += 1
     log: List[str] = []
 
     # Pass 0: DSL validation (stage discipline, OOB, budget, alignment)
@@ -174,6 +186,7 @@ def generate_with_feedback(
     history: List[str] = []
     last_exc: Optional[Exception] = None
     for attempt in range(max_attempts):
+        PIPELINE_COUNTERS["feedback_builds"] += 1
         try:
             prog = builder(knobs)
         except NotImplementedError:
@@ -184,6 +197,7 @@ def generate_with_feedback(
             art = transcompile(prog, force_backend=knobs.backend,
                                **transcompile_kwargs)
             art.pass_log[:0] = history
+            art.final_knobs = knobs
             return art
         except DSLValidationError as e:
             last_exc = e

@@ -157,6 +157,8 @@ class GenResult:
     error: str = ""
     max_abs_err: float = float("nan")
     oracle_ok: Optional[bool] = None
+    cached: bool = False        # artifact served from the on-disk cache
+    tune: Optional[Any] = None  # TuneResult when generate(tune=True)
 
 
 def default_inputs(task: KernelTask, shapes: Dict[str, Tuple[int, ...]],
@@ -174,30 +176,163 @@ def default_inputs(task: KernelTask, shapes: Dict[str, Tuple[int, ...]],
     return out
 
 
+@dataclass
+class NumericsCheck:
+    """Outcome of running a check-shape artifact against the reference.
+    ``exec_ok`` distinguishes 'ran but diverged' (Pass@1 failure) from
+    'could not run' (Comp@1 failure) explicitly — callers must not infer
+    it from the error text."""
+    pass_ok: bool
+    max_err: float
+    error: str
+    exec_ok: bool = True
+
+
+def check_artifact_numerics(task: KernelTask, art_check: Artifact,
+                            rtol: float = 3e-4, atol: float = 2e-5,
+                            ) -> NumericsCheck:
+    """Run a check-shape artifact in the interpreter and compare against the
+    task reference.  Shared by the planner's Pass@1 verification and the
+    tuner's correctness gate."""
+    inputs = default_inputs(task, task.check_shapes)
+    arrays = [inputs[tp.name] for tp in task.input_specs]
+    try:
+        got = art_check.entry(*arrays, interpret=True)
+    except Exception as e:  # noqa: BLE001
+        return NumericsCheck(False, float("nan"),
+                             f"execution failed: {e}", exec_ok=False)
+
+    want = task.ref(*arrays)
+    gots = got if isinstance(got, (tuple, list)) else (got,)
+    wants = want if isinstance(want, (tuple, list)) else (want,)
+    if len(gots) != len(wants):
+        return NumericsCheck(False, float("nan"),
+                             f"output count mismatch: kernel returned "
+                             f"{len(gots)}, reference returned {len(wants)}")
+    max_err, ok = 0.0, True
+    for g, wv in zip(gots, wants):
+        g = np.asarray(g, dtype=np.float64)
+        wv = np.asarray(wv, dtype=np.float64)
+        if g.shape != wv.shape:
+            return NumericsCheck(False, float("nan"),
+                                 f"shape mismatch {g.shape} vs {wv.shape}")
+        scale = np.maximum(np.abs(wv), 1.0)
+        err = float(np.max(np.abs(g - wv) / scale)) if g.size else 0.0
+        max_err = max(max_err, err)
+        if not np.allclose(g, wv, rtol=rtol, atol=atol):
+            ok = False
+    return NumericsCheck(ok, max_err,
+                         "" if ok else f"max rel err {max_err:.3g}")
+
+
 def generate(task: KernelTask, knobs: Optional[Knobs] = None,
              verify: bool = True, rtol: float = 3e-4,
-             atol: float = 2e-5) -> GenResult:
+             atol: float = 2e-5, *, tune: bool = False,
+             tune_budget: int = 12, cache=None) -> GenResult:
     """AscendCraft pipeline for one task: plan -> DSL -> transcompile ->
     verify.  Never raises for generation failures — returns the scoreable
-    result (Comp@1 / Pass@1), as the benchmark does."""
+    result (Comp@1 / Pass@1), as the benchmark does.
+
+    Beyond-paper extensions (DESIGN.md §8):
+
+    * ``cache=`` — ``True`` / an ``ArtifactCache`` / a directory path.  The
+      emitted source is memoized on (task fingerprint, knobs, codegen
+      version); a hit skips the entire lowering pipeline.
+    * ``tune=`` — run the budgeted hill-climb autotuner first and generate
+      with the best (variant, knobs) it finds; the winning candidate is
+      remembered in the cache, so later tuned calls are O(1).
+    """
     if task.op not in PLANNER_REGISTRY:
         return GenResult(task, None, False, False,
                          error=f"no expert example registered for op "
                                f"'{task.op}'")
+    from .tuning.cache import ArtifactCache
+    cache_obj = ArtifactCache.resolve(cache)
+
     builder_fn = PLANNER_REGISTRY[task.op]
+    variant = "default"
+    tune_result = None
+    if tune:
+        from .tuning.space import Candidate, variants_for
+        from .tuning.tuner import tune as run_tune
+        best_cand = None
+        # a tuned pointer short-circuits the search, but only when the
+        # caller didn't constrain knobs — explicit knobs seed the climb
+        if cache_obj is not None and knobs is None:
+            rec = cache_obj.get_tuned(task)
+            if rec is not None:
+                try:
+                    best_cand = Candidate(**rec["candidate"])
+                except TypeError:
+                    best_cand = None
+        if best_cand is None:
+            start = None if knobs is None else Candidate(
+                max_tile=knobs.max_tile, pad=knobs.pad,
+                backend=knobs.backend)
+            tune_result = run_tune(task, budget=tune_budget, cache=cache_obj,
+                                   start=start, rtol=rtol, atol=atol)
+            best_cand = tune_result.best.candidate
+        if best_cand.variant != "default":
+            vb = variants_for(task.op).get(best_cand.variant)
+            if vb is not None:
+                builder_fn = vb
+                variant = best_cand.variant
+        knobs = best_cand.to_knobs()
+
+    # ---- artifact cache fast path ---------------------------------------
+    req_knobs = knobs or Knobs()
+    cache_key = None
+    if cache_obj is not None:
+        cache_key = cache_obj.key_for(task, req_knobs, variant=variant)
+        entry = cache_obj.get(cache_key)
+        if entry is not None and not (
+                verify and
+                not cache_obj.verdict_covers(entry.meta, rtol, atol)):
+            art = cache_obj.materialize(task, entry)
+            if art is not None:
+                meta = entry.meta
+                cached_err = meta.get("max_abs_err")
+                # a verdict that came from an execution failure is a
+                # Comp@1 failure, same as the uncached path reports; under
+                # verify=False no verdict is consulted (the uncached path
+                # returns (True, True) there too)
+                comp_ok = (meta.get("exec_ok", True) is not False
+                           if verify else True)
+                return GenResult(
+                    task, art, comp_ok,
+                    bool(meta["pass_ok"]) if verify else True,
+                    error=meta.get("error", "") if verify else "",
+                    max_abs_err=(float("nan") if cached_err is None
+                                 else float(cached_err)),
+                    cached=True, tune=tune_result)
+
+    resolved_op = task.op
+
+    # An entry that exists but lacks a covering verdict still spares the
+    # bench-shape lowering: materialize its source and only pay the
+    # check-shape verification below (mirrors the tuner's late-gate path).
+    art = None
+    cached_bench = False
+    if cache_obj is not None and entry is not None and verify:
+        art = cache_obj.materialize(task, entry)
+        if art is not None:
+            cached_bench = True
+            resolved_op = entry.meta.get("resolved_op", task.op)
 
     def build(kn: Knobs):
         return builder_fn(task, task.shapes, kn)
 
     try:
-        art = generate_with_feedback(build, knobs, check_shapes=None,
-                                     verify_against_interp=False)
+        if art is None:
+            art = generate_with_feedback(build, knobs, check_shapes=None,
+                                         verify_against_interp=False)
     except NotImplementedError as e:
         # resident pattern refused (row too long) -> try streaming variant
         streaming_op = f"{task.op}_streaming"
-        if streaming_op in PLANNER_REGISTRY:
+        if streaming_op in PLANNER_REGISTRY and variant == "default":
             t2 = task
             builder2 = PLANNER_REGISTRY[streaming_op]
+            resolved_op = streaming_op
 
             def build2(kn: Knobs):
                 return builder2(t2, t2.shapes, kn)
@@ -212,18 +347,34 @@ def generate(task: KernelTask, knobs: Optional[Knobs] = None,
         return GenResult(task, None, False, False, error=str(e))
 
     if not verify:
-        return GenResult(task, art, True, True)
+        if cache_obj is not None:
+            cache_obj.put(cache_key, art, task=task, variant=variant,
+                          resolved_op=resolved_op, pass_ok=None)
+        return GenResult(task, art, True, True, tune=tune_result)
 
     # ---- Comp@1 + Pass@1 at check shapes --------------------------------
     # Generated kernels are shape-specialized (as in the paper); numeric
     # verification uses a check-shape build of the same pipeline, while the
     # bench-shape artifact above feeds the performance model / Comp@1.
+    # The check build must verify the SAME program family as the bench
+    # artifact: if the bench path resolved to the streaming builder (via
+    # refusal now, or recorded in the cached entry), check with it directly
+    # — the resident builder may not refuse at the smaller check shapes,
+    # and verifying a different program would persist a wrong verdict.
+    check_builder_fn = builder_fn
+    if variant == "default" and resolved_op != task.op:
+        check_builder_fn = PLANNER_REGISTRY.get(resolved_op, builder_fn)
+
     def build_check(kn: Knobs):
-        op = task.op
         try:
-            return builder_fn(task, task.check_shapes, kn)
+            return check_builder_fn(task, task.check_shapes, kn)
         except NotImplementedError:
-            return PLANNER_REGISTRY[f"{op}_streaming"](
+            # mirror the bench-path fallback exactly: only the default
+            # variant may fall back to the registered streaming builder
+            streaming_op = f"{task.op}_streaming"
+            if variant != "default" or streaming_op not in PLANNER_REGISTRY:
+                raise
+            return PLANNER_REGISTRY[streaming_op](
                 task, task.check_shapes, kn)
 
     try:
@@ -232,33 +383,40 @@ def generate(task: KernelTask, knobs: Optional[Knobs] = None,
                                            verify_against_interp=False)
     except Exception as e:  # noqa: BLE001
         return GenResult(task, art, False, False,
-                         error=f"check-shape build failed: {e}")
-    inputs = default_inputs(task, task.check_shapes)
-    arrays = [inputs[tp.name] for tp in task.input_specs]
-    try:
-        got = art_check.entry(*arrays, interpret=True)
-    except Exception as e:  # noqa: BLE001
-        return GenResult(task, art, False, False,
-                         error=f"execution failed: {e}")
-
-    want = task.ref(*arrays)
-    gots = got if isinstance(got, (tuple, list)) else (got,)
-    wants = want if isinstance(want, (tuple, list)) else (want,)
-    max_err, ok = 0.0, True
-    for g, wv in zip(gots, wants):
-        g = np.asarray(g, dtype=np.float64)
-        wv = np.asarray(wv, dtype=np.float64)
-        if g.shape != wv.shape:
-            return GenResult(task, art, True, False,
-                             error=f"shape mismatch {g.shape} vs {wv.shape}")
-        scale = np.maximum(np.abs(wv), 1.0)
-        err = float(np.max(np.abs(g - wv) / scale)) if g.size else 0.0
-        max_err = max(max_err, err)
-        if not np.allclose(g, wv, rtol=rtol, atol=atol):
-            ok = False
+                         error=f"check-shape build failed: {e}",
+                         cached=cached_bench, tune=tune_result)
+    chk = check_artifact_numerics(task, art_check, rtol, atol)
+    if not chk.exec_ok:
+        # persist the execution failure so the cache serves it as a
+        # Comp@1 failure instead of re-paying this build + run each call
+        if cache_obj is not None:
+            if cached_bench:
+                cache_obj.update_meta(cache_key, pass_ok=False,
+                                      exec_ok=False, error=chk.error,
+                                      verify_rtol=rtol, verify_atol=atol)
+            else:
+                cache_obj.put(cache_key, art, task=task, variant=variant,
+                              resolved_op=resolved_op, pass_ok=False,
+                              exec_ok=False, error=chk.error,
+                              verify_rtol=rtol, verify_atol=atol)
+        return GenResult(task, art, False, False, error=chk.error,
+                         cached=cached_bench, tune=tune_result)
+    if cache_obj is not None:
+        if cached_bench:
+            # source already on disk: just persist the fresh verdict
+            # (including exec_ok, which may clear a stale failure)
+            cache_obj.update_meta(cache_key, pass_ok=chk.pass_ok,
+                                  max_abs_err=chk.max_err, error=chk.error,
+                                  exec_ok=chk.exec_ok,
+                                  verify_rtol=rtol, verify_atol=atol)
+        else:
+            cache_obj.put(cache_key, art, task=task, variant=variant,
+                          resolved_op=resolved_op, pass_ok=chk.pass_ok,
+                          max_abs_err=chk.max_err, error=chk.error,
+                          verify_rtol=rtol, verify_atol=atol)
 
     # DSL-interpreter oracle equivalence is property-tested in tests/core
     # (lowered pallas == numpy interpreter on randomly generated programs).
-    return GenResult(task, art, True, ok, max_abs_err=max_err,
-                     error="" if ok else f"max rel err {max_err:.3g}",
-                     oracle_ok=None)
+    return GenResult(task, art, True, chk.pass_ok, max_abs_err=chk.max_err,
+                     error=chk.error, oracle_ok=None, cached=cached_bench,
+                     tune=tune_result)

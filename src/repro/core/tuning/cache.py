@@ -1,0 +1,330 @@
+"""Content-addressed persistent artifact cache (DESIGN.md §8).
+
+Role in the paper's pipeline: the transcompiler (paper §4.2) is
+deterministic given (task, knobs, codegen version), so its output — the
+emitted Pallas source in :class:`~repro.core.lowering.pipeline.Artifact` —
+can be memoized on disk.  A cache hit hands back the emitted source and
+skips the entire lowering pipeline (validate → pass 2 init → pass 1/3/4
+emission → compile check), which is the hot path both for repeated
+``generate()`` calls and for the autotuner's revisits of known candidates.
+
+Keying: ``sha256(canonical_json(task fingerprint, knobs fingerprint,
+variant, codegen version))``.  The task fingerprint covers everything the
+planner reads (op, category, tensor specs, bench + check shapes, attrs);
+the codegen version (``repro.core.codegen.emit.CODEGEN_VERSION``) is baked
+into the key so emitter changes invalidate every stale entry.
+
+On-disk layout (atomic: temp file + ``os.replace``)::
+
+    <root>/<key>.json      # metadata: fingerprints, backend, pass log,
+                           #   final knobs, verification verdict, ratio
+    <root>/<key>.py        # the emitted kernel source, verbatim
+    <root>/tuned_<fp>.json # tuner pointer: best candidate for a task
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from ..lowering.pipeline import Artifact, Knobs, _exec_source
+
+ENV_CACHE_DIR = "REPRO_KERNEL_CACHE_DIR"
+
+
+def default_cache_dir() -> str:
+    env = os.environ.get(ENV_CACHE_DIR)
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "ascendcraft",
+                        "kernels")
+
+
+# --------------------------------------------------------------------------
+# Fingerprints
+# --------------------------------------------------------------------------
+
+def _stable(obj: Any) -> Any:
+    """Canonicalize to a JSON-serializable, deterministic structure."""
+    if isinstance(obj, dict):
+        return {str(k): _stable(obj[k]) for k in sorted(obj, key=str)}
+    if isinstance(obj, (list, tuple)):
+        return [_stable(x) for x in obj]
+    if isinstance(obj, (str, int, bool)) or obj is None:
+        return obj
+    if isinstance(obj, float):
+        return repr(obj)
+    return repr(obj)
+
+
+def task_fingerprint(task) -> Dict[str, Any]:
+    """Everything generation reads from a KernelTask (not the ref fn —
+    references are ground truth, not generation inputs)."""
+    return _stable({
+        "name": task.name,
+        "op": task.op,
+        "category": task.category,
+        "tensors": [(t.name, t.dtype.value, t.role, t.rank)
+                    for t in task.tensors],
+        "shapes": {k: tuple(int(s) for s in v)
+                   for k, v in task.shapes.items()},
+        "check_shapes": {k: tuple(int(s) for s in v)
+                         for k, v in task.check_shapes.items()},
+        "attrs": task.attrs,
+    })
+
+
+def knobs_fingerprint(knobs: Knobs) -> Dict[str, Any]:
+    return _stable({
+        "pad": bool(knobs.pad),
+        "max_tile": int(knobs.max_tile),
+        "backend": knobs.backend,
+        "extra": knobs.extra,
+    })
+
+
+def _digest(payload: Dict[str, Any]) -> str:
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def _knobs_from_meta(d: Dict[str, Any]) -> Optional[Knobs]:
+    # `extra` is fingerprinted via repr and cannot be round-tripped
+    # faithfully for arbitrary values; a program rebuilt with empty extra
+    # could silently diverge from the cached source, so entries with
+    # non-empty extra are unmaterializable (treated as misses).
+    if d.get("extra"):
+        return None
+    return Knobs(pad=bool(d.get("pad", False)),
+                 max_tile=int(d.get("max_tile", 4096)),
+                 backend=d.get("backend"))
+
+
+# --------------------------------------------------------------------------
+# The cache
+# --------------------------------------------------------------------------
+
+@dataclass
+class CacheEntry:
+    key: str
+    meta: Dict[str, Any]
+    source: str
+
+
+class ArtifactCache:
+    """Directory-backed content-addressed store for emitted kernels."""
+
+    def __init__(self, root: Optional[str] = None):
+        self.root = Path(root or default_cache_dir())
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.hits = 0
+        self.misses = 0
+        self.stores = 0
+
+    # -- resolution helper used by every `cache=` parameter ---------------
+    @staticmethod
+    def resolve(cache) -> Optional["ArtifactCache"]:
+        """``None``/``False`` -> off; ``True`` -> default dir; a path string
+        -> that dir; an ArtifactCache -> itself."""
+        if cache is None or cache is False:
+            return None
+        if cache is True:
+            return ArtifactCache()
+        if isinstance(cache, (str, os.PathLike)):
+            return ArtifactCache(str(cache))
+        return cache
+
+    # -- keys --------------------------------------------------------------
+    def key_for(self, task, knobs: Optional[Knobs] = None,
+                variant: str = "default",
+                codegen_version: Optional[int] = None) -> str:
+        if codegen_version is None:
+            from ..codegen import emit as _emit   # read live (tests bump it)
+            codegen_version = _emit.CODEGEN_VERSION
+        return _digest({
+            "task": task_fingerprint(task),
+            "knobs": knobs_fingerprint(knobs or Knobs()),
+            "variant": variant,
+            "codegen_version": int(codegen_version),
+        })
+
+    # -- lookup / store ----------------------------------------------------
+    def get(self, key: str) -> Optional[CacheEntry]:
+        meta_p = self.root / f"{key}.json"
+        src_p = self.root / f"{key}.py"
+        try:
+            meta = json.loads(meta_p.read_text())
+            source = src_p.read_text()
+        except (OSError, ValueError):
+            self.misses += 1
+            return None
+        # NOTE: a found entry is not yet a hit — callers may still reject it
+        # (unverified under verify=True, unmaterializable).  `hits` is
+        # counted in materialize(), the step that actually serves it.
+        return CacheEntry(key, meta, source)
+
+    def put(self, key: str, artifact: Artifact, *, task, variant: str,
+            resolved_op: str, pass_ok: Optional[bool] = None,
+            max_abs_err: Optional[float] = None,
+            ratio: Optional[float] = None, error: str = "",
+            exec_ok: bool = True,
+            verify_rtol: Optional[float] = None,
+            verify_atol: Optional[float] = None) -> None:
+        fk = artifact.final_knobs or Knobs()
+        meta = {
+            "task": task_fingerprint(task),
+            "op": task.op,
+            "resolved_op": resolved_op,
+            "variant": variant,
+            "backend": artifact.backend,
+            "program_name": artifact.program.name,
+            "final_knobs": knobs_fingerprint(fk),
+            "pass_log": list(artifact.pass_log),
+            "pass_ok": pass_ok,
+            "max_abs_err": (None if max_abs_err is None
+                            else float(max_abs_err)),
+            "ratio": None if ratio is None else float(ratio),
+            "error": error,
+            # False when the verdict came from an execution failure rather
+            # than numeric divergence (Comp@1 vs Pass@1 distinction)
+            "exec_ok": bool(exec_ok),
+            # tolerances the pass_ok verdict was computed at; a stricter
+            # later request must not be served this verdict
+            "verify_rtol": verify_rtol,
+            "verify_atol": verify_atol,
+        }
+        self._atomic_write(self.root / f"{key}.py", artifact.source)
+        self._atomic_write(self.root / f"{key}.json",
+                           json.dumps(meta, indent=1, sort_keys=True))
+        self.stores += 1
+
+    def update_meta(self, key: str, **fields) -> bool:
+        """Merge ``fields`` into an existing entry's metadata (e.g. persist
+        a late verification verdict).  Returns False if the entry is gone."""
+        meta_p = self.root / f"{key}.json"
+        try:
+            meta = json.loads(meta_p.read_text())
+        except (OSError, ValueError):
+            return False
+        meta.update(fields)
+        self._atomic_write(meta_p, json.dumps(meta, indent=1,
+                                              sort_keys=True))
+        return True
+
+    def _atomic_write(self, path: Path, text: str) -> None:
+        fd, tmp = tempfile.mkstemp(dir=str(self.root), suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(text)
+            os.replace(tmp, str(path))
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # -- artifact materialization (the cache-hit fast path) ----------------
+    def materialize(self, task, entry: CacheEntry) -> Optional[Artifact]:
+        """Reconstruct an Artifact from a cache entry WITHOUT lowering.
+
+        The DSL program is rebuilt from the planner/variant builder (pure
+        Python AST construction — no validate/pass2/emission), and the
+        module comes from exec'ing the cached source.  Returns None on any
+        inconsistency so the caller falls back to a plain miss."""
+        meta = entry.meta
+        builder = self._builder_for(meta)
+        if builder is None:
+            return None
+        kn = _knobs_from_meta(meta.get("final_knobs", {}))
+        if kn is None:
+            return None
+        try:
+            prog = builder(task, task.shapes, kn)
+            module = _exec_source(entry.source, prog.name)
+        except Exception:  # noqa: BLE001 — corrupt/stale entry == miss
+            return None
+        log = list(meta.get("pass_log", []))
+        log.append(f"cache/hit: key={entry.key[:12]} "
+                   f"(lowering pipeline skipped)")
+        self.hits += 1
+        return Artifact(program=prog, source=entry.source, module=module,
+                        backend=meta.get("backend", "explicit"),
+                        pass_log=log, final_knobs=kn)
+
+    @staticmethod
+    def _builder_for(meta: Dict[str, Any]) -> Optional[Callable]:
+        from ..planner import PLANNER_REGISTRY     # lazy: avoid import cycle
+        from .space import variants_for
+        variant = meta.get("variant", "default")
+        op = meta.get("op", "")
+        if variant != "default":
+            return variants_for(op).get(variant)
+        return PLANNER_REGISTRY.get(meta.get("resolved_op", op))
+
+    @staticmethod
+    def verdict_covers(meta: Dict[str, Any], rtol: float,
+                       atol: float) -> bool:
+        """True if the entry's stored Pass@1 verdict is valid for a request
+        at (rtol, atol).  The implication is one-sided: a PASS at stricter
+        tolerances covers looser requests; a FAIL at looser tolerances
+        covers stricter requests.  (A FAIL at strict tolerances says
+        nothing about a looser request, and vice versa.)"""
+        pass_ok = meta.get("pass_ok")
+        if pass_ok is None:
+            return False
+        srt, sat = meta.get("verify_rtol"), meta.get("verify_atol")
+        if srt is None or sat is None:       # legacy/ungated entry
+            return False
+        if pass_ok:
+            return float(srt) <= rtol and float(sat) <= atol
+        return float(srt) >= rtol and float(sat) >= atol
+
+    # -- tuner pointers ----------------------------------------------------
+    def _tuned_path(self, task) -> Path:
+        return self.root / f"tuned_{_digest(task_fingerprint(task))[:32]}.json"
+
+    def get_tuned(self, task) -> Optional[Dict[str, Any]]:
+        """Best-known candidate for this task (as a plain dict), or None."""
+        try:
+            rec = json.loads(self._tuned_path(task).read_text())
+        except (OSError, ValueError):
+            return None
+        from ..codegen import emit as _emit
+        if rec.get("codegen_version") != _emit.CODEGEN_VERSION:
+            return None
+        return rec
+
+    def put_tuned(self, task, candidate, ratio: float) -> None:
+        from ..codegen import emit as _emit
+        rec = {
+            "candidate": dataclasses.asdict(candidate),
+            "ratio": float(ratio),
+            "codegen_version": _emit.CODEGEN_VERSION,
+        }
+        self._atomic_write(self._tuned_path(task),
+                           json.dumps(rec, indent=1, sort_keys=True))
+
+    # -- maintenance -------------------------------------------------------
+    def clear(self) -> int:
+        n = 0
+        for p in self.root.glob("*"):
+            if p.suffix in (".json", ".py"):
+                p.unlink()
+                n += 1
+        return n
+
+    # NOTE: deliberately no __len__/__bool__ — an empty cache must still be
+    # truthy wherever code writes `if cache:` (see num_entries()).
+    def num_entries(self) -> int:
+        return sum(1 for p in self.root.glob("*.json")
+                   if not p.name.startswith("tuned_"))
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "stores": self.stores, "entries": self.num_entries()}

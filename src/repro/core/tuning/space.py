@@ -1,0 +1,140 @@
+"""Autotuner search space — knob axes + registered program variants
+(DESIGN.md §8).
+
+Role in the paper's pipeline: the paper's feedback loop (§4.2) only
+*repairs* kernels until they compile and verify; it never *searches* for
+the fastest one.  This module defines what there is to search over:
+
+* the :class:`~repro.core.lowering.pipeline.Knobs` axes the expert
+  examples already consume — tile length (``max_tile``), pad policy
+  (``pad``), and the forced lowering backend (``backend``), and
+* **program variants**: alternative expert builders for the same op that
+  change the dataflow itself (e.g. the pool2d row-reuse builder, which
+  carries overlapping window rows in UB instead of reloading them).
+
+Variants are registered in :data:`VARIANT_REGISTRY` via
+:func:`register_variant`; the ``"default"`` variant is always the
+planner's own expert example for the op.  The tuner explores variants
+like any other axis, so hand-written §Perf kernels become *discoverable*
+instead of hand-wired.
+"""
+from __future__ import annotations
+
+import dataclasses as _dc
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+from ..lowering.pipeline import Knobs
+
+# Tile-length ladder (powers of two spanning the expert examples' range)
+TILE_LADDER: Tuple[int, ...] = (256, 512, 1024, 2048, 4096, 8192, 16384)
+
+# Lowering backends pass 2 can be forced into (None = let pass 2 choose)
+BACKEND_CHOICES: Tuple[Optional[str], ...] = (None, "pipelined", "explicit")
+
+
+@dataclass(frozen=True)
+class Candidate:
+    """One point in the search space (hashable; deterministic repr)."""
+    variant: str = "default"
+    max_tile: int = 4096
+    pad: bool = False
+    backend: Optional[str] = None
+
+    def to_knobs(self) -> Knobs:
+        return Knobs(pad=self.pad, max_tile=self.max_tile,
+                     backend=self.backend)
+
+    def describe(self) -> str:
+        return (f"variant={self.variant} tile={self.max_tile} "
+                f"pad={self.pad} backend={self.backend or 'auto'}")
+
+
+# --------------------------------------------------------------------------
+# Variant registry: op -> {variant name -> builder(task, shapes, knobs)}
+# --------------------------------------------------------------------------
+
+VARIANT_REGISTRY: Dict[str, Dict[str, Callable]] = {}
+
+
+def register_variant(op: str, name: str, builder: Callable) -> None:
+    """Register an alternative program builder for ``op``.
+
+    ``builder(task, shapes, knobs) -> A.Program`` — same signature as the
+    planner registry.  ``name`` must not be ``"default"`` (that slot is the
+    planner's own expert example)."""
+    if name == "default":
+        raise ValueError("'default' is reserved for the planner builder")
+    VARIANT_REGISTRY.setdefault(op, {})[name] = builder
+
+
+def variants_for(op: str) -> Dict[str, Callable]:
+    """All builders for ``op``, always including ``"default"`` (in
+    deterministic order: default first, then registration order)."""
+    from ..planner import PLANNER_REGISTRY        # lazy: avoid import cycle
+    _ensure_builtin_variants()
+    out: Dict[str, Callable] = {}
+    if op in PLANNER_REGISTRY:
+        out["default"] = PLANNER_REGISTRY[op]
+    out.update(VARIANT_REGISTRY.get(op, {}))
+    return out
+
+
+# -- built-in variants: the §Perf hillclimbed kernels ----------------------
+# (previously hand-wired in tests; the tuner now discovers them by search).
+# Registered lazily from PLANNER_REGISTRY's "<op>_rowreuse" entries so there
+# is a single source of truth for each builder.
+
+_BUILTIN_VARIANTS = (("avg_pool2d", "rowreuse", "avg_pool2d_rowreuse"),
+                     ("max_pool2d", "rowreuse", "max_pool2d_rowreuse"))
+_builtins_done = False
+
+
+def _ensure_builtin_variants() -> None:
+    global _builtins_done
+    if _builtins_done:
+        return
+    from ..planner import PLANNER_REGISTRY    # lazy: avoid import cycle
+    for op, name, registry_key in _BUILTIN_VARIANTS:
+        if registry_key in PLANNER_REGISTRY:
+            register_variant(op, name, PLANNER_REGISTRY[registry_key])
+    _builtins_done = True
+
+
+# --------------------------------------------------------------------------
+# Neighborhood structure for the hill climb
+# --------------------------------------------------------------------------
+
+def neighbors(cand: Candidate, op: str) -> List[Candidate]:
+    """Single-axis moves from ``cand``, in a fixed, deterministic order.
+
+    Order encodes the expected impact: dataflow variants first (they change
+    traffic asymptotically), then tile length (VMEM residency vs grid
+    overhead), then pad policy and backend."""
+    out: List[Candidate] = []
+
+    for vname in variants_for(op):
+        if vname != cand.variant:
+            out.append(_dc.replace(cand, variant=vname))
+
+    if cand.max_tile in TILE_LADDER:
+        i = TILE_LADDER.index(cand.max_tile)
+        if i + 1 < len(TILE_LADDER):
+            out.append(_dc.replace(cand, max_tile=TILE_LADDER[i + 1]))
+        if i > 0:
+            out.append(_dc.replace(cand, max_tile=TILE_LADDER[i - 1]))
+    else:   # off-ladder start: snap both directions
+        ups = [t for t in TILE_LADDER if t > cand.max_tile]
+        downs = [t for t in TILE_LADDER if t < cand.max_tile]
+        if ups:
+            out.append(_dc.replace(cand, max_tile=ups[0]))
+        if downs:
+            out.append(_dc.replace(cand, max_tile=downs[-1]))
+
+    out.append(_dc.replace(cand, pad=not cand.pad))
+
+    for b in BACKEND_CHOICES:
+        if b != cand.backend:
+            out.append(_dc.replace(cand, backend=b))
+
+    return out

@@ -1,0 +1,246 @@
+"""Hill-climb autotuner over the knob/variant space (DESIGN.md §8).
+
+Role in the paper's pipeline: sits *after* the feedback loop (§4.2).  The
+feedback loop turns a candidate into a compiling, verified kernel; the
+tuner decides *which* candidate to build, ranking points of
+:mod:`repro.core.tuning.space` by the deterministic roofline cost model
+(``repro.bench.model.fast_ratio``) and gating every candidate on
+correctness: the check-shape build must run under the Pallas interpreter
+and match the task reference within the planner's tolerances.
+
+Search: greedy hill climb with a hard evaluation budget.  Start from the
+default candidate, evaluate every single-axis neighbor (deterministic
+order — no RNG anywhere, so a fixed budget always yields the same trial
+sequence and the same winner), move to the best strict improvement,
+repeat until a local optimum or budget exhaustion.  Every bench-shape
+artifact the tuner builds is pushed through the persistent artifact cache,
+so re-tunes and later ``generate()`` calls hit cached sources.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from ..lowering.pipeline import Knobs, generate_with_feedback
+from .cache import ArtifactCache
+from .space import Candidate, neighbors, variants_for
+
+_EPS = 1e-9
+
+
+@dataclass
+class Trial:
+    candidate: Candidate
+    ratio: float                 # fast_ratio at bench shapes (0 if failed)
+    ok: bool                     # built AND passed the correctness gate
+    error: str = ""
+    from_cache: bool = False
+
+
+@dataclass
+class TuneResult:
+    task_name: str
+    op: str
+    default: Trial               # the un-tuned baseline candidate
+    best: Trial                  # highest correct ratio found
+    trials: List[Trial] = field(default_factory=list)
+    evaluations: int = 0
+    budget: int = 0
+
+    @property
+    def improvement(self) -> float:
+        """best/default fast_ratio (1.0 = tuning found nothing better)."""
+        if self.default.ratio <= 0:
+            return float("inf") if self.best.ratio > 0 else 1.0
+        return self.best.ratio / self.default.ratio
+
+    def summary(self) -> str:
+        return (f"{self.task_name}: default {self.default.ratio:.2f}x -> "
+                f"tuned {self.best.ratio:.2f}x "
+                f"({self.best.candidate.describe()}) "
+                f"in {self.evaluations}/{self.budget} evals")
+
+
+# --------------------------------------------------------------------------
+# Candidate evaluation
+# --------------------------------------------------------------------------
+
+def _evaluate(task, cand: Candidate, cache: Optional[ArtifactCache],
+              rtol: float, atol: float, gate: bool) -> Trial:
+    from ..planner import check_artifact_numerics     # lazy (import cycle)
+    from ...bench.model import fast_ratio
+
+    builder = variants_for(task.op).get(cand.variant)
+    if builder is None:
+        return Trial(cand, 0.0, False, f"unknown variant '{cand.variant}'")
+    knobs = cand.to_knobs()
+
+    # Bench-shape artifact (feeds the cost model) — through the cache.
+    art, from_cache, cached_verdict_ok = None, False, False
+    resolved_op = task.op
+    key = (cache.key_for(task, knobs, variant=cand.variant)
+           if cache is not None else None)
+    if cache is not None:
+        entry = cache.get(key)
+        if entry is not None:
+            resolved_op = entry.meta.get("resolved_op", task.op)
+            # a covering FAILED verdict makes the candidate a cheap skip —
+            # no point rebuilding a kernel known not to verify
+            if (gate and entry.meta.get("pass_ok") is False and
+                    cache.verdict_covers(entry.meta, rtol, atol)):
+                return Trial(cand, 0.0, False,
+                             entry.meta.get("error")
+                             or "correctness gate failed (cached verdict)",
+                             from_cache=True)
+            art = cache.materialize(task, entry)
+            from_cache = art is not None
+            if from_cache:
+                cached_verdict_ok = (
+                    entry.meta.get("pass_ok") is True and
+                    cache.verdict_covers(entry.meta, rtol, atol))
+    if art is None:
+        try:
+            art = generate_with_feedback(
+                lambda kn: builder(task, task.shapes, kn),
+                dataclasses.replace(knobs), check_shapes=None,
+                verify_against_interp=False)
+        except NotImplementedError as e:
+            # resident pattern refused at bench shapes -> same streaming
+            # fallback the planner applies (default variant only)
+            streaming_op = f"{task.op}_streaming"
+            from ..planner import PLANNER_REGISTRY
+            if cand.variant != "default" or \
+                    streaming_op not in PLANNER_REGISTRY:
+                return Trial(cand, 0.0, False, f"build failed: {e}")
+            sb = PLANNER_REGISTRY[streaming_op]
+            try:
+                art = generate_with_feedback(
+                    lambda kn: sb(task, task.shapes, kn),
+                    dataclasses.replace(knobs), check_shapes=None,
+                    verify_against_interp=False)
+                resolved_op = streaming_op
+            except Exception as e2:  # noqa: BLE001
+                return Trial(cand, 0.0, False, f"build failed: {e2}")
+        except Exception as e:  # noqa: BLE001 — a failed point scores 0
+            return Trial(cand, 0.0, False, f"build failed: {e}")
+
+    try:
+        ratio = float(fast_ratio(task, art.program))
+    except Exception as e:  # noqa: BLE001
+        return Trial(cand, 0.0, False, f"cost model failed: {e}")
+
+    # Correctness gate: check-shape build runs in the interpreter and must
+    # match the task reference (same bar the planner's Pass@1 applies).
+    # A cached entry that already carries pass_ok=True was gated at the
+    # same bar when stored — don't pay the check-shape build again.
+    ok, err_msg, gate_err = True, "", None
+    if gate and cached_verdict_ok:
+        gate = False
+    gate_ran = gate and task.ref is not None
+    gate_exec_ok = True
+    if gate_ran:
+        # gate the same program family the artifact was built from: a
+        # cached entry may record a streaming resolved_op even though the
+        # default builder would not refuse at the smaller check shapes
+        gate_builder = builder
+        if cand.variant == "default" and resolved_op != task.op:
+            from ..planner import PLANNER_REGISTRY
+            gate_builder = PLANNER_REGISTRY.get(resolved_op, builder)
+        try:
+            art_check = generate_with_feedback(
+                lambda kn: gate_builder(task, task.check_shapes, kn),
+                dataclasses.replace(knobs), check_shapes=None,
+                verify_against_interp=False)
+            chk = check_artifact_numerics(task, art_check, rtol, atol)
+            ok, err_msg, gate_err = chk.pass_ok, chk.error, chk.max_err
+            gate_exec_ok = chk.exec_ok
+        except Exception as e:  # noqa: BLE001
+            ok, err_msg = False, f"check-shape build failed: {e}"
+            gate_exec_ok = False
+        if from_cache and cache is not None:
+            # persist the late verdict so future tunes/generates against
+            # this cache never re-pay the gate for the same entry
+            cache.update_meta(key, pass_ok=ok, error=err_msg,
+                              max_abs_err=gate_err, exec_ok=gate_exec_ok,
+                              verify_rtol=rtol, verify_atol=atol)
+    if not ok:
+        if cache is not None and not from_cache:
+            # persist the failing verdict too: the next tune() skips this
+            # candidate without rebuilding anything
+            cache.put(key, art, task=task, variant=cand.variant,
+                      resolved_op=resolved_op, pass_ok=False,
+                      max_abs_err=gate_err, error=err_msg,
+                      exec_ok=gate_exec_ok,
+                      verify_rtol=rtol, verify_atol=atol)
+        return Trial(cand, 0.0, False, err_msg or "correctness gate failed",
+                     from_cache=from_cache)
+
+    if cache is not None and not from_cache:
+        cache.put(key, art, task=task, variant=cand.variant,
+                  resolved_op=resolved_op,
+                  pass_ok=(True if gate_ran else None),
+                  max_abs_err=gate_err, ratio=ratio,
+                  verify_rtol=rtol if gate_ran else None,
+                  verify_atol=atol if gate_ran else None)
+    return Trial(cand, ratio, True, from_cache=from_cache)
+
+
+# --------------------------------------------------------------------------
+# The hill climb
+# --------------------------------------------------------------------------
+
+def tune(task, budget: int = 12, cache=None,
+         start: Optional[Candidate] = None,
+         rtol: float = 3e-4, atol: float = 2e-5,
+         gate: bool = True) -> TuneResult:
+    """Search the knob/variant space for the fastest correct build of
+    ``task``.  ``budget`` caps the number of candidate evaluations, with a
+    floor of 1 — the baseline candidate is always evaluated (cache hits
+    count too; the budget bounds search effort, and cached evaluations are
+    what make re-tuning cheap).  Deterministic: same task + budget => same
+    trials, same winner."""
+    budget = max(1, int(budget))
+    cache = ArtifactCache.resolve(cache)
+    seen: Dict[Candidate, Trial] = {}
+    result = TuneResult(task_name=task.name, op=task.op,
+                        default=None, best=None, budget=budget)  # type: ignore[arg-type]
+
+    def ev(cand: Candidate) -> Trial:
+        if cand in seen:
+            return seen[cand]
+        t = _evaluate(task, cand, cache, rtol, atol, gate)
+        seen[cand] = t
+        result.trials.append(t)
+        result.evaluations += 1
+        return t
+
+    current = start or Candidate()
+    cur = ev(current)
+    result.default = cur
+    best = cur
+
+    while result.evaluations < budget:
+        step_best: Optional[Trial] = None
+        for nb in neighbors(current, task.op):
+            if result.evaluations >= budget:
+                break
+            if nb in seen:
+                continue
+            t = ev(nb)
+            if t.ok and (step_best is None or t.ratio > step_best.ratio):
+                step_best = t
+        if step_best is None or not (
+                step_best.ratio > max(best.ratio, 0.0) * (1 + _EPS)):
+            break                                   # local optimum
+        best = step_best
+        current = step_best.candidate
+
+    result.best = best if (best.ok or not result.trials) else result.default
+    if cache is not None and result.best.ok:
+        # never clobber a better previously-found pointer with the result
+        # of a narrower (constrained / low-budget) search
+        prev = cache.get_tuned(task)
+        if prev is None or result.best.ratio > float(prev.get("ratio", 0.0)):
+            cache.put_tuned(task, result.best.candidate, result.best.ratio)
+    return result

@@ -1,0 +1,28 @@
+"""jax version compatibility for shard_map.
+
+``jax.shard_map`` (with the ``check_vma`` kwarg) was promoted from
+``jax.experimental.shard_map.shard_map`` (kwarg ``check_rep``) after
+0.4.x; support both so the distributed stack runs on either.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:
+    _impl = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _impl
+
+# Probe the actual signature rather than keying off where the function
+# lives: there were releases exposing jax.shard_map that still took
+# check_rep.
+_CHECK_KWARG = ("check_vma"
+                if "check_vma" in inspect.signature(_impl).parameters
+                else "check_rep")
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    return _impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                 **{_CHECK_KWARG: check_vma})

@@ -2,6 +2,9 @@
 and row-reuse generated kernels must agree with numpy for arbitrary
 window/stride/shape combinations."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dsl.ast import DType

@@ -1,0 +1,221 @@
+"""Autotuning + artifact cache (DESIGN.md §8): cache hit/miss/invalidation,
+tuner determinism under a fixed budget, and autonomous discovery of the
+pool2d row-reuse variant."""
+import numpy as np
+import pytest
+
+from repro.bench import suite
+from repro.core.lowering.pipeline import PIPELINE_COUNTERS, Knobs
+from repro.core.planner import generate
+from repro.core.tuning import ArtifactCache, Candidate, tune, variants_for
+
+
+@pytest.fixture(scope="module")
+def tasks():
+    return {t.name: t for t in suite()}
+
+
+def _counters():
+    return dict(PIPELINE_COUNTERS)
+
+
+# ---------------------------------------------------------------------------
+# Artifact cache
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_skips_lowering(tasks, tmp_path):
+    """Second generate() of an identical task must come from the cache with
+    NO lowering-pass work (transcompile/feedback counters frozen)."""
+    cache = ArtifactCache(str(tmp_path))
+    task = tasks["relu"]
+
+    r1 = generate(task, cache=cache)
+    assert r1.comp_ok and r1.pass_ok and not r1.cached
+    after_first = _counters()
+
+    r2 = generate(task, cache=cache)
+    assert r2.cached and r2.comp_ok and r2.pass_ok
+    assert _counters() == after_first, \
+        "cache hit re-ran the lowering pipeline"
+    assert any("cache/hit" in line for line in r2.artifact.pass_log)
+    assert any("lowering pipeline skipped" in line
+               for line in r2.artifact.pass_log)
+
+    # the cached artifact is the same source and still executes
+    assert r2.artifact.source == r1.artifact.source
+    x = np.random.RandomState(0).randn(
+        *task.check_shapes["input"]).astype(np.float32)
+    art = generate(task, cache=cache).artifact   # hit again
+    fn = art.module.make({"input": x.shape, "output": x.shape},
+                         interpret=True)
+    np.testing.assert_allclose(np.asarray(fn(x)), np.maximum(x, 0),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_cache_key_distinguishes_knobs_and_misses(tasks, tmp_path):
+    cache = ArtifactCache(str(tmp_path))
+    task = tasks["relu"]
+    k_default = cache.key_for(task, Knobs())
+    k_tile = cache.key_for(task, Knobs(max_tile=512))
+    k_variant = cache.key_for(task, Knobs(), variant="other")
+    assert len({k_default, k_tile, k_variant}) == 3
+    assert cache.get(k_default) is None          # empty cache: miss
+    assert cache.misses == 1 and cache.hits == 0
+
+
+def test_cache_invalidated_on_codegen_version_bump(tasks, tmp_path,
+                                                   monkeypatch):
+    cache = ArtifactCache(str(tmp_path))
+    task = tasks["relu"]
+    generate(task, verify=False, cache=cache)
+    assert generate(task, verify=False, cache=cache).cached
+
+    import repro.core.codegen.emit as emit
+    monkeypatch.setattr(emit, "CODEGEN_VERSION", emit.CODEGEN_VERSION + 1)
+    r = generate(task, verify=False, cache=cache)
+    assert not r.cached, "codegen version bump must invalidate the cache"
+    # and the rebuilt artifact is cached under the NEW version
+    assert generate(task, verify=False, cache=cache).cached
+
+
+def test_cache_unverified_entry_reverified_cheaply(tasks, tmp_path):
+    """An entry stored without a verdict must be re-verified under
+    verify=True — but the bench artifact still comes from the cache, so
+    only the check-shape build pays the lowering pipeline."""
+    cache = ArtifactCache(str(tmp_path))
+    task = tasks["relu"]
+    generate(task, verify=False, cache=cache)        # stores pass_ok=None
+    before = _counters()
+    r = generate(task, verify=True, cache=cache)     # must re-verify
+    assert r.cached and r.pass_ok
+    delta = _counters()["transcompile"] - before["transcompile"]
+    assert delta == 1, f"expected only the check-shape build, got {delta}"
+    before = _counters()
+    assert generate(task, verify=True, cache=cache).cached
+    assert _counters() == before                     # verdict now covers
+
+
+def test_verdict_coverage_is_one_sided():
+    """PASS at strict tolerances covers looser requests; FAIL at loose
+    tolerances covers stricter requests — never the other way around."""
+    passed = {"pass_ok": True, "verify_rtol": 1e-6, "verify_atol": 1e-8}
+    failed = {"pass_ok": False, "verify_rtol": 1e-3, "verify_atol": 1e-4}
+    assert ArtifactCache.verdict_covers(passed, 1e-4, 1e-5)      # looser req
+    assert not ArtifactCache.verdict_covers(passed, 1e-9, 1e-12)
+    assert ArtifactCache.verdict_covers(failed, 1e-6, 1e-8)      # stricter req
+    assert not ArtifactCache.verdict_covers(failed, 1e-2, 1e-2)
+
+
+def test_failed_strict_verdict_not_served_for_looser_request(
+        tasks, tmp_path):
+    """A kernel that fails only at ultra-strict tolerances must still pass
+    (and be re-verified) at the default tolerances afterwards."""
+    cache = ArtifactCache(str(tmp_path))
+    task = tasks["softmax"]          # f32 kernel vs f64 ref: err ~1e-7
+    r_strict = generate(task, rtol=1e-13, atol=1e-16, cache=cache)
+    assert not r_strict.pass_ok      # stored pass_ok=False at strict tols
+    r_default = generate(task, cache=cache)
+    assert r_default.pass_ok, \
+        "strict-tolerance failure must not be served for a looser request"
+
+
+def test_cache_verdict_not_served_at_stricter_tolerance(tasks, tmp_path):
+    cache = ArtifactCache(str(tmp_path))
+    task = tasks["relu"]
+    generate(task, cache=cache)                     # verified at defaults
+    before = _counters()
+    r = generate(task, rtol=1e-9, atol=1e-12, cache=cache)
+    delta = _counters()["transcompile"] - before["transcompile"]
+    assert delta == 1, "stricter tolerances must force re-verification"
+    assert r.pass_ok                                # relu is numerically exact
+    # the stricter verdict is now stored and covers the default request too
+    before = _counters()
+    assert generate(task, cache=cache).cached
+    assert _counters() == before
+
+
+# ---------------------------------------------------------------------------
+# Tuner
+# ---------------------------------------------------------------------------
+
+def test_tuner_deterministic_under_fixed_budget(tasks, tmp_path):
+    task = tasks["relu"]
+    runs = []
+    for i in range(2):
+        tr = tune(task, budget=4, cache=str(tmp_path / f"c{i}"))
+        runs.append([(t.candidate, round(t.ratio, 12), t.ok)
+                     for t in tr.trials])
+        assert tr.evaluations <= 4
+    assert runs[0] == runs[1], "tuner must be deterministic"
+
+
+def test_tuner_persists_gate_verdict_for_cached_entries(tasks, tmp_path):
+    """Gating an unverified cached entry writes the verdict back, so later
+    tunes/generates never re-pay the check-shape build for it."""
+    cache = ArtifactCache(str(tmp_path))
+    task = tasks["relu"]
+    generate(task, verify=False, cache=cache)        # stores pass_ok=None
+    tr = tune(task, budget=1, cache=cache)
+    key = cache.key_for(task, tr.best.candidate.to_knobs())
+    assert cache.get(key).meta["pass_ok"] is True
+    assert generate(task, verify=True, cache=cache).cached
+
+
+def test_tuner_respects_budget(tasks, tmp_path):
+    tr = tune(tasks["avg_pool2d"], budget=2, cache=str(tmp_path))
+    assert tr.evaluations == 2 == len(tr.trials)
+
+
+def test_tuner_discovers_pool2d_rowreuse(tasks, tmp_path):
+    """The acceptance bar: no hand-wiring — the hill climb finds the
+    row-reuse dataflow on its own and it models >= 1.2x the default."""
+    task = tasks["avg_pool2d"]
+    assert set(variants_for(task.op)) >= {"default", "rowreuse"}
+    tr = tune(task, budget=6, cache=str(tmp_path))
+    assert tr.best.candidate.variant == "rowreuse", tr.summary()
+    assert tr.best.ok
+    assert tr.improvement >= 1.2, tr.summary()
+
+
+def test_generate_tune_uses_tuned_variant_and_pointer(tasks, tmp_path):
+    cache = ArtifactCache(str(tmp_path))
+    task = tasks["max_pool2d"]
+    r = generate(task, tune=True, tune_budget=6, cache=cache)
+    assert r.comp_ok and r.pass_ok
+    assert r.tune is not None
+    assert r.tune.best.candidate.variant == "rowreuse"
+    assert r.artifact.program.name.endswith("_rowreuse")
+
+    # second tuned call: candidate comes from the tuned pointer, artifact
+    # from the cache — no search, no lowering
+    before = _counters()
+    r2 = generate(task, tune=True, tune_budget=6, cache=cache)
+    assert r2.cached and r2.tune is None
+    assert _counters() == before
+    assert r2.artifact.program.name.endswith("_rowreuse")
+
+
+def test_tuned_pointer_survives_constrained_search(tasks, tmp_path):
+    """A narrower later search must not clobber a better stored pointer."""
+    cache = ArtifactCache(str(tmp_path))
+    task = tasks["avg_pool2d"]
+    generate(task, tune=True, tune_budget=6, cache=cache)
+    rec1 = cache.get_tuned(task)
+    assert rec1["candidate"]["variant"] == "rowreuse"
+    generate(task, knobs=Knobs(max_tile=256), tune=True, tune_budget=1,
+             cache=cache)
+    assert cache.get_tuned(task) == rec1
+
+
+# ---------------------------------------------------------------------------
+# Serving warm-up wiring
+# ---------------------------------------------------------------------------
+
+def test_serving_warm_kernel_cache(tasks, tmp_path):
+    from repro.serving.engine import warm_kernel_cache
+    sub = [tasks["relu"]]
+    rep1 = warm_kernel_cache(cache=str(tmp_path), tasks=sub)
+    assert rep1["kernels"][0]["comp_ok"]
+    assert not rep1["kernels"][0]["from_cache"]
+    rep2 = warm_kernel_cache(cache=str(tmp_path), tasks=sub)
+    assert rep2["kernels"][0]["from_cache"]
