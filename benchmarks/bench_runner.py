@@ -1,0 +1,160 @@
+"""Perf-trajectory artifact writer — ``BENCH_<date>.json`` regression guard.
+
+Runs the selected task set through the deterministic v5e roofline model
+(bench/model.py) and the autotuner, and writes one dated JSON artifact with
+per-task modeled time, HBM bytes, ``fast_ratio`` and tuned-vs-default gain,
+so later PRs can diff perf trajectories instead of rediscovering
+regressions by accident.
+
+    python -m benchmarks.bench_runner [--suite fused|quick|full]
+                                      [--budget N] [--out PATH]
+                                      [--check-regressions]
+
+* ``fused``  — the fused chains (DESIGN.md §9) plus their tuner picks;
+  cheap enough for a CI step.
+* ``quick``  — fused chains + a small representative slice of the 52-task
+  suite (one per category).
+* ``full``   — everything.
+
+``--check-regressions`` compares against the most recent previous
+``BENCH_*.json`` in the results dir and exits non-zero when any task's
+tuned ratio drops by more than 2%.
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import glob
+import json
+import os
+import sys
+
+from .common import RESULTS_DIR
+
+_QUICK_PICKS = ("relu", "softmax", "mse", "rmsnorm", "adamw", "reduce_sum",
+                "avg_pool2d", "cumsum")
+
+
+def _tasks(which: str):
+    from repro.bench.tasks import fused_suite, suite
+    fused = list(fused_suite())
+    if which == "fused":
+        return fused
+    if which == "quick":
+        by_name = {t.name: t for t in suite()}
+        return fused + [by_name[n] for n in _QUICK_PICKS]
+    return fused + list(suite())
+
+
+def run(which: str = "fused", budget: int = 6, emit=print, cache=None):
+    from repro.bench.model import (analyze_program, eager_traffic,
+                                   _padded_shapes_for, fast_ratio)
+    from repro.core.codegen.emit import CODEGEN_VERSION
+    from repro.core.planner import generate
+    from repro.core.tuning import tune as run_tune
+
+    tasks_out = []
+    for task in _tasks(which):
+        r = generate(task, verify=False, cache=cache)
+        if not r.comp_ok or r.artifact is None:
+            tasks_out.append({"name": task.name, "category": task.category,
+                              "ok": False, "error": r.error})
+            emit(f"bench,{task.name},FAILED,{r.error[:70]}")
+            continue
+        prog = r.artifact.program
+        gen = analyze_program(prog, _padded_shapes_for(prog, task.shapes))
+        eag = eager_traffic(task, task.shapes)
+        ratio = fast_ratio(task, prog)
+        tr = run_tune(task, budget=budget, cache=cache)
+        row = {
+            "name": task.name, "category": task.category, "ok": True,
+            "backend": r.artifact.backend,
+            "ratio": ratio,
+            "tuned_ratio": max(tr.best.ratio, ratio),
+            "tuned_candidate": tr.best.candidate.describe(),
+            "tune_gain": (tr.best.ratio / ratio if ratio > 0
+                          else float(tr.best.ratio > 0)),
+            "gen_bytes": gen.bytes_total,
+            "eager_bytes": eag.bytes_total,
+            "gen_time_us": gen.time_s() * 1e6,
+            "eager_time_us": eag.time_s() * 1e6,
+        }
+        tasks_out.append(row)
+        emit(f"bench,{task.name},ratio={ratio:.2f},"
+             f"tuned={row['tuned_ratio']:.2f},"
+             f"pick={row['tuned_candidate']}")
+
+    ok = [t for t in tasks_out if t.get("ok")]
+    report = {
+        "date": datetime.date.today().isoformat(),
+        "suite": which,
+        "codegen_version": CODEGEN_VERSION,
+        "tasks": tasks_out,
+        "summary": {
+            "n": len(tasks_out),
+            "n_ok": len(ok),
+            "fast_1_0": sum(t["tuned_ratio"] >= 1.0 for t in ok),
+            "tuner_improved": sum(t["tune_gain"] > 1.0 + 1e-9 for t in ok),
+            "mean_tuned_ratio": (sum(t["tuned_ratio"] for t in ok)
+                                 / max(1, len(ok))),
+        },
+    }
+    return report
+
+
+def _latest_previous():
+    """Most recent BENCH artifact ON DISK, read eagerly — a same-day rerun
+    overwrites the file later, so its previous content must be captured
+    before run()."""
+    cands = sorted(glob.glob(os.path.join(RESULTS_DIR, "BENCH_*.json")))
+    if not cands:
+        return None
+    with open(cands[-1]) as f:
+        return json.load(f)
+
+
+def check_regressions(report, prev, tolerance: float = 0.02) -> list:
+    """Tasks whose tuned ratio regressed > ``tolerance`` vs the previous
+    artifact (same suite only — different suites are not comparable)."""
+    if prev is None or prev.get("suite") != report.get("suite"):
+        return []
+    old = {t["name"]: t for t in prev.get("tasks", []) if t.get("ok")}
+    bad = []
+    for t in report["tasks"]:
+        if not t.get("ok") or t["name"] not in old:
+            continue
+        before = float(old[t["name"]]["tuned_ratio"])
+        if before > 0 and t["tuned_ratio"] < before * (1 - tolerance):
+            bad.append((t["name"], before, t["tuned_ratio"]))
+    return bad
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default="fused",
+                    choices=("fused", "quick", "full"))
+    ap.add_argument("--budget", type=int, default=6)
+    ap.add_argument("--out", default=None,
+                    help="output path (default: results/BENCH_<date>.json)")
+    ap.add_argument("--check-regressions", action="store_true")
+    args = ap.parse_args(argv)
+
+    out = args.out or os.path.join(
+        RESULTS_DIR, f"BENCH_{datetime.date.today().isoformat()}.json")
+    prev = _latest_previous() if args.check_regressions else None
+    report = run(args.suite, args.budget)
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {out}: {report['summary']}")
+    if args.check_regressions:
+        bad = check_regressions(report, prev)
+        for name, before, now in bad:
+            print(f"REGRESSION {name}: tuned ratio {before:.2f} -> "
+                  f"{now:.2f}")
+        if bad:
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -83,9 +83,14 @@ def _run(emit, tune, tune_budget, cache):
              f"tuned={tuned_ratio:.2f};"
              f"gen_us={gen.time_s()*1e6:.0f};eager_us={eag.time_s()*1e6:.0f}")
 
+    # ---- fused chains (DESIGN.md §9): fused vs sequential-eager ---------
+    rows += _run_fused(emit, tune, tune_budget, cache)
+
     cats = defaultdict(list)
     tuned_cats = defaultdict(list)
     for row in rows:
+        if row["category"] == "fused":
+            continue        # reported in their own section above
         cats[row["category"]].append(row["ratio"] if row["ok"] else 0.0)
         tuned_cats[row["category"]].append(
             row.get("tuned_ratio", row["ratio"]) if row["ok"] else 0.0)
@@ -116,4 +121,58 @@ def _run(emit, tune, tune_budget, cache):
              f"max gain {max(gains):.2f}x, "
              f"mean gain (improved) {sum(gains)/len(gains):.2f}x")
     save_json("table2.json", rows)
+    return rows
+
+
+def _run_fused(emit, tune, tune_budget, cache):
+    """Fused-chain rows: HBM traffic and modeled time of the fused program
+    vs the unfused sequential baseline (both vs sequential-eager), plus the
+    variant the tuner picks on its own."""
+    from repro.bench.tasks import fused_suite
+    from repro.bench.model import (analyze_program, eager_traffic,
+                                   fast_ratio, _padded_shapes_for)
+    from repro.core.lowering.pipeline import Knobs
+    from repro.core.tuning import tune as run_tune, variants_for
+
+    rows = []
+    emit("fused_chain,seq_bytes,fused_bytes,eager_bytes,seq_us,fused_us,"
+         "ratio_seq,ratio_fused,tuner_pick")
+    for task in fused_suite():
+        builders = variants_for(task.op)
+        try:
+            seq_prog = builders.get("sequential",
+                                    builders["default"])(
+                task, task.shapes, Knobs())
+            fused_prog = builders["fused"](task, task.shapes, Knobs())
+        except Exception as e:  # noqa: BLE001
+            rows.append({"name": task.name, "category": "fused",
+                         "ok": False, "ratio": 0.0, "error": str(e)})
+            continue
+        seq_t = analyze_program(seq_prog,
+                                _padded_shapes_for(seq_prog, task.shapes))
+        fus_t = analyze_program(fused_prog,
+                                _padded_shapes_for(fused_prog, task.shapes))
+        eag = eager_traffic(task, task.shapes)
+        r_seq = fast_ratio(task, seq_prog)
+        r_fus = fast_ratio(task, fused_prog)
+        pick = "untuned"
+        if tune:
+            tr = run_tune(task, budget=tune_budget, cache=cache)
+            pick = tr.best.candidate.describe()
+        rows.append({
+            "name": task.name, "category": "fused", "ok": True,
+            "ratio": r_seq, "tuned_ratio": max(r_seq, r_fus),
+            "fused_ratio": r_fus,
+            "fusion_gain": r_fus / r_seq if r_seq > 0 else 1.0,
+            "seq_bytes": seq_t.bytes_total,
+            "gen_bytes": fus_t.bytes_total,
+            "eager_bytes": eag.bytes_total,
+            "seq_time_us": seq_t.time_s() * 1e6,
+            "gen_time_us": fus_t.time_s() * 1e6,
+            "eager_time_us": eag.time_s() * 1e6,
+            "tuned_candidate": pick,
+        })
+        emit(f"{task.name},{seq_t.bytes_total},{fus_t.bytes_total},"
+             f"{eag.bytes_total},{seq_t.time_s()*1e6:.0f},"
+             f"{fus_t.time_s()*1e6:.0f},{r_seq:.2f},{r_fus:.2f},{pick}")
     return rows

@@ -1,2 +1,3 @@
 """MultiKernelBench-style benchmark suite (paper §5)."""
-from .tasks import suite, build_suite
+from .tasks import suite, build_suite, fused_suite, build_fused_suite, \
+    fused_task

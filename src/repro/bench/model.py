@@ -95,7 +95,26 @@ def eager_traffic(task, shapes: Dict[str, Tuple[int, ...]]) -> Traffic:
     cat, op = task.category, task.op
     seq = []  # (read_elems, write_elems)
 
-    if cat in ("activation", "math") and op not in ("cumsum",
+    chain = task.attrs.get("fusion_chain")
+    if chain:
+        # sequential-eager baseline for a fused chain: each stage is priced
+        # as its op's canonical eager kernel sequence, with every link
+        # (intermediate) round-tripping through HBM at full size
+        C = max(1, int(shapes[names[0]][-1]))
+        R = N // C
+        for stage in chain:
+            s_op, s_ins = stage[0], stage[1]
+            reads = sum(_n(shapes, t) if t in shapes else N for t in s_ins)
+            if s_op == "rmsnorm":
+                # no fused aten rmsnorm: pow, mean, add+rsqrt, mul (x2)
+                seq += [(N, N), (N, R), (N, N), (reads, N)]
+            elif s_op in ("softmax", "log_softmax", "layernorm"):
+                seq.append((reads, N))       # fused aten kernel
+            elif s_op == "swiglu":
+                seq += [(N, N), (reads, N)]  # silu kernel + mul kernel
+            else:                            # unary/binary elementwise
+                seq.append((reads, N))
+    elif cat in ("activation", "math") and op not in ("cumsum",
                                                     "masked_cumsum"):
         seq = [(N, N)]                       # one aten kernel
     elif op == "cumsum":

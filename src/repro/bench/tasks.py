@@ -498,3 +498,89 @@ def suite() -> List[KernelTask]:
     if SUITE is None:
         SUITE = build_suite()
     return SUITE
+
+
+# --------------------------------------------------------------------------
+# Fused producer->consumer chains (DESIGN.md §9) — outside the 52-task
+# Table-1 suite.  References are composed float64, mirroring the chain's
+# stage graph; ``attrs['fusion_chain']`` carries the stage structure so the
+# eager-baseline model prices the sequential per-op kernel sequence and the
+# artifact cache fingerprints fused tasks distinctly.
+# --------------------------------------------------------------------------
+
+def fused_task(chain_name: str, big: Dict[str, Tuple[int, ...]],
+               small: Dict[str, Tuple[int, ...]], ref,
+               make_inputs=None) -> KernelTask:
+    """FusedTask constructor: a KernelTask for a registered fusion chain.
+
+    Tensor specs, pad values and the fingerprint-bearing chain structure
+    come from the :data:`~repro.core.fusion.chain.CHAINS` spec; ``ref`` is
+    the composed float64 reference returning the chain outputs in spec
+    order."""
+    from ..core.fusion.chain import CHAINS
+    spec = CHAINS[chain_name]
+    tensors = [TensorSpec(n, F32, "in", r) for n, r in spec.inputs]
+    tensors += [TensorSpec(n, F32, "out", len(big[n])) for n in spec.outputs]
+    return KernelTask(
+        name=chain_name, category="fused", op=chain_name,
+        tensors=tensors, shapes=dict(big), check_shapes=dict(small),
+        ref=ref, make_inputs=make_inputs,
+        attrs={"fusion_chain": spec.describe(),
+               "pad_values": dict(spec.pad_values)})
+
+
+_silu64 = _ACT_REFS["silu"]
+
+
+def _add_rmsnorm_ref(x, r, w):
+    s = _f64(x) + _f64(r)
+    return _rmsnorm(s, w), s
+
+
+def build_fused_suite() -> List[KernelTask]:
+    def shp(names_big, names_small):
+        return dict(names_big), dict(names_small)
+
+    tasks = []
+    big, small = shp(
+        {"input": (16384, 4096), "bias": (4096,), "output": (16384, 4096)},
+        {"input": (64, 384), "bias": (384,), "output": (64, 384)})
+    tasks.append(fused_task(
+        "bias_gelu", big, small,
+        ref=lambda x, b: _ACT_REFS["gelu"](_f64(x) + _f64(b))))
+
+    big, small = shp(
+        {"input": (8192, 8192), "scale": (8192,), "output": (8192, 8192)},
+        {"input": (64, 384), "scale": (384,), "output": (64, 384)})
+    tasks.append(fused_task(
+        "mul_softmax", big, small,
+        ref=lambda x, s: _softmax(_f64(x) * _f64(s))))
+
+    big, small = shp(
+        {"input": (16384, 4096), "weight": (4096,), "gate": (16384, 4096),
+         "output": (16384, 4096)},
+        {"input": (64, 384), "weight": (384,), "gate": (64, 384),
+         "output": (64, 384)})
+    tasks.append(fused_task(
+        "rmsnorm_swiglu", big, small,
+        ref=lambda x, w, g: _silu64(_rmsnorm(x, w)) * _f64(g)))
+
+    big, small = shp(
+        {"input": (65536, 2048), "residual": (65536, 2048),
+         "weight": (2048,), "output": (65536, 2048),
+         "new_residual": (65536, 2048)},
+        {"input": (64, 384), "residual": (64, 384), "weight": (384,),
+         "output": (64, 384), "new_residual": (64, 384)})
+    tasks.append(fused_task("add_rmsnorm", big, small,
+                            ref=_add_rmsnorm_ref))
+    return tasks
+
+
+FUSED_SUITE = None
+
+
+def fused_suite() -> List[KernelTask]:
+    global FUSED_SUITE
+    if FUSED_SUITE is None:
+        FUSED_SUITE = build_fused_suite()
+    return FUSED_SUITE

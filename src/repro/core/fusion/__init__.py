@@ -1,0 +1,18 @@
+"""Automatic DSL-level kernel fusion (DESIGN.md §9).
+
+``fuse.py`` is the program-level pass (Store/Load elimination, α-renaming,
+VMEM re-validation); ``chain.py`` declares fusable operator chains, builds
+their stage programs through a shared row-resident harness, and wires the
+fused/sequential forms into the planner registry and the tuner's variant
+axis.
+"""
+from .fuse import FusionError, fuse_programs, sequence_programs
+from .chain import (CHAINS, ChainSpec, ChainStage, build_chain, build_fused,
+                    fused_builder, register_fusion_variants,
+                    sequential_builder)
+
+__all__ = [
+    "FusionError", "fuse_programs", "sequence_programs",
+    "CHAINS", "ChainSpec", "ChainStage", "build_chain", "build_fused",
+    "fused_builder", "register_fusion_variants", "sequential_builder",
+]

@@ -1,0 +1,398 @@
+"""Fusable producer→consumer chains over suite operators (DESIGN.md §9).
+
+A :class:`ChainSpec` names the chain's GM tensors, its ordered stages
+(each a suite op applied to chain tensors), which intermediate links stay
+exposed as outputs, and the input pad values that keep the *computed*
+intermediate neutral in the lane-padded region (e.g. ``input=-3e38,
+scale=1.0`` so a fused ``mul → softmax`` sees ``-3e38`` — softmax's
+neutral pad — at padded columns it never loaded).
+
+Every stage is built through one shared row-resident harness — the same
+(R, C) row-block structure as ``examples/normalization._rowwise_core``,
+with ``block_rows`` *forced* to a chain-wide value so all stage programs
+share the grid and the per-step GM spans the fusion pass requires.  Stage
+compute semantics reuse the planner's own expert recipes (``softmax_recipe``,
+``rmsnorm_recipe``, the elementwise unary recipes), so a fused chain is the
+stitched composition of exactly the programs the planner would generate.
+
+``block_rows`` is planned from the stitched program's *exact* VMEM
+footprint (probed at two block sizes; the footprint is affine in
+``block_rows``), then re-validated by the fusion pass.  A chain whose
+single-row footprint exceeds the budget raises ``NotImplementedError`` —
+the capacity-refusal convention — and :func:`build_fused` falls back to
+the unfused sequential form.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from math import prod
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from ..dsl import ast as A
+from ..dsl import language as tl
+from ..lowering.pipeline import Knobs
+from ..examples import elementwise as EW
+from ..examples import normalization as NORM
+from ..examples.common import RecipeCtx, _rup
+from .fuse import FusionError, fuse_programs, sequence_programs
+
+LANE = 128
+
+
+# --------------------------------------------------------------------------
+# Stage op registry: suite op -> (canonical operand names, compute recipe)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class StageOp:
+    canon: Tuple[str, ...]         # recipe-facing operand names, row input 1st
+    recipe: Callable[[RecipeCtx], None]
+
+
+def _rc_add(ctx: RecipeCtx):
+    y = ctx.tmp("y")
+    tl.add(y, ctx.buf("a"), ctx.buf("b"))
+    ctx.out("output", y)
+
+
+def _rc_mul(ctx: RecipeCtx):
+    y = ctx.tmp("y")
+    tl.mul(y, ctx.buf("a"), ctx.buf("b"))
+    ctx.out("output", y)
+
+
+def _rc_sub(ctx: RecipeCtx):
+    y = ctx.tmp("y")
+    tl.sub(y, ctx.buf("a"), ctx.buf("b"))
+    ctx.out("output", y)
+
+
+def _rc_swiglu(ctx: RecipeCtx):
+    y = ctx.tmp("y")
+    tl.silu(y, ctx.buf("a"))
+    tl.mul(y, y, ctx.buf("b"))
+    ctx.out("output", y)
+
+
+STAGE_OPS: Dict[str, StageOp] = {
+    "add": StageOp(("a", "b"), _rc_add),
+    "mul": StageOp(("a", "b"), _rc_mul),
+    "sub": StageOp(("a", "b"), _rc_sub),
+    "swiglu": StageOp(("a", "b"), _rc_swiglu),
+    "softmax": StageOp(("input",), NORM.softmax_recipe),
+    "rmsnorm": StageOp(("input", "weight"), NORM.rmsnorm_recipe),
+}
+# rowwise-compatible elementwise unaries share the planner's own recipes
+for _u in ("gelu", "silu", "relu", "tanh", "sigmoid", "exp", "sqrt", "abs",
+           "square", "softplus", "neg"):
+    STAGE_OPS[_u] = StageOp(("input",), EW.unary_recipe(_u))
+
+
+# --------------------------------------------------------------------------
+# Chain specification
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ChainStage:
+    op: str
+    inputs: Tuple[str, ...]        # chain tensor names; first is the row input
+    output: str
+
+
+@dataclass(frozen=True)
+class ChainSpec:
+    name: str
+    inputs: Tuple[Tuple[str, int], ...]     # (tensor, rank); first = primary
+    outputs: Tuple[str, ...]
+    stages: Tuple[ChainStage, ...]
+    keep: Tuple[Tuple[str, str], ...] = ()  # link -> exposed output name
+    route: Tuple[Tuple[str, str], ...] = ()  # sequential GM routing override
+    pad_values: Tuple[Tuple[str, float], ...] = ()
+    attrs: Tuple[Tuple[str, Any], ...] = ()  # recipe attrs (eps, ...)
+
+    @property
+    def primary(self) -> str:
+        return self.inputs[0][0]
+
+    def pad_value(self, tensor: str) -> float:
+        return dict(self.pad_values).get(tensor, 0.0)
+
+    def describe(self) -> Tuple:
+        """Serializable structure for task attrs / cache fingerprints."""
+        return tuple((s.op, tuple(s.inputs), s.output) for s in self.stages)
+
+    def chain_shapes(self, shapes: Dict[str, Tuple[int, ...]]
+                     ) -> Dict[str, Tuple[int, ...]]:
+        """Extend the task shape dict with intermediate (link) shapes."""
+        full = {k: tuple(v) for k, v in shapes.items()}
+        for st in self.stages:
+            missing = [t for t in st.inputs if t not in full]
+            if missing:
+                raise FusionError(
+                    f"chain '{self.name}': stage '{st.op}' reads "
+                    f"{missing} before any stage produces them")
+            if st.output not in full:
+                full[st.output] = full[st.inputs[0]]
+        return full
+
+
+CHAINS: Dict[str, ChainSpec] = {
+    "bias_gelu": ChainSpec(
+        name="bias_gelu",
+        inputs=(("input", 2), ("bias", 1)),
+        outputs=("output",),
+        stages=(ChainStage("add", ("input", "bias"), "h"),
+                ChainStage("gelu", ("h",), "output"))),
+    "mul_softmax": ChainSpec(
+        name="mul_softmax",
+        inputs=(("input", 2), ("scale", 1)),
+        outputs=("output",),
+        stages=(ChainStage("mul", ("input", "scale"), "h"),
+                ChainStage("softmax", ("h",), "output")),
+        # computed pad of h = -3e38 * 1.0 — softmax's neutral element
+        pad_values=(("input", -3.0e38), ("scale", 1.0))),
+    "rmsnorm_swiglu": ChainSpec(
+        name="rmsnorm_swiglu",
+        inputs=(("input", 2), ("weight", 1), ("gate", 2)),
+        outputs=("output",),
+        stages=(ChainStage("rmsnorm", ("input", "weight"), "h"),
+                ChainStage("swiglu", ("h", "gate"), "output"))),
+    # re-derivation of the hand-written build_add_rmsnorm: the link is kept
+    # as the updated residual stream, so the fused traffic matches it
+    "add_rmsnorm": ChainSpec(
+        name="add_rmsnorm",
+        inputs=(("input", 2), ("residual", 2), ("weight", 1)),
+        outputs=("output", "new_residual"),
+        stages=(ChainStage("add", ("input", "residual"), "h"),
+                ChainStage("rmsnorm", ("h", "weight"), "output")),
+        keep=(("h", "new_residual"),),
+        route=(("h", "new_residual"),)),
+}
+
+
+# --------------------------------------------------------------------------
+# Shared row-resident stage harness
+# --------------------------------------------------------------------------
+
+def _stage_program(spec: ChainSpec, idx: int, stage: ChainStage,
+                   shapes: Dict[str, Tuple[int, ...]], orig_cols: int,
+                   block_rows: int) -> A.Program:
+    sop = STAGE_OPS.get(stage.op)
+    if sop is None:
+        raise FusionError(f"no fusable stage recipe for op '{stage.op}'")
+    if len(stage.inputs) != len(sop.canon):
+        raise FusionError(
+            f"stage '{stage.op}' takes {len(sop.canon)} operands, chain "
+            f"'{spec.name}' wires {len(stage.inputs)}")
+    primary = spec.primary
+    rank_p = len(shapes[primary])
+    cols_p = int(shapes[primary][-1])
+    names = set(stage.inputs) | {stage.output, primary}
+    P = tl.ProgramBuilder(
+        f"{spec.name}_s{idx}_{stage.op}", category="fused",
+        # sorted: set order is hash-randomized per process, and the emitted
+        # module header must be deterministic (content-addressed artifacts)
+        task_shapes={t: tuple(shapes[t]) for t in sorted(names)},
+        rationale=f"chain stage {idx}: {stage.op}")
+    h = P.host()
+    numel = h.numel(primary)
+    cols_v = h.dim(primary, rank_p - 1)
+    h.let("cols_padded_unit", LANE,
+          rationale="lane alignment for the trailing axis (pass 4)")
+    rows_v = h.let("rows", numel // cols_v)
+    br = h.let("block_rows", int(block_rows),
+               rationale="chain-wide row block: shared by every stage so "
+                         "the fusion pass can stitch identical GM spans")
+    h.let("n_blocks", rows_v // br)
+    h.launch(grid="n_blocks")
+
+    tensors = [(t, tl.f32, "in", len(shapes[t])) for t in stage.inputs]
+    tensors.append((stage.output, tl.f32, "out", len(shapes[stage.output])))
+    with P.kernel(tensors=tensors):
+        pid = tl.program_id(0)
+        row0 = pid * br
+        by_tensor: Dict[str, A.Buffer] = {}
+        bufs: Dict[str, A.Buffer] = {}
+        is_vector: Dict[str, bool] = {}
+        for canon, t in zip(sop.canon, stage.inputs):
+            if t not in by_tensor:
+                is_vector[t] = len(shapes[t]) == 1    # row-broadcast vector
+                if is_vector[t] and prod(shapes[t]) != cols_p:
+                    raise FusionError(
+                        f"chain '{spec.name}': rank-1 operand '{t}' must "
+                        f"match the trailing dim {cols_p}")
+                by_tensor[t] = tl.alloc_ub(
+                    f"{t}_t", (1, cols_v) if is_vector[t] else (br, cols_v),
+                    tl.f32)
+            bufs[canon] = by_tensor[t]
+        ctx = RecipeCtx(pb=P,
+                        attrs={**dict(spec.attrs),
+                               "input": "input", "output": "output"},
+                        bufs=bufs, tile_shape=(br, cols_v), dtype=tl.f32)
+        ctx.extras["cols"] = orig_cols
+        ctx.extras["block_rows"] = br
+        with tl.copyin():
+            for t, buf in by_tensor.items():
+                tl.load(t, 0 if is_vector[t] else row0 * cols_v, buf,
+                        pad_value=spec.pad_value(t))
+        with tl.compute():
+            sop.recipe(ctx)
+        with tl.copyout():
+            tl.store(stage.output, row0 * cols_v, ctx.result("output"))
+    return P.build()
+
+
+# --------------------------------------------------------------------------
+# Chain building: pad -> plan block_rows -> stitch -> re-validate
+# --------------------------------------------------------------------------
+
+def _divisors_desc(n: int) -> List[int]:
+    out = set()
+    i = 1
+    while i * i <= n:
+        if n % i == 0:
+            out.add(i)
+            out.add(n // i)
+        i += 1
+    return sorted(out, reverse=True)
+
+
+def _stitch(spec: ChainSpec, shapes: Dict[str, Tuple[int, ...]],
+            orig_cols: int, block_rows: int, mode: str, name: str,
+            revalidate: bool) -> A.Program:
+    progs = [_stage_program(spec, i, st, shapes, orig_cols, block_rows)
+             for i, st in enumerate(spec.stages)]
+    order = [t for t, _ in spec.inputs] + list(spec.outputs)
+    if mode == "fused":
+        return fuse_programs(progs, name=name, keep=dict(spec.keep),
+                             tensor_order=order, revalidate=revalidate)
+    return sequence_programs(progs, name=name, route=dict(spec.route),
+                             tensor_order=order, revalidate=revalidate)
+
+
+def _footprint(prog: A.Program) -> int:
+    return sum(st.buf.nbytes for st, _ in A.walk_stmts(prog.kernel.body)
+               if isinstance(st, A.AllocUB))
+
+
+def build_chain(spec: ChainSpec, shapes: Dict[str, Tuple[int, ...]],
+                knobs: Optional[Knobs] = None, *, mode: str = "fused",
+                name: Optional[str] = None) -> A.Program:
+    """Build the chain as one DSL program (``mode='fused'`` or
+    ``'sequential'``), ready for the transcompiler."""
+    if mode not in ("fused", "sequential"):
+        raise ValueError(f"mode must be 'fused' or 'sequential', not {mode!r}")
+    name = name or (spec.name if mode == "sequential"
+                    else f"{spec.name}_fused")
+    orig = {k: tuple(int(s) for s in v) for k, v in shapes.items()}
+    full = spec.chain_shapes(orig)
+    primary = spec.primary
+    orig_cols = int(full[primary][-1])
+    padded = {t: (*s[:-1], _rup(s[-1], LANE)) for t, s in full.items()}
+    rows = prod(padded[primary][:-1])
+
+    # exact footprint is affine in block_rows: probe at two sizes
+    b1 = _footprint(_stitch(spec, padded, orig_cols, 1, mode, name,
+                            revalidate=False))
+    if b1 > tl.VMEM_BUDGET:
+        raise NotImplementedError(
+            f"{mode} chain '{spec.name}' needs {b1} B of UB at "
+            f"block_rows=1 > VMEM budget {tl.VMEM_BUDGET} B")
+    slope = max(1, _footprint(_stitch(spec, padded, orig_cols, 2, mode,
+                                      name, revalidate=False)) - b1)
+    br_max = max(1, (tl.VMEM_BUDGET - (b1 - slope)) // slope)
+    last_refusal: Optional[NotImplementedError] = None
+    for br in _divisors_desc(rows):
+        if br > br_max:
+            continue
+        try:
+            prog = _stitch(spec, padded, orig_cols, br, mode, name,
+                           revalidate=True)
+        except NotImplementedError as e:    # footprint estimate off: step down
+            last_refusal = e
+            continue
+        return _finalize(prog, spec, orig, padded, orig_cols)
+    raise last_refusal or NotImplementedError(
+        f"{mode} chain '{spec.name}' does not fit VMEM at any block_rows")
+
+
+def _finalize(prog: A.Program, spec: ChainSpec, orig, padded,
+              orig_cols: int) -> A.Program:
+    tensor_names = [tp.name for tp in prog.kernel.tensors]
+    prog.meta["gm_layout"] = {
+        t: {"pad_axis": -1, "pad_multiple": "cols_padded_unit",
+            "pad_value": spec.pad_value(t)} for t in tensor_names}
+    prog.meta["orig_shapes"] = {t: orig[t] for t in tensor_names
+                                if t in orig}
+    prog.meta["out_shape_code"] = {
+        tp.name: "tuple(_arrs[0].shape)" for tp in prog.kernel.tensors
+        if tp.role is A.Role.OUT}
+    prog.meta["make_guards"] = [
+        ("p['rows'] % p['block_rows'] == 0",
+         "rows must be a multiple of the generated block_rows; regenerate "
+         "the chain for this shape"),
+        # guard the ORIGINAL trailing dim: reduction divisors (e.g. the
+        # rmsnorm mean) are baked from it, and two different column counts
+        # can share one lane-padded multiple
+        (f"shapes[{spec.primary!r}][-1] == {orig_cols}",
+         "chain was specialized for a different trailing dimension; "
+         "regenerate for this shape"),
+    ]
+    return prog
+
+
+def build_fused(spec_or_name, shapes: Dict[str, Tuple[int, ...]],
+                knobs: Optional[Knobs] = None, *, fallback: bool = True,
+                name: Optional[str] = None) -> A.Program:
+    """Fuse the chain; when the combined VMEM footprint refuses and
+    ``fallback=True``, return the unfused sequential program instead."""
+    spec = CHAINS[spec_or_name] if isinstance(spec_or_name, str) \
+        else spec_or_name
+    try:
+        return build_chain(spec, shapes, knobs, mode="fused", name=name)
+    except NotImplementedError:
+        if not fallback:
+            raise
+        return build_chain(spec, shapes, knobs, mode="sequential")
+
+
+# --------------------------------------------------------------------------
+# Planner / tuner integration
+# --------------------------------------------------------------------------
+
+def sequential_builder(chain: str) -> Callable:
+    """Planner-registry builder: the chain as the unfused sequential
+    program (the safe default the tuner improves on)."""
+    spec = CHAINS[chain]
+
+    def build(task, shapes, knobs=None):
+        return build_chain(spec, shapes, knobs, mode="sequential",
+                           name=task.name)
+    build.__name__ = f"build_{chain}_sequential"
+    build.knob_free = True      # block_rows is planned, knobs are unused
+    return build
+
+
+def fused_builder(chain: str) -> Callable:
+    """Variant builder: the fused chain (refuses on VMEM overflow, so the
+    tuner's correctness/build gate falls back to the default)."""
+    spec = CHAINS[chain]
+
+    def build(task, shapes, knobs=None):
+        return build_chain(spec, shapes, knobs, mode="fused",
+                           name=f"{task.name}_fused")
+    build.__name__ = f"build_{chain}_fused"
+    build.knob_free = True      # block_rows is planned, knobs are unused
+    return build
+
+
+def register_fusion_variants(register_variant: Callable) -> None:
+    """Register every chain's fused form (and, where the default is a
+    hand-written builder, the sequential baseline too) as tuner-searchable
+    variants."""
+    for cname in CHAINS:
+        register_variant(cname, "fused", fused_builder(cname))
+    # the planner default for add_rmsnorm is the hand-written expert
+    # builder; expose the auto-derived sequential baseline alongside it
+    register_variant("add_rmsnorm", "sequential",
+                     sequential_builder("add_rmsnorm"))

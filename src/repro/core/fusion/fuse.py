@@ -1,0 +1,557 @@
+"""DSL-to-DSL kernel fusion pass (DESIGN.md §9).
+
+Operates on lowered *DSL programs*, not on tasks: given an ordered chain of
+single-visit programs (the rowwise-resident stage pattern of
+``lowering/analysis.py`` — stage blocks only, no loops, no running scalars)
+where one program's output tensor is a later program's input tensor, the
+pass stitches their ``copyin``/``compute``/``copyout`` stages into one
+program.
+
+Two stitching modes share all legality checks:
+
+* :func:`fuse_programs` — the optimization.  Each *link* tensor (produced
+  by one stage, consumed by a later one) becomes a UB temporary (the TBuf
+  analogue): its ``Store``/``Load`` pair is deleted, the consumer's loaded
+  buffer is substituted by the producer's result buffer, and the merged
+  program keeps a single copyin/compute/copyout visit — so it stays
+  eligible for the BlockSpec-pipelined backend.  The combined VMEM
+  footprint is re-validated against the Pass-0 budget; a refusal raises
+  ``NotImplementedError`` (the planner's capacity-refusal convention) so
+  callers fall back to the unfused form.
+* :func:`sequence_programs` — the *unfused sequential baseline*.  Stages
+  are concatenated as separate copyin/compute/copyout visits and every
+  link round-trips through GM (routed through a shape-compatible output
+  tensor), modeling exactly the per-op HBM traffic eager execution pays.
+  Dead stage buffers are pooled and reused across stages, so the baseline
+  is not penalized with the fused program's combined footprint.
+
+Buffer names are α-renamed with a per-stage prefix before stitching, so
+chains may reuse expert builders that pick identical local names.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
+
+from ..dsl import ast as A
+from ..dsl.validate import validate
+from ..lowering.analysis import Affine, affine_of
+
+
+class FusionError(Exception):
+    """A chain that cannot be legally stitched (structure, host-plan or
+    index-affine mismatch).  Distinct from ``NotImplementedError``, which
+    is the capacity-refusal signal (VMEM budget) callers may recover from
+    by falling back to the unfused sequential form."""
+
+
+# --------------------------------------------------------------------------
+# α-renaming + buffer substitution
+# --------------------------------------------------------------------------
+
+def _renamed_buffer(buf: A.Buffer, name: str) -> A.Buffer:
+    nb = A.Buffer(name, buf.shape, buf.dtype, buf.space)
+    names = getattr(buf, "shape_names", None)
+    if names is not None:
+        object.__setattr__(nb, "shape_names", names)
+    return nb
+
+
+def _map_sexpr(e: A.SExpr, bmap: Mapping[str, A.Buffer]) -> A.SExpr:
+    if isinstance(e, A.SExtract):
+        return A.SExtract(bmap.get(e.buf.name, e.buf), e.index)
+    if isinstance(e, A.SBin):
+        return A.SBin(e.op, _map_sexpr(e.lhs, bmap), _map_sexpr(e.rhs, bmap))
+    return e
+
+
+def _map_stmt(st: A.Stmt, bmap: Mapping[str, A.Buffer]) -> A.Stmt:
+    if isinstance(st, A.AllocUB):
+        return A.AllocUB(bmap.get(st.buf.name, st.buf))
+    if isinstance(st, A.Load):
+        return A.Load(dst=bmap.get(st.dst.name, st.dst), tensor=st.tensor,
+                      start=_map_sexpr(st.start, bmap),
+                      valid=(None if st.valid is None
+                             else _map_sexpr(st.valid, bmap)),
+                      pad_value=st.pad_value)
+    if isinstance(st, A.Store):
+        return A.Store(tensor=st.tensor, start=_map_sexpr(st.start, bmap),
+                       src=bmap.get(st.src.name, st.src),
+                       valid=(None if st.valid is None
+                              else _map_sexpr(st.valid, bmap)))
+    if isinstance(st, A.Op):
+        return A.Op(op=st.op, dst=bmap.get(st.dst.name, st.dst),
+                    srcs=[bmap.get(s.name, s) if isinstance(s, A.Buffer)
+                          else _map_sexpr(s, bmap) for s in st.srcs],
+                    attrs=dict(st.attrs))
+    if isinstance(st, A.CopyIn):
+        return A.CopyIn([_map_stmt(s, bmap) for s in st.body])
+    if isinstance(st, A.ComputeBlock):
+        return A.ComputeBlock([_map_stmt(s, bmap) for s in st.body])
+    if isinstance(st, A.CopyOut):
+        return A.CopyOut([_map_stmt(s, bmap) for s in st.body])
+    raise FusionError(f"statement {type(st).__name__} is not fusable")
+
+
+# --------------------------------------------------------------------------
+# Stage flattening + legality
+# --------------------------------------------------------------------------
+
+@dataclass
+class _Stage:
+    index: int
+    prog: A.Program
+    allocs: List[A.AllocUB]
+    loads: List[A.Load]
+    computes: List[A.Stmt]
+    stores: List[A.Store]
+
+
+def _flatten_stage(i: int, prog: A.Program) -> _Stage:
+    """Check the single-visit stage pattern and α-rename buffers ``f{i}_*``."""
+    k = prog.kernel
+    for st in k.body:
+        if isinstance(st, A.ForRange):
+            raise FusionError(
+                f"stage {i} ('{prog.name}'): loops are not fusable — only "
+                f"the single-visit stage pattern is")
+        if not isinstance(st, (A.AllocUB, A.CopyIn, A.ComputeBlock,
+                               A.CopyOut)):
+            raise FusionError(
+                f"stage {i} ('{prog.name}'): {type(st).__name__} at kernel "
+                f"scope is not fusable")
+    for st, _ in A.walk_stmts(k.body):
+        if isinstance(st, (A.ScalarDecl, A.ScalarAssign)):
+            raise FusionError(
+                f"stage {i} ('{prog.name}'): running scalars (streaming "
+                f"pattern) are not fusable")
+    bmap: Dict[str, A.Buffer] = {}
+    for st in k.body:
+        if isinstance(st, A.AllocUB):
+            if st.buf.name in bmap:
+                raise FusionError(
+                    f"stage {i}: buffer '{st.buf.name}' allocated twice")
+            bmap[st.buf.name] = _renamed_buffer(st.buf,
+                                                f"f{i}_{st.buf.name}")
+    body = [_map_stmt(st, bmap) for st in k.body]
+    return _Stage(
+        index=i, prog=prog,
+        allocs=[s for s in body if isinstance(s, A.AllocUB)],
+        loads=[ld for s in body if isinstance(s, A.CopyIn) for ld in s.body],
+        computes=[c for s in body if isinstance(s, A.ComputeBlock)
+                  for c in s.body],
+        stores=[t for s in body if isinstance(s, A.CopyOut) for t in s.body])
+
+
+def _merge_hosts(progs: Sequence[A.Program]) -> Tuple[A.HostFn, Dict]:
+    """Union of host assigns; same name must mean the same planned value."""
+    stmts: List[A.HostAssign] = []
+    values: Dict[str, int] = {}
+    for p in progs:
+        plan = p.meta.get("plan", {})
+        for st in p.host.stmts:
+            v = plan.get(st.name)
+            if st.name in values:
+                if values[st.name] != v:
+                    raise FusionError(
+                        f"host plan conflict on '{st.name}': "
+                        f"{values[st.name]} vs {v}")
+                continue
+            values[st.name] = v
+            stmts.append(st)
+    grid = progs[0].host.grid
+    gval = progs[0].meta.get("plan", {}).get(grid)
+    for p in progs[1:]:
+        pv = p.meta.get("plan", {}).get(p.host.grid)
+        if pv != gval:
+            raise FusionError(
+                f"grid mismatch between chain stages: {gval} vs {pv}")
+    return A.HostFn(stmts=stmts, grid=grid, kernel_args=[]), values
+
+
+def _host_tensor_refs(host: A.HostFn) -> Set[str]:
+    out: Set[str] = set()
+
+    def rec(e: A.HExpr):
+        if isinstance(e, A.HDim):
+            out.add(e.tensor)
+        elif isinstance(e, A.HBin):
+            rec(e.lhs)
+            rec(e.rhs)
+    for st in host.stmts:
+        rec(st.expr)
+    return out
+
+
+@dataclass
+class _Links:
+    params: Dict[str, A.TensorParam]      # first-seen TensorParam per name
+    order: List[str]                      # first-seen tensor order
+    produced: Dict[str, int]              # tensor -> producing stage index
+    consumed: Dict[str, List[int]]        # tensor -> consuming stage indices
+    links: List[str]                      # produced earlier, consumed later
+
+
+def _analyze_tensors(progs: Sequence[A.Program]) -> _Links:
+    params: Dict[str, A.TensorParam] = {}
+    order: List[str] = []
+    produced: Dict[str, int] = {}
+    consumed: Dict[str, List[int]] = {}
+    for i, p in enumerate(progs):
+        for tp in p.kernel.tensors:
+            if tp.role is A.Role.INOUT:
+                raise FusionError("INOUT tensors are not fusable")
+            if tp.name not in params:
+                params[tp.name] = tp
+                order.append(tp.name)
+            elif params[tp.name].dtype is not tp.dtype:
+                raise FusionError(f"dtype conflict on tensor '{tp.name}'")
+            if tp.role is A.Role.OUT:
+                if tp.name in produced:
+                    raise FusionError(
+                        f"tensor '{tp.name}' produced by two stages")
+                produced[tp.name] = i
+            else:
+                consumed.setdefault(tp.name, []).append(i)
+    links = []
+    for t, i in produced.items():
+        uses = consumed.get(t, [])
+        if not uses:
+            continue
+        if min(uses) <= i:
+            raise FusionError(
+                f"tensor '{t}' consumed before it is produced")
+        links.append(t)
+    return _Links(params, order, produced, consumed, links)
+
+
+def _affines_equal(a: Optional[Affine], b: Optional[Affine]) -> bool:
+    return (a is not None and b is not None
+            and a.const == b.const and a.coeffs == b.coeffs)
+
+
+def _load_key(ld: A.Load):
+    aff = affine_of(ld.start)
+    if aff is None:
+        return None
+    return (ld.tensor, tuple(sorted(aff.coeffs.items())), aff.const,
+            ld.dst.shape, ld.dst.dtype, ld.pad_value)
+
+
+def _final_params(links: _Links, drop: Set[str],
+                  extra_outs: Sequence[Tuple[str, A.TensorParam]],
+                  tensor_order: Optional[Sequence[str]]
+                  ) -> List[A.TensorParam]:
+    params = [links.params[n] for n in links.order if n not in drop]
+    params += [A.TensorParam(name, tp.dtype, A.Role.OUT, tp.rank)
+               for name, tp in extra_outs]
+    if tensor_order is not None:
+        by_name = {tp.name: tp for tp in params}
+        if set(tensor_order) != set(by_name):
+            raise FusionError(
+                f"tensor_order {sorted(tensor_order)} != fused tensors "
+                f"{sorted(by_name)}")
+        params = [by_name[n] for n in tensor_order]
+    # entry-point convention: inputs first, then outputs
+    return ([tp for tp in params if tp.role is A.Role.IN]
+            + [tp for tp in params if tp.role is A.Role.OUT])
+
+
+def _merged_meta(progs: Sequence[A.Program], values: Dict,
+                 final: Sequence[A.TensorParam],
+                 link_shapes: Dict[str, Tuple[int, ...]]) -> Dict:
+    ts: Dict[str, Tuple[int, ...]] = {}
+    for p in progs:
+        ts.update(p.meta.get("task_shapes", {}))
+    keepset = {tp.name for tp in final}
+    shapes = {k: tuple(v) for k, v in ts.items() if k in keepset}
+    shapes.update({k: tuple(v) for k, v in link_shapes.items()
+                   if k in keepset})
+    return {"plan": dict(values), "task_shapes": shapes}
+
+
+def _revalidate(prog: A.Program, what: str) -> None:
+    rep = validate(prog)
+    budget = [d for d in rep.errors if d.code == "budget"]
+    if budget:
+        # capacity refusal, not a legality bug: callers fall back to the
+        # unfused form (same convention as the resident->streaming refusal)
+        raise NotImplementedError(
+            f"{what} '{prog.name}' exceeds the UB/VMEM budget: {budget[0]}")
+    if rep.errors:
+        raise FusionError(f"{what} '{prog.name}' failed re-validation:\n"
+                          + "\n".join(str(d) for d in rep.errors))
+
+
+# --------------------------------------------------------------------------
+# fuse_programs — delete the Store/Load round trip
+# --------------------------------------------------------------------------
+
+def fuse_programs(progs: Sequence[A.Program], *, name: str,
+                  keep: Optional[Mapping[str, str]] = None,
+                  tensor_order: Optional[Sequence[str]] = None,
+                  revalidate: bool = True) -> A.Program:
+    """Fuse an ordered producer→consumer chain into one single-visit program.
+
+    ``keep`` maps a link tensor to an *exposed* output name whose Store is
+    retained (e.g. the updated residual stream of add+rmsnorm); all other
+    links are fully eliminated.  Raises :class:`FusionError` for legality
+    failures and ``NotImplementedError`` when the combined VMEM footprint
+    exceeds the Pass-0 budget (``revalidate=True``)."""
+    if len(progs) < 2:
+        raise FusionError("need at least two programs to fuse")
+    keep = dict(keep or {})
+    stages = [_flatten_stage(i, p) for i, p in enumerate(progs)]
+    host, values = _merge_hosts(progs)
+    links = _analyze_tensors(progs)
+    unknown = set(keep) - set(links.links)
+    if unknown:
+        raise FusionError(f"keep names non-link tensors: {sorted(unknown)}")
+
+    subst: Dict[str, A.Buffer] = {}       # consumer buffer -> producer buffer
+    dead_bufs: Set[str] = set()
+    # producer tile -> (link name, producing stage): after substitution the
+    # tile is shared with every consumer, so no stage after the producer may
+    # overwrite it (a consumer's in-place op would corrupt later consumers
+    # and, for kept links, the retained copyout Store)
+    link_tiles: Dict[str, Tuple[str, int]] = {}
+    link_shapes: Dict[str, Tuple[int, ...]] = {}
+    # buffer -> stages whose compute writes it (pre-substitution names);
+    # used to refuse unsound sharing instead of silently aliasing
+    compute_writes: Dict[str, Set[int]] = {}
+    for st in stages:
+        for c in st.computes:
+            if isinstance(c, A.Op):
+                compute_writes.setdefault(c.dst.name, set()).add(st.index)
+
+    for link in links.links:
+        pstage = stages[links.produced[link]]
+        pstores = [s for s in pstage.stores if s.tensor == link]
+        if len(pstores) != 1 or pstores[0].valid is not None:
+            raise FusionError(
+                f"link '{link}' must be stored exactly once, unmasked")
+        pstore = pstores[0]
+        paff = affine_of(pstore.start)
+        if paff is None:
+            raise FusionError(f"link '{link}': store index is not affine")
+        for ci in links.consumed[link]:
+            for ld in [l for l in stages[ci].loads if l.tensor == link]:
+                if ld.valid is not None:
+                    raise FusionError(f"link '{link}': masked load")
+                if (ld.dst.shape != pstore.src.shape
+                        or ld.dst.dtype is not pstore.src.dtype):
+                    raise FusionError(
+                        f"link '{link}': consumer tile "
+                        f"{ld.dst.shape}/{ld.dst.dtype.name} != producer "
+                        f"tile {pstore.src.shape}/{pstore.src.dtype.name}")
+                if not _affines_equal(affine_of(ld.start), paff):
+                    raise FusionError(
+                        f"link '{link}': load span differs from store span")
+                subst[ld.dst.name] = pstore.src
+                dead_bufs.add(ld.dst.name)
+        link_shapes[link] = tuple(
+            pstage.prog.meta.get("task_shapes", {}).get(link, ()))
+        link_tiles[pstore.src.name] = (link, links.produced[link])
+
+    # assemble (stage order), dropping eliminated loads/stores/allocs and
+    # deduplicating identical loads across stages
+    allocs: List[A.AllocUB] = []
+    loads: List[A.Load] = []
+    computes: List[Tuple[int, A.Stmt]] = []
+    stores: List[A.Store] = []
+    seen_loads: Dict[Tuple, A.Buffer] = {}
+    for st in stages:
+        for a in st.allocs:
+            if a.buf.name not in dead_bufs:
+                allocs.append(a)
+        for ld in st.loads:
+            if ld.tensor in links.links:
+                continue                     # eliminated round trip
+            # dedup identical loads across stages — but only when neither
+            # buffer is ever a compute destination: aliasing a mutated tile
+            # would diverge from the sequential semantics (each stage
+            # reloads the unmutated GM value)
+            key = (None if ld.dst.name in compute_writes
+                   else _load_key(ld))
+            if key is not None and key in seen_loads:
+                subst[ld.dst.name] = seen_loads[key]
+                dead_bufs.add(ld.dst.name)
+                continue
+            if key is not None:
+                seen_loads[key] = ld.dst
+            loads.append(ld)
+        computes.extend((st.index, c) for c in st.computes)
+        for s in st.stores:
+            if s.tensor in links.links and s.tensor not in keep:
+                continue                     # eliminated round trip
+            if s.tensor in keep:
+                s = A.Store(tensor=keep[s.tensor], start=s.start, src=s.src,
+                            valid=s.valid)
+            stores.append(s)
+    allocs = [a for a in allocs if a.buf.name not in dead_bufs]
+    computes = [(i, _map_stmt(c, subst)) for i, c in computes]
+    for i, c in computes:
+        if (isinstance(c, A.Op) and c.dst.name in link_tiles
+                and i > link_tiles[c.dst.name][1]):
+            raise FusionError(
+                f"link '{link_tiles[c.dst.name][0]}': a consumer stage "
+                f"overwrites the shared producer tile (in-place op) — "
+                f"later consumers/Stores would read the mutated value")
+    computes = [c for _, c in computes]
+    stores = [_map_stmt(s, subst) for s in stores]
+    loads = [_map_stmt(ld, subst) for ld in loads]
+
+    extra = [(keep[l], links.params[l]) for l in links.links if l in keep]
+    final = _final_params(links, set(links.links), extra, tensor_order)
+    kernel = A.KernelFn(name=f"{name}_kernel", tensors=final, params=[],
+                        body=(list(allocs) + [A.CopyIn(loads),
+                                              A.ComputeBlock(computes),
+                                              A.CopyOut(stores)]))
+    meta = _merged_meta(progs, values, final,
+                        {keep[l]: link_shapes[l] for l in keep})
+    meta["fusion"] = {"mode": "fused", "links": list(links.links),
+                      "kept": dict(keep),
+                      "stages": [p.name for p in progs]}
+    prog = A.Program(
+        name=name, host=host, kernel=kernel, category=progs[0].category,
+        rationale=("fused chain (one UB visit, Store/Load round trips "
+                   "deleted): " + " -> ".join(p.name for p in progs)),
+        meta=meta)
+    bad = _host_tensor_refs(host) - {tp.name for tp in final}
+    if bad:
+        raise FusionError(
+            f"host plan references eliminated tensors: {sorted(bad)}")
+    if revalidate:
+        _revalidate(prog, "fused chain")
+    return prog
+
+
+# --------------------------------------------------------------------------
+# sequence_programs — the unfused sequential baseline
+# --------------------------------------------------------------------------
+
+def sequence_programs(progs: Sequence[A.Program], *, name: str,
+                      route: Optional[Mapping[str, str]] = None,
+                      tensor_order: Optional[Sequence[str]] = None,
+                      revalidate: bool = True) -> A.Program:
+    """Stitch the chain WITHOUT eliminating the GM round trips.
+
+    Every link round-trips through GM via ``route[link]`` (default: the
+    first size-compatible output tensor), so the modeled HBM traffic is the
+    sequential per-op cost.  Stage buffers that are dead after their stage
+    are pooled and reused by later stages (TBuf reuse), so the baseline's
+    VMEM footprint is the max stage working set — it can fit where the
+    fused program refuses."""
+    if not progs:
+        raise FusionError("empty chain")
+    route = dict(route or {})
+    stages = [_flatten_stage(i, p) for i, p in enumerate(progs)]
+    host, values = _merge_hosts(progs)
+    links = _analyze_tensors(progs)
+
+    link_shapes: Dict[str, Tuple[int, ...]] = {}
+    all_ts: Dict[str, Tuple[int, ...]] = {}
+    for p in progs:
+        all_ts.update(p.meta.get("task_shapes", {}))
+
+    def _numel(t: str) -> int:
+        n = 1
+        for s in all_ts.get(t, ()):
+            n *= int(s)
+        return n
+
+    extra: List[Tuple[str, A.TensorParam]] = []
+    exposed_new: Set[str] = set()
+    # several links may share one route target as long as their GM live
+    # ranges [producing stage, last consuming stage] do not overlap
+    target_lives: Dict[str, List[Tuple[int, int]]] = {}
+
+    def _claim(target: str, link: str) -> bool:
+        # half-open [produced, last consumer): the target is written at the
+        # producer's copyout and freed once the last consumer's copyin has
+        # read it — a link produced at exactly that stage may take over
+        live = (links.produced[link], max(links.consumed[link]))
+        for lo, hi in target_lives.get(target, []):
+            if lo < live[1] and live[0] < hi:
+                return False
+        target_lives.setdefault(target, []).append(live)
+        return True
+
+    for link in sorted(links.links, key=lambda l: links.produced[l]):
+        link_shapes[link] = tuple(all_ts.get(link, ()))
+        if link not in route:
+            cands = [t for t, i in links.produced.items()
+                     if t not in links.links and _numel(t) == _numel(link)]
+            for t in cands:
+                if _claim(t, link):
+                    route[link] = t
+                    break
+            if link not in route:
+                raise FusionError(
+                    f"link '{link}': no size-compatible output tensor free "
+                    f"to route the GM round trip through")
+        else:
+            if not _claim(route[link], link):
+                raise FusionError(
+                    f"link '{link}': route target '{route[link]}' is live "
+                    f"for another link over the same stages")
+        target = route[link]
+        if target not in links.params and target not in exposed_new:
+            exposed_new.add(target)
+            extra.append((target, links.params[link]))
+        elif target in links.params and _numel(target) != _numel(link):
+            raise FusionError(
+                f"link '{link}': route target '{target}' numel mismatch")
+
+    # retarget link traffic + pool/reuse dead buffers across stages
+    pool: Dict[Tuple, List[A.Buffer]] = {}
+    body: List[A.Stmt] = []
+    blocks: List[A.Stmt] = []
+    for st in stages:
+        subst: Dict[str, A.Buffer] = {}
+        if st.index > 0:
+            for a in st.allocs:
+                key = (a.buf.shape, a.buf.dtype, a.buf.space)
+                free = pool.get(key)
+                if free:
+                    subst[a.buf.name] = free.pop()
+        effective: List[A.Buffer] = []
+        for a in st.allocs:
+            if a.buf.name in subst:
+                effective.append(subst[a.buf.name])
+            else:
+                effective.append(a.buf)
+                body.append(a)
+        loads = [A.Load(dst=ld.dst, tensor=route.get(ld.tensor, ld.tensor),
+                        start=ld.start, valid=ld.valid,
+                        pad_value=ld.pad_value) for ld in st.loads]
+        stores = [A.Store(tensor=route.get(s.tensor, s.tensor),
+                          start=s.start, src=s.src, valid=s.valid)
+                  for s in st.stores]
+        blocks.append(A.CopyIn([_map_stmt(ld, subst) for ld in loads]))
+        blocks.append(A.ComputeBlock([_map_stmt(c, subst)
+                                      for c in st.computes]))
+        blocks.append(A.CopyOut([_map_stmt(s, subst) for s in stores]))
+        for b in effective:     # dead after this stage: links go through GM
+            pool.setdefault((b.shape, b.dtype, b.space), []).append(b)
+
+    final = _final_params(links, set(links.links), extra, tensor_order)
+    kernel = A.KernelFn(name=f"{name}_kernel", tensors=final, params=[],
+                        body=body + blocks)
+    meta = _merged_meta(progs, values, final,
+                        {route[l]: link_shapes[l] for l in links.links})
+    meta["fusion"] = {"mode": "sequential", "links": list(links.links),
+                      "route": dict(route),
+                      "stages": [p.name for p in progs]}
+    prog = A.Program(
+        name=name, host=host, kernel=kernel, category=progs[0].category,
+        rationale=("sequential chain (unfused baseline, links round-trip "
+                   "through GM): " + " -> ".join(p.name for p in progs)),
+        meta=meta)
+    bad = _host_tensor_refs(host) - {tp.name for tp in final}
+    if bad:
+        raise FusionError(
+            f"host plan references eliminated tensors: {sorted(bad)}")
+    if revalidate:
+        _revalidate(prog, "sequential chain")
+    return prog

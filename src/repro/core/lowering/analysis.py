@@ -296,6 +296,7 @@ def pipelined_eligible(prog: A.Program) -> Optional[PipelinedPlan]:
     # grid index j in [0, count) — rewrite var = start + j
     stmts = [s for s in non_loops if not isinstance(s, A.AllocUB)] + inner
 
+    roles = {tp.name: tp.role for tp in k.tensors}
     blockmaps: List[BlockMap] = []
     compute: List[A.Stmt] = []
     loaded: Set[str] = set()
@@ -303,6 +304,12 @@ def pipelined_eligible(prog: A.Program) -> Optional[PipelinedPlan]:
         if isinstance(st, A.CopyIn):
             for ld in st.body:
                 if ld.valid is not None:
+                    return None
+                if roles.get(ld.tensor) is A.Role.OUT:
+                    # in-kernel GM round trip (read-after-write through an
+                    # output tensor, e.g. an unfused sequential chain): the
+                    # pipelined backend has no ordering between an output's
+                    # store and a later load — explicit backend only
                     return None
                 bm = _derive_blockmap(ld.tensor, ld.start, ld.dst, False,
                                       loop, shapes)

@@ -125,6 +125,16 @@ PLANNER_REGISTRY["mhc_post"] = \
 PLANNER_REGISTRY["mhc_post_grad"] = \
     lambda t, s, k: MHC.build_mhc_post_grad(t, s, k)
 
+# fused operator chains (DESIGN.md §9): the registry default is the
+# UNFUSED sequential program; the fused form is a tuner-discoverable
+# variant (see tuning/space.py).  add_rmsnorm keeps its hand-written
+# expert builder as the default — the auto-derived chain rides the
+# variant axis to prove parity.
+from .fusion import chain as FUSION  # noqa: E402
+for _cn in FUSION.CHAINS:
+    if _cn not in PLANNER_REGISTRY:
+        PLANNER_REGISTRY[_cn] = FUSION.sequential_builder(_cn)
+
 # pooling
 PLANNER_REGISTRY["avg_pool1d"] = \
     lambda t, s, k: POOL.build_pool1d(t, s, k, "avg")
@@ -225,6 +235,45 @@ def check_artifact_numerics(task: KernelTask, art_check: Artifact,
                          "" if ok else f"max rel err {max_err:.3g}")
 
 
+def fallback_op_for(op: str) -> str:
+    """Registry key of the op's capacity-refusal fallback builder.
+
+    Convention: ``<op>_streaming`` — the long-row form a resident builder
+    hands off to when it raises ``NotImplementedError``."""
+    return f"{op}_streaming"
+
+
+def resolve_and_build(task: KernelTask, builder: Callable, variant: str,
+                      knobs: Optional[Knobs],
+                      shapes: Dict[str, Tuple[int, ...]],
+                      **transcompile_kwargs) -> Tuple[Artifact, str]:
+    """The ONE resident→fallback resolve-and-build policy (shared by the
+    planner's bench path, its check-shape build, and the tuner's
+    evaluator, so the three cannot desynchronize).
+
+    Runs ``builder`` through the correction-feedback loop at ``shapes``;
+    when it refuses with ``NotImplementedError`` (row too long / VMEM
+    overflow) and the candidate is the *default* variant, retries once
+    with the op's registered fallback builder (``fallback_op_for``).
+    Returns ``(artifact, resolved_op)`` — ``resolved_op`` is the registry
+    key of the builder that actually produced the artifact, recorded so
+    later check-shape builds verify the same program family."""
+    try:
+        art = generate_with_feedback(
+            lambda kn: builder(task, shapes, kn), knobs,
+            **transcompile_kwargs)
+        return art, task.op
+    except NotImplementedError:
+        fb_op = fallback_op_for(task.op)
+        if variant != "default" or fb_op not in PLANNER_REGISTRY:
+            raise
+        fb_builder = PLANNER_REGISTRY[fb_op]
+        art = generate_with_feedback(
+            lambda kn: fb_builder(task, shapes, kn), knobs,
+            **transcompile_kwargs)
+        return art, fb_op
+
+
 def generate(task: KernelTask, knobs: Optional[Knobs] = None,
              verify: bool = True, rtol: float = 3e-4,
              atol: float = 2e-5, *, tune: bool = False,
@@ -319,30 +368,11 @@ def generate(task: KernelTask, knobs: Optional[Knobs] = None,
             cached_bench = True
             resolved_op = entry.meta.get("resolved_op", task.op)
 
-    def build(kn: Knobs):
-        return builder_fn(task, task.shapes, kn)
-
     try:
         if art is None:
-            art = generate_with_feedback(build, knobs, check_shapes=None,
-                                         verify_against_interp=False)
-    except NotImplementedError as e:
-        # resident pattern refused (row too long) -> try streaming variant
-        streaming_op = f"{task.op}_streaming"
-        if streaming_op in PLANNER_REGISTRY and variant == "default":
-            t2 = task
-            builder2 = PLANNER_REGISTRY[streaming_op]
-            resolved_op = streaming_op
-
-            def build2(kn: Knobs):
-                return builder2(t2, t2.shapes, kn)
-            try:
-                art = generate_with_feedback(build2, knobs, check_shapes=None,
-                                             verify_against_interp=False)
-            except Exception as e2:  # noqa: BLE001
-                return GenResult(task, None, False, False, error=str(e2))
-        else:
-            return GenResult(task, None, False, False, error=str(e))
+            art, resolved_op = resolve_and_build(
+                task, builder_fn, variant, knobs, task.shapes,
+                check_shapes=None, verify_against_interp=False)
     except Exception as e:  # noqa: BLE001
         return GenResult(task, None, False, False, error=str(e))
 
@@ -365,22 +395,10 @@ def generate(task: KernelTask, knobs: Optional[Knobs] = None,
     if variant == "default" and resolved_op != task.op:
         check_builder_fn = PLANNER_REGISTRY.get(resolved_op, builder_fn)
 
-    def build_check(kn: Knobs):
-        try:
-            return check_builder_fn(task, task.check_shapes, kn)
-        except NotImplementedError:
-            # mirror the bench-path fallback exactly: only the default
-            # variant may fall back to the registered streaming builder
-            streaming_op = f"{task.op}_streaming"
-            if variant != "default" or streaming_op not in PLANNER_REGISTRY:
-                raise
-            return PLANNER_REGISTRY[streaming_op](
-                task, task.check_shapes, kn)
-
     try:
-        art_check = generate_with_feedback(build_check, knobs,
-                                           check_shapes=None,
-                                           verify_against_interp=False)
+        art_check, _ = resolve_and_build(
+            task, check_builder_fn, variant, knobs, task.check_shapes,
+            check_shapes=None, verify_against_interp=False)
     except Exception as e:  # noqa: BLE001
         return GenResult(task, art, False, False,
                          error=f"check-shape build failed: {e}",

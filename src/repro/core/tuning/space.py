@@ -80,13 +80,18 @@ def variants_for(op: str) -> Dict[str, Callable]:
     return out
 
 
-# -- built-in variants: the §Perf hillclimbed kernels ----------------------
-# (previously hand-wired in tests; the tuner now discovers them by search).
-# Registered lazily from PLANNER_REGISTRY's "<op>_rowreuse" entries so there
-# is a single source of truth for each builder.
+# -- built-in variants ------------------------------------------------------
+# (previously hand-wired: the §Perf hillclimbed pool2d kernels AND the
+# streaming-vs-resident normalization fallback; the tuner now discovers
+# both by search).  Registered lazily from PLANNER_REGISTRY entries so
+# there is a single source of truth for each builder.
 
 _BUILTIN_VARIANTS = (("avg_pool2d", "rowreuse", "avg_pool2d_rowreuse"),
-                     ("max_pool2d", "rowreuse", "max_pool2d_rowreuse"))
+                     ("max_pool2d", "rowreuse", "max_pool2d_rowreuse"),
+                     # streaming normalization as a searchable axis (the
+                     # planner still falls back to it on VMEM refusal)
+                     ("softmax", "streaming", "softmax_streaming"),
+                     ("rmsnorm", "streaming", "rmsnorm_streaming"))
 _builtins_done = False
 
 
@@ -98,6 +103,10 @@ def _ensure_builtin_variants() -> None:
     for op, name, registry_key in _BUILTIN_VARIANTS:
         if registry_key in PLANNER_REGISTRY:
             register_variant(op, name, PLANNER_REGISTRY[registry_key])
+    # fused operator chains (DESIGN.md §9): fused-vs-sequential rides the
+    # same variant axis, so the tuner discovers fusion on its own
+    from ..fusion.chain import register_fusion_variants
+    register_fusion_variants(register_variant)
     _builtins_done = True
 
 
@@ -110,12 +119,20 @@ def neighbors(cand: Candidate, op: str) -> List[Candidate]:
 
     Order encodes the expected impact: dataflow variants first (they change
     traffic asymptotically), then tile length (VMEM residency vs grid
-    overhead), then pad policy and backend."""
+    overhead), then pad policy and backend.
+
+    Ops whose builders all declare ``knob_free = True`` (e.g. fusion
+    chains, which plan their own block size) expose only the variant axis
+    — knob moves would rebuild and re-gate byte-identical programs."""
     out: List[Candidate] = []
 
-    for vname in variants_for(op):
+    builders = variants_for(op)
+    for vname in builders:
         if vname != cand.variant:
             out.append(_dc.replace(cand, variant=vname))
+
+    if all(getattr(b, "knob_free", False) for b in builders.values()):
+        return out
 
     if cand.max_tile in TILE_LADDER:
         i = TILE_LADDER.index(cand.max_tile)

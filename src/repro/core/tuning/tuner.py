@@ -22,7 +22,7 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
-from ..lowering.pipeline import Knobs, generate_with_feedback
+from ..lowering.pipeline import Knobs
 from .cache import ArtifactCache
 from .space import Candidate, neighbors, variants_for
 
@@ -100,28 +100,13 @@ def _evaluate(task, cand: Candidate, cache: Optional[ArtifactCache],
                     entry.meta.get("pass_ok") is True and
                     cache.verdict_covers(entry.meta, rtol, atol))
     if art is None:
+        # same resident->fallback policy as the planner's bench path
+        # (shared helper — the two must not desynchronize)
+        from ..planner import resolve_and_build
         try:
-            art = generate_with_feedback(
-                lambda kn: builder(task, task.shapes, kn),
-                dataclasses.replace(knobs), check_shapes=None,
-                verify_against_interp=False)
-        except NotImplementedError as e:
-            # resident pattern refused at bench shapes -> same streaming
-            # fallback the planner applies (default variant only)
-            streaming_op = f"{task.op}_streaming"
-            from ..planner import PLANNER_REGISTRY
-            if cand.variant != "default" or \
-                    streaming_op not in PLANNER_REGISTRY:
-                return Trial(cand, 0.0, False, f"build failed: {e}")
-            sb = PLANNER_REGISTRY[streaming_op]
-            try:
-                art = generate_with_feedback(
-                    lambda kn: sb(task, task.shapes, kn),
-                    dataclasses.replace(knobs), check_shapes=None,
-                    verify_against_interp=False)
-                resolved_op = streaming_op
-            except Exception as e2:  # noqa: BLE001
-                return Trial(cand, 0.0, False, f"build failed: {e2}")
+            art, resolved_op = resolve_and_build(
+                task, builder, cand.variant, dataclasses.replace(knobs),
+                task.shapes, check_shapes=None, verify_against_interp=False)
         except Exception as e:  # noqa: BLE001 — a failed point scores 0
             return Trial(cand, 0.0, False, f"build failed: {e}")
 
@@ -147,11 +132,12 @@ def _evaluate(task, cand: Candidate, cache: Optional[ArtifactCache],
         if cand.variant == "default" and resolved_op != task.op:
             from ..planner import PLANNER_REGISTRY
             gate_builder = PLANNER_REGISTRY.get(resolved_op, builder)
+        from ..planner import resolve_and_build
         try:
-            art_check = generate_with_feedback(
-                lambda kn: gate_builder(task, task.check_shapes, kn),
-                dataclasses.replace(knobs), check_shapes=None,
-                verify_against_interp=False)
+            art_check, _ = resolve_and_build(
+                task, gate_builder, cand.variant,
+                dataclasses.replace(knobs), task.check_shapes,
+                check_shapes=None, verify_against_interp=False)
             chk = check_artifact_numerics(task, art_check, rtol, atol)
             ok, err_msg, gate_err = chk.pass_ok, chk.error, chk.max_err
             gate_exec_ok = chk.exec_ok

@@ -5,7 +5,9 @@
   dma_pipeline/     explicit make_async_copy double-buffered kernel (the
                     literal Ascend MTE/TQue analogue)
   generated/        checked-in transcompiler artifacts (rmsnorm, softmax,
-                    adamw, swiglu, add_rmsnorm, mhc_post, mhc_post_grad)
+                    adamw, swiglu, add_rmsnorm, mhc_post, mhc_post_grad,
+                    and the tuner-selected fused chains bias_gelu /
+                    rmsnorm_swiglu — DESIGN.md §9)
 Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper) and ref.py (pure-jnp oracle); generated artifacts embed their
 host plan + pass log instead.

@@ -136,3 +136,31 @@ def test_generated_add_rmsnorm(rows):
     want = s / np.sqrt((s * s).mean(-1, keepdims=True) + 1e-6) * w
     np.testing.assert_allclose(np.asarray(y), want, rtol=2e-4, atol=1e-5)
     np.testing.assert_allclose(np.asarray(new_res), s, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("rows", [64, 128])
+def test_generated_fused_bias_gelu(rows):
+    """Checked-in fused-chain artifact (DESIGN.md §9): one UB visit, the
+    tuner-selected variant."""
+    import math
+    rng = np.random.RandomState(9)
+    x = rng.randn(rows, 4096).astype(np.float32)
+    b = rng.randn(4096).astype(np.float32)
+    y = G.bias_gelu.bias_gelu_fused(x, b, interpret=True)
+    s = x.astype(np.float64) + b.astype(np.float64)
+    want = 0.5 * s * (1 + np.vectorize(math.erf)(s / math.sqrt(2)))
+    np.testing.assert_allclose(np.asarray(y), want, rtol=2e-4, atol=1e-5)
+    src = __import__("inspect").getsource(G.bias_gelu)
+    assert "Store/Load round trips deleted" in src
+
+
+def test_generated_fused_rmsnorm_swiglu():
+    rng = np.random.RandomState(11)
+    x = rng.randn(64, 4096).astype(np.float32)
+    w = rng.randn(4096).astype(np.float32)
+    g = rng.randn(64, 4096).astype(np.float32)
+    y = G.rmsnorm_swiglu.rmsnorm_swiglu_fused(x, w, g, interpret=True)
+    x64, w64, g64 = (np.asarray(v, np.float64) for v in (x, w, g))
+    h = x64 / np.sqrt((x64 * x64).mean(-1, keepdims=True) + 1e-6) * w64
+    want = h / (1 + np.exp(-h)) * g64
+    np.testing.assert_allclose(np.asarray(y), want, rtol=2e-4, atol=1e-5)
