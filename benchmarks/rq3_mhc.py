@@ -18,20 +18,9 @@ DMA_ISSUE_S = 0.5e-6
 
 
 def _transfers(prog, shapes):
-    from repro.core.dsl import ast as A
-    from repro.core.dsl.language import eval_host
-    plan = eval_host(prog.host, shapes)
-    grid = plan[prog.host.grid]
-    count = [0]
-
-    def visit(body, mult):
-        for st in body:
-            if isinstance(st, A.ForRange):
-                visit(st.body, mult * st.count)
-            elif isinstance(st, (A.CopyIn, A.CopyOut)):
-                count[0] += len(st.body) * mult
-    visit(prog.kernel.body, grid)
-    return count[0]
+    # DMA-burst count now lives in the shared cost model (DESIGN.md §10)
+    from repro.bench.model import analyze_program
+    return analyze_program(prog, shapes).transfers
 
 
 def run(emit=print):
@@ -60,22 +49,17 @@ def run(emit=print):
                  f"{'6.6x' if task.name == 'mhc_post' else '3.0x'}")
         rows.append(entry)
 
-    # expert optimization step: row-blocked variant (fewer, larger DMAs)
-    from repro.core.examples.mhc import build_mhc_post_blocked
-    from repro.core.lowering.pipeline import transcompile, Knobs
-    from repro.core.planner import default_inputs
+    # expert optimization step: the row-blocked variant (fewer, larger
+    # DMAs) is no longer hand-wired — it is a register_variant entry the
+    # tuner discovers by the DMA-burst tie-break (DESIGN.md §10)
+    from repro.core.tuning import tune, variants_for
     task = mhc_tasks()[0]
-    prog_b = build_mhc_post_blocked(task, task.shapes, Knobs())
-    art = transcompile(prog_b)
-    # verify at check shapes via a check-shape build
-    prog_chk = build_mhc_post_blocked(task, task.check_shapes, Knobs())
-    art_chk = transcompile(prog_chk)
-    inputs = default_inputs(task, task.check_shapes)
-    arrays = [inputs[tp.name] for tp in task.input_specs]
-    got = art_chk.entry(*arrays, interpret=True)
-    want = task.ref(*arrays)
-    ok = bool(np.allclose(np.asarray(got, np.float64), want,
-                          rtol=3e-4, atol=2e-5))
+    tr = tune(task, budget=8)
+    assert tr.best.candidate.variant == "rowblock", \
+        f"tuner picked {tr.best.candidate.describe()}, not rowblock"
+    ok = tr.best.ok
+    builder = variants_for(task.op)[tr.best.candidate.variant]
+    prog_b = builder(task, task.shapes, tr.best.candidate.to_knobs())
     padded = _padded_shapes_for(prog_b, task.shapes)
     gen = analyze_program(prog_b, padded)
     n_tr = _transfers(prog_b, padded)

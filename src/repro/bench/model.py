@@ -36,12 +36,17 @@ class Traffic:
     loaded: int = 0      # bytes
     stored: int = 0
     flops: int = 0
+    transfers: int = 0   # individual DMA bursts (Load/Store × trip counts)
 
     @property
     def bytes_total(self) -> int:
         return self.loaded + self.stored
 
     def time_s(self) -> float:
+        # bytes dominate on v5e for every suite op; `transfers` is NOT a
+        # time term (a latency constant would distort the paper's Table-2
+        # ratios) — the tuner uses it as a tie-break between candidates
+        # with equal modeled bytes (fewer, larger DMA bursts win)
         return max(self.bytes_total / HBM_BW, self.flops / VPU_FLOPS)
 
 
@@ -62,9 +67,11 @@ def analyze_program(prog: A.Program,
             elif isinstance(st, A.CopyIn):
                 for ld in st.body:
                     t.loaded += ld.dst.size * ld.dst.dtype.nbytes * mult
+                    t.transfers += mult
             elif isinstance(st, A.CopyOut):
                 for s in st.body:
                     t.stored += s.src.size * s.src.dtype.nbytes * mult
+                    t.transfers += mult
             elif isinstance(st, A.ComputeBlock):
                 for op in st.body:
                     if isinstance(op, A.Op):
@@ -208,4 +215,13 @@ def _padded_shapes_for(prog: A.Program, shapes):
     if not layout:
         return shapes
     plan = eval_host(prog.host, shapes)
-    return apply_gm_layout(shapes, layout, plan)
+    # scratch GM tensors (DAG sequential routing) are not task tensors:
+    # pad only what the caller names, then fill the rest from the
+    # program's own generation shapes (traffic comes from buffer sizes,
+    # so the exact scratch entry never feeds the model)
+    known = {t: spec for t, spec in layout.items() if t in shapes}
+    padded = apply_gm_layout(shapes, known, plan)
+    for t in layout:
+        if t not in padded:
+            padded[t] = tuple(prog.meta.get("task_shapes", {}).get(t, ()))
+    return padded

@@ -573,6 +573,32 @@ def build_fused_suite() -> List[KernelTask]:
          "output": (64, 384), "new_residual": (64, 384)})
     tasks.append(fused_task("add_rmsnorm", big, small,
                             ref=_add_rmsnorm_ref))
+
+    # attention score pipeline (proposed 3-stage chain): rows far too wide
+    # for residency — the STREAMING-pattern chain (DESIGN.md §10); the
+    # fused form is loop-carry-stitched (scores spilled once through the
+    # output instead of re-reading every producer input per softmax pass)
+    big, small = shp(
+        {"input": (256, 786432), "scale": (786432,), "mask": (786432,),
+         "output": (256, 786432)},
+        {"input": (64, 384), "scale": (384,), "mask": (384,),
+         "output": (64, 384)})
+    tasks.append(fused_task(
+        "attn_scores", big, small,
+        ref=lambda x, s, m: _softmax(_f64(x) * _f64(s) + _f64(m))))
+
+    # two-branch swiglu (proposed DAG chain): gate/up branches share the
+    # same input tensor; the sequential baseline needs a scratch GM tensor
+    # at the merge (two links live at once)
+    big, small = shp(
+        {"input": (16384, 4096), "gate_scale": (4096,),
+         "up_scale": (4096,), "output": (16384, 4096)},
+        {"input": (64, 384), "gate_scale": (384,), "up_scale": (384,),
+         "output": (64, 384)})
+    tasks.append(fused_task(
+        "swiglu_proj", big, small,
+        ref=lambda x, gs, us: _silu64(_f64(x) * _f64(gs))
+        * (_f64(x) * _f64(us))))
     return tasks
 
 

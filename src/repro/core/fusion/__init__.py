@@ -1,18 +1,24 @@
-"""Automatic DSL-level kernel fusion (DESIGN.md §9).
+"""Automatic DSL-level kernel fusion (DESIGN.md §9–§10).
 
-``fuse.py`` is the program-level pass (Store/Load elimination, α-renaming,
-VMEM re-validation); ``chain.py`` declares fusable operator chains, builds
-their stage programs through a shared row-resident harness, and wires the
-fused/sequential forms into the planner registry and the tuner's variant
-axis.
+``fuse.py`` is the program-level pass (pattern-dispatched stitching:
+single-visit Store/Load elimination and streaming loop-carry stitching,
+α-renaming, VMEM re-validation); ``propose.py`` derives fusable operator
+chains from declared workload dataflow graphs; ``chain.py`` builds each
+chain's stage programs through the shared resident/streaming harnesses
+and wires the fused/sequential forms into the planner registry and the
+tuner's variant axis.
 """
 from .fuse import FusionError, fuse_programs, sequence_programs
+from .propose import GRAPHS, OpGraph, OpNode, ProposeError, propose_chains
 from .chain import (CHAINS, ChainSpec, ChainStage, build_chain, build_fused,
                     fused_builder, register_fusion_variants,
-                    sequential_builder)
+                    register_planner_chains, sequential_builder,
+                    streaming_sequential_builder)
 
 __all__ = [
     "FusionError", "fuse_programs", "sequence_programs",
+    "GRAPHS", "OpGraph", "OpNode", "ProposeError", "propose_chains",
     "CHAINS", "ChainSpec", "ChainStage", "build_chain", "build_fused",
-    "fused_builder", "register_fusion_variants", "sequential_builder",
+    "fused_builder", "register_fusion_variants", "register_planner_chains",
+    "sequential_builder", "streaming_sequential_builder",
 ]

@@ -1,26 +1,32 @@
-"""Fusable producer→consumer chains over suite operators (DESIGN.md §9).
+"""Fusable producer→consumer chains over suite operators (DESIGN.md §9–§10).
 
-A :class:`ChainSpec` names the chain's GM tensors, its ordered stages
-(each a suite op applied to chain tensors), which intermediate links stay
-exposed as outputs, and the input pad values that keep the *computed*
-intermediate neutral in the lane-padded region (e.g. ``input=-3e38,
-scale=1.0`` so a fused ``mul → softmax`` sees ``-3e38`` — softmax's
-neutral pad — at padded columns it never loaded).
+A :class:`ChainSpec` names the chain's GM tensors, its topologically
+ordered stage DAG (each a suite op applied to chain tensors), which
+intermediate links stay exposed as outputs, and the input pad values that
+keep the *computed* intermediate neutral in the lane-padded region (e.g.
+``input=-3e38, scale=1.0`` so a fused ``mul → softmax`` sees ``-3e38`` —
+softmax's neutral pad — at padded columns it never loaded).  Specs are
+never written by hand: :data:`CHAINS` is populated by the dataflow
+proposer (``fusion/propose.py``) from declared workload op graphs.
 
-Every stage is built through one shared row-resident harness — the same
-(R, C) row-block structure as ``examples/normalization._rowwise_core``,
-with ``block_rows`` *forced* to a chain-wide value so all stage programs
-share the grid and the per-step GM spans the fusion pass requires.  Stage
-compute semantics reuse the planner's own expert recipes (``softmax_recipe``,
-``rmsnorm_recipe``, the elementwise unary recipes), so a fused chain is the
-stitched composition of exactly the programs the planner would generate.
+Each chain builds through one of two shared stage harnesses:
 
-``block_rows`` is planned from the stitched program's *exact* VMEM
-footprint (probed at two block sizes; the footprint is affine in
-``block_rows``), then re-validated by the fusion pass.  A chain whose
-single-row footprint exceeds the budget raises ``NotImplementedError`` —
-the capacity-refusal convention — and :func:`build_fused` falls back to
-the unfused sequential form.
+* **resident** — the (R, C) row-block structure of
+  ``examples/normalization._rowwise_core`` with ``block_rows`` forced to
+  a chain-wide value, planned from the stitched program's *exact* VMEM
+  footprint (affine in ``block_rows``; probed at two sizes);
+* **streaming** — rows too wide for residency: a per-core row loop over
+  column tiles sharing a chain-wide ``tile_length``; map stages reuse the
+  elementwise recipes tile-wise, ``softmax``/``rmsnorm`` use the Fig.-2
+  multi-pass templates with running scalars, and the loop-carry stitcher
+  (``fuse.py``) jams/splices them.
+
+Stage compute semantics reuse the planner's own expert recipes, so a
+fused chain is the stitched composition of exactly the programs the
+planner would generate.  ``build_chain(pattern='auto')`` prefers
+resident and streams on the capacity refusal; a chain that can do
+neither raises ``NotImplementedError`` and :func:`build_fused` falls
+back to the unfused sequential form.
 """
 from __future__ import annotations
 
@@ -33,7 +39,7 @@ from ..dsl import language as tl
 from ..lowering.pipeline import Knobs
 from ..examples import elementwise as EW
 from ..examples import normalization as NORM
-from ..examples.common import RecipeCtx, _rup
+from ..examples.common import RecipeCtx, _rup, divisor_cores
 from .fuse import FusionError, fuse_programs, sequence_programs
 
 LANE = 128
@@ -136,38 +142,31 @@ class ChainSpec:
         return full
 
 
-CHAINS: Dict[str, ChainSpec] = {
-    "bias_gelu": ChainSpec(
-        name="bias_gelu",
-        inputs=(("input", 2), ("bias", 1)),
-        outputs=("output",),
-        stages=(ChainStage("add", ("input", "bias"), "h"),
-                ChainStage("gelu", ("h",), "output"))),
-    "mul_softmax": ChainSpec(
-        name="mul_softmax",
-        inputs=(("input", 2), ("scale", 1)),
-        outputs=("output",),
-        stages=(ChainStage("mul", ("input", "scale"), "h"),
-                ChainStage("softmax", ("h",), "output")),
-        # computed pad of h = -3e38 * 1.0 — softmax's neutral element
-        pad_values=(("input", -3.0e38), ("scale", 1.0))),
-    "rmsnorm_swiglu": ChainSpec(
-        name="rmsnorm_swiglu",
-        inputs=(("input", 2), ("weight", 1), ("gate", 2)),
-        outputs=("output",),
-        stages=(ChainStage("rmsnorm", ("input", "weight"), "h"),
-                ChainStage("swiglu", ("h", "gate"), "output"))),
-    # re-derivation of the hand-written build_add_rmsnorm: the link is kept
-    # as the updated residual stream, so the fused traffic matches it
-    "add_rmsnorm": ChainSpec(
-        name="add_rmsnorm",
-        inputs=(("input", 2), ("residual", 2), ("weight", 1)),
-        outputs=("output", "new_residual"),
-        stages=(ChainStage("add", ("input", "residual"), "h"),
-                ChainStage("rmsnorm", ("h", "weight"), "output")),
-        keep=(("h", "new_residual"),),
-        route=(("h", "new_residual"),)),
-}
+# Ops whose streaming form carries a loop-carried scalar recurrence (the
+# paper's Fig. 2 pattern); every other STAGE_OP is tile-local ("map") and
+# can be jammed into any column-tile loop.
+STREAM_STATS = ("softmax", "rmsnorm")
+
+
+# --------------------------------------------------------------------------
+# CHAINS — proposed, not hand-declared (DESIGN.md §10).
+#
+# Every entry is derived by the dataflow proposer (fusion/propose.py) from
+# a declared op graph: stage ordering, keep/route, pad values and chain
+# segmentation are all computed, never written by hand.  The four chains
+# PR 2 declared manually (bias_gelu, mul_softmax, rmsnorm_swiglu,
+# add_rmsnorm) are re-derived here — a golden test pins the proposer's
+# output to the shapes those hand entries had.
+# --------------------------------------------------------------------------
+
+from .propose import GRAPHS, propose_chains  # noqa: E402  (needs ChainSpec)
+
+CHAINS: Dict[str, ChainSpec] = {}
+for _g in GRAPHS:
+    for _spec in propose_chains(_g):
+        if _spec.name in CHAINS:
+            raise FusionError(f"duplicate proposed chain '{_spec.name}'")
+        CHAINS[_spec.name] = _spec
 
 
 # --------------------------------------------------------------------------
@@ -243,7 +242,160 @@ def _stage_program(spec: ChainSpec, idx: int, stage: ChainStage,
 
 
 # --------------------------------------------------------------------------
-# Chain building: pad -> plan block_rows -> stitch -> re-validate
+# Streaming stage harness (rows too wide for residency, DESIGN.md §10)
+# --------------------------------------------------------------------------
+
+def _stream_stage_program(spec: ChainSpec, idx: int, stage: ChainStage,
+                          shapes: Dict[str, Tuple[int, ...]], orig_cols: int,
+                          tile: int) -> A.Program:
+    """One chain stage in canonical streaming form: a per-core row loop
+    over column tiles.  Map ops reuse the elementwise recipes tile-wise;
+    ``softmax``/``rmsnorm`` use the paper's Fig.-2 multi-pass templates
+    with running scalars (written so the first pass never mutates the
+    loaded link tile — the loop-carry stitcher's spill store reads it)."""
+    sop = STAGE_OPS.get(stage.op)
+    if sop is None:
+        raise FusionError(f"no fusable stage recipe for op '{stage.op}'")
+    if len(stage.inputs) != len(sop.canon):
+        raise FusionError(
+            f"stage '{stage.op}' takes {len(sop.canon)} operands, chain "
+            f"'{spec.name}' wires {len(stage.inputs)}")
+    primary = spec.primary
+    rank_p = len(shapes[primary])
+    names = set(stage.inputs) | {stage.output, primary}
+    P = tl.ProgramBuilder(
+        f"{spec.name}_s{idx}_{stage.op}", category="fused",
+        task_shapes={t: tuple(shapes[t]) for t in sorted(names)},
+        rationale=f"streaming chain stage {idx}: {stage.op}")
+    h = P.host()
+    numel = h.numel(primary)
+    c = h.dim(primary, rank_p - 1)
+    rows_v = h.let("rows", numel // c)
+    n_cores = h.let("n_cores",
+                    divisor_cores(prod(shapes[primary][:-1]), tl.NUM_CORES),
+                    rationale="largest core count dividing rows exactly")
+    rows_per_core = h.let("rows_per_core", rows_v // n_cores)
+    tile_length = h.let(
+        "tile_length", int(tile),
+        rationale="chain-wide column tile: shared by every stage so the "
+                  "loop-carry stitcher can jam identical tile loops")
+    n_tiles = h.let("n_tiles", c // tile_length)
+    h.launch(grid="n_cores")
+
+    tensors = [(t, tl.f32, "in", len(shapes[t])) for t in stage.inputs]
+    tensors.append((stage.output, tl.f32, "out", len(shapes[stage.output])))
+    eps = float(dict(spec.attrs).get("eps", 1e-6))
+    with P.kernel(tensors=tensors):
+        pid = tl.program_id(0)
+
+        def _off(t, r, tv):
+            # rank-1 operands broadcast across rows; rank-2 are row-major
+            return (tv * tile_length if len(shapes[t]) == 1
+                    else r * c + tv * tile_length)
+
+        if stage.op == "softmax":
+            x_t = stage.inputs[0]
+            xt = tl.alloc_ub("xt", (tile_length,), tl.f32)
+            yt = tl.alloc_ub("yt", (tile_length,), tl.f32)
+            red = tl.alloc_ub("red", (1,), tl.f32)
+            with tl.for_range("r", pid * rows_per_core, rows_per_core) as r:
+                rmax = tl.scalar("row_max", -3.0e38)
+                with tl.for_range("t1", 0, n_tiles) as t:
+                    with tl.copyin():
+                        tl.load(x_t, _off(x_t, r, t), xt,
+                                pad_value=spec.pad_value(x_t))
+                    with tl.compute():
+                        tl.reduce_max(red, xt)
+                        tl.assign(rmax, tl.smax(rmax,
+                                                tl.extract_scalar(red, 0)))
+                rsum = tl.scalar("row_sum", 0.0)
+                with tl.for_range("t2", 0, n_tiles) as t:
+                    with tl.copyin():
+                        tl.load(x_t, _off(x_t, r, t), xt)
+                    with tl.compute():
+                        tl.sub(yt, xt, rmax)
+                        tl.exp(yt, yt)
+                        tl.reduce_sum(red, yt)
+                        tl.assign(rsum, rsum + tl.extract_scalar(red, 0))
+                with tl.for_range("t3", 0, n_tiles) as t:
+                    with tl.copyin():
+                        tl.load(x_t, _off(x_t, r, t), xt)
+                    with tl.compute():
+                        tl.sub(yt, xt, rmax)
+                        tl.exp(yt, yt)
+                        tl.div(yt, yt, rsum)
+                    with tl.copyout():
+                        tl.store(stage.output, r * c + t * tile_length, yt)
+        elif stage.op == "rmsnorm":
+            x_t = stage.inputs[0]
+            w_t = stage.inputs[1] if len(stage.inputs) > 1 else None
+            xt = tl.alloc_ub("xt", (tile_length,), tl.f32)
+            sq = tl.alloc_ub("sq", (tile_length,), tl.f32)
+            if w_t is not None:
+                wt = tl.alloc_ub("wt", (tile_length,), tl.f32)
+            red = tl.alloc_ub("red", (1,), tl.f32)
+            with tl.for_range("r", pid * rows_per_core, rows_per_core) as r:
+                ss = tl.scalar("sum_sq", 0.0)
+                with tl.for_range("t1", 0, n_tiles) as t:
+                    with tl.copyin():
+                        tl.load(x_t, _off(x_t, r, t), xt)
+                    with tl.compute():
+                        tl.square(sq, xt)
+                        tl.reduce_sum(red, sq)
+                        tl.assign(ss, ss + tl.extract_scalar(red, 0))
+                inv = tl.scalar("inv_rms", 0.0)
+                with tl.compute():
+                    # scalar rsqrt through a 1-element UB buffer
+                    tl.full(red, ss * (1.0 / orig_cols) + eps)
+                    tl.rsqrt(red, red)
+                    tl.assign(inv, tl.extract_scalar(red, 0))
+                with tl.for_range("t2", 0, n_tiles) as t:
+                    with tl.copyin():
+                        tl.load(x_t, _off(x_t, r, t), xt)
+                        if w_t is not None:
+                            tl.load(w_t, t * tile_length, wt)
+                    with tl.compute():
+                        tl.mul(sq, xt, inv)
+                        if w_t is not None:
+                            tl.mul(sq, sq, wt)
+                    with tl.copyout():
+                        tl.store(stage.output, r * c + t * tile_length, sq)
+        elif stage.op in STREAM_STATS:
+            raise FusionError(
+                f"op '{stage.op}' has no streaming stage template")
+        else:
+            # tile-local map stage: same recipes as the resident harness,
+            # applied to 1-D column tiles (rank-1 operands need no
+            # broadcast — their tile is the same shape)
+            by_tensor: Dict[str, A.Buffer] = {}
+            bufs: Dict[str, A.Buffer] = {}
+            for canon, t in zip(sop.canon, stage.inputs):
+                if t not in by_tensor:
+                    by_tensor[t] = tl.alloc_ub(f"{t}_t", (tile_length,),
+                                               tl.f32)
+                bufs[canon] = by_tensor[t]
+            ctx = RecipeCtx(pb=P,
+                            attrs={**dict(spec.attrs),
+                                   "input": "input", "output": "output"},
+                            bufs=bufs, tile_shape=(tile_length,),
+                            dtype=tl.f32)
+            ctx.extras["cols"] = orig_cols
+            with tl.for_range("r", pid * rows_per_core, rows_per_core) as r:
+                with tl.for_range("t", 0, n_tiles) as t:
+                    with tl.copyin():
+                        for t_name, buf in by_tensor.items():
+                            tl.load(t_name, _off(t_name, r, t), buf,
+                                    pad_value=spec.pad_value(t_name))
+                    with tl.compute():
+                        sop.recipe(ctx)
+                    with tl.copyout():
+                        tl.store(stage.output, r * c + t * tile_length,
+                                 ctx.result("output"))
+    return P.build()
+
+
+# --------------------------------------------------------------------------
+# Chain building: pad -> plan block_rows/tile -> stitch -> re-validate
 # --------------------------------------------------------------------------
 
 def _divisors_desc(n: int) -> List[int]:
@@ -265,7 +417,22 @@ def _stitch(spec: ChainSpec, shapes: Dict[str, Tuple[int, ...]],
     order = [t for t, _ in spec.inputs] + list(spec.outputs)
     if mode == "fused":
         return fuse_programs(progs, name=name, keep=dict(spec.keep),
+                             route=dict(spec.route), tensor_order=order,
+                             revalidate=revalidate)
+    return sequence_programs(progs, name=name, route=dict(spec.route),
                              tensor_order=order, revalidate=revalidate)
+
+
+def _stitch_streaming(spec: ChainSpec, shapes: Dict[str, Tuple[int, ...]],
+                      orig_cols: int, tile: int, mode: str, name: str,
+                      revalidate: bool) -> A.Program:
+    progs = [_stream_stage_program(spec, i, st, shapes, orig_cols, tile)
+             for i, st in enumerate(spec.stages)]
+    order = [t for t, _ in spec.inputs] + list(spec.outputs)
+    if mode == "fused":
+        return fuse_programs(progs, name=name, keep=dict(spec.keep),
+                             route=dict(spec.route), tensor_order=order,
+                             revalidate=revalidate)
     return sequence_programs(progs, name=name, route=dict(spec.route),
                              tensor_order=order, revalidate=revalidate)
 
@@ -277,19 +444,50 @@ def _footprint(prog: A.Program) -> int:
 
 def build_chain(spec: ChainSpec, shapes: Dict[str, Tuple[int, ...]],
                 knobs: Optional[Knobs] = None, *, mode: str = "fused",
-                name: Optional[str] = None) -> A.Program:
+                name: Optional[str] = None,
+                pattern: str = "auto") -> A.Program:
     """Build the chain as one DSL program (``mode='fused'`` or
-    ``'sequential'``), ready for the transcompiler."""
+    ``'sequential'``), ready for the transcompiler.
+
+    ``pattern`` picks the stage harness: ``'resident'`` (single-visit row
+    blocks), ``'streaming'`` (per-core row loops over column tiles, with
+    loop-carried stats), or ``'auto'`` — resident when a row block fits
+    VMEM, streaming otherwise."""
     if mode not in ("fused", "sequential"):
         raise ValueError(f"mode must be 'fused' or 'sequential', not {mode!r}")
+    if pattern not in ("auto", "resident", "streaming"):
+        raise ValueError(f"bad pattern {pattern!r}")
     name = name or (spec.name if mode == "sequential"
                     else f"{spec.name}_fused")
     orig = {k: tuple(int(s) for s in v) for k, v in shapes.items()}
     full = spec.chain_shapes(orig)
     primary = spec.primary
     orig_cols = int(full[primary][-1])
+
+    refusal: Optional[NotImplementedError] = None
+    if pattern in ("auto", "resident"):
+        try:
+            return _build_resident(spec, orig, full, orig_cols, mode, name)
+        except NotImplementedError as e:
+            if pattern == "resident":
+                raise
+            refusal = e
+    try:
+        return _build_streaming(spec, orig, full, orig_cols, mode, name)
+    except FusionError as e:
+        if pattern == "streaming":
+            raise
+        # streaming is structurally unsupported for this chain: surface
+        # the resident capacity refusal so callers fall back to the
+        # sequential form (NotImplementedError convention)
+        raise refusal or NotImplementedError(
+            f"chain '{spec.name}' cannot stream: {e}") from e
+
+
+def _build_resident(spec: ChainSpec, orig, full, orig_cols: int, mode: str,
+                    name: str) -> A.Program:
     padded = {t: (*s[:-1], _rup(s[-1], LANE)) for t, s in full.items()}
-    rows = prod(padded[primary][:-1])
+    rows = prod(padded[spec.primary][:-1])
 
     # exact footprint is affine in block_rows: probe at two sizes
     b1 = _footprint(_stitch(spec, padded, orig_cols, 1, mode, name,
@@ -311,16 +509,68 @@ def build_chain(spec: ChainSpec, shapes: Dict[str, Tuple[int, ...]],
         except NotImplementedError as e:    # footprint estimate off: step down
             last_refusal = e
             continue
-        return _finalize(prog, spec, orig, padded, orig_cols)
+        return _finalize(prog, spec, orig, orig_cols, "resident")
     raise last_refusal or NotImplementedError(
         f"{mode} chain '{spec.name}' does not fit VMEM at any block_rows")
 
 
-def _finalize(prog: A.Program, spec: ChainSpec, orig, padded,
-              orig_cols: int) -> A.Program:
+_STREAM_TILE_CAP = 4096     # elements; matches the expert examples' default
+
+
+def _stream_tile(spec: ChainSpec, full, orig_cols: int, mode: str,
+                 name: str) -> int:
+    """Plan the chain-wide column tile: probe the stitched footprint at
+    two tile lengths (affine in tile), cap by the VMEM budget, and prefer
+    a tile that divides the lane-padded column count (less padding)."""
+    b1 = _footprint(_stitch_streaming(spec, _tile_pad(full, LANE),
+                                      orig_cols, LANE, mode, name,
+                                      revalidate=False))
+    b2 = _footprint(_stitch_streaming(spec, _tile_pad(full, 2 * LANE),
+                                      orig_cols, 2 * LANE, mode, name,
+                                      revalidate=False))
+    per_lane = max(1, b2 - b1)
+    base = b1 - per_lane
+    if base + per_lane > tl.VMEM_BUDGET:
+        raise NotImplementedError(
+            f"{mode} streaming chain '{spec.name}' needs {base + per_lane} "
+            f"B of UB at tile={LANE} > VMEM budget {tl.VMEM_BUDGET} B")
+    max_lanes = int((tl.VMEM_BUDGET - base) // per_lane)
+    cols_lanes = -(-orig_cols // LANE)
+    lanes = max(1, min(max_lanes, _STREAM_TILE_CAP // LANE, cols_lanes))
+    divs = [d for d in _divisors_desc(cols_lanes) if d <= lanes]
+    if divs and divs[0] * 8 >= lanes:   # a near-cap divisor: no padding
+        lanes = divs[0]
+    return lanes * LANE
+
+
+def _tile_pad(full, tile):
+    return {t: (*s[:-1], _rup(s[-1], tile)) for t, s in full.items()}
+
+
+def _build_streaming(spec: ChainSpec, orig, full, orig_cols: int,
+                     mode: str, name: str) -> A.Program:
+    tile = _stream_tile(spec, full, orig_cols, mode, name)
+    last_refusal: Optional[NotImplementedError] = None
+    while tile >= LANE:
+        try:
+            prog = _stitch_streaming(spec, _tile_pad(full, tile), orig_cols,
+                                     tile, mode, name, revalidate=True)
+            return _finalize(prog, spec, orig, orig_cols, "streaming")
+        except NotImplementedError as e:   # footprint estimate off
+            last_refusal = e
+            tile //= 2
+    raise last_refusal or NotImplementedError(
+        f"{mode} streaming chain '{spec.name}' does not fit VMEM at any "
+        f"tile length")
+
+
+def _finalize(prog: A.Program, spec: ChainSpec, orig,
+              orig_cols: int, pattern: str) -> A.Program:
     tensor_names = [tp.name for tp in prog.kernel.tensors]
+    pad_unit = ("cols_padded_unit" if pattern == "resident"
+                else "tile_length")
     prog.meta["gm_layout"] = {
-        t: {"pad_axis": -1, "pad_multiple": "cols_padded_unit",
+        t: {"pad_axis": -1, "pad_multiple": pad_unit,
             "pad_value": spec.pad_value(t)} for t in tensor_names}
     prog.meta["orig_shapes"] = {t: orig[t] for t in tensor_names
                                 if t in orig}
@@ -328,8 +578,9 @@ def _finalize(prog: A.Program, spec: ChainSpec, orig, padded,
         tp.name: "tuple(_arrs[0].shape)" for tp in prog.kernel.tensors
         if tp.role is A.Role.OUT}
     prog.meta["make_guards"] = [
-        ("p['rows'] % p['block_rows'] == 0",
-         "rows must be a multiple of the generated block_rows; regenerate "
+        ("p['rows'] % p['block_rows'] == 0" if pattern == "resident"
+         else "p['rows'] % p['n_cores'] == 0",
+         "rows must divide the generated core/block partition; regenerate "
          "the chain for this shape"),
         # guard the ORIGINAL trailing dim: reduction divisors (e.g. the
         # rmsnorm mean) are baked from it, and two different column counts
@@ -360,30 +611,61 @@ def build_fused(spec_or_name, shapes: Dict[str, Tuple[int, ...]],
 # Planner / tuner integration
 # --------------------------------------------------------------------------
 
-def sequential_builder(chain: str) -> Callable:
-    """Planner-registry builder: the chain as the unfused sequential
-    program (the safe default the tuner improves on)."""
+def _chain_builder(chain: str, mode: str, pattern: str = "auto") -> Callable:
     spec = CHAINS[chain]
 
     def build(task, shapes, knobs=None):
-        return build_chain(spec, shapes, knobs, mode="sequential",
-                           name=task.name)
-    build.__name__ = f"build_{chain}_sequential"
-    build.knob_free = True      # block_rows is planned, knobs are unused
+        nm = task.name if mode == "sequential" else f"{task.name}_fused"
+        return build_chain(spec, shapes, knobs, mode=mode, name=nm,
+                           pattern=pattern)
+    build.__name__ = f"build_{chain}_{mode}_{pattern}"
+    build.knob_free = True      # block_rows/tile is planned, knobs unused
+
+    def check_builder_for(prog) -> Optional[Callable]:
+        """Family-aware verification hook (used by the planner's check
+        build and the tuner's gate): a pattern='auto' builder resolves by
+        shape, so the small check shapes could silently verify a resident
+        program while the bench artifact streams.  Return a builder forced
+        to the bench artifact's pattern instead."""
+        pat = (prog.meta.get("fusion") or {}).get("pattern")
+        if pat in ("resident", "streaming") and pat != pattern:
+            return _chain_builder(chain, mode, pat)
+        return None
+    build.check_builder_for = check_builder_for
     return build
+
+
+def sequential_builder(chain: str) -> Callable:
+    """Planner-registry builder: the chain as the unfused sequential
+    program (the safe default the tuner improves on); streams when a row
+    block cannot fit VMEM."""
+    return _chain_builder(chain, "sequential")
 
 
 def fused_builder(chain: str) -> Callable:
-    """Variant builder: the fused chain (refuses on VMEM overflow, so the
-    tuner's correctness/build gate falls back to the default)."""
-    spec = CHAINS[chain]
+    """Variant builder: the fused chain — resident single-visit when it
+    fits, loop-carry-stitched streaming otherwise; refuses (so the tuner's
+    gate falls back to the default) only when neither fits."""
+    return _chain_builder(chain, "fused")
 
-    def build(task, shapes, knobs=None):
-        return build_chain(spec, shapes, knobs, mode="fused",
-                           name=f"{task.name}_fused")
-    build.__name__ = f"build_{chain}_fused"
-    build.knob_free = True      # block_rows is planned, knobs are unused
-    return build
+
+def streaming_sequential_builder(chain: str) -> Callable:
+    """The chain's streaming sequential form — registered under the
+    planner's ``<op>_streaming`` fallback convention and used to verify
+    streaming-family artifacts at check shapes."""
+    return _chain_builder(chain, "sequential", "streaming")
+
+
+def register_planner_chains(registry: Dict[str, Callable]) -> None:
+    """Install every proposed chain into the planner registry: the
+    sequential baseline as the default builder (unless a hand-written
+    expert builder already owns the op) plus the ``<op>_streaming``
+    capacity-refusal fallback."""
+    for cname in CHAINS:
+        if cname not in registry:
+            registry[cname] = sequential_builder(cname)
+        registry.setdefault(f"{cname}_streaming",
+                            streaming_sequential_builder(cname))
 
 
 def register_fusion_variants(register_variant: Callable) -> None:
@@ -394,5 +676,6 @@ def register_fusion_variants(register_variant: Callable) -> None:
         register_variant(cname, "fused", fused_builder(cname))
     # the planner default for add_rmsnorm is the hand-written expert
     # builder; expose the auto-derived sequential baseline alongside it
-    register_variant("add_rmsnorm", "sequential",
-                     sequential_builder("add_rmsnorm"))
+    if "add_rmsnorm" in CHAINS:
+        register_variant("add_rmsnorm", "sequential",
+                         sequential_builder("add_rmsnorm"))

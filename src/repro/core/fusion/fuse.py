@@ -1,41 +1,55 @@
-"""DSL-to-DSL kernel fusion pass (DESIGN.md §9).
+"""DSL-to-DSL kernel fusion pass (DESIGN.md §9–§10).
 
-Operates on lowered *DSL programs*, not on tasks: given an ordered chain of
-single-visit programs (the rowwise-resident stage pattern of
-``lowering/analysis.py`` — stage blocks only, no loops, no running scalars)
-where one program's output tensor is a later program's input tensor, the
-pass stitches their ``copyin``/``compute``/``copyout`` stages into one
-program.
+Operates on lowered *DSL programs*, not on tasks: given a topologically
+ordered producer→consumer DAG of stage programs where one program's output
+tensor is a later program's input tensor, the pass stitches their
+``copyin``/``compute``/``copyout`` structure into one program.
 
-Two stitching modes share all legality checks:
+:func:`fuse_programs` and :func:`sequence_programs` are *pattern
+dispatched* (``lowering/analysis.program_pattern``):
 
-* :func:`fuse_programs` — the optimization.  Each *link* tensor (produced
-  by one stage, consumed by a later one) becomes a UB temporary (the TBuf
-  analogue): its ``Store``/``Load`` pair is deleted, the consumer's loaded
-  buffer is substituted by the producer's result buffer, and the merged
-  program keeps a single copyin/compute/copyout visit — so it stays
-  eligible for the BlockSpec-pipelined backend.  The combined VMEM
-  footprint is re-validated against the Pass-0 budget; a refusal raises
-  ``NotImplementedError`` (the planner's capacity-refusal convention) so
-  callers fall back to the unfused form.
-* :func:`sequence_programs` — the *unfused sequential baseline*.  Stages
-  are concatenated as separate copyin/compute/copyout visits and every
-  link round-trips through GM (routed through a shape-compatible output
-  tensor), modeling exactly the per-op HBM traffic eager execution pays.
-  Dead stage buffers are pooled and reused across stages, so the baseline
-  is not penalized with the fused program's combined footprint.
+* **single-visit** stages (the rowwise-resident pattern: stage blocks
+  only, no loops, no running scalars) stitch into one visit.  Each *link*
+  tensor (produced by one stage, consumed by later ones) becomes a UB
+  temporary (the TBuf analogue): its ``Store``/``Load`` pair is deleted,
+  consumer tiles are substituted by the producer's result buffer, and the
+  merged program stays eligible for the BlockSpec-pipelined backend.
+* **streaming** stages (rows too wide for residency) stitch with
+  loop-carry awareness.  Tile-local map stages are *jammed* into one
+  column-tile loop (their links never materialize); a loop-carried stat
+  stage (streaming softmax/rmsnorm — running scalars across passes) keeps
+  its scalar recurrence intact: the producer chain is jammed into the
+  first pass that consumes the link, and when later passes re-read it the
+  link is *spilled once* through a size-compatible output tensor instead
+  of being recomputed per pass (one extra GM round trip instead of
+  re-reading every producer input in every pass).
 
-Buffer names are α-renamed with a per-stage prefix before stitching, so
-chains may reuse expert builders that pick identical local names.
+Both modes re-validate the stitched program against the Pass-0 VMEM
+budget; a refusal raises ``NotImplementedError`` (the planner's
+capacity-refusal convention) so callers fall back to the unfused form.
+
+:func:`sequence_programs` builds the *unfused sequential baseline*: stages
+are concatenated as separate visits (or separate row loops, for streaming
+stages) and every link round-trips through GM, routed through a
+size-compatible output tensor chosen by live-range analysis — a DAG whose
+merge point keeps two links live at once gets an explicit ``scratch<k>``
+GM tensor (excluded from the entry point's returns via
+``meta['scratch_outs']``) rather than an unsound shared target.  Dead
+stage buffers are pooled and reused across stages, so the baseline is not
+penalized with the fused program's combined footprint.
+
+Buffer, loop-variable and running-scalar names are α-renamed with a
+per-stage prefix before stitching, so chains may reuse expert builders
+that pick identical local names.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
 
 from ..dsl import ast as A
 from ..dsl.validate import validate
-from ..lowering.analysis import Affine, affine_of
+from ..lowering.analysis import Affine, affine_of, program_pattern
 
 
 class FusionError(Exception):
@@ -46,8 +60,11 @@ class FusionError(Exception):
 
 
 # --------------------------------------------------------------------------
-# α-renaming + buffer substitution
+# α-renaming + buffer/scalar-var substitution
 # --------------------------------------------------------------------------
+
+_NO_VARS: Mapping[str, A.SVar] = {}
+
 
 def _renamed_buffer(buf: A.Buffer, name: str) -> A.Buffer:
     nb = A.Buffer(name, buf.shape, buf.dtype, buf.space)
@@ -57,39 +74,59 @@ def _renamed_buffer(buf: A.Buffer, name: str) -> A.Buffer:
     return nb
 
 
-def _map_sexpr(e: A.SExpr, bmap: Mapping[str, A.Buffer]) -> A.SExpr:
+def _map_sexpr(e: A.SExpr, bmap: Mapping[str, A.Buffer],
+               vmap: Mapping[str, A.SVar] = _NO_VARS) -> A.SExpr:
     if isinstance(e, A.SExtract):
         return A.SExtract(bmap.get(e.buf.name, e.buf), e.index)
     if isinstance(e, A.SBin):
-        return A.SBin(e.op, _map_sexpr(e.lhs, bmap), _map_sexpr(e.rhs, bmap))
+        return A.SBin(e.op, _map_sexpr(e.lhs, bmap, vmap),
+                      _map_sexpr(e.rhs, bmap, vmap))
+    if isinstance(e, A.SVar) and e.kind in (A.SVarKind.LOOP,
+                                            A.SVarKind.SCALAR):
+        return vmap.get(e.name, e)
     return e
 
 
-def _map_stmt(st: A.Stmt, bmap: Mapping[str, A.Buffer]) -> A.Stmt:
+def _map_stmt(st: A.Stmt, bmap: Mapping[str, A.Buffer],
+              vmap: Mapping[str, A.SVar] = _NO_VARS) -> A.Stmt:
     if isinstance(st, A.AllocUB):
         return A.AllocUB(bmap.get(st.buf.name, st.buf))
     if isinstance(st, A.Load):
         return A.Load(dst=bmap.get(st.dst.name, st.dst), tensor=st.tensor,
-                      start=_map_sexpr(st.start, bmap),
+                      start=_map_sexpr(st.start, bmap, vmap),
                       valid=(None if st.valid is None
-                             else _map_sexpr(st.valid, bmap)),
+                             else _map_sexpr(st.valid, bmap, vmap)),
                       pad_value=st.pad_value)
     if isinstance(st, A.Store):
-        return A.Store(tensor=st.tensor, start=_map_sexpr(st.start, bmap),
+        return A.Store(tensor=st.tensor,
+                       start=_map_sexpr(st.start, bmap, vmap),
                        src=bmap.get(st.src.name, st.src),
                        valid=(None if st.valid is None
-                              else _map_sexpr(st.valid, bmap)))
+                              else _map_sexpr(st.valid, bmap, vmap)))
     if isinstance(st, A.Op):
         return A.Op(op=st.op, dst=bmap.get(st.dst.name, st.dst),
                     srcs=[bmap.get(s.name, s) if isinstance(s, A.Buffer)
-                          else _map_sexpr(s, bmap) for s in st.srcs],
+                          else _map_sexpr(s, bmap, vmap) for s in st.srcs],
                     attrs=dict(st.attrs))
+    if isinstance(st, A.ScalarDecl):
+        return A.ScalarDecl(vmap.get(st.var.name, st.var),
+                            _map_sexpr(st.init, bmap, vmap))
+    if isinstance(st, A.ScalarAssign):
+        return A.ScalarAssign(vmap.get(st.var.name, st.var),
+                              _map_sexpr(st.expr, bmap, vmap))
+    if isinstance(st, A.ForRange):
+        node = A.ForRange(var=vmap.get(st.var.name, st.var),
+                          start=_map_sexpr(st.start, bmap, vmap),
+                          count=st.count,
+                          body=[_map_stmt(s, bmap, vmap) for s in st.body])
+        node.count_name = getattr(st, "count_name", None)  # type: ignore[attr-defined]
+        return node
     if isinstance(st, A.CopyIn):
-        return A.CopyIn([_map_stmt(s, bmap) for s in st.body])
+        return A.CopyIn([_map_stmt(s, bmap, vmap) for s in st.body])
     if isinstance(st, A.ComputeBlock):
-        return A.ComputeBlock([_map_stmt(s, bmap) for s in st.body])
+        return A.ComputeBlock([_map_stmt(s, bmap, vmap) for s in st.body])
     if isinstance(st, A.CopyOut):
-        return A.CopyOut([_map_stmt(s, bmap) for s in st.body])
+        return A.CopyOut([_map_stmt(s, bmap, vmap) for s in st.body])
     raise FusionError(f"statement {type(st).__name__} is not fusable")
 
 
@@ -240,18 +277,22 @@ def _load_key(ld: A.Load):
 
 def _final_params(links: _Links, drop: Set[str],
                   extra_outs: Sequence[Tuple[str, A.TensorParam]],
-                  tensor_order: Optional[Sequence[str]]
-                  ) -> List[A.TensorParam]:
+                  tensor_order: Optional[Sequence[str]],
+                  scratch: Sequence[str] = ()) -> List[A.TensorParam]:
     params = [links.params[n] for n in links.order if n not in drop]
     params += [A.TensorParam(name, tp.dtype, A.Role.OUT, tp.rank)
                for name, tp in extra_outs]
     if tensor_order is not None:
         by_name = {tp.name: tp for tp in params}
-        if set(tensor_order) != set(by_name):
+        named = set(by_name) - set(scratch)
+        if set(tensor_order) != named:
             raise FusionError(
                 f"tensor_order {sorted(tensor_order)} != fused tensors "
-                f"{sorted(by_name)}")
-        params = [by_name[n] for n in tensor_order]
+                f"{sorted(named)}")
+        # scratch GM (DAG sequential routing) rides at the end, after the
+        # declared chain tensors
+        params = [by_name[n] for n in tensor_order] + \
+                 [by_name[n] for n in scratch]
     # entry-point convention: inputs first, then outputs
     return ([tp for tp in params if tp.role is A.Role.IN]
             + [tp for tp in params if tp.role is A.Role.OUT])
@@ -284,22 +325,49 @@ def _revalidate(prog: A.Program, what: str) -> None:
 
 
 # --------------------------------------------------------------------------
-# fuse_programs — delete the Store/Load round trip
+# fuse_programs — pattern dispatch
 # --------------------------------------------------------------------------
 
 def fuse_programs(progs: Sequence[A.Program], *, name: str,
                   keep: Optional[Mapping[str, str]] = None,
+                  route: Optional[Mapping[str, str]] = None,
                   tensor_order: Optional[Sequence[str]] = None,
                   revalidate: bool = True) -> A.Program:
-    """Fuse an ordered producer→consumer chain into one single-visit program.
+    """Fuse an ordered producer→consumer stage DAG into one program.
 
-    ``keep`` maps a link tensor to an *exposed* output name whose Store is
-    retained (e.g. the updated residual stream of add+rmsnorm); all other
-    links are fully eliminated.  Raises :class:`FusionError` for legality
-    failures and ``NotImplementedError`` when the combined VMEM footprint
-    exceeds the Pass-0 budget (``revalidate=True``)."""
+    Dispatches on the stages' dataflow pattern: all-single-visit chains go
+    through the resident stitcher (Store/Load round trips deleted, one
+    visit); streaming chains (tile-loop maps around at most one
+    loop-carried stat stage) go through the loop-carry stitcher.  ``keep``
+    maps a link tensor to an *exposed* output name whose Store is retained
+    (e.g. the updated residual stream of add+rmsnorm); all other links are
+    fully eliminated (or, in the streaming pattern, spilled once when a
+    later pass re-reads them — ``route`` overrides the spill target).
+    Raises :class:`FusionError` for legality failures and
+    ``NotImplementedError`` when the combined VMEM footprint exceeds the
+    Pass-0 budget (``revalidate=True``)."""
     if len(progs) < 2:
         raise FusionError("need at least two programs to fuse")
+    pats = [program_pattern(p) for p in progs]
+    if all(p == "single_visit" for p in pats):
+        return _fuse_single_visit(progs, name=name, keep=keep,
+                                  tensor_order=tensor_order,
+                                  revalidate=revalidate)
+    if all(p in ("streaming_map", "streaming_stat") for p in pats):
+        return _fuse_streaming(progs, name=name, keep=keep, route=route,
+                               tensor_order=tensor_order,
+                               revalidate=revalidate)
+    bad = [f"{p.name}:{pat}" for p, pat in zip(progs, pats)
+           if pat == "other"]
+    raise FusionError(
+        f"stages mix stitching patterns {pats}" +
+        (f" (unstitchable: {bad})" if bad else ""))
+
+
+def _fuse_single_visit(progs: Sequence[A.Program], *, name: str,
+                       keep: Optional[Mapping[str, str]] = None,
+                       tensor_order: Optional[Sequence[str]] = None,
+                       revalidate: bool = True) -> A.Program:
     keep = dict(keep or {})
     stages = [_flatten_stage(i, p) for i, p in enumerate(progs)]
     host, values = _merge_hosts(progs)
@@ -409,8 +477,8 @@ def fuse_programs(progs: Sequence[A.Program], *, name: str,
                                               A.CopyOut(stores)]))
     meta = _merged_meta(progs, values, final,
                         {keep[l]: link_shapes[l] for l in keep})
-    meta["fusion"] = {"mode": "fused", "links": list(links.links),
-                      "kept": dict(keep),
+    meta["fusion"] = {"mode": "fused", "pattern": "resident",
+                      "links": list(links.links), "kept": dict(keep),
                       "stages": [p.name for p in progs]}
     prog = A.Program(
         name=name, host=host, kernel=kernel, category=progs[0].category,
@@ -430,29 +498,25 @@ def fuse_programs(progs: Sequence[A.Program], *, name: str,
 # sequence_programs — the unfused sequential baseline
 # --------------------------------------------------------------------------
 
-def sequence_programs(progs: Sequence[A.Program], *, name: str,
-                      route: Optional[Mapping[str, str]] = None,
-                      tensor_order: Optional[Sequence[str]] = None,
-                      revalidate: bool = True) -> A.Program:
-    """Stitch the chain WITHOUT eliminating the GM round trips.
+@dataclass
+class _Routing:
+    """Outcome of live-range GM routing for the sequential baseline."""
+    route: Dict[str, str]
+    extra: List[Tuple[str, A.TensorParam]]      # newly exposed OUT params
+    scratch: List[str]                          # subset of extra: scratch GM
+    link_shapes: Dict[str, Tuple[int, ...]]
 
-    Every link round-trips through GM via ``route[link]`` (default: the
-    first size-compatible output tensor), so the modeled HBM traffic is the
-    sequential per-op cost.  Stage buffers that are dead after their stage
-    are pooled and reused by later stages (TBuf reuse), so the baseline's
-    VMEM footprint is the max stage working set — it can fit where the
-    fused program refuses."""
-    if not progs:
-        raise FusionError("empty chain")
+
+def _route_links(links: _Links, route: Optional[Mapping[str, str]],
+                 all_ts: Dict[str, Tuple[int, ...]]) -> _Routing:
+    """Assign every link a GM round-trip target.
+
+    A target may host several links as long as their live ranges
+    [producing stage, last consuming stage) do not overlap; a DAG whose
+    merge point keeps two links live simultaneously gets a dedicated
+    ``scratch<k>`` tensor (a real GM allocation the eager baseline would
+    also pay — excluded from the entry point's returns)."""
     route = dict(route or {})
-    stages = [_flatten_stage(i, p) for i, p in enumerate(progs)]
-    host, values = _merge_hosts(progs)
-    links = _analyze_tensors(progs)
-
-    link_shapes: Dict[str, Tuple[int, ...]] = {}
-    all_ts: Dict[str, Tuple[int, ...]] = {}
-    for p in progs:
-        all_ts.update(p.meta.get("task_shapes", {}))
 
     def _numel(t: str) -> int:
         n = 1
@@ -460,10 +524,8 @@ def sequence_programs(progs: Sequence[A.Program], *, name: str,
             n *= int(s)
         return n
 
-    extra: List[Tuple[str, A.TensorParam]] = []
+    r = _Routing(route=route, extra=[], scratch=[], link_shapes={})
     exposed_new: Set[str] = set()
-    # several links may share one route target as long as their GM live
-    # ranges [producing stage, last consuming stage] do not overlap
     target_lives: Dict[str, List[Tuple[int, int]]] = {}
 
     def _claim(target: str, link: str) -> bool:
@@ -478,7 +540,7 @@ def sequence_programs(progs: Sequence[A.Program], *, name: str,
         return True
 
     for link in sorted(links.links, key=lambda l: links.produced[l]):
-        link_shapes[link] = tuple(all_ts.get(link, ()))
+        r.link_shapes[link] = tuple(all_ts.get(link, ()))
         if link not in route:
             cands = [t for t, i in links.produced.items()
                      if t not in links.links and _numel(t) == _numel(link)]
@@ -487,21 +549,75 @@ def sequence_programs(progs: Sequence[A.Program], *, name: str,
                     route[link] = t
                     break
             if link not in route:
-                raise FusionError(
-                    f"link '{link}': no size-compatible output tensor free "
-                    f"to route the GM round trip through")
+                # every size-compatible output is live: spill through a
+                # dedicated scratch GM tensor (live-range-correct DAG
+                # baseline) instead of silently aliasing
+                target = f"scratch{len(r.scratch)}"
+                _claim(target, link)    # fresh name: always claimable
+                route[link] = target
+                r.scratch.append(target)
         else:
             if not _claim(route[link], link):
                 raise FusionError(
                     f"link '{link}': route target '{route[link]}' is live "
                     f"for another link over the same stages")
         target = route[link]
-        if target not in links.params and target not in exposed_new:
+        if target not in exposed_new and (
+                target == link or target not in links.params):
+            # a brand-new target — or a kept link routed through itself,
+            # whose param _final_params would otherwise drop with the links
             exposed_new.add(target)
-            extra.append((target, links.params[link]))
-        elif target in links.params and _numel(target) != _numel(link):
+            r.extra.append((target, links.params[link]))
+            all_ts.setdefault(target, tuple(all_ts.get(link, ())))
+        elif (target in links.params and target != link
+                and _numel(target) != _numel(link)):
             raise FusionError(
                 f"link '{link}': route target '{target}' numel mismatch")
+    return r
+
+
+def sequence_programs(progs: Sequence[A.Program], *, name: str,
+                      route: Optional[Mapping[str, str]] = None,
+                      tensor_order: Optional[Sequence[str]] = None,
+                      revalidate: bool = True) -> A.Program:
+    """Stitch the chain WITHOUT eliminating the GM round trips.
+
+    Every link round-trips through GM via ``route[link]`` (default: a
+    live-range-free size-compatible output tensor, else a scratch GM
+    tensor), so the modeled HBM traffic is the sequential per-op cost.
+    Stage buffers that are dead after their stage are pooled and reused by
+    later stages (TBuf reuse), so the baseline's VMEM footprint is the max
+    stage working set — it can fit where the fused program refuses.
+    Pattern-dispatched like :func:`fuse_programs`: streaming stages are
+    concatenated as separate row loops."""
+    if not progs:
+        raise FusionError("empty chain")
+    pats = [program_pattern(p) for p in progs]
+    if all(p == "single_visit" for p in pats):
+        return _sequence_single_visit(progs, name=name, route=route,
+                                      tensor_order=tensor_order,
+                                      revalidate=revalidate)
+    if all(p in ("streaming_map", "streaming_stat") for p in pats):
+        return _sequence_streaming(progs, name=name, route=route,
+                                   tensor_order=tensor_order,
+                                   revalidate=revalidate)
+    raise FusionError(f"stages mix stitching patterns {pats}")
+
+
+def _sequence_single_visit(progs: Sequence[A.Program], *, name: str,
+                           route: Optional[Mapping[str, str]] = None,
+                           tensor_order: Optional[Sequence[str]] = None,
+                           revalidate: bool = True) -> A.Program:
+    stages = [_flatten_stage(i, p) for i, p in enumerate(progs)]
+    host, values = _merge_hosts(progs)
+    links = _analyze_tensors(progs)
+
+    all_ts: Dict[str, Tuple[int, ...]] = {}
+    for p in progs:
+        all_ts.update(p.meta.get("task_shapes", {}))
+    routing = _route_links(links, route, all_ts)
+    route = routing.route
+    extra, link_shapes = routing.extra, routing.link_shapes
 
     # retarget link traffic + pool/reuse dead buffers across stages
     pool: Dict[Tuple, List[A.Buffer]] = {}
@@ -535,14 +651,17 @@ def sequence_programs(progs: Sequence[A.Program], *, name: str,
         for b in effective:     # dead after this stage: links go through GM
             pool.setdefault((b.shape, b.dtype, b.space), []).append(b)
 
-    final = _final_params(links, set(links.links), extra, tensor_order)
+    final = _final_params(links, set(links.links), extra, tensor_order,
+                          scratch=routing.scratch)
     kernel = A.KernelFn(name=f"{name}_kernel", tensors=final, params=[],
                         body=body + blocks)
     meta = _merged_meta(progs, values, final,
                         {route[l]: link_shapes[l] for l in links.links})
-    meta["fusion"] = {"mode": "sequential", "links": list(links.links),
-                      "route": dict(route),
+    meta["fusion"] = {"mode": "sequential", "pattern": "resident",
+                      "links": list(links.links), "route": dict(route),
                       "stages": [p.name for p in progs]}
+    if routing.scratch:
+        meta["scratch_outs"] = list(routing.scratch)
     prog = A.Program(
         name=name, host=host, kernel=kernel, category=progs[0].category,
         rationale=("sequential chain (unfused baseline, links round-trip "
@@ -554,4 +673,613 @@ def sequence_programs(progs: Sequence[A.Program], *, name: str,
             f"host plan references eliminated tensors: {sorted(bad)}")
     if revalidate:
         _revalidate(prog, "sequential chain")
+    return prog
+
+
+# ==========================================================================
+# Streaming stitchers (DESIGN.md §10) — loop-carried stages
+# ==========================================================================
+
+# canonical unified loop variables of the stitched streaming program
+_ROW = A.SVar("row", A.SVarKind.LOOP)
+_JT = A.SVar("jt", A.SVarKind.LOOP)     # prefix-map jam tile variable
+
+
+@dataclass
+class _SStage:
+    """One parsed + α-renamed streaming stage."""
+    index: int
+    prog: A.Program
+    pattern: str                  # "map" | "stat"
+    allocs: List[A.AllocUB]
+    row: A.ForRange               # row loop; var unified to _ROW
+    out_tensor: str
+
+
+def _parse_stream_stage(i: int, prog: A.Program) -> _SStage:
+    pat = program_pattern(prog)
+    if pat not in ("streaming_map", "streaming_stat"):
+        raise FusionError(
+            f"stage {i} ('{prog.name}') is not a streaming-pattern program "
+            f"(got '{pat}')")
+    k = prog.kernel
+    allocs0 = [s for s in k.body if isinstance(s, A.AllocUB)]
+    row0 = [s for s in k.body if isinstance(s, A.ForRange)][0]
+    bmap = {a.buf.name: _renamed_buffer(a.buf, f"f{i}_{a.buf.name}")
+            for a in allocs0}
+    vmap: Dict[str, A.SVar] = {row0.var.name: _ROW}
+    for st, _ in A.walk_stmts(k.body):
+        if isinstance(st, A.ForRange) and st.var.name != row0.var.name:
+            vmap.setdefault(st.var.name,
+                            A.SVar(f"f{i}_{st.var.name}", A.SVarKind.LOOP))
+        elif isinstance(st, A.ScalarDecl):
+            vmap.setdefault(st.var.name,
+                            A.SVar(f"f{i}_{st.var.name}", A.SVarKind.SCALAR))
+    allocs = [_map_stmt(a, bmap, vmap) for a in allocs0]
+    row = _map_stmt(row0, bmap, vmap)
+    outs = [tp.name for tp in k.tensors if tp.role is A.Role.OUT]
+    if len(outs) != 1:
+        raise FusionError(
+            f"stage {i} ('{prog.name}'): streaming stages must have exactly "
+            f"one output tensor, got {outs}")
+    return _SStage(i, prog, "map" if pat == "streaming_map" else "stat",
+                   allocs, row, outs[0])
+
+
+def _pass_blocks(p: A.ForRange):
+    ci = [s for b in p.body if isinstance(b, A.CopyIn) for s in b.body]
+    co = [s for b in p.body if isinstance(b, A.ComputeBlock) for s in b.body]
+    cu = [s for b in p.body if isinstance(b, A.CopyOut) for s in b.body]
+    return ci, co, cu
+
+
+def _make_pass(template: A.ForRange, var: A.SVar, loads, computes,
+               stores) -> A.ForRange:
+    body: List[A.Stmt] = []
+    if loads:
+        body.append(A.CopyIn(list(loads)))
+    if computes:
+        body.append(A.ComputeBlock(list(computes)))
+    if stores:
+        body.append(A.CopyOut(list(stores)))
+    node = A.ForRange(var=var, start=template.start, count=template.count,
+                      body=body)
+    node.count_name = getattr(template, "count_name", None)  # type: ignore[attr-defined]
+    return node
+
+
+def _tile_norm(e: A.SExpr, tile_var: str):
+    """Affine of ``e`` with the pass's tile variable canonicalized, so
+    spans indexed by different pass variables compare equal."""
+    aff = affine_of(e)
+    if aff is None:
+        return None
+    coeffs = dict(aff.coeffs)
+    if tile_var in coeffs:
+        coeffs["__tile__"] = coeffs.pop(tile_var)
+    return (tuple(sorted(coeffs.items())), aff.const)
+
+
+def _fuse_streaming(progs: Sequence[A.Program], *, name: str,
+                    keep: Optional[Mapping[str, str]] = None,
+                    route: Optional[Mapping[str, str]] = None,
+                    tensor_order: Optional[Sequence[str]] = None,
+                    revalidate: bool = True) -> A.Program:
+    """Loop-carry stitcher: jam tile-local map stages into one column-tile
+    loop; splice the jammed producer chain into the first pass of the (at
+    most one) loop-carried stat stage; spill a link once through a
+    size-compatible output tensor when later passes re-read it; jam suffix
+    maps into the stat's output pass."""
+    keep = dict(keep or {})
+    route = dict(route or {})
+    stages = [_parse_stream_stage(i, p) for i, p in enumerate(progs)]
+    host, values = _merge_hosts(progs)
+    links = _analyze_tensors(progs)
+    unknown = set(keep) - set(links.links)
+    if unknown:
+        raise FusionError(f"keep names non-link tensors: {sorted(unknown)}")
+    stats = [s for s in stages if s.pattern == "stat"]
+    if len(stats) > 1:
+        raise FusionError(
+            "streaming stitcher supports at most one loop-carried (stat) "
+            "stage per chain — two scalar recurrences cannot share a spill "
+            "schedule soundly")
+
+    row0 = stages[0].row
+    a0 = affine_of(row0.start)
+    for s in stages[1:]:
+        if (not _affines_equal(affine_of(s.row.start), a0)
+                or s.row.count != row0.count):
+            raise FusionError(
+                f"stage {s.index}: row loop differs from stage 0's "
+                f"(start/count mismatch) — host plans must agree")
+
+    all_ts: Dict[str, Tuple[int, ...]] = {}
+    for p in progs:
+        all_ts.update(p.meta.get("task_shapes", {}))
+
+    def _numel(t: str) -> int:
+        n = 1
+        for sdim in all_ts.get(t, ()):
+            n *= int(sdim)
+        return n
+
+    # buffers any stage's compute writes (renamed names): loads of these
+    # must never be deduplicated, and shared producer tiles must not be
+    # overwritten while still needed
+    compute_writes: Set[str] = set()
+    for s in stages:
+        for st, _ in A.walk_stmts(s.row.body):
+            if isinstance(st, A.Op):
+                compute_writes.add(st.dst.name)
+
+    # ---- jam state -------------------------------------------------------
+    jam_loads: List[A.Load] = []
+    jam_computes: List[A.Stmt] = []
+    jam_stores: List[A.Store] = []          # direct output stores from maps
+    link_store: Dict[str, A.Store] = {}     # pending link -> producing Store
+    link_consumers: Dict[str, int] = {      # remaining consumer count
+        l: len(links.consumed[l]) for l in links.links}
+    tile_template: Optional[A.ForRange] = None
+    subst: Dict[str, A.Buffer] = {}
+    dead: Set[str] = set()
+    seen_loads: Dict[Tuple, A.Buffer] = {}
+    spills: Dict[str, str] = {}
+    claimed: Set[str] = set(keep.values())
+    merged_items: Optional[List[A.Stmt]] = None   # set once the stat splices
+    final_pass: Optional[A.ForRange] = None       # suffix-jam target
+
+    def _claim_spill(link: str) -> str:
+        if link in route:
+            target = route[link]
+        else:
+            target = None
+            order = tensor_order or links.order
+            for t in order:
+                tp = links.params.get(t)
+                if (tp is not None and tp.role is A.Role.OUT
+                        and t not in links.links and t not in claimed
+                        and _numel(t) == _numel(link)):
+                    target = t
+                    break
+            if target is None:
+                raise FusionError(
+                    f"link '{link}' is re-read across passes but no "
+                    f"size-compatible output tensor is free to spill "
+                    f"through")
+        if target in claimed:
+            raise FusionError(
+                f"link '{link}': spill target '{target}' already claimed")
+        claimed.add(target)
+        spills[link] = target
+        return target
+
+    def _dedup_loads(loads: Sequence[A.Load], tile_var: str) -> List[A.Load]:
+        out = []
+        for ld in loads:
+            key = None
+            if ld.dst.name not in compute_writes and ld.valid is None:
+                norm = _tile_norm(ld.start, tile_var)
+                if norm is not None:
+                    key = (ld.tensor, norm, ld.dst.shape, ld.dst.dtype,
+                           ld.pad_value)
+            if key is not None and key in seen_loads:
+                prev = seen_loads[key]
+                if prev.name != ld.dst.name:
+                    subst[ld.dst.name] = prev
+                    dead.add(ld.dst.name)
+                continue
+            if key is not None:
+                seen_loads[key] = ld.dst
+            out.append(ld)
+        return out
+
+    def _consume_link_load(ld: A.Load, tile_var: str) -> None:
+        """Substitute a jammed link load by the producer's result tile."""
+        prod = link_store[ld.tensor]
+        if ld.valid is not None:
+            raise FusionError(f"link '{ld.tensor}': masked load")
+        if (ld.dst.shape != prod.src.shape
+                or ld.dst.dtype is not prod.src.dtype):
+            raise FusionError(
+                f"link '{ld.tensor}': consumer tile {ld.dst.shape} != "
+                f"producer tile {prod.src.shape}")
+        if _tile_norm(ld.start, tile_var) != _tile_norm(prod.start,
+                                                        tile_var):
+            raise FusionError(
+                f"link '{ld.tensor}': load span differs from store span")
+        subst[ld.dst.name] = prod.src
+        dead.add(ld.dst.name)
+
+    def _jam_map_into(stage: _SStage, loads: List[A.Load],
+                      computes: List[A.Stmt], stores: List[A.Store],
+                      tile_var: A.SVar) -> None:
+        """Jam a map stage's single tile loop into an open (loads,
+        computes, stores) pass under ``tile_var``."""
+        nonlocal tile_template
+        p = [st for st in stage.row.body if isinstance(st, A.ForRange)][0]
+        if tile_template is None:
+            tile_template = p
+        else:
+            if (p.count != tile_template.count
+                    or not _affines_equal(affine_of(p.start),
+                                          affine_of(tile_template.start))):
+                raise FusionError(
+                    f"stage {stage.index}: tile loop differs from the "
+                    f"chain's (count/start mismatch)")
+        vmap = {p.var.name: tile_var}
+        ci, co, cu = _pass_blocks(p)
+        for ld in ci:
+            ld = _map_stmt(ld, subst, vmap)
+            if ld.tensor in link_store:
+                _consume_link_load(ld, tile_var.name)
+                link_consumers[ld.tensor] -= 1
+                if link_consumers[ld.tensor] <= 0 and ld.tensor not in keep:
+                    del link_store[ld.tensor]   # fully eliminated
+                continue
+            if ld.tensor in links.links:
+                raise FusionError(
+                    f"stage {stage.index}: consumes link '{ld.tensor}' "
+                    f"before any jammed stage produced it")
+            loads.extend(_dedup_loads([ld], tile_var.name))
+        for op in co:
+            op = _map_stmt(op, subst, vmap)
+            if isinstance(op, A.Op):
+                for lnk, pst in link_store.items():
+                    if (op.dst.name == pst.src.name
+                            and (link_consumers[lnk] > 0 or lnk in keep)):
+                        raise FusionError(
+                            f"link '{lnk}': stage {stage.index} overwrites "
+                            f"the shared producer tile while it is still "
+                            f"needed")
+            computes.append(op)
+        for st in cu:
+            st = _map_stmt(st, subst, vmap)
+            if st.tensor in links.links:
+                link_store[st.tensor] = st
+                if st.tensor in keep:
+                    stores.append(A.Store(tensor=keep[st.tensor],
+                                          start=st.start, src=st.src,
+                                          valid=st.valid))
+            else:
+                stores.append(st)
+
+    def _splice_stat(stage: _SStage) -> None:
+        nonlocal merged_items, final_pass
+        items = list(stage.row.body)
+        passes = [it for it in items if isinstance(it, A.ForRange)]
+        # the stat's consumed links (its row input, possibly re-read)
+        consumed_here = sorted(
+            {ld.tensor for p in passes for ld in _pass_blocks(p)[0]
+             if ld.tensor in links.links},
+            key=lambda l: links.produced[l])
+        if len(consumed_here) > 1:
+            raise FusionError(
+                f"stat stage consumes {consumed_here}: only one link into "
+                f"the scalar recurrence is supported")
+        have_prefix = bool(jam_loads or jam_computes or jam_stores
+                           or link_store)
+        if not consumed_here:
+            if have_prefix:
+                raise FusionError(
+                    "prefix map stages feed nothing into the stat stage")
+            merged_items = items
+        else:
+            link = consumed_here[0]
+            prod = link_store.pop(link, None)
+            if prod is None:
+                raise FusionError(
+                    f"stat stage consumes '{link}' which no jammed map "
+                    f"stage produced")
+            if link_store and set(link_store) - set(keep):
+                raise FusionError(
+                    f"prefix links {sorted(set(link_store) - set(keep))} "
+                    f"are not consumed by the stat stage (unsupported "
+                    f"cross-stat dataflow)")
+            consuming = [p for p in passes
+                         if any(ld.tensor == link
+                                for ld in _pass_blocks(p)[0])]
+            p1 = consuming[0]
+            vjam = {_JT.name: p1.var}
+            m_loads = [_map_stmt(ld, subst, vjam) for ld in jam_loads]
+            m_computes = [_map_stmt(c, subst, vjam) for c in jam_computes]
+            m_stores = [_map_stmt(st, subst, vjam) for st in jam_stores]
+            prod = _map_stmt(prod, subst, vjam)
+            need_spill = len(consuming) > 1 or link in keep
+            spill_target = None
+            if need_spill:
+                spill_target = (keep.get(link) or _claim_spill(link))
+                if link in keep:
+                    spills[link] = spill_target
+
+            ci, co, cu = _pass_blocks(p1)
+            p1_subst: Dict[str, A.Buffer] = {}
+            new_loads = list(m_loads)
+            for ld in ci:
+                if ld.tensor == link:
+                    if ld.valid is not None:
+                        raise FusionError(f"link '{link}': masked load")
+                    if (ld.dst.shape != prod.src.shape
+                            or ld.dst.dtype is not prod.src.dtype):
+                        raise FusionError(
+                            f"link '{link}': consumer tile {ld.dst.shape} "
+                            f"!= producer tile {prod.src.shape}")
+                    if _tile_norm(ld.start, p1.var.name) != \
+                            _tile_norm(prod.start, p1.var.name):
+                        raise FusionError(
+                            f"link '{link}': load span differs from store "
+                            f"span")
+                    p1_subst[ld.dst.name] = prod.src
+                    dead.add(ld.dst.name)
+                    continue
+                new_loads.extend(_dedup_loads([ld], p1.var.name))
+            consumer_computes = [_map_stmt(c, p1_subst) for c in co]
+            new_computes = m_computes + consumer_computes
+            if need_spill:
+                # the producer's own computes define the tile; only the
+                # CONSUMER's computes mutating it would corrupt the spill
+                # store (which reads the tile after the whole pass)
+                for op in consumer_computes:
+                    if isinstance(op, A.Op) and op.dst.name == prod.src.name:
+                        raise FusionError(
+                            f"link '{link}': pass mutates the producer tile "
+                            f"the spill store still reads")
+            new_stores = list(m_stores)
+            if need_spill:
+                new_stores.append(A.Store(tensor=spill_target,
+                                          start=prod.start, src=prod.src))
+            new_stores += [_map_stmt(st, p1_subst) for st in cu]
+            rebuilt = _make_pass(p1, p1.var, new_loads, new_computes,
+                                 new_stores)
+            items[items.index(p1)] = rebuilt
+            # later passes re-read the spilled value instead of the link
+            for p in consuming[1:]:
+                ci_k, co_k, cu_k = _pass_blocks(p)
+                ci_new = []
+                for ld in ci_k:
+                    if ld.tensor == link:
+                        if _tile_norm(ld.start, p.var.name) != \
+                                _tile_norm(prod.start, p1.var.name):
+                            raise FusionError(
+                                f"link '{link}': re-read span differs from "
+                                f"the spilled span")
+                        ld = A.Load(dst=ld.dst, tensor=spill_target,
+                                    start=ld.start, valid=ld.valid,
+                                    pad_value=ld.pad_value)
+                    ci_new.append(ld)
+                items[items.index(p)] = _make_pass(p, p.var, ci_new, co_k,
+                                                   cu_k)
+            merged_items = items
+        # the stat's output pass (suffix maps jam into it)
+        for it in reversed(merged_items):
+            if isinstance(it, A.ForRange) and _pass_blocks(it)[2]:
+                final_pass = it
+                break
+        if final_pass is None:
+            raise FusionError("stat stage has no output pass")
+
+    def _jam_suffix(stage: _SStage) -> None:
+        nonlocal final_pass
+        p = [st for st in stage.row.body if isinstance(st, A.ForRange)][0]
+        ci_f, co_f, cu_f = _pass_blocks(final_pass)
+        vmap = {p.var.name: final_pass.var}
+        ci, co, cu = _pass_blocks(p)
+        by_tensor = {st.tensor: st for st in cu_f}
+        loads_new = list(ci_f)
+        local: Dict[str, A.Buffer] = {}
+        for ld in ci:
+            ld = _map_stmt(ld, subst, vmap)
+            if ld.tensor in links.links:
+                prod = by_tensor.get(ld.tensor)
+                if prod is None:
+                    raise FusionError(
+                        f"stage {stage.index}: link '{ld.tensor}' is not "
+                        f"produced in the stat's output pass (only "
+                        f"stat-output / suffix links can feed suffix maps)")
+                if ld.valid is not None:
+                    raise FusionError(f"link '{ld.tensor}': masked load")
+                if (ld.dst.shape != prod.src.shape
+                        or ld.dst.dtype is not prod.src.dtype):
+                    raise FusionError(
+                        f"link '{ld.tensor}': consumer tile "
+                        f"{ld.dst.shape} != producer tile {prod.src.shape}")
+                if _tile_norm(ld.start, final_pass.var.name) != \
+                        _tile_norm(prod.start, final_pass.var.name):
+                    raise FusionError(
+                        f"link '{ld.tensor}': load span differs from store "
+                        f"span")
+                local[ld.dst.name] = prod.src
+                dead.add(ld.dst.name)
+                link_consumers[ld.tensor] -= 1
+                continue
+            loads_new.extend(_dedup_loads([ld], final_pass.var.name))
+        computes_new = list(co_f)
+        for op in co:
+            op = _map_stmt(_map_stmt(op, subst, vmap), local)
+            if isinstance(op, A.Op):
+                for lnk, pst in by_tensor.items():
+                    if (lnk in links.links and op.dst.name == pst.src.name
+                            and (link_consumers.get(lnk, 0) > 0
+                                 or lnk in keep)):
+                        raise FusionError(
+                            f"link '{lnk}': suffix stage {stage.index} "
+                            f"overwrites the shared producer tile while it "
+                            f"is still needed")
+            computes_new.append(op)
+        stores_new = []
+        # a link's raw Store stays in the pass until its LAST consumer has
+        # jammed (chained/DAG suffix maps); then it is elided — or
+        # retargeted to the exposed name when the graph keeps it
+        for st in cu_f + [_map_stmt(_map_stmt(s, subst, vmap), local)
+                          for s in cu]:
+            if (st.tensor in links.links
+                    and link_consumers.get(st.tensor, 0) <= 0):
+                if st.tensor not in keep:
+                    continue                 # eliminated round trip
+                st = A.Store(tensor=keep[st.tensor], start=st.start,
+                             src=st.src, valid=st.valid)
+            stores_new.append(st)
+        rebuilt = _make_pass(final_pass, final_pass.var, loads_new,
+                             computes_new, stores_new)
+        merged_items[merged_items.index(final_pass)] = rebuilt
+        final_pass = rebuilt
+
+    # ---- drive -----------------------------------------------------------
+    for stage in stages:
+        if stage.pattern == "stat":
+            _splice_stat(stage)
+        elif merged_items is None:
+            _jam_map_into(stage, jam_loads, jam_computes, jam_stores, _JT)
+        else:
+            _jam_suffix(stage)
+
+    if merged_items is None:
+        # pure map chain: one jammed tile loop (loads already deduped)
+        if tile_template is None:
+            raise FusionError("no tile loop found in any stage")
+        merged_items = [_make_pass(tile_template, _JT, jam_loads,
+                                   jam_computes, jam_stores)]
+
+    # keep allocs only for buffers the stitched body still references
+    # (substituted tiles may stay live in later passes — e.g. a stat's
+    # load buffer reused to re-read the spilled link)
+    used: Set[str] = set()
+
+    def _collect(e):
+        if isinstance(e, A.SExtract):
+            used.add(e.buf.name)
+        elif isinstance(e, A.SBin):
+            _collect(e.lhs)
+            _collect(e.rhs)
+
+    for st, _ in A.walk_stmts(merged_items):
+        if isinstance(st, A.Load):
+            used.add(st.dst.name)
+        elif isinstance(st, A.Store):
+            used.add(st.src.name)
+            _collect(st.start)
+        elif isinstance(st, A.Op):
+            used.add(st.dst.name)
+            for s in st.srcs:
+                if isinstance(s, A.Buffer):
+                    used.add(s.name)
+                else:
+                    _collect(s)
+        elif isinstance(st, (A.ScalarDecl, A.ScalarAssign)):
+            _collect(st.init if isinstance(st, A.ScalarDecl) else st.expr)
+    allocs = [a for s in stages for a in s.allocs if a.buf.name in used]
+    row_node = A.ForRange(var=_ROW, start=row0.start, count=row0.count,
+                          body=merged_items)
+    row_node.count_name = getattr(row0, "count_name", None)  # type: ignore[attr-defined]
+
+    extra = [(keep[l], links.params[l]) for l in links.links if l in keep]
+    final = _final_params(links, set(links.links), extra, tensor_order)
+    final_names = {tp.name for tp in final}
+    for st, _ in A.walk_stmts(merged_items):
+        if (isinstance(st, (A.Load, A.Store))
+                and st.tensor not in final_names):
+            raise FusionError(
+                f"internal: traffic on eliminated link '{st.tensor}' "
+                f"survived streaming stitching")
+    kernel = A.KernelFn(name=f"{name}_kernel", tensors=final, params=[],
+                        body=list(allocs) + [row_node])
+    link_shapes = {keep[l]: tuple(all_ts.get(l, ())) for l in keep}
+    meta = _merged_meta(progs, values, final, link_shapes)
+    meta["fusion"] = {"mode": "fused", "pattern": "streaming",
+                      "links": list(links.links), "kept": dict(keep),
+                      "spills": dict(spills),
+                      "stages": [p.name for p in progs]}
+    prog = A.Program(
+        name=name, host=host, kernel=kernel, category=progs[0].category,
+        rationale=("fused streaming chain (tile loops jammed, running "
+                   "scalars loop-carried, links spilled at most once): "
+                   + " -> ".join(p.name for p in progs)),
+        meta=meta)
+    bad = _host_tensor_refs(host) - {tp.name for tp in final}
+    if bad:
+        raise FusionError(
+            f"host plan references eliminated tensors: {sorted(bad)}")
+    if revalidate:
+        _revalidate(prog, "fused streaming chain")
+    return prog
+
+
+def _retarget_tensors(st: A.Stmt, route: Mapping[str, str]) -> A.Stmt:
+    if isinstance(st, A.Load) and st.tensor in route:
+        return A.Load(dst=st.dst, tensor=route[st.tensor], start=st.start,
+                      valid=st.valid, pad_value=st.pad_value)
+    if isinstance(st, A.Store) and st.tensor in route:
+        return A.Store(tensor=route[st.tensor], start=st.start, src=st.src,
+                       valid=st.valid)
+    if isinstance(st, A.ForRange):
+        node = A.ForRange(var=st.var, start=st.start, count=st.count,
+                          body=[_retarget_tensors(s, route)
+                                for s in st.body])
+        node.count_name = getattr(st, "count_name", None)  # type: ignore[attr-defined]
+        return node
+    if isinstance(st, (A.CopyIn, A.ComputeBlock, A.CopyOut)):
+        return type(st)([_retarget_tensors(s, route) for s in st.body])
+    return st
+
+
+def _sequence_streaming(progs: Sequence[A.Program], *, name: str,
+                        route: Optional[Mapping[str, str]] = None,
+                        tensor_order: Optional[Sequence[str]] = None,
+                        revalidate: bool = True) -> A.Program:
+    """Sequential baseline for streaming chains: one row loop per stage,
+    links round-trip through GM with the same live-range routing (and
+    scratch fallback) as the single-visit baseline."""
+    stages = [_parse_stream_stage(i, p) for i, p in enumerate(progs)]
+    host, values = _merge_hosts(progs)
+    links = _analyze_tensors(progs)
+    all_ts: Dict[str, Tuple[int, ...]] = {}
+    for p in progs:
+        all_ts.update(p.meta.get("task_shapes", {}))
+    routing = _route_links(links, route, all_ts)
+
+    pool: Dict[Tuple, List[A.Buffer]] = {}
+    allocs_out: List[A.AllocUB] = []
+    loops: List[A.Stmt] = []
+    for s in stages:
+        subst: Dict[str, A.Buffer] = {}
+        effective: List[A.Buffer] = []
+        for a in s.allocs:
+            key = (a.buf.shape, a.buf.dtype, a.buf.space)
+            free = pool.get(key)
+            if free:
+                subst[a.buf.name] = free.pop()
+                effective.append(subst[a.buf.name])
+            else:
+                allocs_out.append(a)
+                effective.append(a.buf)
+        loops.append(_retarget_tensors(_map_stmt(s.row, subst),
+                                       routing.route))
+        for b in effective:       # dead after this stage's row loop
+            pool.setdefault((b.shape, b.dtype, b.space), []).append(b)
+
+    final = _final_params(links, set(links.links), routing.extra,
+                          tensor_order, scratch=routing.scratch)
+    kernel = A.KernelFn(name=f"{name}_kernel", tensors=final, params=[],
+                        body=allocs_out + loops)
+    meta = _merged_meta(progs, values, final,
+                        {routing.route[l]: routing.link_shapes[l]
+                         for l in links.links})
+    meta["fusion"] = {"mode": "sequential", "pattern": "streaming",
+                      "links": list(links.links),
+                      "route": dict(routing.route),
+                      "stages": [p.name for p in progs]}
+    if routing.scratch:
+        meta["scratch_outs"] = list(routing.scratch)
+    prog = A.Program(
+        name=name, host=host, kernel=kernel, category=progs[0].category,
+        rationale=("sequential streaming chain (unfused baseline, one row "
+                   "loop per stage, links round-trip through GM): "
+                   + " -> ".join(p.name for p in progs)),
+        meta=meta)
+    bad = _host_tensor_refs(host) - {tp.name for tp in final}
+    if bad:
+        raise FusionError(
+            f"host plan references eliminated tensors: {sorted(bad)}")
+    if revalidate:
+        _revalidate(prog, "sequential streaming chain")
     return prog

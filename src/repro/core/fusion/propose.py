@@ -1,0 +1,334 @@
+"""Dataflow-driven chain proposal (DESIGN.md §10).
+
+PR 2's fusion pass only fused what a human declared in a hand-written
+``CHAINS`` table.  This module replaces the table with *analysis*: a
+declared :class:`OpGraph` records only what a workload computes (ops,
+tensors, which tensors the framework observes); :func:`propose_chains`
+walks its dataflow and derives every fusion decision —
+
+* **links**: a tensor produced by one node and consumed by another with
+  the same (row-shaped) type is a fusion candidate edge;
+* **segmentation**: maximal connected subgraphs of fusable nodes become
+  chains (a non-fusable node, e.g. a matmul, splits the graph; its output
+  re-enters downstream chains as an external input);
+* **stage order**: deterministic topological sort (declaration order
+  breaks ties);
+* **keep/route**: escape analysis — a link the graph exposes as an output
+  keeps its Store and becomes the sequential baseline's GM route target;
+* **pad values**: backward neutral-pad propagation — a reduction stage's
+  neutral element (softmax: -3e38) is pushed through its producers
+  (``mul`` → (ν, 1), ``add``/``sub`` → (ν, 0), zero-preserving unaries →
+  0) until it reaches chain inputs, so lane-padded columns stay inert in
+  the fused compute.
+
+The emitted :class:`~repro.core.fusion.chain.ChainSpec` values are
+registered as planner defaults and tuner variants exactly like the old
+hand entries — the tuner, not the proposer, decides whether fusing wins.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+
+class ProposeError(Exception):
+    """The declared op graph cannot be segmented into sound chains."""
+
+
+@dataclass(frozen=True)
+class OpNode:
+    """One operation in a declared workload dataflow graph."""
+    op: str
+    inputs: Tuple[str, ...]
+    output: str
+
+
+@dataclass(frozen=True)
+class OpGraph:
+    """A workload's dataflow: external tensors, ops, observed outputs.
+
+    Declares *what is computed*, never how to fuse it — stage order,
+    keep/route and pad values are all derived by :func:`propose_chains`.
+    """
+    name: str
+    inputs: Tuple[Tuple[str, int], ...]      # (tensor, rank)
+    outputs: Tuple[str, ...]                 # externally observed tensors
+    nodes: Tuple[OpNode, ...]
+    attrs: Tuple[Tuple[str, object], ...] = ()
+
+
+# --------------------------------------------------------------------------
+# Neutral-pad propagation rules
+# --------------------------------------------------------------------------
+
+# required pad of a stat op's row input so lane-padded columns are inert
+NEUTRAL_ROW_PAD: Dict[str, float] = {"softmax": -3.0e38,
+                                     "log_softmax": -3.0e38}
+
+# f(0) == 0: a zero pad survives these unaries unchanged
+ZERO_PRESERVING = frozenset((
+    "relu", "tanh", "gelu", "silu", "abs", "neg", "square", "sqrt", "sign",
+    "mish", "hardswish", "softsign", "elu", "selu", "expm1", "log1p",
+))
+
+# identity element of the *second* operand so the first operand's pad
+# value passes through unchanged
+_BINARY_IDENTITY: Dict[str, float] = {"add": 0.0, "sub": 0.0, "mul": 1.0}
+
+
+def _require(req: Dict[str, float], tensor: str, value: float) -> None:
+    prev = req.get(tensor)
+    if prev is not None and prev != value:
+        raise ProposeError(
+            f"conflicting pad requirements on '{tensor}': {prev} vs {value}")
+    req[tensor] = value
+
+
+def _infer_pad_values(stages: Sequence[OpNode],
+                      chain_inputs: Sequence[str]) -> Dict[str, float]:
+    req: Dict[str, float] = {}
+    for st in stages:
+        nu = NEUTRAL_ROW_PAD.get(st.op)
+        if nu is not None:
+            _require(req, st.inputs[0], nu)
+    for st in reversed(stages):        # consumers before producers
+        nu = req.get(st.output)
+        if nu is None:
+            continue
+        if st.op in _BINARY_IDENTITY and len(st.inputs) == 2:
+            _require(req, st.inputs[0], nu)
+            _require(req, st.inputs[1], _BINARY_IDENTITY[st.op])
+        elif nu == 0.0 and st.op in ZERO_PRESERVING and len(st.inputs) == 1:
+            _require(req, st.inputs[0], 0.0)
+        else:
+            raise ProposeError(
+                f"cannot propagate the neutral pad {nu} backward through "
+                f"'{st.op}' producing '{st.output}'")
+    return {t: v for t, v in req.items()
+            if t in set(chain_inputs) and v != 0.0}
+
+
+# --------------------------------------------------------------------------
+# Graph analysis
+# --------------------------------------------------------------------------
+
+def _toposort(nodes: Sequence[OpNode], external: Set[str]) -> List[OpNode]:
+    """Kahn's algorithm; declaration order breaks ties (deterministic)."""
+    produced = {n.output for n in nodes}
+    dup = [n.output for n in nodes
+           if sum(m.output == n.output for m in nodes) > 1]
+    if dup:
+        raise ProposeError(f"tensor produced twice: {sorted(set(dup))}")
+    ready: List[OpNode] = []
+    pending = list(nodes)
+    done: Set[str] = set(external)
+    out: List[OpNode] = []
+    while pending or ready:
+        if not ready:
+            ready = [n for n in pending
+                     if all(t in done for t in n.inputs)]
+            if not ready:
+                missing = {t for n in pending for t in n.inputs
+                           if t not in done and t not in produced}
+                raise ProposeError(
+                    f"graph is cyclic or reads undeclared tensors "
+                    f"{sorted(missing)}")
+            pending = [n for n in pending if n not in ready]
+        n = ready.pop(0)
+        out.append(n)
+        done.add(n.output)
+    return out
+
+
+def _components(nodes: Sequence[OpNode], fusable: Set[str],
+                external: Set[str]) -> List[List[OpNode]]:
+    """Connected components of fusable nodes.  Two nodes connect when one
+    produces a tensor the other consumes (a link) or when they read the
+    same external input (a shared producer: the fused kernel loads it
+    once instead of once per branch)."""
+    fus = [n for n in nodes if n.op in fusable]
+    parent: Dict[int, int] = {id(n): id(n) for n in fus}
+    by_id = {id(n): n for n in fus}
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    def union(a, b):
+        ra, rb = find(a), find(b)
+        if ra != rb:
+            parent[ra] = rb
+
+    producer = {n.output: n for n in fus}
+    readers: Dict[str, List[OpNode]] = {}
+    for n in fus:
+        for t in n.inputs:
+            readers.setdefault(t, []).append(n)
+    for t, rs in readers.items():
+        if t in producer:                      # internal link
+            for r in rs:
+                union(id(producer[t]), id(r))
+        elif t in external:                    # shared external input
+            for r in rs[1:]:
+                union(id(rs[0]), id(r))
+    groups: Dict[int, List[OpNode]] = {}
+    order = {id(n): i for i, n in enumerate(nodes)}
+    for n in fus:
+        groups.setdefault(find(id(n)), []).append(n)
+    comps = sorted(groups.values(), key=lambda g: min(order[id(n)]
+                                                      for n in g))
+    for g in comps:
+        g.sort(key=lambda n: order[id(n)])
+    return comps
+
+
+def propose_chains(graph: OpGraph, fusable: Optional[Set[str]] = None):
+    """Walk ``graph``'s dataflow and emit candidate ``ChainSpec`` values,
+    one per maximal fusable subgraph.  Raises :class:`ProposeError` when a
+    subgraph cannot be soundly specified (pad propagation failure,
+    ambiguous ranks, non-row-shaped links)."""
+    from . import chain as C          # late: chain.py builds CHAINS from us
+    if fusable is None:
+        fusable = set(C.STAGE_OPS)
+
+    external = {t for t, _ in graph.inputs}
+    ranks: Dict[str, int] = dict(graph.inputs)
+    nodes = _toposort(graph.nodes, external)
+    for n in nodes:
+        missing = [t for t in n.inputs if t not in ranks]
+        if missing:
+            raise ProposeError(
+                f"node '{n.op}' reads undeclared tensors {missing}")
+        ranks[n.output] = ranks[n.inputs[0]]
+    for t in graph.outputs:
+        if t not in ranks:
+            raise ProposeError(f"declared output '{t}' is never produced")
+
+    produced_by_graph = {n.output for n in graph.nodes}
+    consumers: Dict[str, List[OpNode]] = {}
+    for n in graph.nodes:
+        for t in n.inputs:
+            consumers.setdefault(t, []).append(n)
+
+    comps = _components(nodes, fusable, external)
+    specs = []
+    for ci, comp in enumerate(comps):
+        if len(comp) < 2:
+            continue                  # nothing to fuse
+        in_comp = {n.output for n in comp}
+        # chain inputs: first-read order over the component's stages —
+        # anything read but not produced inside (externals AND outputs of
+        # non-fusable nodes, which re-enter as plain tensors)
+        chain_inputs: List[str] = []
+        for n in comp:
+            for t in n.inputs:
+                if t not in in_comp and t not in chain_inputs:
+                    chain_inputs.append(t)
+        primary = chain_inputs[0] if chain_inputs else None
+        if primary is None or ranks[primary] < 2:
+            raise ProposeError(
+                f"component {ci} of '{graph.name}' has no row-shaped "
+                f"primary input")
+        for n in comp:
+            if ranks[n.inputs[0]] != ranks[primary]:
+                raise ProposeError(
+                    f"stage '{n.op}' row input '{n.inputs[0]}' rank "
+                    f"{ranks[n.inputs[0]]} != primary rank "
+                    f"{ranks[primary]} — link type mismatch")
+        # escape analysis: a produced tensor leaves the chain if the graph
+        # observes it or a node outside the component consumes it
+        escaping: List[str] = []
+        for n in comp:
+            t = n.output
+            outside = [c for c in consumers.get(t, []) if c not in comp]
+            if t in graph.outputs or outside:
+                escaping.append(t)
+        internal_links = [n.output for n in comp
+                          if any(c in comp for c in consumers.get(n.output,
+                                                                  []))]
+        outputs = [t for t in graph.outputs if t in in_comp]
+        outputs += [t for t in escaping if t not in outputs]
+        if not outputs:
+            raise ProposeError(
+                f"component {ci} of '{graph.name}' produces nothing "
+                f"observable")
+        keep = tuple((t, t) for t in internal_links if t in escaping)
+        route = keep                   # kept links route through themselves
+        pads = _infer_pad_values(comp, chain_inputs)
+        name = graph.name if len(
+            [c for c in comps if len(c) >= 2]) == 1 else \
+            f"{graph.name}_c{ci}"
+        specs.append(C.ChainSpec(
+            name=name,
+            inputs=tuple((t, ranks[t]) for t in chain_inputs),
+            outputs=tuple(outputs),
+            stages=tuple(C.ChainStage(n.op, tuple(n.inputs), n.output)
+                         for n in comp),
+            keep=keep,
+            route=route,
+            pad_values=tuple(sorted(pads.items(),
+                                    key=lambda kv:
+                                    chain_inputs.index(kv[0]))),
+            attrs=tuple(graph.attrs)))
+    return specs
+
+
+# --------------------------------------------------------------------------
+# Declared workload graphs
+# --------------------------------------------------------------------------
+# These declare the *dataflow* of framework hot spots (what is computed and
+# which tensors the framework observes) — all fusion structure is derived.
+
+GRAPHS: Tuple[OpGraph, ...] = (
+    # FFN bias + activation epilogue
+    OpGraph(
+        name="bias_gelu",
+        inputs=(("input", 2), ("bias", 1)),
+        outputs=("output",),
+        nodes=(OpNode("add", ("input", "bias"), "h"),
+               OpNode("gelu", ("h",), "output"))),
+    # scaled softmax (temperature / per-column scaling before normalize)
+    OpGraph(
+        name="mul_softmax",
+        inputs=(("input", 2), ("scale", 1)),
+        outputs=("output",),
+        nodes=(OpNode("mul", ("input", "scale"), "h"),
+               OpNode("softmax", ("h",), "output"))),
+    # rmsnorm feeding a gated MLP activation
+    OpGraph(
+        name="rmsnorm_swiglu",
+        inputs=(("input", 2), ("weight", 1), ("gate", 2)),
+        outputs=("output",),
+        nodes=(OpNode("rmsnorm", ("input", "weight"), "h"),
+               OpNode("swiglu", ("h", "gate"), "output"))),
+    # residual add + rmsnorm; the updated residual stream is observed by
+    # the framework, so escape analysis keeps it as a second output
+    OpGraph(
+        name="add_rmsnorm",
+        inputs=(("input", 2), ("residual", 2), ("weight", 1)),
+        outputs=("output", "new_residual"),
+        nodes=(OpNode("add", ("input", "residual"), "new_residual"),
+               OpNode("rmsnorm", ("new_residual", "weight"), "output"))),
+    # attention score pipeline: scale, additive mask, normalize — a
+    # 3-stage chain whose bench shapes are far too wide for residency
+    # (the streaming-pattern chain)
+    OpGraph(
+        name="attn_scores",
+        inputs=(("input", 2), ("scale", 1), ("mask", 1)),
+        outputs=("output",),
+        nodes=(OpNode("mul", ("input", "scale"), "h1"),
+               OpNode("add", ("h1", "mask"), "h2"),
+               OpNode("softmax", ("h2",), "output"))),
+    # two-branch swiglu: gate and up projections read the SAME input
+    # (shared producer), the activation merges both branches — the
+    # DAG-shaped chain
+    OpGraph(
+        name="swiglu_proj",
+        inputs=(("input", 2), ("gate_scale", 1), ("up_scale", 1)),
+        outputs=("output",),
+        nodes=(OpNode("mul", ("input", "gate_scale"), "g"),
+               OpNode("mul", ("input", "up_scale"), "u"),
+               OpNode("swiglu", ("g", "u"), "output"))),
+)

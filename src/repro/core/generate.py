@@ -59,10 +59,13 @@ def framework_tasks():
                           * np.asarray(u, np.float64)))
     # add_rmsnorm (and the other fused chains) come from the fused suite:
     # same tensor contract as before, plus the chain structure in attrs so
-    # the eager baseline prices the sequential add+rmsnorm kernel sequence
+    # the eager baseline prices the sequential add+rmsnorm kernel sequence.
+    # attn_scores / swiglu_proj are the proposer-derived streaming and DAG
+    # chains (DESIGN.md §10).
     picks = [by_name["rmsnorm"], by_name["softmax"], by_name["adamw"], sw,
              by_fused["add_rmsnorm"], by_fused["bias_gelu"],
-             by_fused["rmsnorm_swiglu"]]
+             by_fused["rmsnorm_swiglu"], by_fused["attn_scores"],
+             by_fused["swiglu_proj"]]
     picks += mhc_tasks()
     return picks
 

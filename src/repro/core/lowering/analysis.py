@@ -232,6 +232,51 @@ def classify_buffers(kernel: A.KernelFn) -> BufferClass:
 
 
 # --------------------------------------------------------------------------
+# Program pattern classification (fusion stitcher dispatch, DESIGN.md §10)
+# --------------------------------------------------------------------------
+
+def _only(body, *kinds) -> bool:
+    return all(isinstance(s, kinds) for s in body)
+
+
+def program_pattern(prog: A.Program) -> str:
+    """Classify the kernel's dataflow shape for the fusion stitcher.
+
+    * ``"single_visit"`` — stage blocks only at kernel scope (the rowwise
+      resident pattern): one copyin/compute/copyout visit per grid step.
+    * ``"streaming_map"`` — a row loop containing exactly one column-tile
+      loop whose body is stage blocks; no running scalars.  Elementwise
+      work at streaming scale (tile-local, so tile loops can be jammed).
+    * ``"streaming_stat"`` — a row loop carrying running scalars across
+      one or more column-tile passes (paper Fig. 2: streaming softmax /
+      rmsnorm).  Fusing into it requires loop-carry-aware stitching.
+    * ``"other"`` — anything else (not stitchable).
+    """
+    k = prog.kernel
+    if _only(k.body, A.AllocUB, A.CopyIn, A.ComputeBlock, A.CopyOut):
+        if declared_scalars(k.body):
+            return "other"
+        return "single_visit"
+    loops = [s for s in k.body if isinstance(s, A.ForRange)]
+    rest = [s for s in k.body if not isinstance(s, A.ForRange)]
+    if len(loops) != 1 or not _only(rest, A.AllocUB):
+        return "other"
+    row = loops[0]
+    inner_loops = [s for s in row.body if isinstance(s, A.ForRange)]
+    inner_rest = [s for s in row.body if not isinstance(s, A.ForRange)]
+    if not all(_only(l.body, A.CopyIn, A.ComputeBlock, A.CopyOut)
+               for l in inner_loops):
+        return "other"          # deeper loop nesting also lands here
+    if declared_scalars(row.body):
+        if _only(inner_rest, A.ScalarDecl, A.ComputeBlock) and inner_loops:
+            return "streaming_stat"
+        return "other"
+    if len(inner_loops) == 1 and not inner_rest:
+        return "streaming_map"
+    return "other"
+
+
+# --------------------------------------------------------------------------
 # Pipelined-backend eligibility (BlockSpec derivation)
 # --------------------------------------------------------------------------
 

@@ -124,16 +124,21 @@ PLANNER_REGISTRY["mhc_post"] = \
     lambda t, s, k: MHC.build_mhc_post(t, s, k)
 PLANNER_REGISTRY["mhc_post_grad"] = \
     lambda t, s, k: MHC.build_mhc_post_grad(t, s, k)
+# §Perf row-blocked mhc_post (same bytes, 3 DMA bursts per Rb rows instead
+# of 6 per row) — a register_variant entry the tuner discovers via the
+# transfer-count tie-break, no longer hand-wired in benchmarks/rq3_mhc.py
+PLANNER_REGISTRY["mhc_post_blocked"] = \
+    lambda t, s, k: MHC.build_mhc_post_blocked(t, s, k)
 
-# fused operator chains (DESIGN.md §9): the registry default is the
-# UNFUSED sequential program; the fused form is a tuner-discoverable
-# variant (see tuning/space.py).  add_rmsnorm keeps its hand-written
-# expert builder as the default — the auto-derived chain rides the
-# variant axis to prove parity.
+# fused operator chains (DESIGN.md §9–§10): every chain the dataflow
+# proposer derives (fusion/propose.py) gets the UNFUSED sequential program
+# as its registry default plus a `<op>_streaming` capacity-refusal
+# fallback; the fused form is a tuner-discoverable variant (see
+# tuning/space.py).  add_rmsnorm keeps its hand-written expert builder as
+# the default — the auto-derived chain rides the variant axis to prove
+# parity.
 from .fusion import chain as FUSION  # noqa: E402
-for _cn in FUSION.CHAINS:
-    if _cn not in PLANNER_REGISTRY:
-        PLANNER_REGISTRY[_cn] = FUSION.sequential_builder(_cn)
+FUSION.register_planner_chains(PLANNER_REGISTRY)
 
 # pooling
 PLANNER_REGISTRY["avg_pool1d"] = \
@@ -394,6 +399,14 @@ def generate(task: KernelTask, knobs: Optional[Knobs] = None,
     check_builder_fn = builder_fn
     if variant == "default" and resolved_op != task.op:
         check_builder_fn = PLANNER_REGISTRY.get(resolved_op, builder_fn)
+    elif art is not None:
+        # family hook (fusion chains): a pattern-auto builder resolves by
+        # shape, so the small check shapes could verify a resident program
+        # while the bench artifact streams — ask the builder for a
+        # same-pattern check builder instead
+        hook = getattr(builder_fn, "check_builder_for", None)
+        if hook is not None:
+            check_builder_fn = hook(art.program) or builder_fn
 
     try:
         art_check, _ = resolve_and_build(

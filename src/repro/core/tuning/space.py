@@ -91,7 +91,12 @@ _BUILTIN_VARIANTS = (("avg_pool2d", "rowreuse", "avg_pool2d_rowreuse"),
                      # streaming normalization as a searchable axis (the
                      # planner still falls back to it on VMEM refusal)
                      ("softmax", "streaming", "softmax_streaming"),
-                     ("rmsnorm", "streaming", "rmsnorm_streaming"))
+                     ("rmsnorm", "streaming", "rmsnorm_streaming"),
+                     # ROADMAP item: the row-blocked mHC kernel (paper RQ3
+                     # "bigger DMA bursts" step) rides the variant axis —
+                     # equal modeled bytes, discovered by the tuner's
+                     # transfer-count tie-break
+                     ("mhc_post", "rowblock", "mhc_post_blocked"))
 _builtins_done = False
 
 

@@ -7,7 +7,10 @@
   generated/        checked-in transcompiler artifacts (rmsnorm, softmax,
                     adamw, swiglu, add_rmsnorm, mhc_post, mhc_post_grad,
                     and the tuner-selected fused chains bias_gelu /
-                    rmsnorm_swiglu — DESIGN.md §9)
+                    rmsnorm_swiglu / swiglu_proj plus the loop-carry
+                    streaming attn_scores — DESIGN.md §9–§10; CI
+                    regenerates and diffs them so they can never drift
+                    from the pipeline)
 Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper) and ref.py (pure-jnp oracle); generated artifacts embed their
 host plan + pass log instead.

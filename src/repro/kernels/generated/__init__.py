@@ -5,4 +5,5 @@ Each module is standalone and readable (paper RQ3): `make(shapes)` builds a
 jitted callable; `<name>(*arrays)` is the cached convenience entry.
 """
 from . import (rmsnorm, softmax, adamw, swiglu, add_rmsnorm,
-               bias_gelu, rmsnorm_swiglu, mhc_post, mhc_post_grad)
+               bias_gelu, rmsnorm_swiglu, attn_scores, swiglu_proj,
+               mhc_post, mhc_post_grad)

@@ -45,7 +45,12 @@ def init_norm(cfg: ArchConfig, dim: Optional[int] = None):
 
 
 def apply_norm(p, x, cfg: ArchConfig, eps=1e-6):
-    xf = x.astype(jnp.float32)
+    # multi-pod SPMD: the f32 upcast + scale broadcast is where XLA's
+    # propagation used to flip the activation layout and pay an
+    # involuntary full remat; pin the canonical layout at the boundary
+    # (no-op outside a mesh context)
+    from ..distributed.sharding import constrain_activation
+    xf = constrain_activation(x.astype(jnp.float32))
     if cfg.norm == "layernorm":
         mu = xf.mean(-1, keepdims=True)
         var = ((xf - mu) ** 2).mean(-1, keepdims=True)
@@ -53,7 +58,7 @@ def apply_norm(p, x, cfg: ArchConfig, eps=1e-6):
     else:
         ms = (xf * xf).mean(-1, keepdims=True)
         out = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
-    return out.astype(x.dtype)
+    return constrain_activation(out.astype(x.dtype))
 
 
 # --------------------------------------------------------------------------

@@ -176,6 +176,13 @@ def _body_scan(params, cfg: ArchConfig, state, positions, caches=None):
 
     def scan_fn(carry, xs):
         out, ncache = body(carry, xs)
+        # pin the scan carry's layout so the per-layer stacked buffer (and
+        # the decode-cache dynamic_update_slice) keeps ONE sharding across
+        # iterations instead of remat-resharding at the loop boundary
+        # (no-op outside a mesh context)
+        from ..distributed.sharding import constrain_activation
+        batch_axis = 1 if out.ndim == 4 else 0   # hyper-connection streams
+        out = constrain_activation(out, batch_axis=batch_axis)
         return out, ncache
 
     xs = (params["body"], caches)
@@ -228,9 +235,16 @@ def loss_fn(params, cfg: ArchConfig, batch):
         text_len = tokens.shape[1]
         lg = logits[:, -text_len:-1]           # predict next text token
         labels = tokens[:, 1:]
-    lg = lg.astype(jnp.float32)
+    # multi-pod SPMD: keep the vocab axis model-sharded through the loss.
+    # A take_along_axis gather over a sharded vocab axis makes XLA
+    # replicate the full f32 logits (tens of GB of temps); the label
+    # pick as an equality-mask sum partitions cleanly instead.
+    from ..distributed.sharding import constrain_activation
+    lg = constrain_activation(lg.astype(jnp.float32))
     logz = jax.scipy.special.logsumexp(lg, axis=-1)
-    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    vocab_iota = jnp.arange(lg.shape[-1], dtype=labels.dtype)
+    gold = jnp.sum(jnp.where(vocab_iota == labels[..., None], lg, 0.0),
+                   axis=-1)
     nll = logz - gold
     mask = batch.get("loss_mask")
     if mask is not None:

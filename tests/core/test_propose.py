@@ -1,0 +1,177 @@
+"""Dataflow-driven chain proposal (DESIGN.md §10): golden re-derivation of
+the PR-2 hand-declared chains, graph segmentation, escape analysis, and
+neutral-pad propagation."""
+import pytest
+
+from repro.core.fusion import (CHAINS, ChainSpec, ChainStage, GRAPHS,
+                               OpGraph, OpNode, ProposeError, propose_chains)
+
+
+# ---------------------------------------------------------------------------
+# Golden: the proposer re-derives the four chains PR 2 declared by hand
+# (their CHAINS entries are deleted; these golden specs pin the proposer)
+# ---------------------------------------------------------------------------
+
+GOLDEN = {
+    "bias_gelu": ChainSpec(
+        name="bias_gelu",
+        inputs=(("input", 2), ("bias", 1)),
+        outputs=("output",),
+        stages=(ChainStage("add", ("input", "bias"), "h"),
+                ChainStage("gelu", ("h",), "output"))),
+    "mul_softmax": ChainSpec(
+        name="mul_softmax",
+        inputs=(("input", 2), ("scale", 1)),
+        outputs=("output",),
+        stages=(ChainStage("mul", ("input", "scale"), "h"),
+                ChainStage("softmax", ("h",), "output")),
+        # computed pad of h = -3e38 * 1.0 — softmax's neutral element
+        pad_values=(("input", -3.0e38), ("scale", 1.0))),
+    "rmsnorm_swiglu": ChainSpec(
+        name="rmsnorm_swiglu",
+        inputs=(("input", 2), ("weight", 1), ("gate", 2)),
+        outputs=("output",),
+        stages=(ChainStage("rmsnorm", ("input", "weight"), "h"),
+                ChainStage("swiglu", ("h", "gate"), "output"))),
+    # the updated residual stream escapes (graph output), so the proposer
+    # must keep its Store and route the sequential round trip through it
+    "add_rmsnorm": ChainSpec(
+        name="add_rmsnorm",
+        inputs=(("input", 2), ("residual", 2), ("weight", 1)),
+        outputs=("output", "new_residual"),
+        stages=(ChainStage("add", ("input", "residual"), "new_residual"),
+                ChainStage("rmsnorm", ("new_residual", "weight"), "output")),
+        keep=(("new_residual", "new_residual"),),
+        route=(("new_residual", "new_residual"),)),
+}
+
+
+def test_proposer_rederives_hand_declared_chains():
+    for name, want in GOLDEN.items():
+        assert name in CHAINS, f"proposer lost chain '{name}'"
+        assert CHAINS[name] == want, f"proposed '{name}' != golden spec"
+
+
+def test_new_chains_are_proposed_and_registered():
+    """The streaming-pattern and DAG-shaped chains exist, are planner
+    defaults, carry the streaming fallback entry, and ride the tuner's
+    variant axis."""
+    from repro.core.planner import PLANNER_REGISTRY
+    from repro.core.tuning import variants_for
+    assert "attn_scores" in CHAINS and "swiglu_proj" in CHAINS
+    for name in CHAINS:
+        assert name in PLANNER_REGISTRY
+        assert f"{name}_streaming" in PLANNER_REGISTRY
+        assert "fused" in variants_for(name)
+    # attn_scores derived a 2-level pad propagation: input pads with
+    # softmax's neutral element THROUGH mul and add
+    assert dict(CHAINS["attn_scores"].pad_values) == {"input": -3.0e38,
+                                                      "scale": 1.0}
+    # swiglu_proj is DAG-shaped: two stages read the same chain input
+    readers = [st for st in CHAINS["swiglu_proj"].stages
+               if "input" in st.inputs]
+    assert len(readers) == 2
+
+
+# ---------------------------------------------------------------------------
+# Segmentation: non-fusable nodes split the graph
+# ---------------------------------------------------------------------------
+
+def test_non_fusable_node_splits_graph_into_two_chains():
+    g = OpGraph(
+        name="block",
+        inputs=(("x", 2), ("b", 1), ("w", 1)),
+        outputs=("y",),
+        nodes=(OpNode("add", ("x", "b"), "h1"),
+               OpNode("gelu", ("h1",), "h2"),
+               OpNode("matmul", ("h2", "w"), "h3"),   # not fusable
+               OpNode("rmsnorm", ("h3", "w"), "h4"),
+               OpNode("silu", ("h4",), "y")))
+    specs = propose_chains(g)
+    assert len(specs) == 2
+    first, second = specs
+    # chain 1: add+gelu; its output h2 escapes (consumed by the matmul)
+    assert [st.op for st in first.stages] == ["add", "gelu"]
+    assert first.outputs == ("h2",)
+    # chain 2: rmsnorm+silu; the matmul's output re-enters as an input
+    assert [st.op for st in second.stages] == ["rmsnorm", "silu"]
+    assert second.inputs[0] == ("h3", 2)
+    assert second.outputs == ("y",)
+    assert first.name != second.name
+
+
+def test_escaping_mid_link_is_kept():
+    """A link consumed downstream AND observed by the graph keeps its
+    Store (escape analysis), like add_rmsnorm's residual stream."""
+    g = OpGraph(
+        name="expose",
+        inputs=(("x", 2),),
+        outputs=("y", "mid"),
+        nodes=(OpNode("gelu", ("x",), "mid"),
+               OpNode("silu", ("mid",), "y")))
+    (spec,) = propose_chains(g)
+    assert spec.keep == (("mid", "mid"),)
+    assert set(spec.outputs) == {"y", "mid"}
+
+
+def test_single_node_components_are_not_proposed():
+    g = OpGraph(name="lone", inputs=(("x", 2),), outputs=("y",),
+                nodes=(OpNode("gelu", ("x",), "y"),))
+    assert propose_chains(g) == []
+
+
+# ---------------------------------------------------------------------------
+# Pad propagation failures refuse instead of mis-fusing
+# ---------------------------------------------------------------------------
+
+def test_pad_propagation_refuses_non_neutralizable_producer():
+    # sigmoid cannot map any pad to softmax's -3e38 neutral element
+    g = OpGraph(
+        name="bad",
+        inputs=(("x", 2),),
+        outputs=("y",),
+        nodes=(OpNode("sigmoid", ("x",), "h"),
+               OpNode("softmax", ("h",), "y")))
+    with pytest.raises(ProposeError):
+        propose_chains(g)
+
+
+def test_pad_requirement_conflict_is_detected():
+    # s is the mul's second operand (needs pad 1.0) AND the add's second
+    # operand (needs pad 0.0): one tensor cannot carry both
+    with pytest.raises(ProposeError):
+        propose_chains(OpGraph(
+            name="conflict",
+            inputs=(("x", 2), ("s", 1)),
+            outputs=("y",),
+            nodes=(OpNode("mul", ("x", "s"), "h"),
+                   OpNode("add", ("h", "s"), "h2"),
+                   OpNode("softmax", ("h2",), "y"))))
+
+
+def test_bad_graphs_error():
+    with pytest.raises(ProposeError):       # undeclared tensor
+        propose_chains(OpGraph(
+            name="g", inputs=(("x", 2),), outputs=("y",),
+            nodes=(OpNode("add", ("x", "ghost"), "y"),)))
+    with pytest.raises(ProposeError):       # produced twice
+        propose_chains(OpGraph(
+            name="g", inputs=(("x", 2),), outputs=("y",),
+            nodes=(OpNode("gelu", ("x",), "y"),
+                   OpNode("silu", ("x",), "y"))))
+    with pytest.raises(ProposeError):       # cyclic
+        propose_chains(OpGraph(
+            name="g", inputs=(("x", 2),), outputs=("y",),
+            nodes=(OpNode("add", ("x", "b"), "y"),
+                   OpNode("gelu", ("y",), "b"))))
+
+
+def test_declared_graphs_all_propose():
+    """Every declared workload graph yields at least one chain and every
+    CHAINS entry traces back to a graph."""
+    names = set()
+    for g in GRAPHS:
+        specs = propose_chains(g)
+        assert specs, f"graph '{g.name}' proposed nothing"
+        names.update(s.name for s in specs)
+    assert names == set(CHAINS)

@@ -219,3 +219,26 @@ def test_serving_warm_kernel_cache(tasks, tmp_path):
     assert not rep1["kernels"][0]["from_cache"]
     rep2 = warm_kernel_cache(cache=str(tmp_path), tasks=sub)
     assert rep2["kernels"][0]["from_cache"]
+
+
+# ---------------------------------------------------------------------------
+# DMA-burst tie-break (DESIGN.md §10): equal modeled bytes, fewer transfers
+# ---------------------------------------------------------------------------
+
+def test_tuner_discovers_mhc_rowblock_by_transfer_tiebreak(tmp_path):
+    """ROADMAP item: the row-blocked mHC kernel (paper RQ3 'bigger DMA
+    bursts' step) is a register_variant entry the tuner discovers — it
+    moves the SAME bytes (the roofline ratio ties to ~1e-6), so the win
+    comes from the transfer-count tie-break, not a ratio edge."""
+    from repro.bench.mhc import mhc_tasks
+    from repro.core.tuning import tune, variants_for
+
+    assert "rowblock" in variants_for("mhc_post")
+    task = mhc_tasks()[0]
+    tr = tune(task, budget=8, cache=str(tmp_path))
+    assert tr.best.ok
+    assert tr.best.candidate.variant == "rowblock", tr.best.candidate
+    default = next(t for t in tr.trials
+                   if t.candidate.variant == "default")
+    assert tr.best.transfers < default.transfers / 10
+    assert abs(tr.best.ratio - default.ratio) <= 1e-3 * default.ratio

@@ -164,3 +164,35 @@ def test_generated_fused_rmsnorm_swiglu():
     h = x64 / np.sqrt((x64 * x64).mean(-1, keepdims=True) + 1e-6) * w64
     want = h / (1 + np.exp(-h)) * g64
     np.testing.assert_allclose(np.asarray(y), want, rtol=2e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("rows", [64, 128])
+def test_generated_fused_swiglu_proj(rows):
+    """Checked-in DAG-chain artifact (DESIGN.md §10): the tuner-selected
+    fused two-branch swiglu loads the shared input once."""
+    rng = np.random.RandomState(13)
+    x = rng.randn(rows, 4096).astype(np.float32)
+    gs = rng.randn(4096).astype(np.float32)
+    us = rng.randn(4096).astype(np.float32)
+    y = G.swiglu_proj.swiglu_proj_fused(x, gs, us, interpret=True)
+    x64 = np.asarray(x, np.float64)
+    g = x64 * np.asarray(gs, np.float64)
+    u = x64 * np.asarray(us, np.float64)
+    want = g / (1 + np.exp(-g)) * u
+    np.testing.assert_allclose(np.asarray(y), want, rtol=2e-4, atol=1e-5)
+
+
+def test_generated_attn_scores_is_streaming_and_guarded():
+    """The attn_scores artifact is the loop-carry-stitched STREAMING chain
+    (rows far too wide for residency): running scalars + the one-time
+    score spill are visible in the emitted source, and make() refuses
+    shapes it was not specialized for.  (Numerics are covered at check
+    shapes by tests/core/test_fusion.py — executing the 786k-wide bench
+    shape in interpret mode is not test-budget material.)"""
+    import inspect
+    src = inspect.getsource(G.attn_scores)
+    assert "running scalars loop-carried" in src
+    assert "backend  : explicit" in src
+    with pytest.raises(ValueError, match="trailing dimension"):
+        G.attn_scores.make({"input": (32, 512), "scale": (512,),
+                            "mask": (512,), "output": (32, 512)})
