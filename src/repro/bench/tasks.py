@@ -516,8 +516,12 @@ def fused_task(chain_name: str, big: Dict[str, Tuple[int, ...]],
     Tensor specs, pad values and the fingerprint-bearing chain structure
     come from the :data:`~repro.core.fusion.chain.CHAINS` spec; ``ref`` is
     the composed float64 reference returning the chain outputs in spec
-    order."""
+    order.  ``attrs['chain_fingerprint']`` is the α-invariant structural
+    fingerprint (DESIGN.md §11) — it keys artifact-cache entries by what
+    the chain *computes*, so a declared fixture and its jaxpr-extracted
+    re-derivation can never fingerprint apart."""
     from ..core.fusion.chain import CHAINS
+    from ..core.fusion.propose import chain_fingerprint
     spec = CHAINS[chain_name]
     tensors = [TensorSpec(n, F32, "in", r) for n, r in spec.inputs]
     tensors += [TensorSpec(n, F32, "out", len(big[n])) for n in spec.outputs]
@@ -526,6 +530,7 @@ def fused_task(chain_name: str, big: Dict[str, Tuple[int, ...]],
         tensors=tensors, shapes=dict(big), check_shapes=dict(small),
         ref=ref, make_inputs=make_inputs,
         attrs={"fusion_chain": spec.describe(),
+               "chain_fingerprint": chain_fingerprint(spec),
                "pad_values": dict(spec.pad_values)})
 
 
@@ -599,6 +604,25 @@ def build_fused_suite() -> List[KernelTask]:
         "swiglu_proj", big, small,
         ref=lambda x, gs, us: _silu64(_f64(x) * _f64(gs))
         * (_f64(x) * _f64(us))))
+
+    # additively-masked softmax (jaxpr-EXTRACTED chain, DESIGN.md §11):
+    # derived from the flash-attention reference's score normalization —
+    # where(mask, logits, -inf) canonicalized to the additive-mask idiom.
+    # The mask is a full rank-2 additive bias (causal / ALiBi / padding);
+    # finite large negatives keep masked lanes inert without NaN risk.
+    big, small = shp(
+        {"input": (8192, 8192), "mask": (8192, 8192),
+         "output": (8192, 8192)},
+        {"input": (64, 384), "mask": (64, 384), "output": (64, 384)})
+
+    def _mk_mask_softmax(rng, shapes):
+        return {"input": rng.randn(*shapes["input"]).astype(np.float32),
+                "mask": np.where(rng.rand(*shapes["mask"]) > 0.25, 0.0,
+                                 -1.0e9).astype(np.float32)}
+    tasks.append(fused_task(
+        "mask_softmax", big, small,
+        ref=lambda x, m: _softmax(_f64(x) + _f64(m)),
+        make_inputs=_mk_mask_softmax))
     return tasks
 
 

@@ -1,24 +1,34 @@
-"""Automatic DSL-level kernel fusion (DESIGN.md §9–§10).
+"""Automatic DSL-level kernel fusion (DESIGN.md §9–§11).
 
 ``fuse.py`` is the program-level pass (pattern-dispatched stitching:
 single-visit Store/Load elimination and streaming loop-carry stitching,
 α-renaming, VMEM re-validation); ``propose.py`` derives fusable operator
-chains from declared workload dataflow graphs; ``chain.py`` builds each
-chain's stage programs through the shared resident/streaming harnesses
-and wires the fused/sequential forms into the planner registry and the
-tuner's variant axis.
+chains from workload dataflow graphs; ``extract.py`` produces those
+graphs by tracing real model functions (``models/workloads.py``) with
+``jax.make_jaxpr`` and normalizing the jaxpr into the OpGraph IR —
+fingerprint-deduped against the declared golden fixtures; ``chain.py``
+builds each chain's stage programs through the shared resident/streaming
+harnesses and wires the fused/sequential forms into the planner registry
+and the tuner's variant axis.
 """
 from .fuse import FusionError, fuse_programs, sequence_programs
-from .propose import GRAPHS, OpGraph, OpNode, ProposeError, propose_chains
-from .chain import (CHAINS, ChainSpec, ChainStage, build_chain, build_fused,
-                    fused_builder, register_fusion_variants,
-                    register_planner_chains, sequential_builder,
-                    streaming_sequential_builder)
+from .propose import (GRAPHS, OpGraph, OpNode, ProposeError,
+                      chain_fingerprint, propose_chains)
+from .extract import (ExtractError, canonicalize_spec, extract_chains,
+                      extract_graph, extracted_chains)
+from .chain import (CHAINS, CHAIN_SOURCES, ChainSpec, ChainStage,
+                    build_chain, build_fused, fused_builder,
+                    register_fusion_variants, register_planner_chains,
+                    sequential_builder, streaming_sequential_builder)
 
 __all__ = [
     "FusionError", "fuse_programs", "sequence_programs",
-    "GRAPHS", "OpGraph", "OpNode", "ProposeError", "propose_chains",
-    "CHAINS", "ChainSpec", "ChainStage", "build_chain", "build_fused",
-    "fused_builder", "register_fusion_variants", "register_planner_chains",
-    "sequential_builder", "streaming_sequential_builder",
+    "GRAPHS", "OpGraph", "OpNode", "ProposeError", "chain_fingerprint",
+    "propose_chains",
+    "ExtractError", "canonicalize_spec", "extract_chains", "extract_graph",
+    "extracted_chains",
+    "CHAINS", "CHAIN_SOURCES", "ChainSpec", "ChainStage", "build_chain",
+    "build_fused", "fused_builder", "register_fusion_variants",
+    "register_planner_chains", "sequential_builder",
+    "streaming_sequential_builder",
 ]

@@ -1,0 +1,858 @@
+"""Jaxpr-level graph extraction for the fusion proposer (DESIGN.md §11).
+
+Until this module landed, the proposer (``propose.py``) consumed
+*hand-declared* :class:`OpGraph` workloads — a human read the model code
+and transcribed its dataflow.  ``extract.py`` closes that gap: it traces
+real model functions (``models/workloads.py`` — residual blocks, norm
+epilogues, the attention score pipeline) with :func:`jax.make_jaxpr` and
+normalizes the jaxpr into the *same* OpGraph IR, so chains are discovered
+from the model itself and flow through the unchanged
+``propose_chains → ChainSpec → planner/tuner`` pipeline.
+
+Normalization layers (in order):
+
+1. **Flattening** — ``pjit`` / ``custom_jvp_call`` / ``custom_vjp_call``
+   wrappers are inlined recursively (``jax.nn.silu`` arrives as a pjit
+   named ``silu``; ``scan``/``while``/``cond`` are *not* inlined — their
+   sub-jaxprs stay opaque barriers).
+2. **Aliasing** — semantic no-ops vanish: ``convert_element_type``,
+   ``copy``, ``stop_gradient``, identity arithmetic (``max(x, -inf)``,
+   ``add(x, 0)``, ``mul(x, 1)``), trailing-preserving reshapes, and
+   ``broadcast_in_dim`` (classified as *trailing* row-broadcast of a
+   vector, *keepdims* expansion of a reduction, or scalar fill).
+3. **Composite recognition** — multi-primitive idioms collapse into the
+   proposer's op vocabulary: ``softmax`` (reduce_max → sub → exp →
+   reduce_sum → div), ``rmsnorm`` (mean-of-squares → rsqrt → scale),
+   ``gelu`` (both the tanh and the erf/erfc forms), ``silu``
+   (``x·σ(x)``), ``relu`` (``max(x, 0)``), ``swiglu`` (``silu(a)·b``) and
+   ``square`` (``integer_pow[2]``).
+4. **Masked-fill canonicalization** — ``where(pred, x, -inf)`` feeding a
+   softmax is the additive-mask idiom in disguise: the select is rewritten
+   to ``add(x, mask)`` with a synthesized external ``mask`` input (sound
+   because softmax's neutral element absorbs the fill; the rewrite is
+   gated on every consumer being a softmax row input).
+5. **Barrier classification** — every remaining primitive (dots, scans,
+   control flow, slicing, transposes, scalar-operand arithmetic,
+   reductions that did not fold into a composite) becomes a non-fusable
+   ``barrier.<prim>`` node, exactly like ``matmul`` in the hand-declared
+   graphs: the proposer segments around it and its output re-enters
+   downstream chains as a plain input.
+
+Name stability: proposed chains are canonically renamed
+(:func:`canonicalize_spec`) and fingerprinted (α-invariant
+:func:`~repro.core.fusion.propose.chain_fingerprint`); ``chain.py``
+resolves a fingerprint match against the declared golden fixtures to the
+fixture's spec verbatim, so registry entries, cache keys and
+``kernels/generated/`` artifacts never churn when extraction re-derives a
+known chain.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .propose import OpGraph, OpNode, ProposeError, propose_chains
+
+
+class ExtractError(ProposeError):
+    """The traced function cannot be normalized into an OpGraph."""
+
+
+# --------------------------------------------------------------------------
+# Primitive coverage (DESIGN.md §11 table)
+# --------------------------------------------------------------------------
+
+# single jaxpr primitive -> proposer op (tensor-operand forms only)
+PRIM_MAP: Dict[str, str] = {
+    "add": "add", "sub": "sub", "mul": "mul",
+    "tanh": "tanh", "exp": "exp", "abs": "abs", "neg": "neg",
+    "sqrt": "sqrt", "logistic": "sigmoid",
+}
+
+# call-like primitives whose sub-jaxpr is inlined during flattening
+INLINE_PRIMS = frozenset((
+    "pjit", "closed_call", "core_call", "named_call", "remat",
+    "checkpoint", "custom_jvp_call", "custom_vjp_call",
+    "custom_jvp_call_jaxpr", "custom_vjp_call_jaxpr",
+))
+
+# semantic no-ops that alias their input
+ALIAS_PRIMS = frozenset((
+    "convert_element_type", "copy", "stop_gradient", "reduce_precision",
+))
+
+_BIG_NEG = -1.0e30          # masked-fill threshold (−inf, −3e38, ...)
+
+
+def _isclose(a: float, b: float, rel: float = 1e-3) -> bool:
+    return abs(a - b) <= rel * max(1.0, abs(b))
+
+
+# --------------------------------------------------------------------------
+# Normalized IR: SSA values + equations
+# --------------------------------------------------------------------------
+
+@dataclass(eq=False)
+class _Val:
+    vid: int
+    shape: Tuple[int, ...]
+    kind: str                      # 'ext' | 'const' | 'op'
+    name: str = ""                 # ext: argument name (or synthesized)
+    const: Any = None              # const: python/numpy value
+    base: Optional["_Val"] = None  # broadcast alias target
+    bkind: str = ""                # '' | 'trail' | 'keep' | 'scalar'
+
+
+def _base(v: _Val) -> _Val:
+    while v.base is not None:
+        v = v.base
+    return v
+
+
+def _scalar_const(v: _Val) -> Optional[float]:
+    """The scalar value of ``v`` if it resolves to a 0-d (or size-1)
+    constant, else None."""
+    b = _base(v)
+    if b.kind != "const":
+        return None
+    arr = np.asarray(b.const)
+    if arr.size != 1:
+        return None
+    return float(arr.reshape(()))
+
+
+@dataclass(eq=False)
+class _Eqn:
+    prim: str                      # jaxpr primitive OR recognized composite
+    ins: List[_Val]
+    out: _Val
+    params: Dict[str, Any] = field(default_factory=dict)
+
+
+# --------------------------------------------------------------------------
+# Jaxpr -> IR flattening
+# --------------------------------------------------------------------------
+
+class _Builder:
+    def __init__(self):
+        self.eqns: List[_Eqn] = []
+        self._next = 0
+
+    def val(self, shape, kind, **kw) -> _Val:
+        self._next += 1
+        return _Val(self._next, tuple(int(s) for s in shape), kind, **kw)
+
+    def _alias_identity(self, prim, ins) -> Optional[_Val]:
+        """Identity arithmetic: max(x, -inf), min(x, inf), add/sub(x, 0),
+        mul(x, 1) alias the tensor operand."""
+        if len(ins) != 2:
+            return None
+        for i, j in ((0, 1), (1, 0)):
+            c = _scalar_const(ins[i])
+            t = ins[j]
+            if c is None or _base(t).kind == "const":
+                continue
+            if prim == "max" and c == float("-inf"):
+                return t
+            if prim == "min" and c == float("inf"):
+                return t
+            if prim == "add" and c == 0.0:
+                return t
+            if prim == "mul" and c == 1.0:
+                return t
+            if prim == "sub" and c == 0.0 and j == 0:
+                return t
+        return None
+
+    def emit(self, prim: str, ins: List[_Val], out_shape, params) -> _Val:
+        alias = self._alias_identity(prim, ins)
+        if alias is not None and tuple(alias.shape) == tuple(out_shape):
+            return alias
+        out = self.val(out_shape, "op")
+        self.eqns.append(_Eqn(prim, list(ins), out, dict(params)))
+        return out
+
+    def broadcast(self, src: _Val, out_shape, dims) -> _Val:
+        """Classify a broadcast_in_dim: trailing row-broadcast, keepdims
+        expansion, scalar fill — or an opaque barrier eqn."""
+        out_shape = tuple(int(s) for s in out_shape)
+        dims = tuple(int(d) for d in dims)
+        in_shape = src.shape
+        r_in, r_out = len(in_shape), len(out_shape)
+        sizes_kept = all(out_shape[d] == in_shape[i]
+                         for i, d in enumerate(dims))
+        if r_in == 0 or (_base(src).kind == "const"
+                         and np.asarray(_base(src).const).size == 1):
+            return self.val(out_shape, "const", const=_base(src).const,
+                            base=src if _base(src).kind != "const" else None,
+                            bkind="scalar") if _base(src).kind == "const" \
+                else self.val(out_shape, "op", base=src, bkind="scalar")
+        if sizes_kept and dims == tuple(range(r_out - r_in, r_out)):
+            return self.val(out_shape, "op", base=src, bkind="trail")
+        if sizes_kept and dims == tuple(range(r_in)) and \
+                all(s == 1 for s in out_shape[r_in:]):
+            return self.val(out_shape, "op", base=src, bkind="keep")
+        return self.emit("broadcast_in_dim", [src], out_shape,
+                         {"dims": dims})
+
+    # -- jaxpr walking -----------------------------------------------------
+
+    def read(self, env, v):
+        import jax.core as jcore
+        lit = getattr(jcore, "Literal", None)
+        if lit is not None and isinstance(v, lit):
+            return self.val(getattr(v.aval, "shape", ()), "const",
+                            const=v.val)
+        return env[v]
+
+    def process_jaxpr(self, jaxpr, consts, args: List[_Val]) -> List[_Val]:
+        env: Dict[Any, _Val] = {}
+        for cv, cval in zip(jaxpr.constvars, consts):
+            env[cv] = self.val(getattr(cv.aval, "shape", ()), "const",
+                               const=np.asarray(cval))
+        if len(jaxpr.invars) != len(args):
+            raise ExtractError(
+                f"arity mismatch: jaxpr has {len(jaxpr.invars)} inputs, "
+                f"{len(args)} provided")
+        for iv, a in zip(jaxpr.invars, args):
+            env[iv] = a
+        for eqn in jaxpr.eqns:
+            prim = eqn.primitive.name
+            ins = [self.read(env, v) for v in eqn.invars]
+            if prim in INLINE_PRIMS:
+                sub = None
+                for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+                    if key in eqn.params:
+                        sub = eqn.params[key]
+                        break
+                if sub is None:
+                    raise ExtractError(f"cannot inline '{prim}': no jaxpr "
+                                       f"param")
+                inner = getattr(sub, "jaxpr", sub)
+                sub_consts = list(getattr(sub, "consts", ()))
+                outs = self.process_jaxpr(inner, sub_consts, ins)
+                for ov, o in zip(eqn.outvars, outs):
+                    env[ov] = o
+                continue
+            if prim in ALIAS_PRIMS:
+                env[eqn.outvars[0]] = ins[0]
+                continue
+            if prim == "broadcast_in_dim":
+                env[eqn.outvars[0]] = self.broadcast(
+                    ins[0], eqn.outvars[0].aval.shape,
+                    eqn.params["broadcast_dimensions"])
+                continue
+            if prim in ("reshape", "squeeze", "expand_dims"):
+                out_shape = tuple(eqn.outvars[0].aval.shape)
+                in_shape = ins[0].shape
+                if (in_shape and out_shape
+                        and in_shape[-1] == out_shape[-1]
+                        and math.prod(in_shape) == math.prod(out_shape)):
+                    # trailing axis preserved: same row tensor
+                    env[eqn.outvars[0]] = self.val(out_shape, "op",
+                                                   base=ins[0],
+                                                   bkind="trail")
+                    continue
+            if prim == "integer_pow" and int(eqn.params.get("y", 0)) == 2:
+                env[eqn.outvars[0]] = self.emit(
+                    "square", ins, eqn.outvars[0].aval.shape, {})
+                continue
+            keep_params = {}
+            if prim in ("reduce_sum", "reduce_max", "reduce_min",
+                        "reduce_prod"):
+                keep_params["axes"] = tuple(eqn.params.get("axes", ()))
+            if prim == "integer_pow":
+                keep_params["y"] = int(eqn.params.get("y", 0))
+            out = self.emit(prim, ins, eqn.outvars[0].aval.shape,
+                            keep_params)
+            env[eqn.outvars[0]] = out
+            for extra in eqn.outvars[1:]:
+                # multi-output primitive (scan, while, ...): opaque barrier
+                # per output
+                env[extra] = self.emit(prim, ins, extra.aval.shape,
+                                       keep_params)
+        return [self.read(env, v) for v in jaxpr.outvars]
+
+
+# --------------------------------------------------------------------------
+# Composite recognition
+# --------------------------------------------------------------------------
+
+def _use_counts(eqns: List[_Eqn], outputs: List[_Val]) -> Dict[int, int]:
+    counts: Dict[int, int] = {}
+    for e in eqns:
+        for v in e.ins:
+            b = _base(v)
+            counts[b.vid] = counts.get(b.vid, 0) + 1
+    for v in outputs:
+        b = _base(v)
+        counts[b.vid] = counts.get(b.vid, 0) + 1
+    return counts
+
+
+class _Rewriter:
+    """Fixpoint composite recognizer over the normalized eqn list."""
+
+    def __init__(self, eqns: List[_Eqn], outputs: List[_Val]):
+        self.eqns = eqns
+        self.outputs = outputs
+
+    def _prod(self) -> Dict[int, int]:
+        return {_base(e.out).vid: i for i, e in enumerate(self.eqns)}
+
+    def _producer(self, prod, v: _Val, prim: str,
+                  strip: Tuple[str, ...] = ("keep",)) -> Optional[_Eqn]:
+        """The eqn producing ``v`` (looking through the given broadcast
+        kinds) when its primitive is ``prim``."""
+        b = v
+        while b.base is not None and b.bkind in strip:
+            b = b.base
+        b = _base(b) if b.bkind == "" and b.base is not None else b
+        if b.base is not None:          # unexpected broadcast kind left
+            return None
+        i = prod.get(b.vid)
+        if i is None:
+            return None
+        e = self.eqns[i]
+        return e if e.prim == prim else None
+
+    def _last_axis(self, e: _Eqn) -> bool:
+        axes = e.params.get("axes", ())
+        nd = len(e.ins[0].shape)
+        return tuple(axes) == (nd - 1,)
+
+    def _replace(self, anchor: _Eqn, dead: List[_Eqn], prim: str,
+                 ins: List[_Val], counts) -> bool:
+        """Collapse ``dead + [anchor]`` into one composite at the anchor's
+        position, iff every dead eqn's output is used only inside the
+        pattern."""
+        in_pattern = {id(anchor)} | {id(d) for d in dead}
+        for d in dead:
+            uses = counts.get(_base(d.out).vid, 0)
+            internal = sum(1 for e in self.eqns if id(e) in in_pattern
+                           for v in e.ins if _base(v).vid ==
+                           _base(d.out).vid)
+            if uses != internal:
+                return False
+        new = _Eqn(prim, list(ins), anchor.out, {})
+        out: List[_Eqn] = []
+        for e in self.eqns:
+            if e is anchor:
+                out.append(new)
+            elif id(e) in in_pattern:
+                continue
+            else:
+                out.append(e)
+        self.eqns[:] = out
+        return True
+
+    # -- individual patterns ----------------------------------------------
+
+    def _match_relu(self, e: _Eqn, prod, counts) -> bool:
+        if e.prim != "max" or len(e.ins) != 2:
+            return False
+        for i, j in ((0, 1), (1, 0)):
+            if _scalar_const(e.ins[i]) == 0.0 and \
+                    _base(e.ins[j]).kind != "const":
+                return self._replace(e, [], "relu", [e.ins[j]], counts)
+        return False
+
+    def _match_silu(self, e: _Eqn, prod, counts) -> bool:
+        if e.prim != "mul" or len(e.ins) != 2:
+            return False
+        for i, j in ((0, 1), (1, 0)):
+            sig = self._producer(prod, e.ins[i], "logistic")
+            if sig is not None and \
+                    _base(sig.ins[0]).vid == _base(e.ins[j]).vid:
+                return self._replace(e, [sig], "silu", [e.ins[j]], counts)
+        return False
+
+    def _match_swiglu(self, e: _Eqn, prod, counts) -> bool:
+        if e.prim != "mul" or len(e.ins) != 2:
+            return False
+        for i, j in ((0, 1), (1, 0)):
+            s = self._producer(prod, e.ins[i], "silu")
+            if s is not None and _base(e.ins[j]).kind != "const":
+                return self._replace(e, [s], "swiglu",
+                                     [s.ins[0], e.ins[j]], counts)
+        return False
+
+    def _const_mul(self, prod, v: _Val, want: float) -> Optional[_Val]:
+        """v == mul(c≈want, x) -> x (either operand order)."""
+        m = self._producer(prod, v, "mul")
+        if m is None:
+            return None
+        for i, j in ((0, 1), (1, 0)):
+            c = _scalar_const(m.ins[i])
+            if c is not None and _isclose(c, want):
+                return m.ins[j]
+        return None
+
+    def _match_gelu_tanh(self, e: _Eqn, prod, counts) -> bool:
+        # x * (0.5 * (1 + tanh(0.79788 * (x + 0.044715 * x^3))))
+        if e.prim != "mul" or len(e.ins) != 2:
+            return False
+        for i, j in ((0, 1), (1, 0)):
+            x, h = e.ins[i], e.ins[j]
+            if _base(x).kind == "const":
+                continue
+            hm = self._producer(prod, h, "mul")
+            if hm is None:
+                continue
+            half = None
+            for a, b in ((0, 1), (1, 0)):
+                if _scalar_const(hm.ins[a]) == 0.5:
+                    half = hm.ins[b]
+            if half is None:
+                continue
+            g = self._producer(prod, half, "add")
+            if g is None:
+                continue
+            f = None
+            for a, b in ((0, 1), (1, 0)):
+                if _scalar_const(g.ins[a]) == 1.0:
+                    f = self._producer(prod, g.ins[b], "tanh")
+            if f is None:
+                continue
+            em = self._producer(prod, f.ins[0], "mul")
+            if em is None:
+                continue
+            d = None
+            for a, b in ((0, 1), (1, 0)):
+                c = _scalar_const(em.ins[a])
+                if c is not None and _isclose(c, math.sqrt(2.0 / math.pi)):
+                    d = self._producer(prod, em.ins[b], "add")
+            if d is None:
+                continue
+            cm = cube = None
+            for a, b in ((0, 1), (1, 0)):
+                if _base(d.ins[a]).vid != _base(x).vid:
+                    continue
+                cm2 = self._producer(prod, d.ins[b], "mul")
+                if cm2 is None:
+                    continue
+                for p, q in ((0, 1), (1, 0)):
+                    c2 = _scalar_const(cm2.ins[p])
+                    if c2 is None or not _isclose(c2, 0.044715):
+                        continue
+                    pw = self._producer(prod, cm2.ins[q], "integer_pow")
+                    if pw is not None and pw.params.get("y") == 3 and \
+                            _base(pw.ins[0]).vid == _base(x).vid:
+                        cm, cube = cm2, pw
+            if cube is None:
+                continue
+            return self._replace(e, [hm, g, f, em, d, cm, cube], "gelu",
+                                 [x], counts)
+        return False
+
+    def _match_gelu_erf(self, e: _Eqn, prod, counts) -> bool:
+        # exact gelu, erfc form: (0.5 * x) * erfc(-x * 0.70710)
+        # and erf form:          (0.5 * x) * (1 + erf(x * 0.70710))
+        if e.prim != "mul" or len(e.ins) != 2:
+            return False
+        inv_sqrt2 = 1.0 / math.sqrt(2.0)
+        for i, j in ((0, 1), (1, 0)):
+            halfx = self._const_mul(prod, e.ins[i], 0.5)
+            bm = self._producer(prod, e.ins[i], "mul")
+            if halfx is None or bm is None or \
+                    _base(halfx).kind == "const":
+                continue
+            x = _base(halfx)
+            other = e.ins[j]
+            ec = self._producer(prod, other, "erfc")
+            if ec is not None:
+                negx = self._const_mul(prod, ec.ins[0], inv_sqrt2)
+                dm = self._producer(prod, ec.ins[0], "mul")
+                if negx is not None and dm is not None:
+                    ng = self._producer(prod, negx, "neg")
+                    if ng is not None and _base(ng.ins[0]).vid == x.vid:
+                        return self._replace(e, [bm, ec, dm, ng], "gelu",
+                                             [halfx], counts)
+            g = self._producer(prod, other, "add")
+            if g is not None:
+                for a, b in ((0, 1), (1, 0)):
+                    if _scalar_const(g.ins[a]) != 1.0:
+                        continue
+                    ef = self._producer(prod, g.ins[b], "erf")
+                    if ef is None:
+                        continue
+                    xe = self._const_mul(prod, ef.ins[0], inv_sqrt2)
+                    dm = self._producer(prod, ef.ins[0], "mul")
+                    if xe is not None and dm is not None and \
+                            _base(xe).vid == x.vid:
+                        return self._replace(e, [bm, g, ef, dm], "gelu",
+                                             [halfx], counts)
+        return False
+
+    def _match_softmax(self, e: _Eqn, prod, counts) -> bool:
+        # div(exp(x - max_row(x)), sum_row(exp(x - max_row(x))))
+        if e.prim != "div" or len(e.ins) != 2:
+            return False
+        rs = self._producer(prod, e.ins[1], "reduce_sum")
+        if rs is None or not self._last_axis(rs):
+            return False
+        if _base(rs.ins[0]).vid != _base(e.ins[0]).vid:
+            return False
+        ex = self._producer(prod, e.ins[0], "exp")
+        if ex is None:
+            return False
+        sb = self._producer(prod, ex.ins[0], "sub")
+        if sb is None:
+            return False
+        x = sb.ins[0]
+        rm = self._producer(prod, sb.ins[1], "reduce_max")
+        if rm is None or not self._last_axis(rm):
+            return False
+        if _base(rm.ins[0]).vid != _base(x).vid:
+            return False
+        return self._replace(e, [rs, ex, sb, rm], "softmax", [x], counts)
+
+    def _match_rmsnorm(self, e: _Eqn, prod, counts) -> bool:
+        # (x * rsqrt(mean(x*x, -1) + eps)) * w    [w: trailing vector]
+        if e.prim != "mul" or len(e.ins) != 2:
+            return False
+        for i, j in ((0, 1), (1, 0)):
+            w = e.ins[i]
+            wb = _base(w)
+            if not (w.bkind == "trail" and len(wb.shape) == 1
+                    and wb.kind != "const"):
+                continue
+            im = self._producer(prod, e.ins[j], "mul")
+            if im is None:
+                continue
+            for a, b in ((0, 1), (1, 0)):
+                x = im.ins[a]
+                if _base(x).kind == "const":
+                    continue
+                rq = self._producer(prod, im.ins[b], "rsqrt")
+                if rq is None:
+                    continue
+                ad = self._producer(prod, rq.ins[0], "add")
+                if ad is None:
+                    continue
+                eps = None
+                mean_v = None
+                for p, q in ((0, 1), (1, 0)):
+                    c = _scalar_const(ad.ins[p])
+                    if c is not None and 0 < c < 1e-3:
+                        eps, mean_v = c, ad.ins[q]
+                if mean_v is None or not _isclose(eps, 1e-6):
+                    continue        # non-default eps: leave as barrier
+                n_cols = _base(x).shape[-1]
+                dv = self._producer(prod, mean_v, "div")
+                ss_v = None
+                dead_mean = []
+                if dv is not None and \
+                        _scalar_const(dv.ins[1]) == float(n_cols):
+                    ss_v, dead_mean = dv.ins[0], [dv]
+                else:
+                    mm = self._const_mul(prod, mean_v, 1.0 / n_cols)
+                    if mm is not None:
+                        ss_v = mm
+                        dead_mean = [self._producer(prod, mean_v, "mul")]
+                if ss_v is None:
+                    continue
+                rs = self._producer(prod, ss_v, "reduce_sum")
+                if rs is None or not self._last_axis(rs):
+                    continue
+                sq = None
+                sq_e = self._producer(prod, rs.ins[0], "square")
+                if sq_e is not None and \
+                        _base(sq_e.ins[0]).vid == _base(x).vid:
+                    sq = sq_e
+                else:
+                    mq = self._producer(prod, rs.ins[0], "mul")
+                    if mq is not None and \
+                            _base(mq.ins[0]).vid == _base(x).vid and \
+                            _base(mq.ins[1]).vid == _base(x).vid:
+                        sq = mq
+                if sq is None:
+                    continue
+                dead = [im, rq, ad, rs, sq] + dead_mean
+                return self._replace(e, dead, "rmsnorm", [x, w], counts)
+        return False
+
+    def _masked_fill_pass(self) -> bool:
+        """where(pred, x, -big) feeding only softmax row inputs becomes
+        add(x, mask) with a synthesized external mask input."""
+        changed = False
+        n_masks = sum(1 for e in self.eqns for v in e.ins
+                      if _base(v).kind == "ext"
+                      and _base(v).name.startswith("%mask"))
+        for idx, e in enumerate(list(self.eqns)):
+            if e.prim != "select_n" or len(e.ins) != 3:
+                continue
+            pred, case_f, case_t = e.ins
+            x, fill = None, None
+            cf, ct = _scalar_const(case_f), _scalar_const(case_t)
+            if cf is not None and cf <= _BIG_NEG and \
+                    _base(case_t).kind != "const":
+                x, fill = case_t, cf
+            elif ct is not None and ct <= _BIG_NEG and \
+                    _base(case_f).kind != "const":
+                x, fill = case_f, ct
+            if x is None:
+                continue
+            consumers = [(c, k) for c in self.eqns if c is not e
+                         for k, v in enumerate(c.ins)
+                         if _base(v).vid == _base(e.out).vid]
+            if not consumers or any(
+                    c.prim not in ("softmax", "log_softmax") or k != 0
+                    for c, k in consumers):
+                continue
+            if any(_base(o).vid == _base(e.out).vid
+                   for o in self.outputs):
+                continue
+            mask = _Val(-(n_masks + 1000), tuple(e.out.shape), "ext",
+                        name=f"%mask{n_masks}")
+            n_masks += 1
+            self.eqns[idx] = _Eqn("add", [x, mask], e.out, {})
+            changed = True
+        return changed
+
+    def run(self) -> None:
+        matchers = (self._match_relu, self._match_silu,
+                    self._match_gelu_tanh, self._match_gelu_erf,
+                    self._match_softmax, self._match_rmsnorm,
+                    self._match_swiglu)
+        changed = True
+        while changed:
+            changed = False
+            for m in matchers:
+                counts = _use_counts(self.eqns, self.outputs)
+                prod = self._prod()
+                for e in list(self.eqns):
+                    if e in self.eqns and m(e, prod, counts):
+                        changed = True
+                        counts = _use_counts(self.eqns, self.outputs)
+                        prod = self._prod()
+        while self._masked_fill_pass():
+            pass
+
+
+# --------------------------------------------------------------------------
+# OpGraph emission
+# --------------------------------------------------------------------------
+
+def _crank(shape: Tuple[int, ...]) -> int:
+    """Canonical rank: row tensors collapse to 2 (leading axes flatten into
+    rows), vectors stay 1."""
+    return min(len(shape), 2)
+
+
+def _operand_ok(v: _Val, out_shape: Tuple[int, ...]) -> bool:
+    """Chain-harness-expressible operand: a full row tensor (same shape as
+    the result, canonical rank 2) or a trailing-broadcast vector/row block
+    whose last axis matches the result's.  Keepdims expansions, scalar
+    fills, consts and degenerate (size-1 trailing) broadcasts are not
+    expressible and force the eqn to a barrier."""
+    b = _base(v)
+    if b.kind == "const" or not b.shape:
+        return False
+    if v.bkind == "trail":
+        return b.shape[-1] == out_shape[-1]
+    if v.bkind:
+        return False
+    return tuple(b.shape) == tuple(out_shape)
+
+
+def _fusable_eqn(e: _Eqn) -> Optional[Tuple[str, List[_Val]]]:
+    """(op, operands) when the eqn maps onto a proposer stage op with
+    sound operand roles, else None (barrier)."""
+    comps = ("softmax", "rmsnorm", "gelu", "silu", "relu", "swiglu",
+             "square", "tanh", "exp", "abs", "neg", "sqrt", "sigmoid")
+    op = e.prim if e.prim in comps else PRIM_MAP.get(e.prim)
+    if op is None:
+        return None
+    if len(e.out.shape) < 2:
+        return None                      # rank-1 math cannot anchor a row
+    ins = list(e.ins)
+    if not all(_operand_ok(v, e.out.shape) for v in ins):
+        return None
+    if op in ("add", "mul", "sub", "swiglu", "rmsnorm"):
+        if len(ins) != 2:
+            return None
+        r0, r1 = len(_base(ins[0]).shape), len(_base(ins[1]).shape)
+        if r0 < 2 and r1 >= 2:
+            if op in ("add", "mul"):     # commutative: row operand first
+                ins = [ins[1], ins[0]]
+            else:
+                return None
+        elif r0 < 2:
+            return None
+    else:
+        if len(ins) != 1 or len(_base(ins[0]).shape) < 2:
+            return None
+    return op, ins
+
+
+def extract_graph(fn: Callable,
+                  shapes: Sequence[Tuple[str, Tuple[int, ...]]],
+                  *, name: str) -> OpGraph:
+    """Trace ``fn`` on f32 examples of ``shapes`` (ordered ``(arg, shape)``
+    pairs) and normalize the jaxpr into an :class:`OpGraph`."""
+    import jax
+    import jax.numpy as jnp
+
+    shapes = [(str(n), tuple(int(s) for s in shp)) for n, shp in shapes]
+    structs = [jax.ShapeDtypeStruct(shp, jnp.float32) for _, shp in shapes]
+    try:
+        closed = jax.make_jaxpr(fn)(*structs)
+    except Exception as exc:  # noqa: BLE001 — tracing failure
+        raise ExtractError(f"cannot trace workload '{name}': {exc}") from exc
+
+    b = _Builder()
+    args = [b.val(shp, "ext", name=arg) for arg, shp in shapes]
+    outs = b.process_jaxpr(closed.jaxpr, list(closed.consts), args)
+    rw = _Rewriter(b.eqns, outs)
+    rw.run()
+    eqns, outputs = rw.eqns, rw.outputs
+
+    # ---- liveness: keep only eqns feeding the traced outputs -------------
+    prod = {_base(e.out).vid: e for e in eqns}
+    live: Set[int] = set()
+    stack = [_base(o).vid for o in outputs]
+    while stack:
+        vid = stack.pop()
+        e = prod.get(vid)
+        if e is None or id(e) in live:
+            continue
+        live.add(id(e))
+        for v in e.ins:
+            stack.append(_base(v).vid)
+    eqns = [e for e in eqns if id(e) in live]
+
+    # ---- naming ----------------------------------------------------------
+    names: Dict[int, str] = {}
+    for a in args:
+        names[a.vid] = a.name
+    t_idx = 0
+    for e in eqns:
+        for v in e.ins:
+            bb = _base(v)
+            if bb.kind == "ext" and bb.vid not in names:
+                names[bb.vid] = bb.name          # synthesized masks
+        t_idx += 1
+        names[_base(e.out).vid] = f"%t{t_idx}"
+
+    # ---- node emission ---------------------------------------------------
+    nodes: List[OpNode] = []
+    consumed: List[int] = []
+    for e in eqns:
+        fus = _fusable_eqn(e)
+        if fus is not None:
+            op, ins = fus
+        else:
+            op = f"barrier.{e.prim}"
+            ins = [v for v in e.ins if _base(v).kind != "const"]
+        in_names = []
+        for v in ins:
+            bb = _base(v)
+            in_names.append(names[bb.vid])
+            consumed.append(bb.vid)
+        nodes.append(OpNode(op, tuple(in_names), names[_base(e.out).vid],
+                            out_rank=_crank(e.out.shape)))
+
+    ext_vals: Dict[int, _Val] = {}
+    for a in args:
+        ext_vals[a.vid] = a
+    for e in eqns:
+        for v in e.ins:
+            bb = _base(v)
+            if bb.kind == "ext":
+                ext_vals.setdefault(bb.vid, bb)
+    inputs = tuple((names[vid], _crank(ext_vals[vid].shape))
+                   for vid, v in ext_vals.items() if vid in set(consumed))
+
+    out_names = []
+    produced = {n.output for n in nodes}
+    for o in outputs:
+        nm = names.get(_base(o).vid)
+        if nm is not None and nm in produced and nm not in out_names:
+            out_names.append(nm)
+    if not out_names:
+        raise ExtractError(f"workload '{name}' has no traced output "
+                           f"produced by an extracted node")
+    return OpGraph(name=name, inputs=inputs, outputs=tuple(out_names),
+                   nodes=tuple(nodes))
+
+
+# --------------------------------------------------------------------------
+# Canonical renaming of proposed specs (name-stable fingerprinting)
+# --------------------------------------------------------------------------
+
+def canonicalize_spec(spec):
+    """Rename synthesized tensors to the canonical vocabulary: the primary
+    barrier-produced input becomes ``input``, synthesized mask inputs
+    become ``mask``, links become ``h``/``h1..hk``, and the final stage's
+    observed output becomes ``output``.  Traced argument names (which the
+    workload library aligns with the golden fixtures) are kept."""
+    taken = {t for t, _ in spec.inputs}
+    ren: Dict[str, str] = {}
+
+    def fresh(base: str) -> str:
+        cand, k = base, 1
+        while cand in taken or cand in ren.values():
+            k += 1
+            cand = f"{base}{k}"
+        return cand
+
+    for idx, (t, _r) in enumerate(spec.inputs):
+        if not t.startswith("%"):
+            continue
+        if t.startswith("%mask"):
+            ren[t] = fresh("mask")
+        elif idx == 0:
+            ren[t] = fresh("input")
+        else:
+            ren[t] = fresh(f"x{idx}")
+    links = [st.output for st in spec.stages]
+    last = links[-1] if links else None
+    if last is not None and last in spec.outputs and last.startswith("%"):
+        ren[last] = fresh("output")
+    todo = [t for t in links if t.startswith("%") and t not in ren]
+    if len(todo) == 1:
+        ren[todo[0]] = fresh("h")
+    else:
+        for k, t in enumerate(todo):
+            ren[t] = fresh(f"h{k + 1}")
+
+    def r(t):
+        return ren.get(t, t)
+
+    from .chain import ChainSpec, ChainStage   # late: avoids import cycle
+    return ChainSpec(
+        name=spec.name,
+        inputs=tuple((r(t), rank) for t, rank in spec.inputs),
+        outputs=tuple(r(t) for t in spec.outputs),
+        stages=tuple(ChainStage(st.op, tuple(r(t) for t in st.inputs),
+                                r(st.output)) for st in spec.stages),
+        keep=tuple((r(a), r(b)) for a, b in spec.keep),
+        route=tuple((r(a), r(b)) for a, b in spec.route),
+        pad_values=tuple((r(t), v) for t, v in spec.pad_values),
+        attrs=spec.attrs)
+
+
+def extract_chains(fn: Callable,
+                   shapes: Sequence[Tuple[str, Tuple[int, ...]]],
+                   *, name: str):
+    """Trace → normalize → propose → canonicalize: the full extraction
+    pipeline for one workload function."""
+    graph = extract_graph(fn, shapes, name=name)
+    return [canonicalize_spec(s) for s in propose_chains(graph)]
+
+
+def extracted_chains():
+    """Extraction over the model workload library: the authoritative chain
+    source (``chain.py`` fingerprint-dedupes it against the declared golden
+    fixtures).  Returns ``[(spec, workload_name), ...]`` in deterministic
+    workload order."""
+    from ...models.workloads import WORKLOADS
+    out = []
+    for w in WORKLOADS:
+        for spec in extract_chains(w.fn, w.shapes, name=w.name):
+            out.append((spec, w.name))
+    return out

@@ -27,6 +27,8 @@ hand entries — the tuner, not the proposer, decides whether fusing wins.
 """
 from __future__ import annotations
 
+import hashlib
+import json
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
@@ -37,10 +39,19 @@ class ProposeError(Exception):
 
 @dataclass(frozen=True)
 class OpNode:
-    """One operation in a declared workload dataflow graph."""
+    """One operation in a declared workload dataflow graph.
+
+    ``out_rank`` is the canonical rank of the produced tensor; when None it
+    is inferred from the first input (sufficient for hand-declared graphs,
+    where every node is rank-preserving).  The jaxpr extractor (DESIGN.md
+    §11) sets it explicitly for barrier nodes — a ``barrier.dot_general``
+    or ``barrier.reduce_sum`` node does NOT preserve its input rank, and a
+    barrier with no tensor inputs (e.g. an iota) has nothing to infer
+    from."""
     op: str
     inputs: Tuple[str, ...]
     output: str
+    out_rank: Optional[int] = None
 
 
 @dataclass(frozen=True)
@@ -145,10 +156,23 @@ def _components(nodes: Sequence[OpNode], fusable: Set[str],
     """Connected components of fusable nodes.  Two nodes connect when one
     produces a tensor the other consumes (a link) or when they read the
     same external input (a shared producer: the fused kernel loads it
-    once instead of once per branch)."""
+    once instead of once per branch).
+
+    A merge is refused when the two sides are already ordered by a path
+    *through a non-fusable node*: if chain A's output feeds a matmul whose
+    result re-enters at node n, putting n into A would make the chain
+    consume a tensor that only exists after the chain itself has run — an
+    unschedulable kernel.  (Hand-declared graphs never hit this; graphs
+    extracted from real model code do on every residual stream: the
+    residual add feeds the FFN matmuls whose output is added back.)  The
+    refused edge degrades soundly: the producer's link escapes (keeps its
+    Store) and the consumer starts a new chain downstream."""
     fus = [n for n in nodes if n.op in fusable]
+    order = {id(n): i for i, n in enumerate(nodes)}
     parent: Dict[int, int] = {id(n): id(n) for n in fus}
-    by_id = {id(n): n for n in fus}
+    # per-root bookkeeping: the fus-node ids this component depends on
+    # through at least one non-fusable node
+    bdeps: Dict[int, Set[int]] = {id(n): set() for n in fus}
 
     def find(x):
         while parent[x] != x:
@@ -160,21 +184,48 @@ def _components(nodes: Sequence[OpNode], fusable: Set[str],
         ra, rb = find(a), find(b)
         if ra != rb:
             parent[ra] = rb
+            bdeps[rb] |= bdeps.pop(ra)
+
+    def mergeable(a, b) -> bool:
+        ra, rb = find(a), find(b)
+        if ra == rb:
+            return True
+        # either side reaching the other through a barrier orders them
+        if any(find(d) == rb for d in bdeps[ra]):
+            return False
+        if any(find(d) == ra for d in bdeps[rb]):
+            return False
+        return True
 
     producer = {n.output: n for n in fus}
-    readers: Dict[str, List[OpNode]] = {}
-    for n in fus:
+    # tensor -> fus-node ids it depends on through >= 1 non-fusable node
+    # (nodes arrive toposorted, so one forward pass suffices)
+    tdeps: Dict[str, Set[int]] = {}
+    for n in nodes:
+        acc: Set[int] = set()
         for t in n.inputs:
-            readers.setdefault(t, []).append(n)
-    for t, rs in readers.items():
-        if t in producer:                      # internal link
-            for r in rs:
-                union(id(producer[t]), id(r))
-        elif t in external:                    # shared external input
-            for r in rs[1:]:
-                union(id(rs[0]), id(r))
+            acc |= tdeps.get(t, set())
+        if n.op in fusable:
+            tdeps[n.output] = acc
+        else:
+            through = {id(producer[t]) for t in n.inputs if t in producer}
+            tdeps[n.output] = acc | through
+
+    ext_reader: Dict[str, OpNode] = {}
+    for n in fus:            # declaration order == deterministic
+        my_bdeps: Set[int] = set()
+        for t in n.inputs:
+            my_bdeps |= tdeps.get(t, set())
+        bdeps[find(id(n))] |= my_bdeps
+        for t in n.inputs:
+            if t in producer:                          # internal link
+                if mergeable(id(producer[t]), id(n)):
+                    union(id(producer[t]), id(n))
+            elif t in external:                        # shared external
+                first = ext_reader.setdefault(t, n)
+                if first is not n and mergeable(id(first), id(n)):
+                    union(id(first), id(n))
     groups: Dict[int, List[OpNode]] = {}
-    order = {id(n): i for i, n in enumerate(nodes)}
     for n in fus:
         groups.setdefault(find(id(n)), []).append(n)
     comps = sorted(groups.values(), key=lambda g: min(order[id(n)]
@@ -201,7 +252,14 @@ def propose_chains(graph: OpGraph, fusable: Optional[Set[str]] = None):
         if missing:
             raise ProposeError(
                 f"node '{n.op}' reads undeclared tensors {missing}")
-        ranks[n.output] = ranks[n.inputs[0]]
+        if n.out_rank is not None:       # extractor-declared (barriers)
+            ranks[n.output] = n.out_rank
+        elif n.inputs:
+            ranks[n.output] = ranks[n.inputs[0]]
+        else:
+            raise ProposeError(
+                f"node '{n.op}' producing '{n.output}' has no inputs and "
+                f"no declared out_rank")
     for t in graph.outputs:
         if t not in ranks:
             raise ProposeError(f"declared output '{t}' is never produced")
@@ -276,10 +334,59 @@ def propose_chains(graph: OpGraph, fusable: Optional[Set[str]] = None):
 
 
 # --------------------------------------------------------------------------
-# Declared workload graphs
+# Chain fingerprints (DESIGN.md §11)
+# --------------------------------------------------------------------------
+
+def chain_fingerprint(spec) -> str:
+    """α-invariant structural fingerprint of a ChainSpec.
+
+    Tensor names are canonicalized by first-use order and output order is
+    sorted, so a chain proposed from a jaxpr-extracted graph (fresh SSA
+    names, outputs in escape order) fingerprints identically to the same
+    chain proposed from a hand-declared golden graph.  The fingerprint is
+    the dedupe key between declared fixtures and extraction — a match
+    resolves to the declared spec's names, keeping planner registry
+    entries, cache keys and ``kernels/generated/`` artifacts byte-stable.
+    Everything semantic is covered: input ranks/order, stage ops and
+    wiring, escaping outputs, keep/route structure, pad values, attrs."""
+    names: Dict[str, str] = {}
+
+    def nm(t: str) -> str:
+        if t not in names:
+            names[t] = f"%{len(names)}"
+        return names[t]
+
+    for t, _ in spec.inputs:
+        nm(t)
+    for st in spec.stages:
+        for t in st.inputs:
+            nm(t)
+        nm(st.output)
+    payload = {
+        "inputs": [[nm(t), int(r)] for t, r in spec.inputs],
+        "stages": [[st.op, [nm(t) for t in st.inputs], nm(st.output)]
+                   for st in spec.stages],
+        "outputs": sorted(nm(t) for t in spec.outputs),
+        "keep": sorted([nm(a), nm(b)] for a, b in spec.keep),
+        "route": sorted([nm(a), nm(b)] for a, b in spec.route),
+        "pads": sorted([nm(t), repr(float(v))] for t, v in spec.pad_values),
+        "attrs": sorted([str(k), repr(v)] for k, v in spec.attrs),
+    }
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+# --------------------------------------------------------------------------
+# Declared workload graphs — GOLDEN FIXTURES (DESIGN.md §11)
 # --------------------------------------------------------------------------
 # These declare the *dataflow* of framework hot spots (what is computed and
 # which tensors the framework observes) — all fusion structure is derived.
+#
+# Since the jaxpr extractor landed they are no longer the source of truth:
+# ``fusion/extract.py`` re-derives every one of them from traced model
+# code (``models/workloads.py``), and ``chain.py`` fingerprint-dedupes the
+# two sources.  The fixtures pin the extractor (tests/core/test_extract.py
+# golden suite) and keep canonical tensor naming stable.
 
 GRAPHS: Tuple[OpGraph, ...] = (
     # FFN bias + activation epilogue

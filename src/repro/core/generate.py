@@ -61,11 +61,13 @@ def framework_tasks():
     # same tensor contract as before, plus the chain structure in attrs so
     # the eager baseline prices the sequential add+rmsnorm kernel sequence.
     # attn_scores / swiglu_proj are the proposer-derived streaming and DAG
-    # chains (DESIGN.md §10).
+    # chains (DESIGN.md §10); mask_softmax is the jaxpr-EXTRACTED chain —
+    # discovered from the flash-attention reference's masked score
+    # normalization, not from any declared graph (DESIGN.md §11).
     picks = [by_name["rmsnorm"], by_name["softmax"], by_name["adamw"], sw,
              by_fused["add_rmsnorm"], by_fused["bias_gelu"],
              by_fused["rmsnorm_swiglu"], by_fused["attn_scores"],
-             by_fused["swiglu_proj"]]
+             by_fused["swiglu_proj"], by_fused["mask_softmax"]]
     picks += mhc_tasks()
     return picks
 

@@ -130,13 +130,17 @@ PLANNER_REGISTRY["mhc_post_grad"] = \
 PLANNER_REGISTRY["mhc_post_blocked"] = \
     lambda t, s, k: MHC.build_mhc_post_blocked(t, s, k)
 
-# fused operator chains (DESIGN.md §9–§10): every chain the dataflow
-# proposer derives (fusion/propose.py) gets the UNFUSED sequential program
-# as its registry default plus a `<op>_streaming` capacity-refusal
-# fallback; the fused form is a tuner-discoverable variant (see
-# tuning/space.py).  add_rmsnorm keeps its hand-written expert builder as
-# the default — the auto-derived chain rides the variant axis to prove
-# parity.
+# fused operator chains (DESIGN.md §9–§11): every chain the dataflow
+# proposer derives gets the UNFUSED sequential program as its registry
+# default plus a `<op>_streaming` capacity-refusal fallback; the fused
+# form is a tuner-discoverable variant (see tuning/space.py).  Chains are
+# no longer hand-declared at any level: fusion/extract.py traces the
+# model workload functions (models/workloads.py) with jax.make_jaxpr and
+# the proposer segments the normalized graphs — mask_softmax (the
+# attention reference's masked score normalization) enters this registry
+# purely through extraction.  add_rmsnorm keeps its hand-written expert
+# builder as the default — the auto-derived chain rides the variant axis
+# to prove parity.
 from .fusion import chain as FUSION  # noqa: E402
 FUSION.register_planner_chains(PLANNER_REGISTRY)
 

@@ -64,7 +64,14 @@ def _stable(obj: Any) -> Any:
 
 def task_fingerprint(task) -> Dict[str, Any]:
     """Everything generation reads from a KernelTask (not the ref fn —
-    references are ground truth, not generation inputs)."""
+    references are ground truth, not generation inputs).
+
+    Fused-chain tasks additionally carry ``attrs['chain_fingerprint']``
+    (the α-invariant structural fingerprint from DESIGN.md §11), so cache
+    keys track what a chain *computes*: a chain re-derived by jaxpr
+    extraction keys identically to its declared golden fixture, while any
+    structural change — stage wiring, keep/route, pad values — invalidates
+    every stale entry."""
     return _stable({
         "name": task.name,
         "op": task.op,

@@ -108,8 +108,12 @@ def _ensure_builtin_variants() -> None:
     for op, name, registry_key in _BUILTIN_VARIANTS:
         if registry_key in PLANNER_REGISTRY:
             register_variant(op, name, PLANNER_REGISTRY[registry_key])
-    # fused operator chains (DESIGN.md §9): fused-vs-sequential rides the
-    # same variant axis, so the tuner discovers fusion on its own
+    # fused operator chains (DESIGN.md §9–§11): fused-vs-sequential rides
+    # the same variant axis, so the tuner discovers fusion on its own.
+    # CHAINS itself is populated by jaxpr extraction over the model
+    # workload library (fingerprint-deduped against the declared golden
+    # fixtures), so a chain first observed in traced model code — e.g.
+    # mask_softmax — becomes tuner-searchable with no registration code.
     from ..fusion.chain import register_fusion_variants
     register_fusion_variants(register_variant)
     _builtins_done = True

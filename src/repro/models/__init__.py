@@ -1,3 +1,8 @@
-"""Model zoo: unified layer library + transformer assembly + configs."""
+"""Model zoo: unified layer library + transformer assembly + configs.
+
+``workloads`` (imported lazily by ``core/fusion/extract.py``, not here —
+it pulls in jax tracing machinery) names the traceable hot-spot functions
+the fusion extractor derives kernel chains from (DESIGN.md §11).
+"""
 from .config import ArchConfig, LayerSpec
 from . import layers, transformer

@@ -1,0 +1,172 @@
+"""Traceable framework hot spots — the fusion extractor's source of truth.
+
+Each :class:`Workload` names a real model computation (a block function or
+the inter-matmul segment of one) as a plain JAX function plus example
+trace shapes.  ``core/fusion/extract.py`` traces these with
+``jax.make_jaxpr``, normalizes the jaxpr into the proposer's OpGraph IR
+and derives fusable chains from them (DESIGN.md §11) — the hand-declared
+``GRAPHS`` tuple in ``fusion/propose.py`` survives only as golden
+fixtures that this library must re-derive.
+
+The functions deliberately reuse the *actual* layer implementations where
+one exists (``layers.apply_norm``, ``layers.apply_mlp``,
+``layers.apply_attention``, the flash-attention reference) so the
+extractor is exercised against the primitives real model code emits —
+including matmul/rope/reshape barriers and the ``where(mask, logits,
+-inf)`` masking idiom — not against hand-massaged toy graphs.  Argument
+names align with the golden fixtures' tensor names; for chains the
+fixtures do not cover, canonical naming comes from
+``extract.canonicalize_spec``.
+
+Trace shapes are tiny: extraction only reads dataflow *structure* (ops,
+ranks, broadcast roles), never sizes — the planner/tuner re-instantiates
+chains at real task shapes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ArchConfig
+from ..kernels.flash_attention.ref import mha_reference
+
+
+@dataclass(frozen=True)
+class Workload:
+    name: str
+    fn: Callable
+    shapes: Tuple[Tuple[str, Tuple[int, ...]], ...]   # (arg, trace shape)
+    doc: str = ""
+
+
+# a minimal rmsnorm config for apply_norm (structure-only: sizes are the
+# trace shapes below, never this config's)
+_CFG = ArchConfig(name="trace", n_layers=1, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab=64, norm="rmsnorm")
+
+_B, _S, _D, _FF = 2, 16, 64, 128
+
+
+# --------------------------------------------------------------------------
+# Inter-matmul segments (the six golden chains)
+# --------------------------------------------------------------------------
+
+def _bias_gelu(input, bias):                       # noqa: A002
+    # biased up-projection epilogue: the model's gelu MLP activation
+    # (layers.apply_mlp kind="gelu") applied to a bias-carrying dense out
+    return jax.nn.gelu(input + bias, approximate=True)
+
+
+def _mul_softmax(input, scale):                    # noqa: A002
+    # per-column scaled (temperature) softmax
+    return jax.nn.softmax(input * scale, axis=-1)
+
+
+def _rmsnorm_swiglu(input, weight, gate):          # noqa: A002
+    # rmsnorm feeding a gated activation (layers.apply_norm is the real
+    # model norm; the gate branch arrives from a matmul upstream)
+    h = L.apply_norm({"scale": weight}, input, _CFG)
+    return jax.nn.silu(h) * gate
+
+
+def _add_rmsnorm(input, residual, weight, w_gate, w_up, w_down):  # noqa: A002
+    # the REAL pre-FFN segment of models/transformer._apply_layer: the
+    # residual stream update + norm, flanked by the FFN matmuls.  The
+    # matmuls are barriers AND close a cycle (the FFN output is added back
+    # onto the residual stream), so the proposer must stop the chain at
+    # {add, rmsnorm} with the updated residual escaping — exactly the
+    # declared add_rmsnorm fixture.
+    new_residual = input + residual
+    h = L.apply_norm({"scale": weight}, new_residual, _CFG)
+    out = L.apply_mlp({"w_gate": w_gate, "w_up": w_up, "w_down": w_down},
+                      h, "swiglu")
+    return new_residual + out
+
+
+def _attn_scores(input, scale, mask):              # noqa: A002
+    # attention score pipeline with per-column scale and additive mask
+    # (ALiBi-style), rows far too wide for VMEM residency at bench shapes
+    return jax.nn.softmax(input * scale + mask, axis=-1)
+
+
+def _swiglu_proj(input, gate_scale, up_scale):     # noqa: A002
+    # two-branch gated activation over per-column-scaled projections of
+    # the SAME input (shared producer -> DAG chain)
+    return jax.nn.silu(input * gate_scale) * (input * up_scale)
+
+
+# --------------------------------------------------------------------------
+# Real block functions (new chains + end-to-end validation)
+# --------------------------------------------------------------------------
+
+def _attention_probs(q, k, v):
+    # the flash-attention REFERENCE (the exact path CPU model code runs):
+    # qk^T matmul -> scalar scale -> where(causal, logits, -inf) ->
+    # softmax -> pv matmul.  The extractor canonicalizes the masked fill
+    # into the additive-mask idiom, deriving the NEW mask_softmax chain
+    # (add -> softmax) between the two matmul barriers.
+    return mha_reference(q, k, v, causal=True)
+
+
+def _transformer_block(x, norm1_w, wq, wk, wv, wo, norm2_w,
+                       w_gate, w_up, w_down):
+    # models/transformer._apply_layer, non-mHC path, verbatim structure:
+    # pre-norm attention + residual, pre-norm swiglu MLP + residual.
+    # Validation workload: every chain extracted here must fingerprint-
+    # dedupe onto an already-registered chain (mask_softmax from the
+    # attention scores, add_rmsnorm from the pre-FFN segment).
+    h = L.apply_norm({"scale": norm1_w}, x, _CFG)
+    attn, _ = L.apply_attention(
+        {"wq": wq, "wk": wk, "wv": wv, "wo": wo}, h, _CFG)
+    x = x + attn
+    h2 = L.apply_norm({"scale": norm2_w}, x, _CFG)
+    out = L.apply_mlp({"w_gate": w_gate, "w_up": w_up, "w_down": w_down},
+                      h2, "swiglu")
+    return x + out
+
+
+_HD = _CFG.resolved_head_dim
+
+WORKLOADS: Tuple[Workload, ...] = (
+    Workload("bias_gelu", _bias_gelu,
+             (("input", (_B * _S, _FF)), ("bias", (_FF,))),
+             doc="biased FFN up-projection epilogue"),
+    Workload("mul_softmax", _mul_softmax,
+             (("input", (_S, _S)), ("scale", (_S,))),
+             doc="temperature/column-scaled softmax"),
+    Workload("rmsnorm_swiglu", _rmsnorm_swiglu,
+             (("input", (_B * _S, _D)), ("weight", (_D,)),
+              ("gate", (_B * _S, _D))),
+             doc="model norm feeding a gated activation"),
+    Workload("add_rmsnorm", _add_rmsnorm,
+             (("input", (_B * _S, _D)), ("residual", (_B * _S, _D)),
+              ("weight", (_D,)), ("w_gate", (_D, _FF)),
+              ("w_up", (_D, _FF)), ("w_down", (_FF, _D))),
+             doc="residual update + norm inside the real FFN block"),
+    Workload("attn_scores", _attn_scores,
+             (("input", (_S, _S)), ("scale", (_S,)), ("mask", (_S,))),
+             doc="scaled + additively-masked attention scores"),
+    Workload("swiglu_proj", _swiglu_proj,
+             (("input", (_B * _S, _D)), ("gate_scale", (_D,)),
+              ("up_scale", (_D,))),
+             doc="two-branch gated projection (shared producer DAG)"),
+    Workload("mask_softmax", _attention_probs,
+             (("q", (_B, _S, _CFG.n_heads, _HD)),
+              ("k", (_B, _S, _CFG.n_kv_heads, _HD)),
+              ("v", (_B, _S, _CFG.n_kv_heads, _HD))),
+             doc="flash-attention reference: masked score normalization"),
+    Workload("transformer_block", _transformer_block,
+             (("x", (_B, _S, _D)), ("norm1_w", (_D,)),
+              ("wq", (_D, _CFG.n_heads * _HD)),
+              ("wk", (_D, _CFG.n_kv_heads * _HD)),
+              ("wv", (_D, _CFG.n_kv_heads * _HD)),
+              ("wo", (_CFG.n_heads * _HD, _D)),
+              ("norm2_w", (_D,)), ("w_gate", (_D, _FF)),
+              ("w_up", (_D, _FF)), ("w_down", (_FF, _D))),
+             doc="full pre-norm transformer layer (validation: all chains "
+                 "must dedupe onto registered fingerprints)"),
+)

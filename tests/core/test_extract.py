@@ -1,0 +1,313 @@
+"""Jaxpr-level graph extraction (DESIGN.md §11): golden re-derivation of
+every declared chain from traced model code, composite recognition,
+barrier segmentation (dot_general / scan / dynamic_slice), masked-fill
+canonicalization, barrier-cycle legality, naming/fingerprint stability and
+determinism."""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.fusion import (CHAINS, CHAIN_SOURCES, GRAPHS, OpGraph,
+                               OpNode, ProposeError, chain_fingerprint,
+                               extract_chains, extract_graph,
+                               extracted_chains, propose_chains)
+from repro.models.workloads import WORKLOADS
+
+W = {w.name: w for w in WORKLOADS}
+
+
+# ---------------------------------------------------------------------------
+# Golden: extraction re-derives every declared fixture chain byte-identically
+# ---------------------------------------------------------------------------
+
+def test_extraction_rederives_all_declared_chains_byte_identical():
+    """Every chain proposable from the hand-declared GRAPHS fixtures must
+    also be derived by tracing the model workload library — and the
+    registered CHAINS entry must be the fixture spec verbatim (stages,
+    keep/route, pad values, tensor names), so planner registry entries,
+    cache keys and kernels/generated/ artifacts cannot churn."""
+    declared = {}
+    for g in GRAPHS:
+        for spec in propose_chains(g):
+            declared[spec.name] = spec
+    assert len(declared) == 6
+    extracted_fps = {chain_fingerprint(s) for s, _ in extracted_chains()}
+    for name, spec in declared.items():
+        assert chain_fingerprint(spec) in extracted_fps, (
+            f"extraction lost declared chain '{name}'")
+        assert CHAINS[name] == spec, (
+            f"registered '{name}' is not the declared fixture spec")
+        assert CHAIN_SOURCES[name] == ("declared", "extracted")
+
+
+def test_add_rmsnorm_extracted_from_real_ffn_block():
+    """The add_rmsnorm chain comes out of the REAL pre-FFN segment
+    (residual update + apply_norm flanked by the FFN matmuls), with the
+    matmul barriers visible in the extracted graph and the escaping
+    residual stream kept."""
+    w = W["add_rmsnorm"]
+    graph = extract_graph(w.fn, w.shapes, name=w.name)
+    assert sum(n.op == "barrier.dot_general" for n in graph.nodes) == 3
+    (spec,) = propose_chains(graph)
+    assert [st.op for st in spec.stages] == ["add", "rmsnorm"]
+    assert len(spec.keep) == 1                 # residual stream escapes
+    declared = CHAINS["add_rmsnorm"]
+    assert chain_fingerprint(spec) == chain_fingerprint(declared)
+
+
+def test_barrier_cycle_does_not_swallow_post_ffn_residual_add():
+    """The FFN output is added back onto the residual stream the chain
+    itself produced: merging that add into the chain would make the fused
+    kernel consume a tensor that only exists after it has run.  The
+    proposer must stop the chain at {add, rmsnorm} — exactly one chain,
+    two stages — instead of emitting a 3-stage unschedulable one."""
+    w = W["add_rmsnorm"]
+    specs = extract_chains(w.fn, w.shapes, name=w.name)
+    assert len(specs) == 1
+    assert len(specs[0].stages) == 2
+
+
+# ---------------------------------------------------------------------------
+# The NEW extracted chain: mask_softmax from the flash-attention reference
+# ---------------------------------------------------------------------------
+
+def test_mask_softmax_extracted_from_attention_reference():
+    """Tracing the real mha_reference yields the additively-masked softmax
+    chain between the two matmuls: where(causal, logits, -inf) is
+    canonicalized into add(input, mask) and the softmax pattern collapses,
+    with the scalar qk-scale mul left as a barrier feeding the chain."""
+    w = W["mask_softmax"]
+    graph = extract_graph(w.fn, w.shapes, name=w.name)
+    ops = [n.op for n in graph.nodes]
+    assert "barrier.dot_general" in ops          # the qk / pv matmuls
+    assert "add" in ops and "softmax" in ops
+    assert "barrier.select_n" not in ops         # masked fill rewritten
+    (spec,) = propose_chains(graph)
+
+
+def test_mask_softmax_registered_chain_structure():
+    spec = CHAINS["mask_softmax"]
+    assert CHAIN_SOURCES["mask_softmax"] == ("extracted",)
+    assert spec.inputs == (("input", 2), ("mask", 2))
+    assert spec.outputs == ("output",)
+    assert [(st.op, st.inputs, st.output) for st in spec.stages] == [
+        ("add", ("input", "mask"), "h"),
+        ("softmax", ("h",), "output")]
+    # neutral pad propagated backward through the mask add
+    assert dict(spec.pad_values) == {"input": -3.0e38}
+
+
+def test_mask_softmax_registered_end_to_end():
+    """The extracted chain rides the full pipeline: planner default +
+    streaming fallback, tuner variant, fused-suite task with the chain
+    fingerprint in its cache attrs, checked-in generated artifact."""
+    from repro.bench.tasks import fused_suite
+    from repro.core.planner import PLANNER_REGISTRY
+    from repro.core.tuning import variants_for
+    assert "mask_softmax" in PLANNER_REGISTRY
+    assert "mask_softmax_streaming" in PLANNER_REGISTRY
+    assert "fused" in variants_for("mask_softmax")
+    task = {t.name: t for t in fused_suite()}["mask_softmax"]
+    assert task.attrs["chain_fingerprint"] == \
+        chain_fingerprint(CHAINS["mask_softmax"])
+    import repro.kernels.generated.mask_softmax as art
+    assert callable(art.make)
+
+
+def test_full_transformer_block_chains_all_dedupe():
+    """The full pre-norm transformer layer is the end-to-end validation
+    workload: everything fusable it contains must fingerprint-dedupe onto
+    already-registered chains (mask_softmax from the attention scores,
+    add_rmsnorm from the pre-FFN segment) — no accidental near-duplicate
+    registrations."""
+    w = W["transformer_block"]
+    specs = extract_chains(w.fn, w.shapes, name=w.name)
+    fps = sorted(chain_fingerprint(s) for s in specs)
+    assert fps == sorted((chain_fingerprint(CHAINS["mask_softmax"]),
+                          chain_fingerprint(CHAINS["add_rmsnorm"])))
+
+
+# ---------------------------------------------------------------------------
+# Composite recognition units
+# ---------------------------------------------------------------------------
+
+def _single_chain(fn, shapes, name="unit"):
+    specs = extract_chains(fn, shapes, name=name)
+    assert len(specs) == 1, [s.name for s in specs]
+    return specs[0]
+
+
+@pytest.mark.parametrize("fn,ops", [
+    (lambda x, b: jax.nn.gelu(x + b, approximate=True), ["add", "gelu"]),
+    (lambda x, b: jax.nn.gelu(x + b, approximate=False), ["add", "gelu"]),
+    (lambda x, b: jax.nn.silu(x + b), ["add", "silu"]),
+    (lambda x, b: (lambda h: h * jax.nn.sigmoid(h))(x + b),
+     ["add", "silu"]),
+    (lambda x, b: jax.nn.relu(x + b), ["add", "relu"]),
+    (lambda x, b: jnp.square(x + b), ["add", "square"]),
+    (lambda x, b: jnp.tanh(x * b), ["mul", "tanh"]),
+    (lambda x, b: jax.nn.silu(x + b) * x, ["add", "swiglu"]),
+])
+def test_composite_recognition(fn, ops):
+    spec = _single_chain(fn, (("input", (4, 64)), ("bias", (64,))))
+    assert [st.op for st in spec.stages] == ops
+
+
+def test_rank3_model_tensors_canonicalize_to_rank2_chains():
+    """(B, S, d) activations flatten to row tensors; trailing-broadcast
+    weights stay rank-1 vectors."""
+    from repro.models import layers as L
+    from repro.models.workloads import _CFG
+    spec = _single_chain(
+        lambda x, w: jax.nn.silu(L.apply_norm({"scale": w}, x, _CFG)),
+        (("input", (2, 8, 64)), ("weight", (64,))))
+    assert spec.inputs == (("input", 2), ("weight", 1))
+    assert [st.op for st in spec.stages] == ["rmsnorm", "silu"]
+
+
+# ---------------------------------------------------------------------------
+# Barrier segmentation: unsupported primitives segment, never mis-fuse
+# ---------------------------------------------------------------------------
+
+def test_dot_general_barrier_segments_extracted_graph():
+    def fn(x, b, w, v):
+        h = jax.nn.gelu(x + b)
+        m = h @ w                       # matmul barrier
+        return jnp.tanh(m * v)
+
+    shapes = (("x", (8, 64)), ("b", (64,)), ("w", (64, 64)), ("v", (64,)))
+    graph = extract_graph(fn, shapes, name="seg")
+    assert any(n.op == "barrier.dot_general" for n in graph.nodes)
+    first, second = propose_chains(graph)
+    assert [st.op for st in first.stages] == ["add", "gelu"]
+    assert [st.op for st in second.stages] == ["mul", "tanh"]
+    # the matmul's output re-enters the downstream chain as a plain input
+    barrier_out = next(n.output for n in graph.nodes
+                       if n.op == "barrier.dot_general")
+    assert second.inputs[0] == (barrier_out, 2)
+
+
+def test_scan_barrier_segments_extracted_graph():
+    def fn(x, b, v):
+        h = jax.nn.silu(x + b)
+        _, ys = jax.lax.scan(lambda c, row: (c + row, c + row),
+                             jnp.zeros(x.shape[1]), h)
+        return jnp.exp(ys * v)
+
+    shapes = (("x", (8, 64)), ("b", (64,)), ("v", (64,)))
+    graph = extract_graph(fn, shapes, name="seg_scan")
+    assert any(n.op == "barrier.scan" for n in graph.nodes)
+    specs = propose_chains(graph)
+    assert [[st.op for st in s.stages] for s in specs] == [
+        ["add", "silu"], ["mul", "exp"]]
+
+
+def test_dynamic_slice_barrier_segments_extracted_graph():
+    def fn(x, b, v):
+        h = jax.nn.gelu(x + b)
+        s = jax.lax.dynamic_slice(h, (0, 0), (4, x.shape[1]))
+        return jnp.tanh(s * v)
+
+    shapes = (("x", (8, 64)), ("b", (64,)), ("v", (64,)))
+    graph = extract_graph(fn, shapes, name="seg_ds")
+    assert any(n.op == "barrier.dynamic_slice" for n in graph.nodes)
+    specs = propose_chains(graph)
+    assert [[st.op for st in s.stages] for s in specs] == [
+        ["add", "gelu"], ["mul", "tanh"]]
+
+
+def test_barrier_nodes_carry_true_out_rank():
+    """A reduction barrier's output is rank-1 — OpNode.out_rank must say
+    so (inferring from the input would claim rank 2 and corrupt any
+    downstream chain's primary-input rank check)."""
+    graph = extract_graph(lambda x: jnp.sum(x, axis=-1) * 1.0,
+                          (("x", (8, 64)),), name="red")
+    red = next(n for n in graph.nodes if n.op == "barrier.reduce_sum")
+    assert red.out_rank == 1
+
+
+def test_pad_unsound_extraction_refuses_with_propose_error():
+    """sigmoid -> softmax: no pad value survives sigmoid into softmax's
+    neutral element, so the proposer must refuse the extracted chain
+    rather than mis-fuse (same rule as declared graphs)."""
+    with pytest.raises(ProposeError):
+        extract_chains(lambda x: jax.nn.softmax(jax.nn.sigmoid(x), axis=-1),
+                       (("x", (4, 64)),), name="bad")
+
+
+# ---------------------------------------------------------------------------
+# Masked-fill canonicalization gating
+# ---------------------------------------------------------------------------
+
+def test_masked_fill_only_rewrites_into_softmax():
+    """where(pred, x, -inf) NOT consumed by a softmax keeps its select_n
+    barrier — the additive-mask rewrite is only neutral under a softmax
+    consumer."""
+    def fn(x, m, b):
+        return jnp.tanh(jnp.where(m > 0.0, x, -jnp.inf) + b)
+
+    shapes = (("x", (4, 64)), ("m", (4, 64)), ("b", (64,)))
+    graph = extract_graph(fn, shapes, name="nomask")
+    assert any(n.op == "barrier.select_n" for n in graph.nodes)
+    assert not any(t.startswith("%mask") for t, _ in graph.inputs)
+
+
+def test_masked_fill_rewrite_synthesizes_mask_input():
+    def fn(x, m):
+        return jax.nn.softmax(jnp.where(m > 0.0, x, -jnp.inf), axis=-1)
+
+    shapes = (("x", (4, 64)), ("m", (4, 64)))
+    spec = _single_chain(fn, shapes, name="masked")
+    assert [st.op for st in spec.stages] == ["add", "softmax"]
+    assert ("mask", 2) in spec.inputs
+    assert chain_fingerprint(spec) == \
+        chain_fingerprint(CHAINS["mask_softmax"])
+
+
+# ---------------------------------------------------------------------------
+# Determinism and naming stability
+# ---------------------------------------------------------------------------
+
+def test_extraction_is_deterministic_across_runs():
+    """Two full extraction sweeps produce identical specs in identical
+    order — the precondition for the CI byte-determinism gate (which
+    additionally re-runs extraction under two PYTHONHASHSEEDs)."""
+    a = extracted_chains()
+    b = extracted_chains()
+    assert [(s.name, chain_fingerprint(s), s) for s, _ in a] == \
+           [(s.name, chain_fingerprint(s), s) for s, _ in b]
+
+
+def test_canonical_naming_is_stable_for_new_chains():
+    """Chains with no declared fixture get deterministic canonical names:
+    primary barrier-produced input -> 'input', synthesized mask -> 'mask',
+    single link -> 'h', final observed output -> 'output'."""
+    w = W["mask_softmax"]
+    (spec,) = extract_chains(w.fn, w.shapes, name=w.name)
+    assert spec.inputs == (("input", 2), ("mask", 2))
+    assert spec.stages[0].output == "h"
+    assert spec.outputs == ("output",)
+
+
+def test_fingerprint_is_alpha_invariant_and_structure_sensitive():
+    from repro.core.fusion import ChainSpec, ChainStage
+    a = ChainSpec(name="a", inputs=(("x", 2), ("s", 1)),
+                  outputs=("y",),
+                  stages=(ChainStage("mul", ("x", "s"), "t"),
+                          ChainStage("softmax", ("t",), "y")),
+                  pad_values=(("x", -3.0e38), ("s", 1.0)))
+    b = ChainSpec(name="b", inputs=(("input", 2), ("scale", 1)),
+                  outputs=("output",),
+                  stages=(ChainStage("mul", ("input", "scale"), "h"),
+                          ChainStage("softmax", ("h",), "output")),
+                  pad_values=(("input", -3.0e38), ("scale", 1.0)))
+    assert chain_fingerprint(a) == chain_fingerprint(b)
+    assert chain_fingerprint(a) == chain_fingerprint(CHAINS["mul_softmax"])
+    c = ChainSpec(name="c", inputs=(("x", 2), ("s", 1)),
+                  outputs=("y",),
+                  stages=(ChainStage("add", ("x", "s"), "t"),
+                          ChainStage("softmax", ("t",), "y")),
+                  pad_values=(("x", -3.0e38),))
+    assert chain_fingerprint(c) != chain_fingerprint(a)

@@ -534,3 +534,215 @@ def test_dag_fused_loads_shared_input_once(tasks):
              if isinstance(s, A.Load)]
     assert sorted(ld.tensor for ld in loads) == ["gate_scale", "input",
                                                  "up_scale"]
+
+
+# ---------------------------------------------------------------------------
+# Differential property suite (DESIGN.md §11): for EVERY registered chain
+# — declared fixture or jaxpr-extracted — fused ≡ sequential ≡ composed
+# float64 reference on seeded-random inputs at odd, non-lane-aligned
+# shapes, across the resident and streaming patterns.  Parametrizing over
+# sorted(CHAINS) at collection time IS the no-untested-chain gate: a chain
+# registered without a differentially-testable stage vocabulary fails
+# here, and CI runs this file on every push.
+# ---------------------------------------------------------------------------
+
+import zlib
+
+from repro.bench.tasks import _ACT_REFS, _MATH_REFS, _rmsnorm, _softmax
+from repro.core.fusion import CHAINS
+
+
+def _stage_ref64(op, args, attrs):
+    """Float64 reference for one chain stage (the DSL-independent oracle
+    the differential test composes along spec.stages)."""
+    a64 = [np.asarray(a, np.float64) for a in args]
+    if op == "add":
+        return a64[0] + a64[1]
+    if op == "sub":
+        return a64[0] - a64[1]
+    if op == "mul":
+        return a64[0] * a64[1]
+    if op == "swiglu":
+        return _ACT_REFS["silu"](a64[0]) * a64[1]
+    if op == "softmax":
+        return _softmax(a64[0])
+    if op == "rmsnorm":
+        assert float(attrs.get("eps", 1e-6)) == 1e-6
+        return _rmsnorm(a64[0], a64[1])
+    if op == "square":
+        return a64[0] * a64[0]
+    if op == "abs":
+        return np.abs(a64[0])
+    if op == "neg":
+        return -a64[0]
+    if op in _ACT_REFS:
+        return _ACT_REFS[op](a64[0])
+    if op in _MATH_REFS:
+        return _MATH_REFS[op](a64[0])
+    raise AssertionError(
+        f"no float64 reference for stage op '{op}': every registered "
+        f"chain must be coverable by the differential suite")
+
+
+def _compose_ref64(spec, inputs):
+    env = {k: np.asarray(v, np.float64) for k, v in inputs.items()}
+    attrs = dict(spec.attrs)
+    for st in spec.stages:
+        env[st.output] = _stage_ref64(st.op, [env[t] for t in st.inputs],
+                                      attrs)
+    return {t: env[t] for t in spec.outputs}
+
+
+def _diff_inputs(spec, rows, cols, seed):
+    """Seeded random inputs; rank-1 operands of stat stages (rmsnorm
+    weights) draw positive so the f64 oracle stays well-conditioned."""
+    rng = np.random.RandomState(seed)
+    weights = {st.inputs[1] for st in spec.stages
+               if st.op == "rmsnorm" and len(st.inputs) > 1}
+    shapes = {t: ((rows, cols) if r == 2 else (cols,))
+              for t, r in spec.inputs}
+    inputs = {}
+    for t, _r in spec.inputs:
+        if t in weights:
+            inputs[t] = rng.uniform(0.5, 1.5, shapes[t]).astype(np.float32)
+        else:
+            inputs[t] = rng.randn(*shapes[t]).astype(np.float32)
+    return shapes, inputs
+
+
+def _run_chain_prog(prog, spec, inputs, out_shapes):
+    souts = _padded_outs(prog, out_shapes)
+    primary_out = souts[spec.outputs[0]]
+    for sc in prog.meta.get("scratch_outs", []):
+        souts[sc] = primary_out
+    res = interpret(prog, _pad_like(prog, inputs, spec), souts)
+    return {t: res[t] for t in spec.outputs}
+
+
+def _chain_differential(chain, rows, cols, seed,
+                        patterns=("resident", "streaming")):
+    """Build every available (pattern, mode) program for the chain and
+    check fused ≡ sequential (bit-exact within a pattern) and everything ≡
+    the composed f64 reference.  Returns the built keys."""
+    spec = CHAINS[chain]
+    shapes, inputs = _diff_inputs(spec, rows, cols, seed)
+    ref = _compose_ref64(spec, inputs)
+    out_shapes = {t: (rows, cols) for t in spec.outputs}
+    built = {}
+    for pattern in patterns:
+        for mode in ("fused", "sequential"):
+            try:
+                prog = build_chain(spec, shapes, mode=mode, name=None,
+                                   pattern=pattern)
+            except (NotImplementedError, FusionError):
+                continue   # pattern structurally unsupported at this shape
+            built[(pattern, mode)] = _run_chain_prog(prog, spec, inputs,
+                                                     out_shapes)
+    for (pattern, mode), outs in built.items():
+        for t in spec.outputs:
+            np.testing.assert_allclose(
+                outs[t][:, :cols], ref[t], rtol=3e-4, atol=2e-5,
+                err_msg=f"{chain} {pattern}/{mode} output '{t}' diverges "
+                        f"from the composed f64 reference")
+    for pattern in patterns:
+        f, s = built.get((pattern, "fused")), built.get((pattern,
+                                                         "sequential"))
+        if f is not None and s is not None:
+            for t in spec.outputs:
+                np.testing.assert_allclose(
+                    f[t], s[t], rtol=0, atol=0,
+                    err_msg=f"{chain} {pattern}: fused != sequential")
+    return built
+
+
+@pytest.mark.parametrize("rows,cols", [(5, 97), (7, 331)])
+@pytest.mark.parametrize("chain", sorted(CHAINS))
+def test_differential_fused_sequential_f64(chain, rows, cols):
+    seed = zlib.crc32(f"{chain}-{rows}-{cols}".encode()) % (2 ** 31)
+    built = _chain_differential(chain, rows, cols, seed)
+    assert any(m == "fused" for _, m in built), (chain, "no fused build")
+    assert any(m == "sequential" for _, m in built), (chain,
+                                                      "no sequential build")
+
+
+def test_every_registered_chain_has_differential_coverage():
+    """The no-untested-chain gate, stated directly: the parametrization
+    above covers set(CHAINS) exactly, and every registered chain's stage
+    vocabulary is evaluable by the f64 oracle."""
+    for name, spec in CHAINS.items():
+        shapes, inputs = _diff_inputs(spec, 3, 65, 0)
+        outs = _compose_ref64(spec, inputs)
+        assert set(outs) == set(spec.outputs), name
+
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as hst
+    _HAVE_HYPOTHESIS = True
+except ImportError:          # container without hypothesis: the seeded
+    _HAVE_HYPOTHESIS = False  # sweep above still gates every chain
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(chain=hst.sampled_from(sorted(CHAINS)),
+           rows=hst.integers(min_value=1, max_value=9),
+           cols=hst.integers(min_value=3, max_value=400),
+           seed=hst.integers(min_value=0, max_value=2 ** 31 - 1))
+    def test_differential_property_hypothesis(chain, rows, cols, seed):
+        """Hypothesis-driven differential property: arbitrary odd shapes
+        and seeds, same fused ≡ sequential ≡ f64 oracle."""
+        _chain_differential(chain, rows, cols, seed)
+
+
+# ---------------------------------------------------------------------------
+# Multi-stat regression lock: softmax -> softmax (pinned until the
+# per-stat spill schedule lands)
+# ---------------------------------------------------------------------------
+
+def test_multi_stat_softmax_softmax_extraction_refuses():
+    """The proposer refuses the pad-unsound double-softmax chain from the
+    extraction path outright: no pad value survives the inner softmax into
+    the outer softmax's neutral element, so proposing it would mis-fuse at
+    lane-padded shapes.  Refusal, not a wrong chain."""
+    import jax
+    from repro.core.fusion import ProposeError, extract_chains
+    with pytest.raises(ProposeError):
+        extract_chains(
+            lambda x: jax.nn.softmax(jax.nn.softmax(x, axis=-1), axis=-1),
+            (("x", (4, 64)),), name="double_softmax")
+
+
+def test_multi_stat_fallback_is_sequential_and_correct():
+    """A hand-declared softmax->softmax spec (the builder-level escape
+    hatch) must fall back to sequence_programs at streaming scale — two
+    scalar recurrences have no shared spill schedule — and the fallback
+    must match the composed f64 reference at lane-aligned columns."""
+    spec = ChainSpec(
+        name="double_softmax",
+        inputs=(("input", 2),),
+        outputs=("output",),
+        stages=(ChainStage("softmax", ("input",), "h"),
+                ChainStage("softmax", ("h",), "output")),
+        pad_values=(("input", -3.0e38),))
+    wide = {"input": (1, 2 ** 21), "output": (1, 2 ** 21)}
+    with pytest.raises(NotImplementedError):
+        build_chain(spec, wide, mode="fused")
+    prog = build_fused(spec, wide, fallback=True)
+    assert prog.meta["fusion"]["mode"] == "sequential"
+    assert prog.meta["fusion"]["pattern"] == "streaming"
+    # numerics: lane-aligned columns (the only shape class the chain is
+    # sound at today — padded lanes of the inner softmax's output are not
+    # the outer softmax's neutral element, which is exactly why the
+    # proposer refuses it above)
+    rows, cols = 4, 256
+    shapes = {"input": (rows, cols), "output": (rows, cols)}
+    rng = np.random.RandomState(7)
+    x = rng.randn(rows, cols).astype(np.float32)
+    want = _softmax(_softmax(x))
+    for mode in ("sequential", "fused"):
+        prog = build_chain(spec, shapes, mode=mode)
+        got = _run_chain_prog(prog, spec, {"input": x},
+                              {"output": (rows, cols)})["output"]
+        np.testing.assert_allclose(got[:, :cols], want, rtol=3e-4,
+                                   atol=2e-5, err_msg=mode)

@@ -182,6 +182,24 @@ def test_generated_fused_swiglu_proj(rows):
     np.testing.assert_allclose(np.asarray(y), want, rtol=2e-4, atol=1e-5)
 
 
+@pytest.mark.parametrize("rows", [32, 64])
+def test_generated_fused_mask_softmax(rows):
+    """Checked-in artifact of the jaxpr-EXTRACTED chain (DESIGN.md §11):
+    additively-masked softmax discovered inside the flash-attention
+    reference — the tuner-selected fused resident form."""
+    rng = np.random.RandomState(17)
+    x = rng.randn(rows, 8192).astype(np.float32)
+    m = np.where(rng.rand(rows, 8192) > 0.25, 0.0, -1.0e9) \
+        .astype(np.float32)
+    y = G.mask_softmax.mask_softmax_fused(x, m, interpret=True)
+    s = x.astype(np.float64) + m.astype(np.float64)
+    e = np.exp(s - s.max(-1, keepdims=True))
+    want = e / e.sum(-1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(y), want, rtol=2e-4, atol=1e-6)
+    src = __import__("inspect").getsource(G.mask_softmax)
+    assert "Store/Load round trips deleted" in src
+
+
 def test_generated_attn_scores_is_streaming_and_guarded():
     """The attn_scores artifact is the loop-carry-stitched STREAMING chain
     (rows far too wide for residency): running scalars + the one-time
