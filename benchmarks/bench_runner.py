@@ -114,8 +114,13 @@ def _latest_previous():
 
 
 def check_regressions(report, prev, tolerance: float = 0.02) -> list:
-    """Tasks whose tuned ratio regressed > ``tolerance`` vs the previous
-    artifact (same suite only — different suites are not comparable)."""
+    """Tasks whose tuned ratio regressed vs the previous artifact (same
+    suite only — different suites are not comparable).
+
+    FUSED-category chains are held to a STRICT bar: the roofline model is
+    deterministic, so any drop below the last recorded tuned ratio is a
+    real scheduling/stitching regression, not noise — tolerance does not
+    apply.  Other tasks keep the ``tolerance`` slack."""
     if prev is None or prev.get("suite") != report.get("suite"):
         return []
     old = {t["name"]: t for t in prev.get("tasks", []) if t.get("ok")}
@@ -124,7 +129,8 @@ def check_regressions(report, prev, tolerance: float = 0.02) -> list:
         if not t.get("ok") or t["name"] not in old:
             continue
         before = float(old[t["name"]]["tuned_ratio"])
-        if before > 0 and t["tuned_ratio"] < before * (1 - tolerance):
+        tol = 0.0 if t.get("category") == "fused" else tolerance
+        if before > 0 and t["tuned_ratio"] < before * (1 - tol) - 1e-12:
             bad.append((t["name"], before, t["tuned_ratio"]))
     return bad
 

@@ -623,6 +623,44 @@ def build_fused_suite() -> List[KernelTask]:
         "mask_softmax", big, small,
         ref=lambda x, m: _softmax(_f64(x) + _f64(m)),
         make_inputs=_mk_mask_softmax))
+
+    # two-level score re-normalization (extracted MULTI-STAT chain,
+    # DESIGN.md §12): softmax -> softmax at streaming width — fusable only
+    # through the per-stat spill schedule (each stat keeps its own online
+    # (m, d) recurrence; the inter-stat link spills once, pad-blended)
+    big, small = shp(
+        {"input": (256, 786432), "output": (256, 786432)},
+        {"input": (64, 384), "output": (64, 384)})
+    tasks.append(fused_task(
+        "double_softmax", big, small,
+        ref=lambda x: _softmax(_softmax(x))))
+
+    # LM-head epilogue (extracted): biased logits -> log-probabilities
+    big, small = shp(
+        {"input": (8192, 8192), "bias": (8192,), "output": (8192, 8192)},
+        {"input": (64, 384), "bias": (384,), "output": (64, 384)})
+    tasks.append(fused_task(
+        "bias_log_softmax", big, small,
+        ref=lambda x, b: _log_softmax(_f64(x) + _f64(b))))
+
+    # post-LN residual block (extracted): LN(x + r) with the model's
+    # traced eps riding the chain attrs (non-default vs the recipe)
+    from ..core.fusion.chain import CHAINS as _CHAINS
+    ln_eps = float(dict(_CHAINS["add_layernorm"].attrs).get("eps", 1e-5))
+
+    def _add_layernorm_ref(x, r, w, b, _eps=ln_eps):
+        s = _f64(x) + _f64(r)
+        mu = s.mean(-1, keepdims=True)
+        var = ((s - mu) ** 2).mean(-1, keepdims=True)
+        return (s - mu) / np.sqrt(var + _eps) * _f64(w) + _f64(b)
+
+    big, small = shp(
+        {"input": (65536, 2048), "residual": (65536, 2048),
+         "weight": (2048,), "bias": (2048,), "output": (65536, 2048)},
+        {"input": (64, 384), "residual": (64, 384), "weight": (384,),
+         "bias": (384,), "output": (64, 384)})
+    tasks.append(fused_task("add_layernorm", big, small,
+                            ref=_add_layernorm_ref))
     return tasks
 
 

@@ -17,9 +17,11 @@ Each chain builds through one of two shared stage harnesses:
   footprint (affine in ``block_rows``; probed at two sizes);
 * **streaming** — rows too wide for residency: a per-core row loop over
   column tiles sharing a chain-wide ``tile_length``; map stages reuse the
-  elementwise recipes tile-wise, ``softmax``/``rmsnorm`` use the Fig.-2
-  multi-pass templates with running scalars, and the loop-carry stitcher
-  (``fuse.py``) jams/splices them.
+  elementwise recipes tile-wise, ``softmax``/``log_softmax`` use the
+  2-pass ONLINE templates (running max + rescaled denominator,
+  DESIGN.md §12), ``rmsnorm`` its 2-pass running-sum-of-squares form,
+  and the loop-carry stitcher (``fuse.py``) jams/splices them —
+  including chains with multiple stat stages (per-stat spill schedule).
 
 Stage compute semantics reuse the planner's own expert recipes, so a
 fused chain is the stitched composition of exactly the programs the
@@ -86,7 +88,10 @@ STAGE_OPS: Dict[str, StageOp] = {
     "sub": StageOp(("a", "b"), _rc_sub),
     "swiglu": StageOp(("a", "b"), _rc_swiglu),
     "softmax": StageOp(("input",), NORM.softmax_recipe),
+    "log_softmax": StageOp(("input",), NORM.log_softmax_recipe),
     "rmsnorm": StageOp(("input", "weight"), NORM.rmsnorm_recipe),
+    "layernorm": StageOp(("input", "weight", "bias"),
+                         NORM.layernorm_recipe),
 }
 # rowwise-compatible elementwise unaries share the planner's own recipes
 for _u in ("gelu", "silu", "relu", "tanh", "sigmoid", "exp", "sqrt", "abs",
@@ -123,6 +128,15 @@ class ChainSpec:
     def pad_value(self, tensor: str) -> float:
         return dict(self.pad_values).get(tensor, 0.0)
 
+    def link_pad(self, tensor: str) -> Optional[float]:
+        """Recorded pad requirement for ``tensor``, or None when no
+        downstream stage constrains it.  For a stat-produced link this is
+        the *per-stat spill pad* (DESIGN.md §12): the producing stage must
+        re-blend its lane-padded output tail to this value before the link
+        is stored or consumed, because the stat's own compute fills padded
+        columns with non-neutral values."""
+        return dict(self.pad_values).get(tensor)
+
     def describe(self) -> Tuple:
         """Serializable structure for task attrs / cache fingerprints."""
         return tuple((s.op, tuple(s.inputs), s.output) for s in self.stages)
@@ -142,10 +156,15 @@ class ChainSpec:
         return full
 
 
-# Ops whose streaming form carries a loop-carried scalar recurrence (the
-# paper's Fig. 2 pattern); every other STAGE_OP is tile-local ("map") and
-# can be jammed into any column-tile loop.
-STREAM_STATS = ("softmax", "rmsnorm")
+# Ops whose streaming form carries a loop-carried scalar recurrence
+# (softmax/log_softmax: the 2-pass ONLINE form — running max + running
+# rescaled denominator, DESIGN.md §12 — replacing the paper's 3-pass
+# Fig.-2 template; rmsnorm: the 2-pass running sum-of-squares form).
+# layernorm is a stat too but has no streaming template yet: streaming
+# builds refuse and the chain falls back per build_chain's convention.
+# Every other STAGE_OP is tile-local ("map") and can be jammed into any
+# column-tile loop.
+STREAM_STATS = ("softmax", "log_softmax", "rmsnorm", "layernorm")
 
 
 # --------------------------------------------------------------------------
@@ -275,6 +294,20 @@ def _stage_program(spec: ChainSpec, idx: int, stage: ChainStage,
                         pad_value=spec.pad_value(t))
         with tl.compute():
             sop.recipe(ctx)
+            nu_out = spec.link_pad(stage.output)
+            if nu_out is not None:
+                # per-stat spill pad (DESIGN.md §12): the consumer stage
+                # needs this link's lane-padded tail at its own neutral
+                # element, and this stage's compute does not produce it
+                # there — re-blend the padded columns before the tile is
+                # stored or shared
+                res = ctx.result("output")
+                b_idx, b_msk, b_nu = (ctx.tmp("padidx"), ctx.tmp("padmsk"),
+                                      ctx.tmp("padnu"))
+                tl.iota(b_idx, axis=1)
+                tl.lt(b_msk, b_idx, float(orig_cols))
+                tl.full(b_nu, float(nu_out))
+                tl.where(res, b_msk, res, b_nu)
         with tl.copyout():
             tl.store(stage.output, row0 * cols_v, ctx.result("output"))
     return P.build()
@@ -289,9 +322,15 @@ def _stream_stage_program(spec: ChainSpec, idx: int, stage: ChainStage,
                           tile: int) -> A.Program:
     """One chain stage in canonical streaming form: a per-core row loop
     over column tiles.  Map ops reuse the elementwise recipes tile-wise;
-    ``softmax``/``rmsnorm`` use the paper's Fig.-2 multi-pass templates
-    with running scalars (written so the first pass never mutates the
-    loaded link tile — the loop-carry stitcher's spill store reads it)."""
+    ``softmax``/``log_softmax`` use the 2-pass ONLINE form (running max +
+    running rescaled denominator per tile, DESIGN.md §12 — one fewer full
+    row pass than the paper's 3-pass Fig.-2 template) and ``rmsnorm`` its
+    2-pass running sum-of-squares form, all written so the first pass
+    never mutates the loaded link tile — the loop-carry stitcher's spill
+    store reads it.  A stage whose output carries a *link pad*
+    (``spec.link_pad``) re-blends the lane-padded tail of every output
+    tile to that value in its final pass, so a downstream stat stage sees
+    its own neutral element there (the per-stat spill schedule)."""
     sop = STAGE_OPS.get(stage.op)
     if sop is None:
         raise FusionError(f"no fusable stage recipe for op '{stage.op}'")
@@ -324,6 +363,7 @@ def _stream_stage_program(spec: ChainSpec, idx: int, stage: ChainStage,
     tensors = [(t, tl.f32, "in", len(shapes[t])) for t in stage.inputs]
     tensors.append((stage.output, tl.f32, "out", len(shapes[stage.output])))
     eps = float(dict(spec.attrs).get("eps", 1e-6))
+    nu_out = spec.link_pad(stage.output)
     with P.kernel(tensors=tensors):
         pid = tl.program_id(0)
 
@@ -332,37 +372,79 @@ def _stream_stage_program(spec: ChainSpec, idx: int, stage: ChainStage,
             return (tv * tile_length if len(shapes[t]) == 1
                     else r * c + tv * tile_length)
 
-        if stage.op == "softmax":
+        def _alloc_blend():
+            if nu_out is None:
+                return None
+            return (tl.alloc_ub("padidx", (tile_length,), tl.f32),
+                    tl.alloc_ub("padmsk", (tile_length,), tl.f32),
+                    tl.alloc_ub("padnu", (tile_length,), tl.f32))
+
+        def _blend(bufs, res, t):
+            """Re-blend the tile's lane-padded tail to the link pad value
+            (per-stat spill schedule): global column = tile index * tile
+            length + lane, valid iff < the ORIGINAL column count."""
+            idx, msk, nuf = bufs
+            tl.iota(idx, axis=0)
+            tl.add(idx, idx, t * tile_length)
+            tl.lt(msk, idx, float(orig_cols))
+            tl.full(nuf, float(nu_out))
+            tl.where(res, msk, res, nuf)
+
+        if stage.op in ("softmax", "log_softmax"):
+            # 2-pass ONLINE form (DESIGN.md §12): pass 1 carries the
+            # running max m AND the running denominator d, rescaling d by
+            # exp(m_old - m_new) whenever a tile raises the max; pass 2
+            # rescales the re-read input.  One fewer full row pass than
+            # the 3-pass Fig.-2 template — the change that lifts the fused
+            # attn_scores chain to eager's modeled single-kernel softmax.
             x_t = stage.inputs[0]
             xt = tl.alloc_ub("xt", (tile_length,), tl.f32)
             yt = tl.alloc_ub("yt", (tile_length,), tl.f32)
             red = tl.alloc_ub("red", (1,), tl.f32)
+            ea = tl.alloc_ub("ea", (1,), tl.f32)
+            blend = _alloc_blend()
             with tl.for_range("r", pid * rows_per_core, rows_per_core) as r:
                 rmax = tl.scalar("row_max", -3.0e38)
+                rden = tl.scalar("row_den", 0.0)
                 with tl.for_range("t1", 0, n_tiles) as t:
                     with tl.copyin():
                         tl.load(x_t, _off(x_t, r, t), xt,
                                 pad_value=spec.pad_value(x_t))
                     with tl.compute():
                         tl.reduce_max(red, xt)
-                        tl.assign(rmax, tl.smax(rmax,
-                                                tl.extract_scalar(red, 0)))
-                rsum = tl.scalar("row_sum", 0.0)
+                        tm = tl.extract_scalar(red, 0)
+                        # alpha = exp(m_old - m_new), through a 1-element
+                        # buffer (no scalar transcendental in the DSL)
+                        tl.full(ea, rmax - tl.smax(rmax, tm))
+                        tl.exp(ea, ea)
+                        tl.sub(yt, xt, tl.smax(rmax, tm))
+                        tl.exp(yt, yt)
+                        # rmax must update while `red` still holds the
+                        # tile max; the sum then overwrites `red`
+                        tl.assign(rmax, tl.smax(rmax, tm))
+                        tl.reduce_sum(red, yt)
+                        tl.assign(rden,
+                                  rden * tl.extract_scalar(ea, 0)
+                                  + tl.extract_scalar(red, 0))
+                if stage.op == "log_softmax":
+                    lse = tl.scalar("row_lse", 0.0)
+                    with tl.compute():
+                        # lse = m + log d, through a 1-element buffer
+                        tl.full(red, rden)
+                        tl.log(red, red)
+                        tl.assign(lse, rmax + tl.extract_scalar(red, 0))
                 with tl.for_range("t2", 0, n_tiles) as t:
                     with tl.copyin():
                         tl.load(x_t, _off(x_t, r, t), xt)
                     with tl.compute():
-                        tl.sub(yt, xt, rmax)
-                        tl.exp(yt, yt)
-                        tl.reduce_sum(red, yt)
-                        tl.assign(rsum, rsum + tl.extract_scalar(red, 0))
-                with tl.for_range("t3", 0, n_tiles) as t:
-                    with tl.copyin():
-                        tl.load(x_t, _off(x_t, r, t), xt)
-                    with tl.compute():
-                        tl.sub(yt, xt, rmax)
-                        tl.exp(yt, yt)
-                        tl.div(yt, yt, rsum)
+                        if stage.op == "softmax":
+                            tl.sub(yt, xt, rmax)
+                            tl.exp(yt, yt)
+                            tl.div(yt, yt, rden)
+                        else:
+                            tl.sub(yt, xt, lse)
+                        if blend is not None:
+                            _blend(blend, yt, t)
                     with tl.copyout():
                         tl.store(stage.output, r * c + t * tile_length, yt)
         elif stage.op == "rmsnorm":
@@ -373,6 +455,7 @@ def _stream_stage_program(spec: ChainSpec, idx: int, stage: ChainStage,
             if w_t is not None:
                 wt = tl.alloc_ub("wt", (tile_length,), tl.f32)
             red = tl.alloc_ub("red", (1,), tl.f32)
+            blend = _alloc_blend()
             with tl.for_range("r", pid * rows_per_core, rows_per_core) as r:
                 ss = tl.scalar("sum_sq", 0.0)
                 with tl.for_range("t1", 0, n_tiles) as t:
@@ -397,6 +480,8 @@ def _stream_stage_program(spec: ChainSpec, idx: int, stage: ChainStage,
                         tl.mul(sq, xt, inv)
                         if w_t is not None:
                             tl.mul(sq, sq, wt)
+                        if blend is not None:
+                            _blend(blend, sq, t)
                     with tl.copyout():
                         tl.store(stage.output, r * c + t * tile_length, sq)
         elif stage.op in STREAM_STATS:
@@ -628,6 +713,16 @@ def _finalize(prog: A.Program, spec: ChainSpec, orig,
          "chain was specialized for a different trailing dimension; "
          "regenerate for this shape"),
     ]
+    if pattern == "streaming":
+        # the explicit backend bakes the per-core row loop trip counts as
+        # literals (n_cores/rows_per_core), so a different row count would
+        # silently compute garbage instead of refusing — pin it
+        n_rows = prod(orig[spec.primary][:-1])
+        prog.meta["make_guards"].append(
+            (f"_numel(shapes[{spec.primary!r}]) // "
+             f"shapes[{spec.primary!r}][-1] == {int(n_rows)}",
+             "chain was specialized for a different row count; regenerate "
+             "for this shape"))
     return prog
 
 

@@ -325,10 +325,12 @@ class _Rewriter:
         return tuple(axes) == (nd - 1,)
 
     def _replace(self, anchor: _Eqn, dead: List[_Eqn], prim: str,
-                 ins: List[_Val], counts) -> bool:
+                 ins: List[_Val], counts,
+                 params: Optional[Dict[str, Any]] = None) -> bool:
         """Collapse ``dead + [anchor]`` into one composite at the anchor's
         position, iff every dead eqn's output is used only inside the
-        pattern."""
+        pattern.  ``params`` carries recipe-relevant values recovered from
+        the pattern (e.g. a norm's traced eps)."""
         in_pattern = {id(anchor)} | {id(d) for d in dead}
         for d in dead:
             uses = counts.get(_base(d.out).vid, 0)
@@ -337,7 +339,7 @@ class _Rewriter:
                            _base(d.out).vid)
             if uses != internal:
                 return False
-        new = _Eqn(prim, list(ins), anchor.out, {})
+        new = _Eqn(prim, list(ins), anchor.out, dict(params or {}))
         out: List[_Eqn] = []
         for e in self.eqns:
             if e is anchor:
@@ -510,6 +512,125 @@ class _Rewriter:
             return False
         return self._replace(e, [rs, ex, sb, rm], "softmax", [x], counts)
 
+    def _match_log_softmax(self, e: _Eqn, prod, counts) -> bool:
+        # sub(shifted, log(sum(exp(shifted))))  with
+        # shifted = sub(x, max_row(x))           [jax.nn.log_softmax]
+        if e.prim != "sub" or len(e.ins) != 2:
+            return False
+        lg = self._producer(prod, e.ins[1], "log")
+        if lg is None:
+            return False
+        rs = self._producer(prod, lg.ins[0], "reduce_sum")
+        if rs is None or not self._last_axis(rs):
+            return False
+        ex = self._producer(prod, rs.ins[0], "exp")
+        if ex is None:
+            return False
+        if _base(ex.ins[0]).vid != _base(e.ins[0]).vid:
+            return False
+        sb = self._producer(prod, e.ins[0], "sub")
+        if sb is None:
+            return False
+        x = sb.ins[0]
+        rm = self._producer(prod, sb.ins[1], "reduce_max")
+        if rm is None or not self._last_axis(rm):
+            return False
+        if _base(rm.ins[0]).vid != _base(x).vid:
+            return False
+        return self._replace(e, [lg, rs, ex, sb, rm], "log_softmax", [x],
+                             counts)
+
+    def _mean_of(self, prod, v: _Val,
+                 n_cols: int) -> Tuple[Optional[_Eqn], List[_Eqn]]:
+        """Match ``v == mean(u, -1)`` in either lowering — ``sum(u)/C`` or
+        ``sum(u) * (1/C)`` — returning the reduce_sum eqn and the dead
+        mean arithmetic."""
+        dv = self._producer(prod, v, "div")
+        if dv is not None and _scalar_const(dv.ins[1]) == float(n_cols):
+            rs = self._producer(prod, dv.ins[0], "reduce_sum")
+            if rs is not None and self._last_axis(rs):
+                return rs, [dv]
+        mm = self._const_mul(prod, v, 1.0 / n_cols)
+        if mm is not None:
+            rs = self._producer(prod, mm, "reduce_sum")
+            if rs is not None and self._last_axis(rs):
+                return rs, [self._producer(prod, v, "mul")]
+        return None, []
+
+    def _match_layernorm(self, e: _Eqn, prod, counts) -> bool:
+        # ((x - mu) * rsqrt(var + eps)) * w + b   [w, b trailing vectors;
+        # mu = mean(x), var = mean((x - mu)^2); the centering sub may be
+        # CSE-duplicated in the jaxpr — both copies must match]
+        if e.prim != "add" or len(e.ins) != 2:
+            return False
+        for i, j in ((0, 1), (1, 0)):
+            b_v = e.ins[i]
+            bb = _base(b_v)
+            if not (b_v.bkind == "trail" and len(bb.shape) == 1
+                    and bb.kind != "const"):
+                continue
+            q = self._producer(prod, e.ins[j], "mul")
+            if q is None:
+                continue
+            for a1, a2 in ((0, 1), (1, 0)):
+                w_v = q.ins[a1]
+                wb = _base(w_v)
+                if not (w_v.bkind == "trail" and len(wb.shape) == 1
+                        and wb.kind != "const"):
+                    continue
+                o = self._producer(prod, q.ins[a2], "mul")
+                if o is None:
+                    continue
+                for p1, p2 in ((0, 1), (1, 0)):
+                    cent = self._producer(prod, o.ins[p1], "sub")
+                    rq = self._producer(prod, o.ins[p2], "rsqrt")
+                    if cent is None or rq is None:
+                        continue
+                    x, mu_v = cent.ins[0], cent.ins[1]
+                    if _base(x).kind == "const" or len(_base(x).shape) < 2:
+                        continue
+                    n_cols = _base(x).shape[-1]
+                    mu_rs, mu_dead = self._mean_of(prod, mu_v, n_cols)
+                    if mu_rs is None or \
+                            _base(mu_rs.ins[0]).vid != _base(x).vid:
+                        continue
+                    ad = self._producer(prod, rq.ins[0], "add")
+                    if ad is None:
+                        continue
+                    eps = None
+                    var_v = None
+                    for c1, c2 in ((0, 1), (1, 0)):
+                        c = _scalar_const(ad.ins[c1])
+                        if c is not None and 0 < c < 1e-3:
+                            eps, var_v = c, ad.ins[c2]
+                    if var_v is None:
+                        continue
+                    var_rs, var_dead = self._mean_of(prod, var_v, n_cols)
+                    if var_rs is None:
+                        continue
+                    sq = self._producer(prod, var_rs.ins[0], "square")
+                    if sq is None:
+                        mq = self._producer(prod, var_rs.ins[0], "mul")
+                        if mq is None or _base(mq.ins[0]).vid != \
+                                _base(mq.ins[1]).vid:
+                            continue
+                        sq = mq
+                    c2e = self._producer(prod, sq.ins[0], "sub")
+                    if c2e is None:
+                        continue
+                    if (_base(c2e.ins[0]).vid != _base(x).vid
+                            or _base(c2e.ins[1]).vid != _base(mu_v).vid):
+                        continue
+                    dead_ids = {}
+                    for d in ([q, o, cent, rq, ad, var_rs, sq, c2e, mu_rs]
+                              + mu_dead + var_dead):
+                        dead_ids[id(d)] = d
+                    dead_ids.pop(id(e), None)
+                    return self._replace(e, list(dead_ids.values()),
+                                         "layernorm", [x, w_v, b_v],
+                                         counts, params={"eps": float(eps)})
+        return False
+
     def _match_rmsnorm(self, e: _Eqn, prod, counts) -> bool:
         # (x * rsqrt(mean(x*x, -1) + eps)) * w    [w: trailing vector]
         if e.prim != "mul" or len(e.ins) != 2:
@@ -539,8 +660,10 @@ class _Rewriter:
                     c = _scalar_const(ad.ins[p])
                     if c is not None and 0 < c < 1e-3:
                         eps, mean_v = c, ad.ins[q]
-                if mean_v is None or not _isclose(eps, 1e-6):
-                    continue        # non-default eps: leave as barrier
+                if mean_v is None:
+                    continue
+                # any small eps matches; the traced value rides the
+                # composite's params into the chain's recipe attrs
                 n_cols = _base(x).shape[-1]
                 dv = self._producer(prod, mean_v, "div")
                 ss_v = None
@@ -572,7 +695,8 @@ class _Rewriter:
                 if sq is None:
                     continue
                 dead = [im, rq, ad, rs, sq] + dead_mean
-                return self._replace(e, dead, "rmsnorm", [x, w], counts)
+                return self._replace(e, dead, "rmsnorm", [x, w], counts,
+                                     params={"eps": float(eps)})
         return False
 
     def _masked_fill_pass(self) -> bool:
@@ -616,7 +740,8 @@ class _Rewriter:
     def run(self) -> None:
         matchers = (self._match_relu, self._match_silu,
                     self._match_gelu_tanh, self._match_gelu_erf,
-                    self._match_softmax, self._match_rmsnorm,
+                    self._match_softmax, self._match_log_softmax,
+                    self._match_rmsnorm, self._match_layernorm,
                     self._match_swiglu)
         changed = True
         while changed:
@@ -662,8 +787,9 @@ def _operand_ok(v: _Val, out_shape: Tuple[int, ...]) -> bool:
 def _fusable_eqn(e: _Eqn) -> Optional[Tuple[str, List[_Val]]]:
     """(op, operands) when the eqn maps onto a proposer stage op with
     sound operand roles, else None (barrier)."""
-    comps = ("softmax", "rmsnorm", "gelu", "silu", "relu", "swiglu",
-             "square", "tanh", "exp", "abs", "neg", "sqrt", "sigmoid")
+    comps = ("softmax", "log_softmax", "rmsnorm", "layernorm", "gelu",
+             "silu", "relu", "swiglu", "square", "tanh", "exp", "abs",
+             "neg", "sqrt", "sigmoid")
     op = e.prim if e.prim in comps else PRIM_MAP.get(e.prim)
     if op is None:
         return None
@@ -683,10 +809,28 @@ def _fusable_eqn(e: _Eqn) -> Optional[Tuple[str, List[_Val]]]:
                 return None
         elif r0 < 2:
             return None
+    elif op == "layernorm":
+        if len(ins) != 3 or len(_base(ins[0]).shape) < 2:
+            return None
     else:
         if len(ins) != 1 or len(_base(ins[0]).shape) < 2:
             return None
     return op, ins
+
+
+# recipe-default eps per normalizing composite: a traced value that matches
+# the default is elided from node attrs (keeps declared-fixture
+# fingerprints byte-stable); anything else rides into the chain attrs
+_EPS_DEFAULT = {"rmsnorm": 1e-6, "layernorm": 1e-5}
+
+
+def _node_attrs(e: _Eqn, op: str) -> Tuple[Tuple[str, object], ...]:
+    eps = e.params.get("eps")
+    default = _EPS_DEFAULT.get(op)
+    if eps is None or default is None or _isclose(float(eps), default,
+                                                 rel=1e-6):
+        return ()
+    return (("eps", float(eps)),)
 
 
 def extract_graph(fn: Callable,
@@ -745,16 +889,18 @@ def extract_graph(fn: Callable,
         fus = _fusable_eqn(e)
         if fus is not None:
             op, ins = fus
+            attrs = _node_attrs(e, op)
         else:
             op = f"barrier.{e.prim}"
             ins = [v for v in e.ins if _base(v).kind != "const"]
+            attrs = ()
         in_names = []
         for v in ins:
             bb = _base(v)
             in_names.append(names[bb.vid])
             consumed.append(bb.vid)
         nodes.append(OpNode(op, tuple(in_names), names[_base(e.out).vid],
-                            out_rank=_crank(e.out.shape)))
+                            out_rank=_crank(e.out.shape), attrs=attrs))
 
     ext_vals: Dict[int, _Val] = {}
     for a in args:

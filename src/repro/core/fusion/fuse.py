@@ -22,7 +22,12 @@ dispatched* (``lowering/analysis.program_pattern``):
   first pass that consumes the link, and when later passes re-read it the
   link is *spilled once* through a size-compatible output tensor instead
   of being recomputed per pass (one extra GM round trip instead of
-  re-reading every producer input in every pass).
+  re-reading every producer input in every pass).  Chains with MULTIPLE
+  stat stages follow the per-stat spill schedule (DESIGN.md §12): each
+  subsequent stat's first pass is jammed into the previous stat's output
+  pass, the inter-stat link is spilled once (its lane-padded tail already
+  re-blended to the consumer's neutral element by the producing
+  template), and every stat keeps its own independent scalar recurrence.
 
 Both modes re-validate the stitched program against the Pass-0 VMEM
 budget; a refusal raises ``NotImplementedError`` (the planner's
@@ -766,10 +771,11 @@ def _fuse_streaming(progs: Sequence[A.Program], *, name: str,
                     tensor_order: Optional[Sequence[str]] = None,
                     revalidate: bool = True) -> A.Program:
     """Loop-carry stitcher: jam tile-local map stages into one column-tile
-    loop; splice the jammed producer chain into the first pass of the (at
-    most one) loop-carried stat stage; spill a link once through a
-    size-compatible output tensor when later passes re-read it; jam suffix
-    maps into the stat's output pass."""
+    loop; splice the jammed producer chain into the first pass of the
+    first loop-carried stat stage; chain every FURTHER stat stage behind
+    the previous one's output pass (per-stat spill schedule); spill a link
+    once through a size-compatible output tensor when later passes re-read
+    it; jam suffix maps into the last stat's output pass."""
     keep = dict(keep or {})
     route = dict(route or {})
     stages = [_parse_stream_stage(i, p) for i, p in enumerate(progs)]
@@ -778,12 +784,6 @@ def _fuse_streaming(progs: Sequence[A.Program], *, name: str,
     unknown = set(keep) - set(links.links)
     if unknown:
         raise FusionError(f"keep names non-link tensors: {sorted(unknown)}")
-    stats = [s for s in stages if s.pattern == "stat"]
-    if len(stats) > 1:
-        raise FusionError(
-            "streaming stitcher supports at most one loop-carried (stat) "
-            "stage per chain — two scalar recurrences cannot share a spill "
-            "schedule soundly")
 
     row0 = stages[0].row
     a0 = affine_of(row0.start)
@@ -1058,6 +1058,129 @@ def _fuse_streaming(progs: Sequence[A.Program], *, name: str,
         if final_pass is None:
             raise FusionError("stat stage has no output pass")
 
+    def _splice_next_stat(stage: _SStage) -> None:
+        """Chain a SECOND (or later) loop-carried stat stage behind the
+        one already spliced — the per-stat spill schedule (DESIGN.md §12).
+
+        The new stat's first consuming pass is jammed into the previous
+        stat's output pass, so each output tile feeds the new scalar
+        recurrence in the same visit it is produced; the link between the
+        two stats is spilled ONCE through a size-compatible output tensor
+        (its lane-padded tail already re-blended to the new stat's
+        neutral element by the producing template's link-pad blend); the
+        new stat's remaining passes re-read the spill.  Each stat keeps
+        its own running scalars — nothing is shared between recurrences."""
+        nonlocal merged_items, final_pass
+        items = list(stage.row.body)
+        passes = [it for it in items if isinstance(it, A.ForRange)]
+        consumed_here = sorted(
+            {ld.tensor for p in passes for ld in _pass_blocks(p)[0]
+             if ld.tensor in links.links},
+            key=lambda l: links.produced[l])
+        if len(consumed_here) != 1:
+            raise FusionError(
+                f"stat stage {stage.index} consumes {consumed_here}: "
+                f"exactly one link into a chained scalar recurrence is "
+                f"supported")
+        link = consumed_here[0]
+        ci_f, co_f, cu_f = _pass_blocks(final_pass)
+        prods = [st for st in cu_f if st.tensor == link]
+        if len(prods) != 1:
+            raise FusionError(
+                f"stat stage {stage.index}: link '{link}' is not produced "
+                f"(exactly once) in the previous stat's output pass")
+        prod = prods[0]
+        consuming = [p for p in passes
+                     if any(ld.tensor == link
+                            for ld in _pass_blocks(p)[0])]
+        p1 = consuming[0]
+        need_spill = len(consuming) > 1 or link in keep
+        spill_target = None
+        if need_spill:
+            spill_target = keep.get(link) or _claim_spill(link)
+            if link in keep:
+                spills[link] = spill_target
+
+        # jam the new stat's first consuming pass into the previous
+        # stat's output pass
+        vmap = {p1.var.name: final_pass.var}
+        ci, co, cu = _pass_blocks(p1)
+        p1_subst: Dict[str, A.Buffer] = {}
+        loads_new = list(ci_f)
+        for ld in ci:
+            ld = _map_stmt(ld, subst, vmap)
+            if ld.tensor == link:
+                if ld.valid is not None:
+                    raise FusionError(f"link '{link}': masked load")
+                if (ld.dst.shape != prod.src.shape
+                        or ld.dst.dtype is not prod.src.dtype):
+                    raise FusionError(
+                        f"link '{link}': consumer tile {ld.dst.shape} != "
+                        f"producer tile {prod.src.shape}")
+                if _tile_norm(ld.start, final_pass.var.name) != \
+                        _tile_norm(prod.start, final_pass.var.name):
+                    raise FusionError(
+                        f"link '{link}': load span differs from store "
+                        f"span")
+                p1_subst[ld.dst.name] = prod.src
+                dead.add(ld.dst.name)
+                continue
+            loads_new.extend(_dedup_loads([ld], final_pass.var.name))
+        consumer_computes = [_map_stmt(_map_stmt(c, subst, vmap), p1_subst)
+                             for c in co]
+        for op in consumer_computes:
+            if isinstance(op, A.Op) and op.dst.name == prod.src.name:
+                raise FusionError(
+                    f"link '{link}': the chained stat's first pass "
+                    f"mutates the producer tile the spill store still "
+                    f"reads")
+        computes_new = co_f + consumer_computes
+        stores_new = []
+        for st in cu_f:
+            if st.tensor == link:
+                if need_spill:
+                    stores_new.append(A.Store(tensor=spill_target,
+                                              start=prod.start,
+                                              src=prod.src))
+                # the raw link store is otherwise fully eliminated
+            else:
+                stores_new.append(st)
+        stores_new += [_map_stmt(_map_stmt(s, subst, vmap), p1_subst)
+                       for s in cu]
+        rebuilt = _make_pass(final_pass, final_pass.var, loads_new,
+                             computes_new, stores_new)
+        link_consumers[link] = 0
+
+        # the new stat's other row items ride along: pre-p1 items (its
+        # ScalarDecls) ahead of the rebuilt pass, the rest after it, with
+        # later consuming passes re-reading the spilled link
+        k1 = items.index(p1)
+        post_out: List[A.Stmt] = []
+        for it in items[k1 + 1:]:
+            if isinstance(it, A.ForRange) and it in consuming:
+                ci_k, co_k, cu_k = _pass_blocks(it)
+                ci_new = []
+                for ld in ci_k:
+                    if ld.tensor == link:
+                        if _tile_norm(ld.start, it.var.name) != \
+                                _tile_norm(prod.start,
+                                           final_pass.var.name):
+                            raise FusionError(
+                                f"link '{link}': re-read span differs "
+                                f"from the spilled span")
+                        ld = A.Load(dst=ld.dst, tensor=spill_target,
+                                    start=ld.start, valid=ld.valid,
+                                    pad_value=ld.pad_value)
+                    ci_new.append(ld)
+                it = _make_pass(it, it.var, ci_new, co_k, cu_k)
+            post_out.append(it)
+        at = merged_items.index(final_pass)
+        merged_items[at:at + 1] = items[:k1] + [rebuilt] + post_out
+        for it in reversed(merged_items):
+            if isinstance(it, A.ForRange) and _pass_blocks(it)[2]:
+                final_pass = it
+                break
+
     def _jam_suffix(stage: _SStage) -> None:
         nonlocal final_pass
         p = [st for st in stage.row.body if isinstance(st, A.ForRange)][0]
@@ -1127,7 +1250,10 @@ def _fuse_streaming(progs: Sequence[A.Program], *, name: str,
     # ---- drive -----------------------------------------------------------
     for stage in stages:
         if stage.pattern == "stat":
-            _splice_stat(stage)
+            if merged_items is None:
+                _splice_stat(stage)
+            else:
+                _splice_next_stat(stage)
         elif merged_items is None:
             _jam_map_into(stage, jam_loads, jam_computes, jam_stores, _JT)
         else:

@@ -47,11 +47,17 @@ class OpNode:
     §11) sets it explicitly for barrier nodes — a ``barrier.dot_general``
     or ``barrier.reduce_sum`` node does NOT preserve its input rank, and a
     barrier with no tensor inputs (e.g. an iota) has nothing to infer
-    from."""
+    from.
+
+    ``attrs`` carries recipe-relevant parameters recovered during
+    composite recognition (today: a traced norm ``eps`` that differs from
+    the recipe default); :func:`propose_chains` merges them into the
+    emitted chain's attrs."""
     op: str
     inputs: Tuple[str, ...]
     output: str
     out_rank: Optional[int] = None
+    attrs: Tuple[Tuple[str, object], ...] = ()
 
 
 @dataclass(frozen=True)
@@ -73,8 +79,19 @@ class OpGraph:
 # --------------------------------------------------------------------------
 
 # required pad of a stat op's row input so lane-padded columns are inert
+# (rmsnorm/layernorm reduce sums over the row: padded columns must be 0)
 NEUTRAL_ROW_PAD: Dict[str, float] = {"softmax": -3.0e38,
-                                     "log_softmax": -3.0e38}
+                                     "log_softmax": -3.0e38,
+                                     "rmsnorm": 0.0,
+                                     "layernorm": 0.0}
+
+# stat stages that can ABSORB a downstream neutral-pad requirement on their
+# own output (DESIGN.md §12): no pad value survives a row reduction, so
+# instead of refusing, the stage's output pass re-blends the lane-padded
+# tail of every tile to the required value (the *per-stat spill pad*) —
+# which is what makes multi-stat chains like softmax→softmax proposable.
+STAT_PAD_ABSORB = frozenset(("softmax", "log_softmax", "rmsnorm",
+                             "layernorm"))
 
 # f(0) == 0: a zero pad survives these unaries unchanged
 ZERO_PRESERVING = frozenset((
@@ -97,7 +114,17 @@ def _require(req: Dict[str, float], tensor: str, value: float) -> None:
 
 def _infer_pad_values(stages: Sequence[OpNode],
                       chain_inputs: Sequence[str]) -> Dict[str, float]:
+    """Backward neutral-pad propagation, with per-stat absorption.
+
+    Returns the pad assignment for the chain: chain *inputs* whose GM pad
+    must be nonzero, plus *link pads* — requirements absorbed at a stat
+    stage (the per-stat spill schedule, DESIGN.md §12), which the stage
+    harness satisfies by re-blending the link's lane-padded tail instead
+    of propagating through a row reduction (impossible).  Link-pad entries
+    are recorded even when the value is 0.0, because the blend is what
+    establishes it."""
     req: Dict[str, float] = {}
+    link_pads: Dict[str, float] = {}
     for st in stages:
         nu = NEUTRAL_ROW_PAD.get(st.op)
         if nu is not None:
@@ -106,7 +133,9 @@ def _infer_pad_values(stages: Sequence[OpNode],
         nu = req.get(st.output)
         if nu is None:
             continue
-        if st.op in _BINARY_IDENTITY and len(st.inputs) == 2:
+        if st.op in STAT_PAD_ABSORB:
+            link_pads[st.output] = nu
+        elif st.op in _BINARY_IDENTITY and len(st.inputs) == 2:
             _require(req, st.inputs[0], nu)
             _require(req, st.inputs[1], _BINARY_IDENTITY[st.op])
         elif nu == 0.0 and st.op in ZERO_PRESERVING and len(st.inputs) == 1:
@@ -115,8 +144,10 @@ def _infer_pad_values(stages: Sequence[OpNode],
             raise ProposeError(
                 f"cannot propagate the neutral pad {nu} backward through "
                 f"'{st.op}' producing '{st.output}'")
-    return {t: v for t, v in req.items()
+    pads = {t: v for t, v in req.items()
             if t in set(chain_inputs) and v != 0.0}
+    pads.update(link_pads)
+    return pads
 
 
 # --------------------------------------------------------------------------
@@ -315,6 +346,24 @@ def propose_chains(graph: OpGraph, fusable: Optional[Set[str]] = None):
         keep = tuple((t, t) for t in internal_links if t in escaping)
         route = keep                   # kept links route through themselves
         pads = _infer_pad_values(comp, chain_inputs)
+        # deterministic pad order: chain inputs first (declaration order),
+        # then stat-absorbed link pads (stage order)
+        stage_order = [n.output for n in comp]
+        pad_order = tuple(sorted(
+            pads.items(),
+            key=lambda kv: (0, chain_inputs.index(kv[0]))
+            if kv[0] in chain_inputs else (1, stage_order.index(kv[0]))))
+        # merge per-node attrs (e.g. a traced non-default norm eps) into
+        # the component's attrs; conflicting values refuse rather than
+        # silently picking one
+        cattrs: Dict[str, object] = dict(graph.attrs)
+        for n in comp:
+            for k, v in getattr(n, "attrs", ()) or ():
+                if k in cattrs and cattrs[k] != v:
+                    raise ProposeError(
+                        f"component {ci} of '{graph.name}': conflicting "
+                        f"'{k}' attrs {cattrs[k]} vs {v}")
+                cattrs[k] = v
         name = graph.name if len(
             [c for c in comps if len(c) >= 2]) == 1 else \
             f"{graph.name}_c{ci}"
@@ -326,10 +375,8 @@ def propose_chains(graph: OpGraph, fusable: Optional[Set[str]] = None):
                          for n in comp),
             keep=keep,
             route=route,
-            pad_values=tuple(sorted(pads.items(),
-                                    key=lambda kv:
-                                    chain_inputs.index(kv[0]))),
-            attrs=tuple(graph.attrs)))
+            pad_values=pad_order,
+            attrs=tuple(sorted(cattrs.items()))))
     return specs
 
 

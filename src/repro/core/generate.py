@@ -63,11 +63,15 @@ def framework_tasks():
     # attn_scores / swiglu_proj are the proposer-derived streaming and DAG
     # chains (DESIGN.md §10); mask_softmax is the jaxpr-EXTRACTED chain —
     # discovered from the flash-attention reference's masked score
-    # normalization, not from any declared graph (DESIGN.md §11).
+    # normalization, not from any declared graph (DESIGN.md §11);
+    # double_softmax is the extracted MULTI-STAT chain, fused through the
+    # per-stat spill schedule with 2-pass online softmax stats
+    # (DESIGN.md §12).
     picks = [by_name["rmsnorm"], by_name["softmax"], by_name["adamw"], sw,
              by_fused["add_rmsnorm"], by_fused["bias_gelu"],
              by_fused["rmsnorm_swiglu"], by_fused["attn_scores"],
-             by_fused["swiglu_proj"], by_fused["mask_softmax"]]
+             by_fused["swiglu_proj"], by_fused["mask_softmax"],
+             by_fused["double_softmax"]]
     picks += mhc_tasks()
     return picks
 

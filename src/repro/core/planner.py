@@ -87,6 +87,8 @@ PLANNER_REGISTRY["minmax_norm"] = _rowmap(NORM.minmax_norm_recipe)
 PLANNER_REGISTRY["instance_norm"] = _rowmap(NORM.instance_norm_recipe)
 PLANNER_REGISTRY["softmax_streaming"] = \
     lambda t, s, k: NORM.build_softmax_streaming(t, s, k)
+PLANNER_REGISTRY["log_softmax_streaming"] = \
+    lambda t, s, k: NORM.build_log_softmax_streaming(t, s, k)
 PLANNER_REGISTRY["add_rmsnorm"] = \
     lambda t, s, k: NORM.build_add_rmsnorm(t, s, k)
 PLANNER_REGISTRY["rmsnorm_streaming"] = \

@@ -91,6 +91,7 @@ _BUILTIN_VARIANTS = (("avg_pool2d", "rowreuse", "avg_pool2d_rowreuse"),
                      # streaming normalization as a searchable axis (the
                      # planner still falls back to it on VMEM refusal)
                      ("softmax", "streaming", "softmax_streaming"),
+                     ("log_softmax", "streaming", "log_softmax_streaming"),
                      ("rmsnorm", "streaming", "rmsnorm_streaming"),
                      # ROADMAP item: the row-blocked mHC kernel (paper RQ3
                      # "bigger DMA bursts" step) rides the variant axis —

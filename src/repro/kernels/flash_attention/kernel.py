@@ -125,7 +125,3 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True,
                                  "arbitrary")),
     )(qv, kv_, vv)
     return out.transpose(0, 2, 1, 3)
-
-
-def _block_kernel_4d(q_ref, *a, **kw):  # pragma: no cover — reserved
-    raise NotImplementedError

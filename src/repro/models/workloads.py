@@ -47,6 +47,9 @@ class Workload:
 # trace shapes below, never this config's)
 _CFG = ArchConfig(name="trace", n_layers=1, d_model=64, n_heads=4,
                   n_kv_heads=2, d_ff=128, vocab=64, norm="rmsnorm")
+# the same config in its layernorm variant (post-LN blocks)
+_LN_CFG = ArchConfig(name="trace_ln", n_layers=1, d_model=64, n_heads=4,
+                     n_kv_heads=2, d_ff=128, vocab=64, norm="layernorm")
 
 _B, _S, _D, _FF = 2, 16, 64, 128
 
@@ -97,6 +100,27 @@ def _swiglu_proj(input, gate_scale, up_scale):     # noqa: A002
     # two-branch gated activation over per-column-scaled projections of
     # the SAME input (shared producer -> DAG chain)
     return jax.nn.silu(input * gate_scale) * (input * up_scale)
+
+
+def _double_softmax(input):                        # noqa: A002
+    # two-level score re-normalization (hierarchical / doubly-normalized
+    # attention): softmax over softmax — TWO loop-carried stat stages,
+    # fusable only through the per-stat spill schedule (DESIGN.md §12)
+    return jax.nn.softmax(jax.nn.softmax(input, axis=-1), axis=-1)
+
+
+def _bias_log_softmax(input, bias):                # noqa: A002
+    # LM-head epilogue: biased logits -> log-probabilities (the
+    # cross-entropy input); exercises the log_softmax composite
+    return jax.nn.log_softmax(input + bias, axis=-1)
+
+
+def _add_layernorm(input, residual, weight, bias): # noqa: A002
+    # post-LN residual block: LN(x + sublayer(x)) with the model's real
+    # layernorm (apply_norm traces with its eps, which rides the
+    # composite's attrs into the chain recipe)
+    return L.apply_norm({"scale": weight, "bias": bias}, input + residual,
+                        _LN_CFG)
 
 
 # --------------------------------------------------------------------------
@@ -154,6 +178,16 @@ WORKLOADS: Tuple[Workload, ...] = (
              (("input", (_B * _S, _D)), ("gate_scale", (_D,)),
               ("up_scale", (_D,))),
              doc="two-branch gated projection (shared producer DAG)"),
+    Workload("double_softmax", _double_softmax,
+             (("input", (_S, _S)),),
+             doc="two-level score re-normalization (multi-stat chain)"),
+    Workload("bias_log_softmax", _bias_log_softmax,
+             (("input", (_B * _S, _D)), ("bias", (_D,))),
+             doc="LM-head epilogue: biased logits -> log-probabilities"),
+    Workload("add_layernorm", _add_layernorm,
+             (("input", (_B * _S, _D)), ("residual", (_B * _S, _D)),
+              ("weight", (_D,)), ("bias", (_D,))),
+             doc="post-LN residual block (traced non-default eps)"),
     Workload("mask_softmax", _attention_probs,
              (("q", (_B, _S, _CFG.n_heads, _HD)),
               ("k", (_B, _S, _CFG.n_kv_heads, _HD)),

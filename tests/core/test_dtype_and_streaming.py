@@ -40,8 +40,9 @@ def test_bf16_elementwise_generation(op, npref):
 
 
 def test_streaming_softmax_builder_direct():
-    """The paper's Fig-2 three-pass streaming program, exercised directly
-    (the resident path normally wins at test sizes)."""
+    """The 2-pass ONLINE streaming softmax (DESIGN.md §12 — running max +
+    rescaled denominator, replacing the paper's 3-pass Fig.-2 program),
+    exercised directly (the resident path normally wins at test sizes)."""
     from repro.core.examples.normalization import build_softmax_streaming
     shapes = {"input": (32, 1024), "output": (32, 1024)}
     task = _unary_task("softmax", (32, 1024))
@@ -54,6 +55,24 @@ def test_streaming_softmax_builder_direct():
     e = np.exp(x - x.max(-1, keepdims=True))
     np.testing.assert_allclose(out, e / e.sum(-1, keepdims=True),
                                rtol=1e-4, atol=1e-6)
+
+
+def test_streaming_log_softmax_builder_direct():
+    """The log-form online streaming builder (same (m, d) recurrence;
+    pass 2 subtracts m + log d), registered as the planner's
+    log_softmax_streaming fallback."""
+    from repro.core.examples.normalization import build_log_softmax_streaming
+    shapes = {"input": (16, 1024), "output": (16, 1024)}
+    task = _unary_task("log_softmax", (16, 1024))
+    task.attrs["pad_value"] = -3.0e38
+    prog = build_log_softmax_streaming(task, shapes, Knobs(max_tile=256))
+    art = transcompile(prog)
+    assert art.backend == "explicit"
+    x = np.random.RandomState(1).randn(16, 1024).astype(np.float32)
+    out = np.asarray(art.entry(x, interpret=True))
+    m = x.max(-1, keepdims=True)
+    want = x - m - np.log(np.exp(x - m).sum(-1, keepdims=True))
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-5)
 
 
 def test_streaming_rmsnorm_builder_direct():

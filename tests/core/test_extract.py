@@ -311,3 +311,119 @@ def test_fingerprint_is_alpha_invariant_and_structure_sensitive():
                           ChainStage("softmax", ("t",), "y")),
                   pad_values=(("x", -3.0e38),))
     assert chain_fingerprint(c) != chain_fingerprint(a)
+
+
+# ---------------------------------------------------------------------------
+# Non-default norm eps (DESIGN.md §12 satellite): the traced eps rides the
+# composite's params into the chain attrs instead of hard-pinning 1e-6
+# ---------------------------------------------------------------------------
+
+def test_non_default_rmsnorm_eps_is_carried_not_barriered():
+    """apply_norm with a non-default eps used to silently BARRIER the
+    rmsnorm composite (the matcher hard-pinned eps == 1e-6).  Now any
+    small eps matches and the traced value lands in the chain's attrs, so
+    the recipe computes with the model's eps."""
+    from repro.models import layers as L
+    from repro.models.workloads import _CFG
+    specs = extract_chains(
+        lambda x, w: jax.nn.silu(L.apply_norm({"scale": w}, x, _CFG,
+                                              eps=1e-5)),
+        (("input", (4, 64)), ("weight", (64,))), name="eps_chain")
+    assert len(specs) == 1
+    assert [st.op for st in specs[0].stages] == ["rmsnorm", "silu"]
+    eps = dict(specs[0].attrs)["eps"]
+    assert abs(eps - 1e-5) < 1e-9
+
+    # and the built chain USES it: differential vs the eps-aware oracle
+    from repro.core.fusion import build_chain
+    from repro.core.dsl.interp import interpret
+    rows, cols = 4, 96
+    shapes = {"input": (rows, cols), "weight": (cols,),
+              "output": (rows, cols)}
+    rng = np.random.RandomState(2)
+    x = rng.randn(rows, cols).astype(np.float32)
+    w = rng.uniform(0.5, 1.5, cols).astype(np.float32)
+    x64, w64 = x.astype(np.float64), w.astype(np.float64)
+    want = (x64 / np.sqrt((x64 * x64).mean(-1, keepdims=True) + eps)
+            * w64) / (1 + np.exp(-(x64 / np.sqrt(
+                (x64 * x64).mean(-1, keepdims=True) + eps) * w64)))
+    prog = build_chain(specs[0], shapes, mode="fused", pattern="resident")
+    xp = np.pad(x, [(0, 0), (0, 128 - cols)])
+    wp = np.pad(w, [(0, 128 - cols)])
+    got = interpret(prog, {"input": xp, "weight": wp},
+                    {"output": (rows, 128)})["output"][:, :cols]
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=2e-5)
+
+
+def test_default_eps_is_elided_from_attrs():
+    """The recipe-default eps must NOT enter the chain attrs — otherwise
+    every declared rmsnorm fixture would fingerprint apart from its
+    extracted re-derivation."""
+    from repro.models import layers as L
+    from repro.models.workloads import _CFG
+    specs = extract_chains(
+        lambda x, w: jax.nn.silu(L.apply_norm({"scale": w}, x, _CFG)),
+        (("input", (4, 64)), ("weight", (64,))), name="eps_default")
+    assert dict(specs[0].attrs) == {}
+
+
+def test_conflicting_eps_in_one_component_refuses():
+    """Two norms with different eps in ONE fusable component cannot share
+    the chain-level attrs dict: refuse instead of silently picking one."""
+    from repro.models import layers as L
+    from repro.models.workloads import _CFG
+    with pytest.raises(ProposeError):
+        extract_chains(
+            lambda x, w, w2: L.apply_norm(
+                {"scale": w2},
+                L.apply_norm({"scale": w}, x, _CFG, eps=1e-4),
+                _CFG, eps=2e-4),
+            (("input", (4, 64)), ("w", (64,)), ("w2", (64,))),
+            name="eps_conflict")
+
+
+# ---------------------------------------------------------------------------
+# log_softmax / layernorm composite coverage (formerly barrier.<prim>)
+# ---------------------------------------------------------------------------
+
+def test_log_softmax_composite_recognized():
+    spec = _single_chain(lambda x, b: jax.nn.log_softmax(x + b, axis=-1),
+                         (("input", (4, 64)), ("bias", (64,))))
+    assert [st.op for st in spec.stages] == ["add", "log_softmax"]
+    assert dict(spec.pad_values) == {"input": -3.0e38}
+
+
+def test_layernorm_composite_recognized():
+    from repro.models import layers as L
+    from repro.models.workloads import _LN_CFG
+    spec = _single_chain(
+        lambda x, r, w, b: L.apply_norm({"scale": w, "bias": b}, x + r,
+                                        _LN_CFG),
+        (("input", (4, 64)), ("residual", (4, 64)), ("weight", (64,)),
+         ("bias", (64,))))
+    assert [st.op for st in spec.stages] == ["add", "layernorm"]
+    assert spec.stages[1].inputs == ("h", "weight", "bias")
+    # apply_norm's layernorm eps default (1e-6) differs from the recipe
+    # default (1e-5): it must be carried
+    assert abs(dict(spec.attrs)["eps"] - 1e-6) < 1e-9
+
+
+def test_new_extraction_chains_registered_end_to_end():
+    """double_softmax (multi-stat), bias_log_softmax and add_layernorm are
+    extraction-only chains: registered, planner-wired, tuner-searchable,
+    fused-suite-covered."""
+    from repro.bench.tasks import fused_suite
+    from repro.core.planner import PLANNER_REGISTRY
+    from repro.core.tuning import variants_for
+    tasks = {t.name for t in fused_suite()}
+    for name in ("double_softmax", "bias_log_softmax", "add_layernorm"):
+        assert name in CHAINS
+        assert CHAIN_SOURCES[name] == ("extracted",)
+        assert name in PLANNER_REGISTRY
+        assert f"{name}_streaming" in PLANNER_REGISTRY
+        assert "fused" in variants_for(name)
+        assert name in tasks
+    assert [st.op for st in CHAINS["double_softmax"].stages] == \
+        ["softmax", "softmax"]
+    assert dict(CHAINS["double_softmax"].pad_values) == {
+        "input": -3.0e38, "h": -3.0e38}

@@ -194,24 +194,19 @@ def test_fused_vmem_refusal_streams_instead_of_unfusing():
     assert np.isfinite(out).all()
 
 
-def test_unstreamable_wide_chain_falls_back_to_sequential():
-    """A chain with two scalar recurrences (softmax -> softmax) cannot be
-    loop-carry stitched: at streaming scale build_fused falls back to the
-    unfused sequential streaming form via the NotImplementedError
-    convention."""
-    spec = ChainSpec(
-        name="double_softmax",
-        inputs=(("input", 2),),
-        outputs=("output",),
-        stages=(ChainStage("softmax", ("input",), "h"),
-                ChainStage("softmax", ("h",), "output")),
-        pad_values=(("input", -3.0e38),))
+def test_multi_stat_wide_chain_fuses_streaming():
+    """Two scalar recurrences (softmax -> softmax) loop-carry stitch at
+    streaming scale via the per-stat spill schedule (DESIGN.md §12) — this
+    used to be a regression-locked sequential fallback.  The inter-stat
+    link must carry its spill pad so the second stat's online recurrence
+    sees its own neutral element in the lane-padded tail."""
+    spec = CHAINS["double_softmax"]
     wide = {"input": (1, 2 ** 21), "output": (1, 2 ** 21)}
-    with pytest.raises(NotImplementedError):
-        build_chain(spec, wide, mode="fused")
-    prog = build_fused(spec, wide, fallback=True)
-    assert prog.meta["fusion"]["mode"] == "sequential"
+    prog = build_chain(spec, wide, mode="fused")
+    assert prog.meta["fusion"]["mode"] == "fused"
     assert prog.meta["fusion"]["pattern"] == "streaming"
+    assert prog.meta["fusion"]["spills"] == {"h": "output"}
+    assert dict(spec.pad_values)["h"] == -3.0e38
 
 
 def test_resolve_and_build_shared_fallback_policy():
@@ -344,7 +339,7 @@ def test_fuse_equals_sequential_composition(rows, cols, ops, binary_first,
 # Streaming loop-carry stitching (DESIGN.md §10)
 # ---------------------------------------------------------------------------
 
-_STAT_OPS = [None, "softmax", "rmsnorm"]
+_STAT_OPS = [None, "softmax", "rmsnorm", "log_softmax"]
 
 
 def _streaming_cases(n=12, seed=20260728):
@@ -355,7 +350,7 @@ def _streaming_cases(n=12, seed=20260728):
     for _ in range(n):
         rows = int(rng.randint(1, 9))
         cols = int(rng.randint(4, 521))
-        stat = _STAT_OPS[int(rng.randint(3))]
+        stat = _STAT_OPS[int(rng.randint(len(_STAT_OPS)))]
         n_pre = int(rng.randint(0, 3))
         n_suf = int(rng.randint(0, 3)) if stat else 0
         if not stat and n_pre < 2:
@@ -378,15 +373,15 @@ def _streaming_spec(stat, pre, suf):
         inputs.append(("weight", 1))
         stages.append(ChainStage("rmsnorm", (prev, "weight"), "s0"))
         prev = "s0"
-    elif stat == "softmax":
-        stages.append(ChainStage("softmax", (prev,), "s0"))
+    elif stat in ("softmax", "log_softmax"):
+        stages.append(ChainStage(stat, (prev,), "s0"))
         prev = "s0"
     for i, op in enumerate(suf):
         stages.append(ChainStage(op, (prev,), f"e{i}"))
         prev = f"e{i}"
     stages[-1] = ChainStage(stages[-1].op, stages[-1].inputs, "output")
     pads = ()
-    if stat == "softmax":
+    if stat in ("softmax", "log_softmax"):
         # neutral-pad chain: every prefix input must keep the computed
         # intermediate at softmax's neutral element in padded columns
         pads = [("input", -3.0e38)]
@@ -470,8 +465,10 @@ def _padded_outs(prog, outs):
 def test_streaming_fused_spills_once_not_per_pass(tasks):
     """The loop-carry stitcher spills the producer chain's result through
     the output tensor ONCE (first softmax pass) instead of recomputing it
-    per pass: later passes re-read the spill, so producer inputs are read
-    once, not three times."""
+    per pass; with the 2-pass ONLINE softmax (DESIGN.md §12) there is only
+    ONE later pass, so the spill is re-read once — producer inputs read
+    once, scores round-trip once, total modeled traffic 6N for a chain
+    whose eager baseline moves ~6N (the at-eager acceptance bar)."""
     task = tasks["attn_scores"]
     prog = _build(task, "fused", task.shapes)
     assert prog.meta["fusion"]["pattern"] == "streaming"
@@ -483,9 +480,19 @@ def test_streaming_fused_spills_once_not_per_pass(tasks):
     by_tensor = {}
     for ld in loads:
         by_tensor[ld.tensor] = by_tensor.get(ld.tensor, 0) + 1
-    # producer inputs read once (pass 1); spilled scores re-read twice
-    assert by_tensor == {"input": 1, "scale": 1, "mask": 1, "output": 2}
+    # producer inputs read once (pass 1); spilled scores re-read ONCE
+    assert by_tensor == {"input": 1, "scale": 1, "mask": 1, "output": 1}
     assert len(stores) == 2          # the spill + the final output
+
+
+def test_attn_scores_models_at_or_above_eager_softmax(tasks):
+    """Acceptance bar for the 2-pass online softmax: the fused attn_scores
+    chain — whose eager baseline prices softmax as a SINGLE kernel — no
+    longer models below eager.  (The 3-pass Fig.-2 form moved 7N bytes
+    against eager's ~6N; the online form moves 6N.)"""
+    task = tasks["attn_scores"]
+    prog = _build(task, "fused", task.shapes)
+    assert fast_ratio(task, prog) >= 1.0
 
 
 # ---------------------------------------------------------------------------
@@ -548,13 +555,15 @@ def test_dag_fused_loads_shared_input_once(tasks):
 
 import zlib
 
-from repro.bench.tasks import _ACT_REFS, _MATH_REFS, _rmsnorm, _softmax
+from repro.bench.tasks import (_ACT_REFS, _MATH_REFS, _log_softmax,
+                               _softmax)
 from repro.core.fusion import CHAINS
 
 
 def _stage_ref64(op, args, attrs):
     """Float64 reference for one chain stage (the DSL-independent oracle
-    the differential test composes along spec.stages)."""
+    the differential test composes along spec.stages).  Norm stages honor
+    the chain's traced eps attr (DESIGN.md §12)."""
     a64 = [np.asarray(a, np.float64) for a in args]
     if op == "add":
         return a64[0] + a64[1]
@@ -566,9 +575,17 @@ def _stage_ref64(op, args, attrs):
         return _ACT_REFS["silu"](a64[0]) * a64[1]
     if op == "softmax":
         return _softmax(a64[0])
+    if op == "log_softmax":
+        return _log_softmax(a64[0])
     if op == "rmsnorm":
-        assert float(attrs.get("eps", 1e-6)) == 1e-6
-        return _rmsnorm(a64[0], a64[1])
+        eps = float(attrs.get("eps", 1e-6))
+        rms = np.sqrt((a64[0] * a64[0]).mean(-1, keepdims=True) + eps)
+        return a64[0] / rms * a64[1]
+    if op == "layernorm":
+        eps = float(attrs.get("eps", 1e-5))
+        mu = a64[0].mean(-1, keepdims=True)
+        var = ((a64[0] - mu) ** 2).mean(-1, keepdims=True)
+        return (a64[0] - mu) / np.sqrt(var + eps) * a64[1] + a64[2]
     if op == "square":
         return a64[0] * a64[0]
     if op == "abs":
@@ -696,53 +713,152 @@ if _HAVE_HYPOTHESIS:
 
 
 # ---------------------------------------------------------------------------
-# Multi-stat regression lock: softmax -> softmax (pinned until the
-# per-stat spill schedule lands)
+# Multi-stat chains: softmax -> softmax (formerly regression-locked to
+# refuse at proposal / fall back to sequential — DESIGN.md §12)
 # ---------------------------------------------------------------------------
 
-def test_multi_stat_softmax_softmax_extraction_refuses():
-    """The proposer refuses the pad-unsound double-softmax chain from the
-    extraction path outright: no pad value survives the inner softmax into
-    the outer softmax's neutral element, so proposing it would mis-fuse at
-    lane-padded shapes.  Refusal, not a wrong chain."""
+def test_multi_stat_softmax_softmax_extracts_and_proposes():
+    """Flipped lock #1: the double-softmax chain now EXTRACTS and
+    PROPOSES.  The outer softmax's neutral-pad requirement on the inner
+    softmax's output is absorbed as a per-stat spill pad (the inner
+    stage's output pass re-blends its lane-padded tail to -3e38) instead
+    of refusing the whole chain."""
     import jax
-    from repro.core.fusion import ProposeError, extract_chains
-    with pytest.raises(ProposeError):
-        extract_chains(
-            lambda x: jax.nn.softmax(jax.nn.softmax(x, axis=-1), axis=-1),
-            (("x", (4, 64)),), name="double_softmax")
+    from repro.core.fusion import extract_chains
+    (spec,) = extract_chains(
+        lambda x: jax.nn.softmax(jax.nn.softmax(x, axis=-1), axis=-1),
+        (("input", (4, 64)),), name="double_softmax")
+    assert [st.op for st in spec.stages] == ["softmax", "softmax"]
+    assert dict(spec.pad_values) == {"input": -3.0e38, "h": -3.0e38}
+    # and the registered chain (from the model workload library) is the
+    # same structure
+    from repro.core.fusion.propose import chain_fingerprint
+    assert chain_fingerprint(spec) == \
+        chain_fingerprint(CHAINS["double_softmax"])
 
 
-def test_multi_stat_fallback_is_sequential_and_correct():
-    """A hand-declared softmax->softmax spec (the builder-level escape
-    hatch) must fall back to sequence_programs at streaming scale — two
-    scalar recurrences have no shared spill schedule — and the fallback
-    must match the composed f64 reference at lane-aligned columns."""
-    spec = ChainSpec(
-        name="double_softmax",
-        inputs=(("input", 2),),
-        outputs=("output",),
-        stages=(ChainStage("softmax", ("input",), "h"),
-                ChainStage("softmax", ("h",), "output")),
-        pad_values=(("input", -3.0e38),))
+def test_multi_stat_fuses_streaming_with_per_stat_spill():
+    """Flipped lock #2: at streaming scale the softmax->softmax chain
+    loop-carry stitches FUSED (each stat keeps its own online (m, d)
+    recurrence; the inter-stat link spills once through the output), and
+    its numerics hold at NON-lane-aligned columns — the shape class the
+    old sequential fallback was pinned to avoid, because the unblended
+    inner softmax output was pad-unsound."""
+    spec = CHAINS["double_softmax"]
     wide = {"input": (1, 2 ** 21), "output": (1, 2 ** 21)}
-    with pytest.raises(NotImplementedError):
-        build_chain(spec, wide, mode="fused")
-    prog = build_fused(spec, wide, fallback=True)
-    assert prog.meta["fusion"]["mode"] == "sequential"
+    prog = build_fused(spec, wide, fallback=False)
+    assert prog.meta["fusion"]["mode"] == "fused"
     assert prog.meta["fusion"]["pattern"] == "streaming"
-    # numerics: lane-aligned columns (the only shape class the chain is
-    # sound at today — padded lanes of the inner softmax's output are not
-    # the outer softmax's neutral element, which is exactly why the
-    # proposer refuses it above)
-    rows, cols = 4, 256
+    assert prog.meta["fusion"]["spills"] == {"h": "output"}
+    # numerics at odd, NON-lane-aligned columns, both patterns and modes
+    rows, cols = 4, 331
     shapes = {"input": (rows, cols), "output": (rows, cols)}
     rng = np.random.RandomState(7)
     x = rng.randn(rows, cols).astype(np.float32)
-    want = _softmax(_softmax(x))
-    for mode in ("sequential", "fused"):
-        prog = build_chain(spec, shapes, mode=mode)
-        got = _run_chain_prog(prog, spec, {"input": x},
-                              {"output": (rows, cols)})["output"]
-        np.testing.assert_allclose(got[:, :cols], want, rtol=3e-4,
-                                   atol=2e-5, err_msg=mode)
+    want = _softmax(_softmax(x.astype(np.float64)))
+    for pattern in ("resident", "streaming"):
+        for mode in ("sequential", "fused"):
+            prog = build_chain(spec, shapes, mode=mode, pattern=pattern)
+            got = _run_chain_prog(prog, spec, {"input": x},
+                                  {"output": (rows, cols)})["output"]
+            np.testing.assert_allclose(got[:, :cols], want, rtol=3e-4,
+                                       atol=2e-5,
+                                       err_msg=f"{pattern}/{mode}")
+
+
+def test_multi_stat_chain_beats_sequential_baseline(tasks, tmp_path):
+    """Acceptance bar: extracted softmax->softmax proposes, tuner-fuses
+    (no ProposeError anywhere in the path) and models faster than its
+    sequential baseline — the fused schedule moves 5N bytes against the
+    sequential 6N."""
+    task = tasks["double_softmax"]
+    tr = tune(task, budget=6, cache=str(tmp_path))
+    assert tr.best.ok, tr.best.error
+    assert tr.best.candidate.variant == "fused"
+    assert tr.improvement > 1.1, tr.improvement
+    prog = _build(task, "fused", task.shapes)
+    assert prog.meta["fusion"]["pattern"] == "streaming"
+
+
+def test_new_extraction_coverage_chains_tuner_fuse(tasks, tmp_path):
+    """log_softmax and layernorm composites (formerly barrier.<prim>) are
+    extracted, registered and tuner-fused: the LM-head bias+log_softmax
+    epilogue and the post-LN residual block."""
+    for name in ("bias_log_softmax", "add_layernorm"):
+        tr = tune(tasks[name], budget=6, cache=str(tmp_path / name))
+        assert tr.best.ok, (name, tr.best.error)
+        assert tr.best.candidate.variant == "fused", name
+        assert tr.improvement >= 1.3, (name, tr.improvement)
+
+
+# ---------------------------------------------------------------------------
+# Online-softmax edge numerics (DESIGN.md §12): pad sentinels, fully
+# masked rows, single-tile degeneracy
+# ---------------------------------------------------------------------------
+
+def test_online_softmax_rows_with_pad_sentinel_values():
+    """Rows CONTAINING -3e38 sentinel values (the pad value appearing as
+    data): exp(-3e38 - m) underflows to exactly 0, so those positions drop
+    out of the denominator — matching the f64 oracle."""
+    spec = CHAINS["mul_softmax"]
+    rows, cols = 3, 300
+    shapes = {"input": (rows, cols), "scale": (cols,),
+              "output": (rows, cols)}
+    rng = np.random.RandomState(11)
+    x = rng.randn(rows, cols).astype(np.float32)
+    x[0, 5] = x[0, 200] = x[2, 0] = -3.0e38
+    s = np.ones(cols, np.float32)
+    want = _softmax(np.float64(x) * np.float64(s))
+    for pattern in ("resident", "streaming"):
+        for mode in ("fused", "sequential"):
+            prog = build_chain(spec, shapes, mode=mode, pattern=pattern)
+            got = _run_chain_prog(prog, spec, {"input": x, "scale": s},
+                                  {"output": (rows, cols)})["output"]
+            np.testing.assert_allclose(got[:, :cols], want, rtol=3e-4,
+                                       atol=2e-5,
+                                       err_msg=f"{pattern}/{mode}")
+
+
+def test_online_softmax_fully_masked_rows_are_nan_like_the_oracle():
+    """A fully -inf row has no defined softmax (0/0): the f64 oracle
+    yields NaN, and every generated form must agree — the online
+    recurrence's running denominator stays 0 rather than silently
+    normalizing garbage."""
+    spec = CHAINS["double_softmax"]
+    rows, cols = 2, 256
+    shapes = {"input": (rows, cols), "output": (rows, cols)}
+    x = np.random.RandomState(5).randn(rows, cols).astype(np.float32)
+    x[1, :] = -np.inf
+    ref = _softmax(_softmax(np.float64(x)))
+    assert np.isnan(ref[1]).all() and np.isfinite(ref[0]).all()
+    for pattern in ("resident", "streaming"):
+        for mode in ("fused", "sequential"):
+            prog = build_chain(spec, shapes, mode=mode, pattern=pattern)
+            got = _run_chain_prog(prog, spec, {"input": x},
+                                  {"output": (rows, cols)})["output"]
+            assert np.isnan(got[1, :cols]).all(), f"{pattern}/{mode}"
+            np.testing.assert_allclose(got[0, :cols], ref[0], rtol=3e-4,
+                                       atol=2e-5,
+                                       err_msg=f"{pattern}/{mode}")
+
+
+def test_online_softmax_single_tile_degenerates_bit_exactly():
+    """When the whole row fits one tile, the online recurrence reduces to
+    m = max(tile), d = 0 * exp(...) + sum(exp(tile - m)) — bit-identical
+    to the resident reduction, so streaming and resident programs must
+    agree EXACTLY (cols == one lane-aligned tile: identical padding)."""
+    spec = CHAINS["mul_softmax"]
+    rows, cols = 4, 256
+    shapes = {"input": (rows, cols), "scale": (cols,),
+              "output": (rows, cols)}
+    rng = np.random.RandomState(9)
+    x = rng.randn(rows, cols).astype(np.float32)
+    s = rng.uniform(0.5, 1.5, cols).astype(np.float32)
+    stream = build_chain(spec, shapes, mode="fused", pattern="streaming")
+    assert stream.meta["plan"]["n_tiles"] == 1
+    resident = build_chain(spec, shapes, mode="fused", pattern="resident")
+    got_s = _run_chain_prog(stream, spec, {"input": x, "scale": s},
+                            {"output": (rows, cols)})["output"]
+    got_r = _run_chain_prog(resident, spec, {"input": x, "scale": s},
+                            {"output": (rows, cols)})["output"]
+    np.testing.assert_array_equal(got_s[:, :cols], got_r[:, :cols])

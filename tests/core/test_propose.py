@@ -190,3 +190,75 @@ def test_every_chain_is_extraction_derived():
         assert "extracted" in sources, (
             f"chain '{name}' is not derived from any traced model "
             f"workload (sources={sources})")
+
+
+# ---------------------------------------------------------------------------
+# Per-stat pad absorption (DESIGN.md §12): a stat producer ABSORBS the
+# downstream neutral-pad requirement as a link pad (blend), instead of
+# refusing the chain
+# ---------------------------------------------------------------------------
+
+def test_stat_producer_absorbs_downstream_pad_as_link_pad():
+    g = OpGraph(
+        name="double_softmax",
+        inputs=(("x", 2),),
+        outputs=("y",),
+        nodes=(OpNode("softmax", ("x",), "h"),
+               OpNode("softmax", ("h",), "y")))
+    (spec,) = propose_chains(g)
+    assert dict(spec.pad_values) == {"x": -3.0e38, "h": -3.0e38}
+    assert spec.link_pad("h") == -3.0e38
+    assert spec.link_pad("y") is None
+
+
+def test_map_producer_still_refuses_unpropagatable_pad():
+    """Absorption is a STAT capability (the stat templates blend their
+    output pass); a map op like sigmoid still has no backward rule for a
+    -3e38 requirement and must refuse."""
+    g = OpGraph(
+        name="bad",
+        inputs=(("x", 2),),
+        outputs=("y",),
+        nodes=(OpNode("sigmoid", ("x",), "h"),
+               OpNode("softmax", ("h",), "y")))
+    with pytest.raises(ProposeError):
+        propose_chains(g)
+
+
+def test_rmsnorm_input_now_requires_zero_pad():
+    """rmsnorm/layernorm seed a 0.0 requirement on their row input (their
+    sum-of-squares/mean must not see garbage): a producer that cannot
+    deliver 0 at the pads refuses instead of silently mis-fusing."""
+    g = OpGraph(
+        name="sig_rms",
+        inputs=(("x", 2), ("w", 1)),
+        outputs=("y",),
+        nodes=(OpNode("sigmoid", ("x",), "h"),      # sigmoid(0) = 0.5 != 0
+               OpNode("rmsnorm", ("h", "w"), "y")))
+    with pytest.raises(ProposeError):
+        propose_chains(g)
+
+
+def test_node_attrs_merge_into_component_attrs():
+    g = OpGraph(
+        name="eps_chain",
+        inputs=(("x", 2), ("w", 1)),
+        outputs=("y",),
+        nodes=(OpNode("rmsnorm", ("x", "w"), "h",
+                      attrs=(("eps", 1e-4),)),
+               OpNode("silu", ("h",), "y")))
+    (spec,) = propose_chains(g)
+    assert dict(spec.attrs) == {"eps": 1e-4}
+
+
+def test_conflicting_node_attrs_refuse():
+    g = OpGraph(
+        name="eps_conflict",
+        inputs=(("x", 2), ("w", 1), ("w2", 1)),
+        outputs=("y",),
+        nodes=(OpNode("rmsnorm", ("x", "w"), "h",
+                      attrs=(("eps", 1e-4),)),
+               OpNode("rmsnorm", ("h", "w2"), "y",
+                      attrs=(("eps", 2e-4),))))
+    with pytest.raises(ProposeError):
+        propose_chains(g)

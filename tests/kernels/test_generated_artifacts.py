@@ -214,3 +214,27 @@ def test_generated_attn_scores_is_streaming_and_guarded():
     with pytest.raises(ValueError, match="trailing dimension"):
         G.attn_scores.make({"input": (32, 512), "scale": (512,),
                             "mask": (512,), "output": (32, 512)})
+
+
+def test_generated_double_softmax_is_multi_stat_streaming():
+    """The double_softmax artifact is the MULTI-STAT streaming chain
+    (DESIGN.md §12): two independent online (m, d) recurrences visible in
+    the emitted source — the second stat's first pass jammed into the
+    first stat's output pass, the inter-stat link spilled once — and
+    make() refuses shapes it was not specialized for.  (Numerics are
+    covered at check shapes by tests/core/test_fusion.py.)"""
+    import inspect
+    src = inspect.getsource(G.double_softmax)
+    assert "running scalars loop-carried" in src
+    assert "backend  : explicit" in src
+    # both stats' running denominators survived stitching
+    assert "f0_row_den" in src and "f1_row_den" in src
+    # the per-stat spill pad blend (iota/mask/where) is in the kernel
+    assert "f0_padmsk" in src
+    with pytest.raises(ValueError, match="trailing dimension"):
+        G.double_softmax.make({"input": (32, 512), "output": (32, 512)})
+    # streaming artifacts bake per-core row loop trip counts: a different
+    # row count must refuse, not silently compute garbage
+    with pytest.raises(ValueError, match="row count"):
+        G.double_softmax.make({"input": (512, 786432),
+                               "output": (512, 786432)})
