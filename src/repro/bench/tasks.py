@@ -661,6 +661,37 @@ def build_fused_suite() -> List[KernelTask]:
          "bias": (384,), "output": (64, 384)})
     tasks.append(fused_task("add_layernorm", big, small,
                             ref=_add_layernorm_ref))
+
+    # the flash-attention chain (extracted THROUGH both matmul barriers via
+    # the matmul stage template, DESIGN.md §13): qk^T -> scale -> mask-add
+    # -> online softmax -> pv, one kernel.  Long-KV geometry (attn_scores'
+    # regime): the (Sq, Skv) score row is far too wide for residency, so
+    # BOTH forms stream k/v tiles per row — but the fused form carries the
+    # online (m, d) stats in VMEM and spills the score row ONCE (scratch
+    # GM — the probs row cannot reuse the (Sq, D) output), where the
+    # sequential baseline round-trips every inter-stage (Sq, Skv) link
+    # through global memory.  The qk scale is baked from the trace.
+    fa_scale = float(dict(_CHAINS["flash_attention"].attrs)["scale"])
+    big, small = shp(
+        {"q": (256, 64), "k": (786432, 64), "mask": (256, 786432),
+         "v": (786432, 64), "output": (256, 64)},
+        {"q": (8, 16), "k": (64, 16), "mask": (8, 64), "v": (64, 16),
+         "output": (8, 16)})
+
+    def _flash_ref(q, k, m, v, _s=fa_scale):
+        p = _softmax(_f64(q) @ _f64(k).T * _s + _f64(m))
+        return p @ _f64(v)
+
+    def _mk_flash(rng, shapes):
+        mask = np.where(rng.rand(*shapes["mask"]) > 0.25, 0.0,
+                        -1.0e9).astype(np.float32)
+        mask[:, 0] = 0.0        # every query attends at least one key
+        return {"q": rng.randn(*shapes["q"]).astype(np.float32),
+                "k": rng.randn(*shapes["k"]).astype(np.float32),
+                "mask": mask,
+                "v": rng.randn(*shapes["v"]).astype(np.float32)}
+    tasks.append(fused_task("flash_attention", big, small,
+                            ref=_flash_ref, make_inputs=_mk_flash))
     return tasks
 
 

@@ -403,6 +403,8 @@ OTHER_OPS = (
     "cast",           # dst = src.astype(dst.dtype)
     "rev",            # dst = flip(src, axis)
     "concat",         # dst = concatenate(srcs, axis)
+    "matmul",         # dst = a @ b (attrs['transpose_b']: dst = a @ b.T);
+                      # a: (M, K) or (K,), b: (K, N) / transposed (N, K)
 )
 ALL_OPS = UNARY_OPS + BINARY_OPS + REDUCE_OPS + OTHER_OPS
 
@@ -476,6 +478,18 @@ def infer_shape(op: Op) -> Tuple[int, ...]:
         out = list(bufs[0].shape)
         out[axis] = sum(b.shape[axis] for b in bufs)
         return tuple(out)
+    if name == "matmul":
+        a, b = bufs[0].shape, bufs[1].shape
+        if len(b) != 2:
+            raise ValueError(f"matmul: operand must be rank 2, got {b}")
+        tb = bool(op.attrs.get("transpose_b", False))
+        k_b = b[1] if tb else b[0]
+        n = b[0] if tb else b[1]
+        k_a = a[-1]
+        if k_a != k_b:
+            raise ValueError(
+                f"matmul: contraction mismatch {a} @ {b} (transpose_b={tb})")
+        return (n,) if len(a) == 1 else (*a[:-1], n)
     raise ValueError(f"unknown op {name}")
 
 

@@ -221,6 +221,15 @@ def _exec_op(op: A.Op, bufs: Dict[str, np.ndarray], env: Dict[str, Any]):
         out = np.flip(srcs[0], axis=op.attrs.get("axis", -1))
     elif name == "concat":
         out = np.concatenate(srcs, axis=op.attrs.get("axis", 0))
+    elif name == "matmul":
+        a, b = srcs[0], srcs[1]
+        if bool(op.attrs.get("transpose_b", False)):
+            b = b.T
+        if a.dtype.kind == "f":
+            a = a.astype(np.float64)
+        if b.dtype.kind == "f":
+            b = b.astype(np.float64)
+        out = a @ b
     else:
         raise DSLInterpError(f"op {name}")
     out = np.asarray(out)

@@ -82,11 +82,27 @@ def _rc_swiglu(ctx: RecipeCtx):
     ctx.out("output", y)
 
 
+def _rc_scale(ctx: RecipeCtx):
+    y = ctx.tmp("y")
+    tl.mul(y, ctx.buf("input"), float(ctx.attrs["scale"]))
+    ctx.out("output", y)
+
+
+def _rc_matmul(ctx: RecipeCtx):
+    # matmul stages never reach the generic recipe path: both harnesses
+    # special-case them (their operand buffers are not row-tile shaped)
+    raise FusionError("matmul stages build through the dedicated "
+                      "contraction harness branches")
+
+
 STAGE_OPS: Dict[str, StageOp] = {
     "add": StageOp(("a", "b"), _rc_add),
     "mul": StageOp(("a", "b"), _rc_mul),
     "sub": StageOp(("a", "b"), _rc_sub),
     "swiglu": StageOp(("a", "b"), _rc_swiglu),
+    "scale": StageOp(("input",), _rc_scale),
+    "matmul": StageOp(("a", "b"), _rc_matmul),
+    "matmul_t": StageOp(("a", "b"), _rc_matmul),
     "softmax": StageOp(("input",), NORM.softmax_recipe),
     "log_softmax": StageOp(("input",), NORM.log_softmax_recipe),
     "rmsnorm": StageOp(("input", "weight"), NORM.rmsnorm_recipe),
@@ -152,7 +168,16 @@ class ChainSpec:
                     f"chain '{self.name}': stage '{st.op}' reads "
                     f"{missing} before any stage produces them")
             if st.output not in full:
-                full[st.output] = full[st.inputs[0]]
+                if st.op == "matmul":
+                    # rows(P) @ W: trailing dim comes from W's columns
+                    full[st.output] = (*full[st.inputs[0]][:-1],
+                                       full[st.inputs[1]][-1])
+                elif st.op == "matmul_t":
+                    # rows(R) @ W^T: trailing dim comes from W's rows
+                    full[st.output] = (*full[st.inputs[0]][:-1],
+                                       full[st.inputs[1]][0])
+                else:
+                    full[st.output] = full[st.inputs[0]]
         return full
 
 
@@ -165,6 +190,33 @@ class ChainSpec:
 # Every other STAGE_OP is tile-local ("map") and can be jammed into any
 # column-tile loop.
 STREAM_STATS = ("softmax", "log_softmax", "rmsnorm", "layernorm")
+
+# Contraction stage ops (DESIGN.md §13).  "matmul_t" computes rows(R) @
+# W^T — its streamed axis is the OUTPUT's trailing dim (each column tile
+# is a block of W rows, so it stitches like a map stage); "matmul"
+# computes rows(P) @ W — its streamed axis is the ROW INPUT's trailing
+# dim (the contraction), loop-carried through an accumulator tile
+# (the "streaming_acc" pattern).
+MATMUL_OPS = ("matmul", "matmul_t")
+
+
+def _stream_tensors(spec: ChainSpec) -> set:
+    """Tensors whose trailing axis IS the chain's streamed column axis
+    (tile-padded in streaming builds; every other tensor lane-pads only).
+    For map/stat stages that is every operand; a contraction stage
+    streams only the tensor carrying its contraction/output tiles — its
+    W operand is tiled across ROWS, and the matmul accumulator output is
+    written whole per row."""
+    ts = set()
+    for st in spec.stages:
+        if st.op == "matmul":
+            ts.add(st.inputs[0])
+        elif st.op == "matmul_t":
+            ts.add(st.output)
+        else:
+            ts.update(st.inputs)
+            ts.add(st.output)
+    return ts
 
 
 # --------------------------------------------------------------------------
@@ -232,18 +284,23 @@ for _spec, _wname in _extracted:
 # --------------------------------------------------------------------------
 
 def _stage_program(spec: ChainSpec, idx: int, stage: ChainStage,
-                   shapes: Dict[str, Tuple[int, ...]], orig_cols: int,
+                   shapes: Dict[str, Tuple[int, ...]],
+                   orig_full: Dict[str, Tuple[int, ...]],
                    block_rows: int) -> A.Program:
     sop = STAGE_OPS.get(stage.op)
     if sop is None:
         raise FusionError(f"no fusable stage recipe for op '{stage.op}'")
-    if len(stage.inputs) != len(sop.canon):
+    if len(stage.inputs) != len(sop.canon) and not (
+            stage.op == "rmsnorm" and len(stage.inputs) == 1):
         raise FusionError(
             f"stage '{stage.op}' takes {len(sop.canon)} operands, chain "
             f"'{spec.name}' wires {len(stage.inputs)}")
     primary = spec.primary
     rank_p = len(shapes[primary])
     cols_p = int(shapes[primary][-1])
+    # the stage's OWN column extent: equals the primary's for map/stat
+    # stages of a homogeneous chain; differs across a matmul barrier
+    orig_cols = int(orig_full[stage.output][-1])
     names = set(stage.inputs) | {stage.output, primary}
     P = tl.ProgramBuilder(
         f"{spec.name}_s{idx}_{stage.op}", category="fused",
@@ -263,54 +320,107 @@ def _stage_program(spec: ChainSpec, idx: int, stage: ChainStage,
     h.let("n_blocks", rows_v // br)
     h.launch(grid="n_blocks")
 
+    def _cdim(t):
+        """Padded trailing extent of ``t`` (the primary's host expression
+        when equal, so pre-matmul chains build byte-identically; a plain
+        literal otherwise — link tensors must not leave host refs)."""
+        if int(shapes[t][-1]) == cols_p:
+            return cols_v
+        return int(shapes[t][-1])
+
     tensors = [(t, tl.f32, "in", len(shapes[t])) for t in stage.inputs]
     tensors.append((stage.output, tl.f32, "out", len(shapes[stage.output])))
+    nu_out = spec.link_pad(stage.output)
     with P.kernel(tensors=tensors):
         pid = tl.program_id(0)
         row0 = pid * br
-        by_tensor: Dict[str, A.Buffer] = {}
-        bufs: Dict[str, A.Buffer] = {}
-        is_vector: Dict[str, bool] = {}
-        for canon, t in zip(sop.canon, stage.inputs):
-            if t not in by_tensor:
-                is_vector[t] = len(shapes[t]) == 1    # row-broadcast vector
-                if is_vector[t] and prod(shapes[t]) != cols_p:
-                    raise FusionError(
-                        f"chain '{spec.name}': rank-1 operand '{t}' must "
-                        f"match the trailing dim {cols_p}")
-                by_tensor[t] = tl.alloc_ub(
-                    f"{t}_t", (1, cols_v) if is_vector[t] else (br, cols_v),
-                    tl.f32)
-            bufs[canon] = by_tensor[t]
-        ctx = RecipeCtx(pb=P,
-                        attrs={**dict(spec.attrs),
-                               "input": "input", "output": "output"},
-                        bufs=bufs, tile_shape=(br, cols_v), dtype=tl.f32)
-        ctx.extras["cols"] = orig_cols
-        ctx.extras["block_rows"] = br
-        with tl.copyin():
-            for t, buf in by_tensor.items():
-                tl.load(t, 0 if is_vector[t] else row0 * cols_v, buf,
-                        pad_value=spec.pad_value(t))
-        with tl.compute():
-            sop.recipe(ctx)
-            nu_out = spec.link_pad(stage.output)
-            if nu_out is not None:
-                # per-stat spill pad (DESIGN.md §12): the consumer stage
-                # needs this link's lane-padded tail at its own neutral
-                # element, and this stage's compute does not produce it
-                # there — re-blend the padded columns before the tile is
-                # stored or shared
-                res = ctx.result("output")
-                b_idx, b_msk, b_nu = (ctx.tmp("padidx"), ctx.tmp("padmsk"),
-                                      ctx.tmp("padnu"))
-                tl.iota(b_idx, axis=1)
-                tl.lt(b_msk, b_idx, float(orig_cols))
-                tl.full(b_nu, float(nu_out))
-                tl.where(res, b_msk, res, b_nu)
-        with tl.copyout():
-            tl.store(stage.output, row0 * cols_v, ctx.result("output"))
+        if stage.op in MATMUL_OPS:
+            _resident_matmul(spec, stage, shapes, row0, br, _cdim,
+                             orig_cols, nu_out)
+        else:
+            _resident_map(spec, stage, sop, shapes, row0, br, _cdim,
+                          orig_cols, nu_out, P)
     return P.build()
+
+
+def _resident_matmul(spec, stage, shapes, row0, br, _cdim, orig_cols,
+                     nu_out):
+    r_t, w_t = stage.inputs
+    cr, co = _cdim(r_t), _cdim(stage.output)
+    rb = tl.alloc_ub(f"{r_t}_t", (br, cr), tl.f32)
+    # W stays fully resident, row-padded so its padded tail rows load as
+    # zeros (the load's valid mask covers exactly the GM numel) — the
+    # output's padded columns then stay exactly 0
+    wshape = (co, cr) if stage.op == "matmul_t" else (cr, co)
+    wb = tl.alloc_ub(f"{w_t}_t", wshape, tl.f32)
+    ob = tl.alloc_ub("mm_out", (br, co), tl.f32)
+    blend = (None if nu_out is None else
+             (tl.alloc_ub("padidx", (br, co), tl.f32),
+              tl.alloc_ub("padmsk", (br, co), tl.f32),
+              tl.alloc_ub("padnu", (br, co), tl.f32)))
+    w_full = int(prod(shapes[w_t]))
+    with tl.copyin():
+        tl.load(r_t, row0 * cr, rb, pad_value=spec.pad_value(r_t))
+        tl.load(w_t, 0, wb,
+                valid=(None if w_full == int(cr) * int(co) else w_full),
+                pad_value=0.0)
+    with tl.compute():
+        tl.matmul(ob, rb, wb, transpose_b=(stage.op == "matmul_t"))
+        if blend is not None:
+            b_idx, b_msk, b_nu = blend
+            tl.iota(b_idx, axis=1)
+            tl.lt(b_msk, b_idx, float(orig_cols))
+            tl.full(b_nu, float(nu_out))
+            tl.where(ob, b_msk, ob, b_nu)
+    with tl.copyout():
+        tl.store(stage.output, row0 * co, ob)
+
+
+def _resident_map(spec, stage, sop, shapes, row0, br, _cdim, orig_cols,
+                  nu_out, P):
+    cols_s = _cdim(stage.output)
+    cols_sp = int(shapes[stage.output][-1])
+    by_tensor: Dict[str, A.Buffer] = {}
+    bufs: Dict[str, A.Buffer] = {}
+    is_vector: Dict[str, bool] = {}
+    for canon, t in zip(sop.canon, stage.inputs):
+        if t not in by_tensor:
+            is_vector[t] = len(shapes[t]) == 1    # row-broadcast vector
+            if is_vector[t] and prod(shapes[t]) != cols_sp:
+                raise FusionError(
+                    f"chain '{spec.name}': rank-1 operand '{t}' must "
+                    f"match the trailing dim {cols_sp}")
+            by_tensor[t] = tl.alloc_ub(
+                f"{t}_t", (1, cols_s) if is_vector[t] else (br, cols_s),
+                tl.f32)
+        bufs[canon] = by_tensor[t]
+    ctx = RecipeCtx(pb=P,
+                    attrs={**dict(spec.attrs),
+                           "input": "input", "output": "output"},
+                    bufs=bufs, tile_shape=(br, cols_s), dtype=tl.f32)
+    ctx.extras["cols"] = orig_cols
+    ctx.extras["block_rows"] = br
+    with tl.copyin():
+        for t, buf in by_tensor.items():
+            tl.load(t, 0 if is_vector[t] else row0 * cols_s, buf,
+                    pad_value=spec.pad_value(t))
+    with tl.compute():
+        sop.recipe(ctx)
+        if nu_out is not None:
+            # per-stat spill pad (DESIGN.md §12): the consumer stage
+            # needs this link's lane-padded tail at its own neutral
+            # element, and this stage's compute does not produce it
+            # there — re-blend the padded columns before the tile is
+            # stored or shared
+            res = ctx.result("output")
+            b_idx, b_msk, b_nu = (ctx.tmp("padidx"), ctx.tmp("padmsk"),
+                                  ctx.tmp("padnu"))
+            tl.iota(b_idx, axis=1)
+            tl.lt(b_msk, b_idx, float(orig_cols))
+            tl.full(b_nu, float(nu_out))
+            tl.where(res, b_msk, res, b_nu)
+    with tl.copyout():
+        tl.store(stage.output, row0 * cols_s, ctx.result("output"))
 
 
 # --------------------------------------------------------------------------
@@ -318,7 +428,8 @@ def _stage_program(spec: ChainSpec, idx: int, stage: ChainStage,
 # --------------------------------------------------------------------------
 
 def _stream_stage_program(spec: ChainSpec, idx: int, stage: ChainStage,
-                          shapes: Dict[str, Tuple[int, ...]], orig_cols: int,
+                          shapes: Dict[str, Tuple[int, ...]],
+                          orig_full: Dict[str, Tuple[int, ...]],
                           tile: int) -> A.Program:
     """One chain stage in canonical streaming form: a per-core row loop
     over column tiles.  Map ops reuse the elementwise recipes tile-wise;
@@ -334,12 +445,15 @@ def _stream_stage_program(spec: ChainSpec, idx: int, stage: ChainStage,
     sop = STAGE_OPS.get(stage.op)
     if sop is None:
         raise FusionError(f"no fusable stage recipe for op '{stage.op}'")
-    if len(stage.inputs) != len(sop.canon):
+    if len(stage.inputs) != len(sop.canon) and not (
+            stage.op == "rmsnorm" and len(stage.inputs) == 1):
         raise FusionError(
             f"stage '{stage.op}' takes {len(sop.canon)} operands, chain "
             f"'{spec.name}' wires {len(stage.inputs)}")
     primary = spec.primary
     rank_p = len(shapes[primary])
+    cols_p = int(shapes[primary][-1])
+    orig_cols = int(orig_full[stage.output][-1])
     names = set(stage.inputs) | {stage.output, primary}
     P = tl.ProgramBuilder(
         f"{spec.name}_s{idx}_{stage.op}", category="fused",
@@ -357,7 +471,15 @@ def _stream_stage_program(spec: ChainSpec, idx: int, stage: ChainStage,
         "tile_length", int(tile),
         rationale="chain-wide column tile: shared by every stage so the "
                   "loop-carry stitcher can jam identical tile loops")
-    n_tiles = h.let("n_tiles", c // tile_length)
+    # the stage's streamed axis: its output's trailing dim, except the
+    # matmul accumulator which streams its row input's (the contraction)
+    stream_t = stage.inputs[0] if stage.op == "matmul" else stage.output
+    stream_cp = int(shapes[stream_t][-1])
+    if stream_cp == cols_p:
+        n_tiles = h.let("n_tiles", c // tile_length)
+    else:
+        n_tiles = h.let("n_tiles", stream_cp // int(tile))
+
     h.launch(grid="n_cores")
 
     tensors = [(t, tl.f32, "in", len(shapes[t])) for t in stage.inputs]
@@ -367,10 +489,15 @@ def _stream_stage_program(spec: ChainSpec, idx: int, stage: ChainStage,
     with P.kernel(tensors=tensors):
         pid = tl.program_id(0)
 
+        def _c_of(t):
+            """Row stride of ``t`` (the primary's host expression when
+            equal, so pre-matmul chains build byte-identically)."""
+            return c if int(shapes[t][-1]) == cols_p else int(shapes[t][-1])
+
         def _off(t, r, tv):
             # rank-1 operands broadcast across rows; rank-2 are row-major
             return (tv * tile_length if len(shapes[t]) == 1
-                    else r * c + tv * tile_length)
+                    else r * _c_of(t) + tv * tile_length)
 
         def _alloc_blend():
             if nu_out is None:
@@ -446,7 +573,9 @@ def _stream_stage_program(spec: ChainSpec, idx: int, stage: ChainStage,
                         if blend is not None:
                             _blend(blend, yt, t)
                     with tl.copyout():
-                        tl.store(stage.output, r * c + t * tile_length, yt)
+                        tl.store(stage.output,
+                                 r * _c_of(stage.output) + t * tile_length,
+                                 yt)
         elif stage.op == "rmsnorm":
             x_t = stage.inputs[0]
             w_t = stage.inputs[1] if len(stage.inputs) > 1 else None
@@ -483,7 +612,89 @@ def _stream_stage_program(spec: ChainSpec, idx: int, stage: ChainStage,
                         if blend is not None:
                             _blend(blend, sq, t)
                     with tl.copyout():
-                        tl.store(stage.output, r * c + t * tile_length, sq)
+                        tl.store(stage.output,
+                                 r * _c_of(stage.output) + t * tile_length,
+                                 sq)
+        elif stage.op == "matmul_t":
+            # rows(R) @ W^T, streamed over W's rows (= output columns):
+            # each tile loads one block of W rows and emits one output
+            # tile — tile-local like a map stage, so the stitcher can jam
+            # it.  The row input is tile-invariant and reloaded per tile
+            # (keeping the jammable copyin/compute/copyout pass shape);
+            # the stitcher dedups the reload.
+            r_t, w_t = stage.inputs
+            c_r = _c_of(r_t)
+            c_o = _c_of(stage.output)
+            w_cols = int(shapes[w_t][-1])
+            w_full = int(prod(shapes[w_t]))
+            w_chunk = int(tile) * w_cols
+            rb = tl.alloc_ub(f"{r_t}_t", (c_r,), tl.f32)
+            wb = tl.alloc_ub(f"{w_t}_t", (tile_length, w_cols), tl.f32)
+            ob = tl.alloc_ub("mm_t", (tile_length,), tl.f32)
+            blend = _alloc_blend()
+            with tl.for_range("r", pid * rows_per_core, rows_per_core) as r:
+                with tl.for_range("t1", 0, n_tiles) as t:
+                    with tl.copyin():
+                        tl.load(r_t, r * c_r, rb,
+                                pad_value=spec.pad_value(r_t))
+                        # W rows past the true row count load as zeros so
+                        # the output tile's padded tail stays exact
+                        tl.load(w_t, t * w_chunk, wb,
+                                valid=(None if w_full == int(n_tiles)
+                                       * w_chunk else w_full - t * w_chunk),
+                                pad_value=0.0)
+                    with tl.compute():
+                        tl.matmul(ob, rb, wb, transpose_b=True)
+                        if blend is not None:
+                            _blend(blend, ob, t)
+                    with tl.copyout():
+                        tl.store(stage.output, r * c_o + t * tile_length,
+                                 ob)
+        elif stage.op == "matmul":
+            # rows(P) @ W, streamed over the CONTRACTION axis: the output
+            # row cannot be finished tile-locally, so it is loop-carried
+            # through an accumulator tile — zero-initialized at row scope,
+            # one rank-1 x rank-2 partial product added per tile, drained
+            # by a row-scope store (the "streaming_acc" pattern).
+            p_t, w_t = stage.inputs
+            c_p = _c_of(p_t)
+            c_o = _c_of(stage.output)
+            w_cols = int(shapes[w_t][-1])
+            w_full = int(prod(shapes[w_t]))
+            w_chunk = int(tile) * w_cols
+            pb = tl.alloc_ub(f"{p_t}_t", (tile_length,), tl.f32)
+            wb = tl.alloc_ub(f"{w_t}_t", (tile_length, w_cols), tl.f32)
+            pt = tl.alloc_ub("mm_part", (w_cols,), tl.f32)
+            acc = tl.alloc_ub("mm_acc", (w_cols,), tl.f32)
+            blend = (None if nu_out is None else
+                     (tl.alloc_ub("padidx", (w_cols,), tl.f32),
+                      tl.alloc_ub("padmsk", (w_cols,), tl.f32),
+                      tl.alloc_ub("padnu", (w_cols,), tl.f32)))
+            with tl.for_range("r", pid * rows_per_core, rows_per_core) as r:
+                with tl.compute():
+                    tl.full(acc, 0.0)
+                with tl.for_range("t1", 0, n_tiles) as t:
+                    with tl.copyin():
+                        tl.load(p_t, r * c_p + t * tile_length, pb,
+                                pad_value=spec.pad_value(p_t))
+                        # W rows past the true row count load as zeros, so
+                        # padded contraction lanes contribute nothing
+                        tl.load(w_t, t * w_chunk, wb,
+                                valid=(None if w_full == int(n_tiles)
+                                       * w_chunk else w_full - t * w_chunk),
+                                pad_value=0.0)
+                    with tl.compute():
+                        tl.matmul(pt, pb, wb)
+                        tl.add(acc, acc, pt)
+                if blend is not None:
+                    with tl.compute():
+                        idx, msk, nuf = blend
+                        tl.iota(idx, axis=0)
+                        tl.lt(msk, idx, float(orig_cols))
+                        tl.full(nuf, float(nu_out))
+                        tl.where(acc, msk, acc, nuf)
+                with tl.copyout():
+                    tl.store(stage.output, r * c_o, acc)
         elif stage.op in STREAM_STATS:
             raise FusionError(
                 f"op '{stage.op}' has no streaming stage template")
@@ -513,7 +724,8 @@ def _stream_stage_program(spec: ChainSpec, idx: int, stage: ChainStage,
                     with tl.compute():
                         sop.recipe(ctx)
                     with tl.copyout():
-                        tl.store(stage.output, r * c + t * tile_length,
+                        tl.store(stage.output,
+                                 r * _c_of(stage.output) + t * tile_length,
                                  ctx.result("output"))
     return P.build()
 
@@ -534,9 +746,9 @@ def _divisors_desc(n: int) -> List[int]:
 
 
 def _stitch(spec: ChainSpec, shapes: Dict[str, Tuple[int, ...]],
-            orig_cols: int, block_rows: int, mode: str, name: str,
-            revalidate: bool) -> A.Program:
-    progs = [_stage_program(spec, i, st, shapes, orig_cols, block_rows)
+            orig_full: Dict[str, Tuple[int, ...]], block_rows: int,
+            mode: str, name: str, revalidate: bool) -> A.Program:
+    progs = [_stage_program(spec, i, st, shapes, orig_full, block_rows)
              for i, st in enumerate(spec.stages)]
     order = [t for t, _ in spec.inputs] + list(spec.outputs)
     if mode == "fused":
@@ -548,9 +760,10 @@ def _stitch(spec: ChainSpec, shapes: Dict[str, Tuple[int, ...]],
 
 
 def _stitch_streaming(spec: ChainSpec, shapes: Dict[str, Tuple[int, ...]],
-                      orig_cols: int, tile: int, mode: str, name: str,
+                      orig_full: Dict[str, Tuple[int, ...]], tile: int,
+                      mode: str, name: str,
                       revalidate: bool) -> A.Program:
-    progs = [_stream_stage_program(spec, i, st, shapes, orig_cols, tile)
+    progs = [_stream_stage_program(spec, i, st, shapes, orig_full, tile)
              for i, st in enumerate(spec.stages)]
     order = [t for t, _ in spec.inputs] + list(spec.outputs)
     if mode == "fused":
@@ -614,13 +827,13 @@ def _build_resident(spec: ChainSpec, orig, full, orig_cols: int, mode: str,
     rows = prod(padded[spec.primary][:-1])
 
     # exact footprint is affine in block_rows: probe at two sizes
-    b1 = _footprint(_stitch(spec, padded, orig_cols, 1, mode, name,
+    b1 = _footprint(_stitch(spec, padded, full, 1, mode, name,
                             revalidate=False))
     if b1 > tl.VMEM_BUDGET:
         raise NotImplementedError(
             f"{mode} chain '{spec.name}' needs {b1} B of UB at "
             f"block_rows=1 > VMEM budget {tl.VMEM_BUDGET} B")
-    slope = max(1, _footprint(_stitch(spec, padded, orig_cols, 2, mode,
+    slope = max(1, _footprint(_stitch(spec, padded, full, 2, mode,
                                       name, revalidate=False)) - b1)
     br_max = max(1, (tl.VMEM_BUDGET - (b1 - slope)) // slope)
     last_refusal: Optional[NotImplementedError] = None
@@ -628,7 +841,7 @@ def _build_resident(spec: ChainSpec, orig, full, orig_cols: int, mode: str,
         if br > br_max:
             continue
         try:
-            prog = _stitch(spec, padded, orig_cols, br, mode, name,
+            prog = _stitch(spec, padded, full, br, mode, name,
                            revalidate=True)
         except NotImplementedError as e:    # footprint estimate off: step down
             last_refusal = e
@@ -645,12 +858,18 @@ def _stream_tile(spec: ChainSpec, full, orig_cols: int, mode: str,
                  name: str) -> int:
     """Plan the chain-wide column tile: probe the stitched footprint at
     two tile lengths (affine in tile), cap by the VMEM budget, and prefer
-    a tile that divides the lane-padded column count (less padding)."""
-    b1 = _footprint(_stitch_streaming(spec, _tile_pad(full, LANE),
-                                      orig_cols, LANE, mode, name,
+    a tile that divides the lane-padded STREAM width (less padding) — the
+    widest streamed axis across the stages, which is the trailing dim for
+    pre-matmul chains but e.g. the kv sequence length for attention."""
+    stream_ts = _stream_tensors(spec)
+    stream_cols = max(int(full[st.inputs[0] if st.op == "matmul"
+                           else st.output][-1]) for st in spec.stages)
+    b1 = _footprint(_stitch_streaming(spec, _tile_pad(full, LANE, stream_ts),
+                                      full, LANE, mode, name,
                                       revalidate=False))
-    b2 = _footprint(_stitch_streaming(spec, _tile_pad(full, 2 * LANE),
-                                      orig_cols, 2 * LANE, mode, name,
+    b2 = _footprint(_stitch_streaming(spec,
+                                      _tile_pad(full, 2 * LANE, stream_ts),
+                                      full, 2 * LANE, mode, name,
                                       revalidate=False))
     per_lane = max(1, b2 - b1)
     base = b1 - per_lane
@@ -659,7 +878,7 @@ def _stream_tile(spec: ChainSpec, full, orig_cols: int, mode: str,
             f"{mode} streaming chain '{spec.name}' needs {base + per_lane} "
             f"B of UB at tile={LANE} > VMEM budget {tl.VMEM_BUDGET} B")
     max_lanes = int((tl.VMEM_BUDGET - base) // per_lane)
-    cols_lanes = -(-orig_cols // LANE)
+    cols_lanes = -(-stream_cols // LANE)
     lanes = max(1, min(max_lanes, _STREAM_TILE_CAP // LANE, cols_lanes))
     divs = [d for d in _divisors_desc(cols_lanes) if d <= lanes]
     if divs and divs[0] * 8 >= lanes:   # a near-cap divisor: no padding
@@ -667,18 +886,25 @@ def _stream_tile(spec: ChainSpec, full, orig_cols: int, mode: str,
     return lanes * LANE
 
 
-def _tile_pad(full, tile):
-    return {t: (*s[:-1], _rup(s[-1], tile)) for t, s in full.items()}
+def _tile_pad(full, tile, stream_ts=None):
+    """Pad trailing dims for the streaming harness: streamed tensors to a
+    tile multiple, the rest (e.g. matmul weight operands, whose trailing
+    dim is not the streamed axis) to the lane width only."""
+    return {t: (*s[:-1],
+                _rup(s[-1], tile if stream_ts is None or t in stream_ts
+                     else LANE))
+            for t, s in full.items()}
 
 
 def _build_streaming(spec: ChainSpec, orig, full, orig_cols: int,
                      mode: str, name: str) -> A.Program:
     tile = _stream_tile(spec, full, orig_cols, mode, name)
+    stream_ts = _stream_tensors(spec)
     last_refusal: Optional[NotImplementedError] = None
     while tile >= LANE:
         try:
-            prog = _stitch_streaming(spec, _tile_pad(full, tile), orig_cols,
-                                     tile, mode, name, revalidate=True)
+            prog = _stitch_streaming(spec, _tile_pad(full, tile, stream_ts),
+                                     full, tile, mode, name, revalidate=True)
             return _finalize(prog, spec, orig, orig_cols, "streaming")
         except NotImplementedError as e:   # footprint estimate off
             last_refusal = e
@@ -691,15 +917,33 @@ def _build_streaming(spec: ChainSpec, orig, full, orig_cols: int,
 def _finalize(prog: A.Program, spec: ChainSpec, orig,
               orig_cols: int, pattern: str) -> A.Program:
     tensor_names = [tp.name for tp in prog.kernel.tensors]
-    pad_unit = ("cols_padded_unit" if pattern == "resident"
-                else "tile_length")
+    full = spec.chain_shapes(orig)
+    stream_ts = _stream_tensors(spec)
+
+    def _pad_unit(t):
+        if pattern == "resident":
+            return "cols_padded_unit"
+        # streamed axes pad to the tile; anything else (matmul weight
+        # operands, scratch spills of already-padded links) to the lane
+        return "tile_length" if t in stream_ts or t not in full else LANE
     prog.meta["gm_layout"] = {
-        t: {"pad_axis": -1, "pad_multiple": pad_unit,
+        t: {"pad_axis": -1, "pad_multiple": _pad_unit(t),
             "pad_value": spec.pad_value(t)} for t in tensor_names}
     prog.meta["orig_shapes"] = {t: orig[t] for t in tensor_names
                                 if t in orig}
+    # the convenience entry infers OUT shapes from the first input; bake a
+    # literal when the chain says otherwise (matmul changes the trailing
+    # dim; scratch spills take their link's padded build shape)
+    task_shapes = prog.meta.get("task_shapes", {})
+    p_shape = tuple(full[spec.primary])
+
+    def _out_code(t):
+        if t in full:
+            return ("tuple(_arrs[0].shape)" if tuple(full[t]) == p_shape
+                    else repr(tuple(full[t])))
+        return repr(tuple(task_shapes[t]))
     prog.meta["out_shape_code"] = {
-        tp.name: "tuple(_arrs[0].shape)" for tp in prog.kernel.tensors
+        tp.name: _out_code(tp.name) for tp in prog.kernel.tensors
         if tp.role is A.Role.OUT}
     prog.meta["make_guards"] = [
         ("p['rows'] % p['block_rows'] == 0" if pattern == "resident"
@@ -723,6 +967,16 @@ def _finalize(prog: A.Program, spec: ChainSpec, orig,
              f"shapes[{spec.primary!r}][-1] == {int(n_rows)}",
              "chain was specialized for a different row count; regenerate "
              "for this shape"))
+    if any(st.op in MATMUL_OPS for st in spec.stages):
+        # contraction extents and weight layouts are baked into the tile
+        # loops: pin every chain input's full shape, not just the primary's
+        for t, _ in spec.inputs:
+            if t == spec.primary or t not in orig:
+                continue
+            prog.meta["make_guards"].append(
+                (f"tuple(shapes[{t!r}]) == {tuple(orig[t])!r}",
+                 f"chain was specialized for {t} shape {tuple(orig[t])!r}; "
+                 "regenerate for this shape"))
     return prog
 
 

@@ -266,6 +266,14 @@ class _Builder:
                 keep_params["axes"] = tuple(eqn.params.get("axes", ()))
             if prim == "integer_pow":
                 keep_params["y"] = int(eqn.params.get("y", 0))
+            if prim == "transpose":
+                keep_params["permutation"] = tuple(
+                    int(p) for p in eqn.params.get("permutation", ()))
+            if prim == "dot_general":
+                (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+                keep_params["dimension_numbers"] = (
+                    (tuple(int(a) for a in lc), tuple(int(a) for a in rc)),
+                    (tuple(int(a) for a in lb), tuple(int(a) for a in rb)))
             out = self.emit(prim, ins, eqn.outvars[0].aval.shape,
                             keep_params)
             env[eqn.outvars[0]] = out
@@ -699,6 +707,157 @@ class _Rewriter:
                                      params={"eps": float(eps)})
         return False
 
+    def _match_rmsnorm_noweight(self, e: _Eqn, prod, counts) -> bool:
+        # x * rsqrt(mean(x*x, -1) + eps)    [no learned gain]
+        #
+        # Registered after the weighted rmsnorm and layernorm matchers so a
+        # full affine pattern is always collapsed before this one can claim
+        # its inner normalization mul.
+        if e.prim != "mul" or len(e.ins) != 2:
+            return False
+        for a, b in ((0, 1), (1, 0)):
+            x = e.ins[a]
+            if _base(x).kind == "const" or len(_base(x).shape) < 2:
+                continue
+            rq = self._producer(prod, e.ins[b], "rsqrt")
+            if rq is None:
+                continue
+            ad = self._producer(prod, rq.ins[0], "add")
+            if ad is None:
+                continue
+            eps = None
+            mean_v = None
+            for p, q in ((0, 1), (1, 0)):
+                c = _scalar_const(ad.ins[p])
+                if c is not None and 0 < c < 1e-3:
+                    eps, mean_v = c, ad.ins[q]
+            if mean_v is None:
+                continue
+            n_cols = _base(x).shape[-1]
+            dv = self._producer(prod, mean_v, "div")
+            ss_v = None
+            dead_mean = []
+            if dv is not None and \
+                    _scalar_const(dv.ins[1]) == float(n_cols):
+                ss_v, dead_mean = dv.ins[0], [dv]
+            else:
+                mm = self._const_mul(prod, mean_v, 1.0 / n_cols)
+                if mm is not None:
+                    ss_v = mm
+                    dead_mean = [self._producer(prod, mean_v, "mul")]
+            if ss_v is None:
+                continue
+            rs = self._producer(prod, ss_v, "reduce_sum")
+            if rs is None or not self._last_axis(rs):
+                continue
+            sq = None
+            sq_e = self._producer(prod, rs.ins[0], "square")
+            if sq_e is not None and \
+                    _base(sq_e.ins[0]).vid == _base(x).vid:
+                sq = sq_e
+            else:
+                mq = self._producer(prod, rs.ins[0], "mul")
+                if mq is not None and \
+                        _base(mq.ins[0]).vid == _base(x).vid and \
+                        _base(mq.ins[1]).vid == _base(x).vid:
+                    sq = mq
+            if sq is None:
+                continue
+            dead = [rq, ad, rs, sq] + dead_mean
+            return self._replace(e, dead, "rmsnorm", [x], counts,
+                                 params={"eps": float(eps)})
+        return False
+
+    def _dot_as_matmul(self, d: _Eqn):
+        """Classify a dot_general as a per-slice row matmul.
+
+        Returns ``(R, W, op, wf_out)`` — the row tensor, the weight tensor,
+        the stage op ("matmul" contracts W's leading per-slice axis, i.e.
+        rows @ W; "matmul_t" its trailing, i.e. rows @ W.T) and the output
+        axis carrying W's free dimension — or None when the contraction
+        does not fit the template: multiple contracting pairs, no batch
+        dims (an unbatched ``h @ w`` stays a barrier), W with more than one
+        free axis per slice, or a row tensor that does not contract its
+        trailing axis.
+        """
+        dn = d.params.get("dimension_numbers")
+        if dn is None or len(d.ins) != 2:
+            return None
+        (lc, rc), (lb, rb) = dn
+        if len(lc) != 1 or len(rc) != 1:
+            return None
+        for r_i in (1, 0):               # traced attention puts rows on rhs
+            w_i = 1 - r_i
+            R, W = d.ins[r_i], d.ins[w_i]
+            if any(_base(v).kind == "const" or len(_base(v).shape) < 2
+                   for v in (R, W)):
+                continue
+            rsh, wsh = R.shape, W.shape
+            r_c = (rc if r_i == 1 else lc)[0]
+            w_c = (lc if r_i == 1 else rc)[0]
+            r_b = rb if r_i == 1 else lb
+            w_b = lb if r_i == 1 else rb
+            if not r_b:
+                continue
+            if r_c != len(rsh) - 1:
+                continue
+            w_free = [ax for ax in range(len(wsh))
+                      if ax not in w_b and ax != w_c]
+            if len(w_free) != 1:
+                continue
+            op = "matmul" if w_c < w_free[0] else "matmul_t"
+            nb = len(lb)
+            lhs_free = len(d.ins[0].shape) - 1 - nb
+            wf_out = nb if w_i == 0 else nb + lhs_free
+            return R, W, op, wf_out
+        return None
+
+    def _match_matmul(self, e: _Eqn, prod, counts) -> bool:
+        """dot_general (optionally followed by a transpose that puts the
+        weight's free axis last) becomes a matmul / matmul_t stage eqn with
+        ins ``[rows, weight]``.  Leading output axes may land in any order:
+        rows are opaque to the chain machinery."""
+        if e.prim == "dot_general":
+            cls = self._dot_as_matmul(e)
+            if cls is None:
+                return False
+            R, W, op, wf_out = cls
+            if wf_out != len(e.out.shape) - 1:
+                return False
+            return self._replace(e, [], op, [R, W], counts)
+        if e.prim == "transpose":
+            d = self._producer(prod, e.ins[0], "dot_general", strip=())
+            if d is None:
+                return False
+            cls = self._dot_as_matmul(d)
+            if cls is None:
+                return False
+            R, W, op, wf_out = cls
+            perm = e.params.get("permutation", ())
+            if not perm or perm[-1] != wf_out:
+                return False
+            return self._replace(e, [d], op, [R, W], counts)
+        return False
+
+    def _scale_pass(self) -> None:
+        """Leftover multiplications by a traced scalar constant become
+        'scale' stage eqns (the constant rides in params).  Runs after the
+        composite fixpoint so const-mul-bearing composites (gelu, the mean
+        inside a norm) are matched first."""
+        for idx, e in enumerate(self.eqns):
+            if e.prim != "mul" or len(e.ins) != 2:
+                continue
+            if len(e.out.shape) < 2:
+                continue
+            for i, j in ((0, 1), (1, 0)):
+                c = _scalar_const(e.ins[i])
+                t = e.ins[j]
+                if c is None or _base(t).kind == "const":
+                    continue
+                self.eqns[idx] = _Eqn("scale", [t], e.out,
+                                      {"scale": float(c)})
+                break
+
     def _masked_fill_pass(self) -> bool:
         """where(pred, x, -big) feeding only softmax row inputs becomes
         add(x, mask) with a synthesized external mask input."""
@@ -742,7 +901,8 @@ class _Rewriter:
                     self._match_gelu_tanh, self._match_gelu_erf,
                     self._match_softmax, self._match_log_softmax,
                     self._match_rmsnorm, self._match_layernorm,
-                    self._match_swiglu)
+                    self._match_swiglu, self._match_matmul,
+                    self._match_rmsnorm_noweight)
         changed = True
         while changed:
             changed = False
@@ -756,6 +916,7 @@ class _Rewriter:
                         prod = self._prod()
         while self._masked_fill_pass():
             pass
+        self._scale_pass()
 
 
 # --------------------------------------------------------------------------
@@ -789,15 +950,29 @@ def _fusable_eqn(e: _Eqn) -> Optional[Tuple[str, List[_Val]]]:
     sound operand roles, else None (barrier)."""
     comps = ("softmax", "log_softmax", "rmsnorm", "layernorm", "gelu",
              "silu", "relu", "swiglu", "square", "tanh", "exp", "abs",
-             "neg", "sqrt", "sigmoid")
+             "neg", "sqrt", "sigmoid", "scale", "matmul", "matmul_t")
     op = e.prim if e.prim in comps else PRIM_MAP.get(e.prim)
     if op is None:
         return None
     if len(e.out.shape) < 2:
         return None                      # rank-1 math cannot anchor a row
     ins = list(e.ins)
+    if op in ("matmul", "matmul_t"):
+        # operand trailing dims legitimately differ from the output's
+        # (the contraction consumes them), so the row-operand gate below
+        # does not apply; the matcher already enforced contraction legality
+        if len(ins) != 2 or any(
+                _base(v).kind == "const" or len(_base(v).shape) < 2
+                for v in ins):
+            return None
+        return op, ins
     if not all(_operand_ok(v, e.out.shape) for v in ins):
         return None
+    if op == "rmsnorm" and len(ins) == 1:
+        # weightless form: single row operand, no learned gain
+        if len(_base(ins[0]).shape) < 2:
+            return None
+        return op, ins
     if op in ("add", "mul", "sub", "swiglu", "rmsnorm"):
         if len(ins) != 2:
             return None
@@ -825,6 +1000,8 @@ _EPS_DEFAULT = {"rmsnorm": 1e-6, "layernorm": 1e-5}
 
 
 def _node_attrs(e: _Eqn, op: str) -> Tuple[Tuple[str, object], ...]:
+    if op == "scale":
+        return (("scale", float(e.params["scale"])),)
     eps = e.params.get("eps")
     default = _EPS_DEFAULT.get(op)
     if eps is None or default is None or _isclose(float(eps), default,

@@ -358,7 +358,8 @@ def fuse_programs(progs: Sequence[A.Program], *, name: str,
         return _fuse_single_visit(progs, name=name, keep=keep,
                                   tensor_order=tensor_order,
                                   revalidate=revalidate)
-    if all(p in ("streaming_map", "streaming_stat") for p in pats):
+    if all(p in ("streaming_map", "streaming_stat", "streaming_acc")
+           for p in pats):
         return _fuse_streaming(progs, name=name, keep=keep, route=route,
                                tensor_order=tensor_order,
                                revalidate=revalidate)
@@ -602,7 +603,8 @@ def sequence_programs(progs: Sequence[A.Program], *, name: str,
         return _sequence_single_visit(progs, name=name, route=route,
                                       tensor_order=tensor_order,
                                       revalidate=revalidate)
-    if all(p in ("streaming_map", "streaming_stat") for p in pats):
+    if all(p in ("streaming_map", "streaming_stat", "streaming_acc")
+           for p in pats):
         return _sequence_streaming(progs, name=name, route=route,
                                    tensor_order=tensor_order,
                                    revalidate=revalidate)
@@ -695,7 +697,7 @@ class _SStage:
     """One parsed + α-renamed streaming stage."""
     index: int
     prog: A.Program
-    pattern: str                  # "map" | "stat"
+    pattern: str                  # "map" | "stat" | "acc"
     allocs: List[A.AllocUB]
     row: A.ForRange               # row loop; var unified to _ROW
     out_tensor: str
@@ -703,7 +705,7 @@ class _SStage:
 
 def _parse_stream_stage(i: int, prog: A.Program) -> _SStage:
     pat = program_pattern(prog)
-    if pat not in ("streaming_map", "streaming_stat"):
+    if pat not in ("streaming_map", "streaming_stat", "streaming_acc"):
         raise FusionError(
             f"stage {i} ('{prog.name}') is not a streaming-pattern program "
             f"(got '{pat}')")
@@ -727,8 +729,9 @@ def _parse_stream_stage(i: int, prog: A.Program) -> _SStage:
         raise FusionError(
             f"stage {i} ('{prog.name}'): streaming stages must have exactly "
             f"one output tensor, got {outs}")
-    return _SStage(i, prog, "map" if pat == "streaming_map" else "stat",
-                   allocs, row, outs[0])
+    patterns = {"streaming_map": "map", "streaming_stat": "stat",
+                "streaming_acc": "acc"}
+    return _SStage(i, prog, patterns[pat], allocs, row, outs[0])
 
 
 def _pass_blocks(p: A.ForRange):
@@ -828,6 +831,7 @@ def _fuse_streaming(progs: Sequence[A.Program], *, name: str,
     claimed: Set[str] = set(keep.values())
     merged_items: Optional[List[A.Stmt]] = None   # set once the stat splices
     final_pass: Optional[A.ForRange] = None       # suffix-jam target
+    scratch_extra: List[Tuple[str, A.TensorParam]] = []   # scratch GM spills
 
     def _claim_spill(link: str) -> str:
         if link in route:
@@ -843,10 +847,14 @@ def _fuse_streaming(progs: Sequence[A.Program], *, name: str,
                     target = t
                     break
             if target is None:
-                raise FusionError(
-                    f"link '{link}' is re-read across passes but no "
-                    f"size-compatible output tensor is free to spill "
-                    f"through")
+                # no declared output is size-compatible (e.g. the
+                # attention scores spill, rows x kv_len, while the chain
+                # output is rows x head_dim): spill through a scratch GM
+                # tensor — a real kernel output the caller never sees,
+                # same convention as the sequential DAG routing
+                target = f"scratch{len(scratch_extra)}"
+                scratch_extra.append((target, links.params[link]))
+                all_ts.setdefault(target, tuple(all_ts.get(link, ())))
         if target in claimed:
             raise FusionError(
                 f"link '{link}': spill target '{target}' already claimed")
@@ -1184,6 +1192,17 @@ def _fuse_streaming(progs: Sequence[A.Program], *, name: str,
     def _jam_suffix(stage: _SStage) -> None:
         nonlocal final_pass
         p = [st for st in stage.row.body if isinstance(st, A.ForRange)][0]
+        # an accumulator stage carries row-scope items around its tile
+        # loop (the accumulator init before it, the drain store after);
+        # they ride along the jam.  Map stages have none.
+        k_p = stage.row.body.index(p)
+        row_pre = list(stage.row.body[:k_p])
+        row_post = list(stage.row.body[k_p + 1:])
+        if (row_pre or row_post) and stage.out_tensor in links.links:
+            raise FusionError(
+                f"stage {stage.index}: an accumulator stage's row-scope "
+                f"drain store cannot feed a further stage (link "
+                f"'{stage.out_tensor}' would round-trip through GM)")
         ci_f, co_f, cu_f = _pass_blocks(final_pass)
         vmap = {p.var.name: final_pass.var}
         ci, co, cu = _pass_blocks(p)
@@ -1244,7 +1263,12 @@ def _fuse_streaming(progs: Sequence[A.Program], *, name: str,
             stores_new.append(st)
         rebuilt = _make_pass(final_pass, final_pass.var, loads_new,
                              computes_new, stores_new)
-        merged_items[merged_items.index(final_pass)] = rebuilt
+        at = merged_items.index(final_pass)
+        merged_items[at:at + 1] = (
+            [_map_stmt(_map_stmt(it, subst, vmap), local) for it in row_pre]
+            + [rebuilt]
+            + [_map_stmt(_map_stmt(it, subst, vmap), local)
+               for it in row_post])
         final_pass = rebuilt
 
     # ---- drive -----------------------------------------------------------
@@ -1254,6 +1278,15 @@ def _fuse_streaming(progs: Sequence[A.Program], *, name: str,
                 _splice_stat(stage)
             else:
                 _splice_next_stat(stage)
+        elif stage.pattern == "acc" and merged_items is None:
+            # a loop-carried accumulator consumes its link tile-by-tile:
+            # without a spliced stat pass to ride there is no tile stream
+            # to jam into (a map prefix alone could, but the jam state
+            # has no pass boundary for the row-scope drain) — refuse, so
+            # the chain falls back to its sequential streaming form
+            raise FusionError(
+                f"stage {stage.index} ('{stage.prog.name}'): accumulator "
+                f"stages fuse only behind a loop-carried stat stage")
         elif merged_items is None:
             _jam_map_into(stage, jam_loads, jam_computes, jam_stores, _JT)
         else:
@@ -1299,7 +1332,9 @@ def _fuse_streaming(progs: Sequence[A.Program], *, name: str,
     row_node.count_name = getattr(row0, "count_name", None)  # type: ignore[attr-defined]
 
     extra = [(keep[l], links.params[l]) for l in links.links if l in keep]
-    final = _final_params(links, set(links.links), extra, tensor_order)
+    final = _final_params(links, set(links.links), extra + scratch_extra,
+                          tensor_order,
+                          scratch=[t for t, _ in scratch_extra])
     final_names = {tp.name for tp in final}
     for st, _ in A.walk_stmts(merged_items):
         if (isinstance(st, (A.Load, A.Store))
@@ -1310,11 +1345,15 @@ def _fuse_streaming(progs: Sequence[A.Program], *, name: str,
     kernel = A.KernelFn(name=f"{name}_kernel", tensors=final, params=[],
                         body=list(allocs) + [row_node])
     link_shapes = {keep[l]: tuple(all_ts.get(l, ())) for l in keep}
+    link_shapes.update({t: tuple(all_ts.get(t, ()))
+                        for t, _ in scratch_extra})
     meta = _merged_meta(progs, values, final, link_shapes)
     meta["fusion"] = {"mode": "fused", "pattern": "streaming",
                       "links": list(links.links), "kept": dict(keep),
                       "spills": dict(spills),
                       "stages": [p.name for p in progs]}
+    if scratch_extra:
+        meta["scratch_outs"] = [t for t, _ in scratch_extra]
     prog = A.Program(
         name=name, host=host, kernel=kernel, category=progs[0].category,
         rationale=("fused streaming chain (tile loops jammed, running "

@@ -97,7 +97,19 @@ STAT_PAD_ABSORB = frozenset(("softmax", "log_softmax", "rmsnorm",
 ZERO_PRESERVING = frozenset((
     "relu", "tanh", "gelu", "silu", "abs", "neg", "square", "sqrt", "sign",
     "mish", "hardswish", "softsign", "elu", "selu", "expm1", "log1p",
+    "scale",
 ))
+
+# matmul stage ops (DESIGN.md §13).  ``matmul_t`` contracts the operand's
+# trailing axis (out = row @ W.T, the QK^T orientation); ``matmul``
+# contracts the operand's leading axis (out = row @ W, the PV
+# orientation).  Both require their row input's lane-padded tail to be 0
+# (a padded row lane multiplies a zero-filled operand tail, and 0 * big
+# finite values must not produce non-zero garbage in real lanes), and both
+# GUARANTEE a 0 tail on their own output: padded output lanes only ever
+# multiply operand rows/columns beyond the true extent, which every
+# template loads with pad_value 0.
+MATMUL_OPS = frozenset(("matmul", "matmul_t"))
 
 # identity element of the *second* operand so the first operand's pad
 # value passes through unchanged
@@ -122,32 +134,65 @@ def _infer_pad_values(stages: Sequence[OpNode],
     harness satisfies by re-blending the link's lane-padded tail instead
     of propagating through a row reduction (impossible).  Link-pad entries
     are recorded even when the value is 0.0, because the blend is what
-    establishes it."""
-    req: Dict[str, float] = {}
-    link_pads: Dict[str, float] = {}
-    for st in stages:
-        nu = NEUTRAL_ROW_PAD.get(st.op)
-        if nu is not None:
-            _require(req, st.inputs[0], nu)
-    for st in reversed(stages):        # consumers before producers
-        nu = req.get(st.output)
-        if nu is None:
-            continue
-        if st.op in STAT_PAD_ABSORB:
-            link_pads[st.output] = nu
-        elif st.op in _BINARY_IDENTITY and len(st.inputs) == 2:
-            _require(req, st.inputs[0], nu)
-            _require(req, st.inputs[1], _BINARY_IDENTITY[st.op])
-        elif nu == 0.0 and st.op in ZERO_PRESERVING and len(st.inputs) == 1:
-            _require(req, st.inputs[0], 0.0)
-        else:
-            raise ProposeError(
-                f"cannot propagate the neutral pad {nu} backward through "
-                f"'{st.op}' producing '{st.output}'")
-    pads = {t: v for t, v in req.items()
-            if t in set(chain_inputs) and v != 0.0}
-    pads.update(link_pads)
-    return pads
+    establishes it.
+
+    A commutative binary stage (``add``/``mul``) can carry the neutral pad
+    on EITHER operand; the default orientation (first operand carries it)
+    fails when the first operand's producer cannot absorb a nonzero pad —
+    e.g. a masked matmul chain, where ``add(scores, mask)`` must route the
+    softmax neutral −3e38 to the external mask, because 0 is the only pad
+    a matmul's output can guarantee.  Orientations are searched
+    deterministically, default-first, so every previously proposable chain
+    keeps its exact pad assignment."""
+
+    def attempt(swaps: Set[int]) -> Dict[str, float]:
+        req: Dict[str, float] = {}
+        link_pads: Dict[str, float] = {}
+        for st in stages:
+            nu = NEUTRAL_ROW_PAD.get(st.op)
+            if nu is not None:
+                _require(req, st.inputs[0], nu)
+            if st.op in MATMUL_OPS:
+                _require(req, st.inputs[0], 0.0)
+        for idx in reversed(range(len(stages))):   # consumers first
+            st = stages[idx]
+            nu = req.get(st.output)
+            if nu is None:
+                continue
+            if st.op in STAT_PAD_ABSORB:
+                link_pads[st.output] = nu
+            elif st.op in MATMUL_OPS:
+                if nu != 0.0:
+                    raise ProposeError(
+                        f"matmul '{st.op}' producing '{st.output}' can "
+                        f"only guarantee a 0 pad, not {nu}")
+                # zero-filled operand tails already establish the 0 tail
+            elif st.op in _BINARY_IDENTITY and len(st.inputs) == 2:
+                a, b = (1, 0) if idx in swaps else (0, 1)
+                _require(req, st.inputs[a], nu)
+                _require(req, st.inputs[b], _BINARY_IDENTITY[st.op])
+            elif nu == 0.0 and st.op in ZERO_PRESERVING and \
+                    len(st.inputs) == 1:
+                _require(req, st.inputs[0], 0.0)
+            else:
+                raise ProposeError(
+                    f"cannot propagate the neutral pad {nu} backward "
+                    f"through '{st.op}' producing '{st.output}'")
+        pads = {t: v for t, v in req.items()
+                if t in set(chain_inputs) and v != 0.0}
+        pads.update(link_pads)
+        return pads
+
+    cands = [i for i, st in enumerate(stages)
+             if st.op in ("add", "mul") and len(st.inputs) == 2]
+    last: Optional[ProposeError] = None
+    for bits in range(1 << len(cands)):
+        swaps = {cands[k] for k in range(len(cands)) if bits >> k & 1}
+        try:
+            return attempt(swaps)
+        except ProposeError as e:
+            last = e
+    raise last or ProposeError("pad inference failed with no stages")
 
 
 # --------------------------------------------------------------------------

@@ -61,17 +61,18 @@ def framework_tasks():
     # same tensor contract as before, plus the chain structure in attrs so
     # the eager baseline prices the sequential add+rmsnorm kernel sequence.
     # attn_scores / swiglu_proj are the proposer-derived streaming and DAG
-    # chains (DESIGN.md §10); mask_softmax is the jaxpr-EXTRACTED chain —
-    # discovered from the flash-attention reference's masked score
-    # normalization, not from any declared graph (DESIGN.md §11);
-    # double_softmax is the extracted MULTI-STAT chain, fused through the
-    # per-stat spill schedule with 2-pass online softmax stats
-    # (DESIGN.md §12).
+    # chains (DESIGN.md §10); mask_softmax / flash_attention are
+    # jaxpr-EXTRACTED chains (DESIGN.md §11) — mask_softmax from the bare
+    # masked score normalization, flash_attention derived from the
+    # UNMODIFIED mha_reference THROUGH both dot_general contractions via
+    # the matmul stage template (DESIGN.md §13); double_softmax is the
+    # extracted MULTI-STAT chain, fused through the per-stat spill
+    # schedule with 2-pass online softmax stats (DESIGN.md §12).
     picks = [by_name["rmsnorm"], by_name["softmax"], by_name["adamw"], sw,
              by_fused["add_rmsnorm"], by_fused["bias_gelu"],
              by_fused["rmsnorm_swiglu"], by_fused["attn_scores"],
              by_fused["swiglu_proj"], by_fused["mask_softmax"],
-             by_fused["double_softmax"]]
+             by_fused["double_softmax"], by_fused["flash_attention"]]
     picks += mhc_tasks()
     return picks
 

@@ -250,6 +250,11 @@ def program_pattern(prog: A.Program) -> str:
     * ``"streaming_stat"`` — a row loop carrying running scalars across
       one or more column-tile passes (paper Fig. 2: streaming softmax /
       rmsnorm).  Fusing into it requires loop-carry-aware stitching.
+    * ``"streaming_acc"`` — a row loop carrying a running *buffer*
+      (accumulator) across exactly one column-tile pass, initialized by a
+      row-scope ComputeBlock before the pass and drained by a row-scope
+      CopyOut after it (DESIGN.md §13: the matmul contraction carry).  No
+      running scalars.
     * ``"other"`` — anything else (not stitchable).
     """
     k = prog.kernel
@@ -273,6 +278,9 @@ def program_pattern(prog: A.Program) -> str:
         return "other"
     if len(inner_loops) == 1 and not inner_rest:
         return "streaming_map"
+    if len(inner_loops) == 1 and inner_rest and \
+            _only(inner_rest, A.ComputeBlock, A.CopyOut):
+        return "streaming_acc"
     return "other"
 
 

@@ -239,6 +239,15 @@ class BodyEmitter:
             axis = op.attrs.get("axis", 0)
             return (f"{dst.name} = jnp.concatenate(["
                     f"{', '.join(codes)}], axis={axis})")
+        if name == "matmul":
+            # a may be rank 1 or 2; contract a's last axis with rhs rows
+            rhs = f"{codes[1]}.T" if op.attrs.get("transpose_b") else codes[1]
+            a_rank = (len(op.srcs[0].shape)
+                      if isinstance(op.srcs[0], A.Buffer) else 2)
+            expr = (f"jax.lax.dot_general({codes[0]}, {rhs}, "
+                    f"((({a_rank - 1},), (0,)), ((), ())), "
+                    f"preferred_element_type=jnp.float32)")
+            return f"{dst.name} = {cast_if_needed(expr, force=True)}"
         raise EmitError(f"op {name}")
 
     def _shape_code(self, buf: A.Buffer) -> str:

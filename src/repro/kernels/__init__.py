@@ -1,14 +1,18 @@
 """Framework kernels.
 
-  flash_attention/  hand-written Pallas MXU kernel (Cube-class: outside the
-                    DSL pipeline per the paper's footnote 1)
+  flash_attention/  forward runs the GENERATED flash_attention fusion
+                    chain (the matmul stage template fused it through both
+                    contractions — DESIGN.md §13; the former hand-written
+                    Pallas MXU kernel is deleted), ops.py keeps the
+                    custom-VJP wrapper and ref.py the pure-jnp oracle
   dma_pipeline/     explicit make_async_copy double-buffered kernel (the
                     literal Ascend MTE/TQue analogue)
   generated/        checked-in transcompiler artifacts (rmsnorm, softmax,
                     adamw, swiglu, add_rmsnorm, mhc_post, mhc_post_grad,
                     and the tuner-selected fused chains bias_gelu /
                     rmsnorm_swiglu / swiglu_proj plus the loop-carry
-                    streaming attn_scores — DESIGN.md §9–§10; CI
+                    streaming attn_scores and the matmul-fused
+                    flash_attention — DESIGN.md §9–§10, §13; CI
                     regenerates and diffs them so they can never drift
                     from the pipeline)
 Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd

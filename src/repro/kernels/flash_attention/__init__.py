@@ -1,3 +1,2 @@
-from .ops import attention, flash_attention
-from .kernel import flash_attention_fwd
+from .ops import attention, flash_attention, flash_attention_fwd
 from .ref import mha_reference, decode_reference

@@ -1,7 +1,12 @@
 """jit'd public wrapper for flash attention.
 
-Forward runs the hand-written Pallas kernel (interpret mode on CPU);
-backward is a custom VJP through the reference implementation with
+Forward runs the GENERATED fusion chain: the proposer derives the
+flash-attention recipe (qk^T matmul -> scale -> mask-add -> online
+softmax -> pv matmul) from the traced ``mha_reference`` itself
+(``models/workloads.py``), and ``build_fused`` stitches it into one
+streaming kernel with loop-carried (m, l, acc) state — the hand-written
+Pallas kernel this module used to import is gone (DESIGN.md §13).
+Backward is a custom VJP through the reference implementation with
 recompute (flash-style: no attention matrix is saved).  Model code selects
 `impl="pallas" | "xla"`; the CPU dry-run uses "xla" so the compiled HLO and
 cost analysis reflect what XLA will run (DESIGN.md §7).
@@ -9,12 +14,79 @@ cost analysis reflect what XLA will run (DESIGN.md §7).
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 
-from .kernel import flash_attention_fwd
 from .ref import mha_reference
+
+
+# --------------------------------------------------------------------------
+# Generated-chain forward.  The chain is derived per 2-D (seq, head_dim)
+# slice; build_chain specializes column extents into the kernel AST, so we
+# build-and-cache one program per distinct (Sq, Skv, D) and loop the
+# (batch, head) grid over it.  GQA maps q-head h -> kv-head h // group.
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=8)
+def _chain_entry(Sq: int, Skv: int, D: int):
+    """Compile the fused flash chain at one slice geometry.
+
+    Returns (entry, baked_scale): `entry(q2, k2, mask, v2)` computes
+    softmax(q2 @ k2.T * baked_scale + mask) @ v2 with f32 accumulation
+    (streaming online-softmax when the row does not fit VMEM, resident
+    single-visit otherwise; sequential staging if fusion refuses).
+    """
+    from ...core.fusion.chain import CHAINS, build_fused
+    from ...core.lowering.pipeline import transcompile
+    spec = CHAINS["flash_attention"]
+    shapes = {"q": (Sq, D), "k": (Skv, D), "mask": (Sq, Skv),
+              "v": (Skv, D), "output": (Sq, D)}
+    prog = build_fused(spec, shapes)
+    art = transcompile(prog, verify_against_interp=False)
+    return art.entry, float(dict(spec.attrs)["scale"])
+
+
+@functools.lru_cache(maxsize=8)
+def _causal_mask(Sq: int, Skv: int):
+    # additive causal mask, bottom-right aligned (decode-friendly): query i
+    # attends keys <= i + (Skv - Sq).  -3e38 is the chain's mask pad
+    # sentinel — finite, exp-underflows to exactly 0 like -inf, and
+    # survives the online-softmax rescale without NaNs.
+    qi = jnp.arange(Sq, dtype=jnp.int32)[:, None] + (Skv - Sq)
+    ki = jnp.arange(Skv, dtype=jnp.int32)[None, :]
+    return jnp.where(qi >= ki, 0.0, -3.0e38).astype(jnp.float32)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True,
+                        sm_scale: float | None = None):
+    """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D).  Returns (B, Sq, Hq, D).
+
+    Runs the generated fused chain per (batch, q-head) slice.  The chain
+    bakes the qk scale traced from the reference; an arbitrary `sm_scale`
+    is folded into q up front (q' @ k^T * baked == q @ k^T * sm_scale).
+    """
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    group = Hq // Hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(D)
+
+    entry, baked = _chain_entry(Sq, Skv, D)
+    qf = jnp.asarray(q, jnp.float32) * (sm_scale / baked)
+    kf = jnp.asarray(k, jnp.float32)
+    vf = jnp.asarray(v, jnp.float32)
+    mask = _causal_mask(Sq, Skv) if causal \
+        else jnp.zeros((Sq, Skv), jnp.float32)
+
+    batches = []
+    for b in range(B):
+        heads = [entry(qf[b, :, h, :], kf[b, :, h // group, :], mask,
+                       vf[b, :, h // group, :])
+                 for h in range(Hq)]
+        batches.append(jnp.stack(heads, axis=1))       # (Sq, Hq, D)
+    return jnp.stack(batches, axis=0).astype(q.dtype)  # (B, Sq, Hq, D)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))

@@ -6,4 +6,5 @@ jitted callable; `<name>(*arrays)` is the cached convenience entry.
 """
 from . import (rmsnorm, softmax, adamw, swiglu, add_rmsnorm,
                bias_gelu, rmsnorm_swiglu, attn_scores, swiglu_proj,
-               mask_softmax, double_softmax, mhc_post, mhc_post_grad)
+               mask_softmax, double_softmax, flash_attention,
+               mhc_post, mhc_post_grad)

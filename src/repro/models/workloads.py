@@ -127,12 +127,22 @@ def _add_layernorm(input, residual, weight, bias): # noqa: A002
 # Real block functions (new chains + end-to-end validation)
 # --------------------------------------------------------------------------
 
+def _mask_softmax(input, mask):                    # noqa: A002
+    # additively-masked score normalization — the inter-matmul segment of
+    # attention on its own (padding masks, cross-attention biases).  Keeps
+    # the mask_softmax chain registered in its 2-stage form now that the
+    # full attention reference extracts THROUGH the matmuls.
+    return jax.nn.softmax(input + mask, axis=-1)
+
+
 def _attention_probs(q, k, v):
     # the flash-attention REFERENCE (the exact path CPU model code runs):
     # qk^T matmul -> scalar scale -> where(causal, logits, -inf) ->
     # softmax -> pv matmul.  The extractor canonicalizes the masked fill
-    # into the additive-mask idiom, deriving the NEW mask_softmax chain
-    # (add -> softmax) between the two matmul barriers.
+    # into the additive-mask idiom and — since the matmul stage template —
+    # classifies both contractions as fusable stages, deriving the
+    # flash_attention chain (matmul_t -> scale -> add -> softmax ->
+    # matmul) as ONE chain across the former matmul barriers.
     return mha_reference(q, k, v, causal=True)
 
 
@@ -188,11 +198,15 @@ WORKLOADS: Tuple[Workload, ...] = (
              (("input", (_B * _S, _D)), ("residual", (_B * _S, _D)),
               ("weight", (_D,)), ("bias", (_D,))),
              doc="post-LN residual block (traced non-default eps)"),
-    Workload("mask_softmax", _attention_probs,
+    Workload("mask_softmax", _mask_softmax,
+             (("input", (_S, _S)), ("mask", (_S, _S))),
+             doc="additively-masked score normalization"),
+    Workload("flash_attention", _attention_probs,
              (("q", (_B, _S, _CFG.n_heads, _HD)),
               ("k", (_B, _S, _CFG.n_kv_heads, _HD)),
               ("v", (_B, _S, _CFG.n_kv_heads, _HD))),
-             doc="flash-attention reference: masked score normalization"),
+             doc="flash-attention reference: the full masked-attention "
+                 "chain through both matmuls"),
     Workload("transformer_block", _transformer_block,
              (("x", (_B, _S, _D)), ("norm1_w", (_D,)),
               ("wq", (_D, _CFG.n_heads * _HD)),

@@ -70,21 +70,44 @@ def test_barrier_cycle_does_not_swallow_post_ffn_residual_add():
 
 
 # ---------------------------------------------------------------------------
-# The NEW extracted chain: mask_softmax from the flash-attention reference
+# The NEW extracted chain: flash_attention THROUGH the matmul barriers
 # ---------------------------------------------------------------------------
 
-def test_mask_softmax_extracted_from_attention_reference():
-    """Tracing the real mha_reference yields the additively-masked softmax
-    chain between the two matmuls: where(causal, logits, -inf) is
-    canonicalized into add(input, mask) and the softmax pattern collapses,
-    with the scalar qk-scale mul left as a barrier feeding the chain."""
-    w = W["mask_softmax"]
+def test_flash_attention_extracted_through_matmul_barriers():
+    """Tracing the real mha_reference yields ONE chain spanning both
+    contractions: the qk^T and pv dot_generals classify as matmul stages
+    (not barriers), where(causal, logits, -inf) is canonicalized into
+    add(input, mask) and the softmax pattern collapses — the full
+    flash-attention recipe derived from unmodified model code."""
+    w = W["flash_attention"]
     graph = extract_graph(w.fn, w.shapes, name=w.name)
     ops = [n.op for n in graph.nodes]
-    assert "barrier.dot_general" in ops          # the qk / pv matmuls
-    assert "add" in ops and "softmax" in ops
+    assert "barrier.dot_general" not in ops      # matmuls are now stages
+    assert ops == ["matmul_t", "scale", "add", "softmax", "matmul"]
     assert "barrier.select_n" not in ops         # masked fill rewritten
     (spec,) = propose_chains(graph)
+    assert [st.op for st in spec.stages] == [
+        "matmul_t", "scale", "add", "softmax", "matmul"]
+    # the traced qk scale (1/sqrt(head_dim)) rides the chain attrs
+    assert abs(dict(spec.attrs)["scale"] - 0.25) < 1e-12
+
+
+def test_flash_attention_registered_chain_structure():
+    spec = CHAINS["flash_attention"]
+    assert CHAIN_SOURCES["flash_attention"] == ("extracted",)
+    assert spec.inputs == (("q", 2), ("k", 2), ("mask", 2), ("v", 2))
+    assert spec.outputs == ("output",)
+    assert [(st.op, st.inputs, st.output) for st in spec.stages] == [
+        ("matmul_t", ("q", "k"), "h1"),
+        ("scale", ("h1",), "h2"),
+        ("add", ("h2", "mask"), "h3"),
+        ("softmax", ("h3",), "h4"),
+        ("matmul", ("h4", "v"), "output")]
+    pads = dict(spec.pad_values)
+    assert pads["mask"] == -3.0e38               # padded keys stay masked
+    assert pads["h4"] == 0.0                     # padded probs contribute 0
+    # q/k/v carry no explicit pad: the default zero-pad is matmul-neutral
+    assert not {"q", "k", "v"} & set(pads)
 
 
 def test_mask_softmax_registered_chain_structure():
@@ -119,13 +142,14 @@ def test_mask_softmax_registered_end_to_end():
 def test_full_transformer_block_chains_all_dedupe():
     """The full pre-norm transformer layer is the end-to-end validation
     workload: everything fusable it contains must fingerprint-dedupe onto
-    already-registered chains (mask_softmax from the attention scores,
-    add_rmsnorm from the pre-FFN segment) — no accidental near-duplicate
-    registrations."""
+    already-registered chains (the full flash_attention chain from the
+    attention path — its scores segment no longer stops at the matmul
+    barriers — and add_rmsnorm from the pre-FFN segment) — no accidental
+    near-duplicate registrations."""
     w = W["transformer_block"]
     specs = extract_chains(w.fn, w.shapes, name=w.name)
     fps = sorted(chain_fingerprint(s) for s in specs)
-    assert fps == sorted((chain_fingerprint(CHAINS["mask_softmax"]),
+    assert fps == sorted((chain_fingerprint(CHAINS["flash_attention"]),
                           chain_fingerprint(CHAINS["add_rmsnorm"])))
 
 
@@ -427,3 +451,46 @@ def test_new_extraction_chains_registered_end_to_end():
         ["softmax", "softmax"]
     assert dict(CHAINS["double_softmax"].pad_values) == {
         "input": -3.0e38, "h": -3.0e38}
+
+
+def test_weightless_rmsnorm_composite_recognized_and_builds():
+    """Gap fix (DESIGN.md §13 satellite): x * rsqrt(mean(x*x) + eps) with
+    NO learned gain — the normalization idiom of gain-free norm layers —
+    collapses to an arity-1 rmsnorm stage instead of barriering on the
+    bare reduce, and the built chain computes the weightless recipe."""
+    spec = _single_chain(
+        lambda x: jax.nn.silu(
+            x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True)
+                              + 1e-6)),
+        (("input", (4, 64)),), name="noweight_rmsnorm")
+    assert [st.op for st in spec.stages] == ["rmsnorm", "silu"]
+    assert [len(st.inputs) for st in spec.stages] == [1, 1]
+    assert dict(spec.attrs) == {}            # default eps elided
+
+    from repro.core.dsl.interp import interpret
+    from repro.core.fusion import build_chain
+    rows, cols = 4, 96
+    rng = np.random.RandomState(3)
+    x = rng.randn(rows, cols).astype(np.float32)
+    x64 = x.astype(np.float64)
+    h = x64 / np.sqrt((x64 * x64).mean(-1, keepdims=True) + 1e-6)
+    want = h / (1 + np.exp(-h))
+    prog = build_chain(spec, {"input": (rows, cols)}, mode="fused",
+                       pattern="resident")
+    xp = np.pad(x, [(0, 0), (0, 128 - cols)])
+    got = interpret(prog, {"input": xp},
+                    {"output": (rows, 128)})["output"][:, :cols]
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=2e-5)
+
+
+def test_weightless_rmsnorm_non_default_eps_carried():
+    """The traced eps of a weightless rmsnorm rides the chain attrs just
+    like the weighted form's."""
+    spec = _single_chain(
+        lambda x: jax.nn.silu(
+            x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True)
+                              + 2e-5)),
+        (("input", (4, 64)),), name="noweight_eps")
+    assert [st.op for st in spec.stages] == ["rmsnorm", "silu"]
+    eps = dict(spec.attrs)["eps"]
+    assert abs(eps - 2e-5) < 1e-10          # f32-rounded trace constant

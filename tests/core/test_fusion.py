@@ -592,6 +592,12 @@ def _stage_ref64(op, args, attrs):
         return np.abs(a64[0])
     if op == "neg":
         return -a64[0]
+    if op == "scale":
+        return a64[0] * float(attrs["scale"])
+    if op == "matmul":
+        return a64[0] @ a64[1]
+    if op == "matmul_t":
+        return a64[0] @ a64[1].T
     if op in _ACT_REFS:
         return _ACT_REFS[op](a64[0])
     if op in _MATH_REFS:
@@ -610,14 +616,48 @@ def _compose_ref64(spec, inputs):
     return {t: env[t] for t in spec.outputs}
 
 
+def _matmul_chain_shapes(spec, rows, cols, d=10):
+    """Forward shape assignment for chains with contraction stages: the
+    primary operand of a matmul_t gets (rows, d), its weight side
+    (cols, d); the row-tensor shape then flows through map/stat stages
+    and a trailing matmul contracts back to (rows, d).  d is odd and
+    non-lane on purpose."""
+    declared = dict(spec.inputs)
+    cur = {}
+
+    def setin(t, shp):
+        cur.setdefault(t, shp)
+
+    for st in spec.stages:
+        if st.op == "matmul_t":
+            setin(st.inputs[0], (rows, d))
+            setin(st.inputs[1], (cols, d))
+            cur[st.output] = (cur[st.inputs[0]][0], cur[st.inputs[1]][0])
+        elif st.op == "matmul":
+            r = cur.get(st.inputs[0], (rows, cols))
+            setin(st.inputs[0], r)
+            setin(st.inputs[1], (r[1], d))
+            cur[st.output] = (r[0], d)
+        else:
+            r = cur.get(st.inputs[0], (rows, cols))
+            setin(st.inputs[0], r)
+            for t in st.inputs[1:]:
+                setin(t, r if declared.get(t, 2) == 2 else (r[-1],))
+            cur[st.output] = r
+    return {t: cur[t] for t, _ in spec.inputs}
+
+
 def _diff_inputs(spec, rows, cols, seed):
     """Seeded random inputs; rank-1 operands of stat stages (rmsnorm
     weights) draw positive so the f64 oracle stays well-conditioned."""
     rng = np.random.RandomState(seed)
     weights = {st.inputs[1] for st in spec.stages
                if st.op == "rmsnorm" and len(st.inputs) > 1}
-    shapes = {t: ((rows, cols) if r == 2 else (cols,))
-              for t, r in spec.inputs}
+    if any(st.op in ("matmul", "matmul_t") for st in spec.stages):
+        shapes = _matmul_chain_shapes(spec, rows, cols)
+    else:
+        shapes = {t: ((rows, cols) if r == 2 else (cols,))
+                  for t, r in spec.inputs}
     inputs = {}
     for t, _r in spec.inputs:
         if t in weights:
@@ -629,9 +669,12 @@ def _diff_inputs(spec, rows, cols, seed):
 
 def _run_chain_prog(prog, spec, inputs, out_shapes):
     souts = _padded_outs(prog, out_shapes)
-    primary_out = souts[spec.outputs[0]]
     for sc in prog.meta.get("scratch_outs", []):
-        souts[sc] = primary_out
+        # scratch GM shapes come from the program itself (a spilled link
+        # need not match any user-visible output — e.g. the flash score
+        # row vs the (rows, head_dim) output)
+        souts[sc] = _padded_outs(
+            prog, {sc: prog.meta["task_shapes"][sc]})[sc]
     res = interpret(prog, _pad_like(prog, inputs, spec), souts)
     return {t: res[t] for t in spec.outputs}
 
@@ -644,7 +687,8 @@ def _chain_differential(chain, rows, cols, seed,
     spec = CHAINS[chain]
     shapes, inputs = _diff_inputs(spec, rows, cols, seed)
     ref = _compose_ref64(spec, inputs)
-    out_shapes = {t: (rows, cols) for t in spec.outputs}
+    full = spec.chain_shapes(shapes)
+    out_shapes = {t: full[t] for t in spec.outputs}
     built = {}
     for pattern in patterns:
         for mode in ("fused", "sequential"):
@@ -658,7 +702,8 @@ def _chain_differential(chain, rows, cols, seed,
     for (pattern, mode), outs in built.items():
         for t in spec.outputs:
             np.testing.assert_allclose(
-                outs[t][:, :cols], ref[t], rtol=3e-4, atol=2e-5,
+                outs[t][:ref[t].shape[0], :ref[t].shape[1]], ref[t],
+                rtol=3e-4, atol=2e-5,
                 err_msg=f"{chain} {pattern}/{mode} output '{t}' diverges "
                         f"from the composed f64 reference")
     for pattern in patterns:
@@ -862,3 +907,271 @@ def test_online_softmax_single_tile_degenerates_bit_exactly():
     got_r = _run_chain_prog(resident, spec, {"input": x, "scale": s},
                             {"output": (rows, cols)})["output"]
     np.testing.assert_array_equal(got_s[:, :cols], got_r[:, :cols])
+
+
+# ---------------------------------------------------------------------------
+# Flash-attention shape zoo (DESIGN.md §13): the chain extracted THROUGH
+# both matmul barriers, differentially checked against the framework's
+# attention reference per (batch, head) slice — MHA/GQA/MQA head mappings,
+# odd non-lane head dims, and resident -> streaming sequence lengths.
+# ---------------------------------------------------------------------------
+
+_FLASH_ZOO = [
+    # (B, Sq, Skv, Hq, Hkv, D)
+    (1, 4, 4, 1, 1, 16),        # single head, square, trace head dim
+    (2, 5, 5, 4, 2, 16),        # GQA 2:1, odd seq
+    (1, 3, 33, 4, 1, 10),       # MQA, odd non-lane head dim, Skv > Sq
+    (1, 6, 200, 2, 2, 12),      # long KV, kv_heads == q_heads
+]
+
+
+def _flash_causal_mask(Sq, Skv):
+    # bottom-right-aligned causal mask, the chain's -3e38 sentinel idiom
+    return np.triu(np.full((Sq, Skv), -3.0e38, np.float32), 1 + Skv - Sq)
+
+
+def _flash_case_programs(Sq, Skv, D):
+    spec = CHAINS["flash_attention"]
+    shapes = {"q": (Sq, D), "k": (Skv, D), "mask": (Sq, Skv),
+              "v": (Skv, D)}
+    progs = {}
+    for pattern in ("resident", "streaming"):
+        for mode in ("fused", "sequential"):
+            try:
+                progs[(pattern, mode)] = build_chain(
+                    spec, shapes, mode=mode, pattern=pattern)
+            except (NotImplementedError, FusionError):
+                continue
+    return spec, progs
+
+
+@pytest.mark.parametrize("case", _FLASH_ZOO)
+def test_flash_zoo_matches_attention_reference_per_head(case):
+    """Every buildable (pattern, mode) flash program reproduces
+    mha_reference on each (batch, head) slice, with the GQA kv-head
+    mapping h // (Hq // Hkv) and the causal additive mask."""
+    from repro.kernels.flash_attention.ref import mha_reference
+    B, Sq, Skv, Hq, Hkv, D = case
+    group = Hq // Hkv
+    rng = np.random.RandomState(zlib.crc32(repr(case).encode()) % 2**31)
+    q = rng.randn(B, Sq, Hq, D).astype(np.float32) * 0.5
+    k = rng.randn(B, Skv, Hkv, D).astype(np.float32) * 0.5
+    v = rng.randn(B, Skv, Hkv, D).astype(np.float32) * 0.5
+    # baked trace scale, passed explicitly so the oracle computes the
+    # same math for every head dim in the zoo
+    ref = np.asarray(mha_reference(q, k, v, causal=True, sm_scale=0.25))
+    mask = _flash_causal_mask(Sq, Skv)
+    spec, progs = _flash_case_programs(Sq, Skv, D)
+    assert any(m == "fused" for _, m in progs), "no fused flash build"
+    for (pattern, mode), prog in progs.items():
+        for b in range(B):
+            for h in range(Hq):
+                ins = {"q": q[b, :, h, :], "k": k[b, :, h // group, :],
+                       "mask": mask, "v": v[b, :, h // group, :]}
+                got = _run_chain_prog(prog, spec, ins,
+                                      {"output": (Sq, D)})["output"]
+                np.testing.assert_allclose(
+                    got[:Sq, :D], ref[b, :, h, :], rtol=2e-6, atol=2e-6,
+                    err_msg=f"{case} {pattern}/{mode} head ({b},{h})")
+
+
+def test_flash_streaming_multi_tile_matches_reference():
+    """A KV extent beyond one tile: the streaming fused program must run
+    its online (m, d) carry across MULTIPLE tiles (n_tiles > 1) and still
+    match the attention reference."""
+    from repro.kernels.flash_attention.ref import mha_reference
+    Sq, Skv, D = 4, 9000, 16
+    spec = CHAINS["flash_attention"]
+    shapes = {"q": (Sq, D), "k": (Skv, D), "mask": (Sq, Skv),
+              "v": (Skv, D)}
+    prog = build_chain(spec, shapes, mode="fused", pattern="streaming")
+    assert prog.meta["plan"]["n_tiles"] > 1
+    rng = np.random.RandomState(8)
+    q2 = rng.randn(1, Sq, 1, D).astype(np.float32) * 0.5
+    k2 = rng.randn(1, Skv, 1, D).astype(np.float32) * 0.5
+    v2 = rng.randn(1, Skv, 1, D).astype(np.float32) * 0.5
+    ref = np.asarray(mha_reference(q2, k2, v2, causal=True,
+                                   sm_scale=0.25))[0, :, 0, :]
+    got = _flash_run(prog, spec, q2[0, :, 0, :], k2[0, :, 0, :],
+                     _flash_causal_mask(Sq, Skv), v2[0, :, 0, :])
+    np.testing.assert_allclose(got, ref, rtol=2e-6, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# Flash edge numerics (DESIGN.md §13): mask sentinels through the online
+# rescale, fully-masked rows, single-tile degeneration
+# ---------------------------------------------------------------------------
+
+def _flash_run(prog, spec, q2, k2, mask, v2):
+    ins = {"q": q2, "k": k2, "mask": mask, "v": v2}
+    Sq, D = q2.shape
+    return _run_chain_prog(prog, spec, ins,
+                           {"output": (Sq, D)})["output"][:Sq, :D]
+
+
+def test_flash_fully_masked_rows_match_f64_oracle():
+    """A row whose keys are ALL masked.  With the finite -3e38 sentinel
+    every lane (real or padded) carries the same score, so the row
+    degenerates to a pad-dependent uniform average: the contract is
+    FINITE output with every live row untouched — not a specific value.
+    With a true -inf mask both the f64 oracle and the chain produce NaN
+    (0/0) — the chain may not invent a finite answer."""
+    Sq, Skv, D = 4, 33, 10
+    rng = np.random.RandomState(5)
+    q2 = rng.randn(Sq, D).astype(np.float32)
+    k2 = rng.randn(Skv, D).astype(np.float32)
+    v2 = rng.randn(Skv, D).astype(np.float32)
+    spec, progs = _flash_case_programs(Sq, Skv, D)
+
+    mask = np.zeros((Sq, Skv), np.float32)
+    mask[1, :] = -3.0e38                     # row 1 fully masked, finite
+    s64 = (q2.astype(np.float64) @ k2.astype(np.float64).T * 0.25
+           + mask.astype(np.float64))
+    p64 = np.exp(s64 - s64.max(-1, keepdims=True))
+    ref = (p64 / p64.sum(-1, keepdims=True)) @ v2.astype(np.float64)
+    live = [0, 2, 3]
+    for key, prog in progs.items():
+        got = _flash_run(prog, spec, q2, k2, mask, v2)
+        assert np.isfinite(got).all(), key   # sentinel stays NaN-free
+        np.testing.assert_allclose(got[live], ref[live], rtol=3e-4,
+                                   atol=2e-5, err_msg=str(key))
+
+    mask_inf = mask.copy()
+    mask_inf[1, :] = -np.inf                 # true -inf: NaN contract
+    s64 = (q2.astype(np.float64) @ k2.astype(np.float64).T * 0.25
+           + mask_inf.astype(np.float64))
+    with np.errstate(invalid="ignore"):
+        p64 = np.exp(s64 - s64.max(-1, keepdims=True))
+        ref_inf = (p64 / p64.sum(-1, keepdims=True)) \
+            @ v2.astype(np.float64)
+    assert np.isnan(ref_inf[1]).all()
+    for key, prog in progs.items():
+        got = _flash_run(prog, spec, q2, k2, mask_inf, v2)
+        # NaN like the unpadded oracle, or exact zero where the pad blend
+        # (-3e38 on padded lanes) outweighs the -inf reals and the
+        # zero-padded v rows absorb all probability mass
+        assert np.isnan(got[1]).all() or (got[1] == 0.0).all(), key
+        np.testing.assert_allclose(got[live], ref_inf[live], rtol=3e-4,
+                                   atol=2e-5, err_msg=str(key))
+
+
+def test_flash_sentinel_mask_survives_online_rescale():
+    """-3e38 masked positions must contribute EXACTLY zero probability
+    through the streaming (m, d) rescale — the output equals the oracle
+    computed with those keys hard-excluded."""
+    Sq, Skv, D = 3, 150, 12
+    rng = np.random.RandomState(6)
+    q2 = rng.randn(Sq, D).astype(np.float32)
+    k2 = rng.randn(Skv, D).astype(np.float32)
+    v2 = rng.randn(Skv, D).astype(np.float32)
+    keep = rng.rand(Sq, Skv) > 0.4
+    keep[:, 0] = True                        # at least one live key/row
+    mask = np.where(keep, 0.0, -3.0e38).astype(np.float32)
+
+    s64 = q2.astype(np.float64) @ k2.astype(np.float64).T * 0.25
+    s64 = np.where(keep, s64, -np.inf)       # hard exclusion oracle
+    p64 = np.exp(s64 - s64.max(-1, keepdims=True))
+    ref = (p64 / p64.sum(-1, keepdims=True)) @ v2.astype(np.float64)
+
+    spec, progs = _flash_case_programs(Sq, Skv, D)
+    for key, prog in progs.items():
+        got = _flash_run(prog, spec, q2, k2, mask, v2)
+        np.testing.assert_allclose(got, ref, rtol=3e-4, atol=2e-5,
+                                   err_msg=str(key))
+
+
+def test_flash_single_tile_streaming_degenerates_bit_exactly():
+    """One KV tile: the online recurrence collapses to the plain
+    reduction, so the streaming and resident fused programs must agree
+    bit for bit (lane-aligned columns: identical padding)."""
+    Sq, Skv, D = 4, 128, 16
+    rng = np.random.RandomState(7)
+    q2 = rng.randn(Sq, D).astype(np.float32)
+    k2 = rng.randn(Skv, D).astype(np.float32)
+    v2 = rng.randn(Skv, D).astype(np.float32)
+    mask = _flash_causal_mask(Sq, Skv)
+    spec = CHAINS["flash_attention"]
+    shapes = {"q": (Sq, D), "k": (Skv, D), "mask": (Sq, Skv),
+              "v": (Skv, D)}
+    stream = build_chain(spec, shapes, mode="fused", pattern="streaming")
+    assert stream.meta["plan"]["n_tiles"] == 1
+    resident = build_chain(spec, shapes, mode="fused", pattern="resident")
+    got_s = _flash_run(stream, spec, q2, k2, mask, v2)
+    got_r = _flash_run(resident, spec, q2, k2, mask, v2)
+    np.testing.assert_array_equal(got_s, got_r)
+
+
+# ---------------------------------------------------------------------------
+# Matmul stage template negative paths (DESIGN.md §13): contractions the
+# template must NOT claim stay barriers / refuse — never mis-fuse
+# ---------------------------------------------------------------------------
+
+def test_non_row_preserving_dot_general_stays_barrier():
+    """Contracting over the ROW axis is not a row-preserving stage shape:
+    the eqn must remain a barrier.dot_general, segmenting the graph."""
+    import jax
+    from repro.core.fusion import extract_graph
+
+    def fn(x, w):
+        m = jax.lax.dot_general(x, w, (((0,), (0,)), ((), ())))
+        return jax.nn.softmax(m, axis=-1)
+
+    graph = extract_graph(fn, (("x", (8, 64)), ("w", (8, 32))),
+                          name="colmm")
+    assert any(n.op == "barrier.dot_general" for n in graph.nodes)
+    assert not any(n.op in ("matmul", "matmul_t") for n in graph.nodes)
+
+
+def test_batched_dot_general_stays_barrier():
+    """Batch dimensions are outside the 2-D stage template: a batched
+    contraction must stay a barrier, not mis-classify as a matmul
+    stage."""
+    import jax.numpy as jnp
+    from repro.core.fusion import extract_graph
+
+    def fn(q, k):
+        s = jnp.einsum("bsd,btd->bst", q, k)
+        return jnp.tanh(s)
+
+    graph = extract_graph(fn, (("q", (2, 8, 16)), ("k", (2, 8, 16))),
+                          name="batched")
+    assert any(n.op == "barrier.dot_general" for n in graph.nodes)
+    assert not any(n.op in ("matmul", "matmul_t") for n in graph.nodes)
+
+
+def test_accumulator_vmem_overflow_refuses():
+    """A pv accumulator wider than VMEM can never be carried: the build
+    must refuse (NotImplementedError / FusionError) instead of emitting
+    an unschedulable kernel."""
+    spec = CHAINS["flash_attention"]
+    # head dim so large the (D,) f32 accumulator alone exceeds the 8 MiB
+    # VMEM budget
+    D = 4 * 1024 * 1024
+    shapes = {"q": (8, D), "k": (256, D), "mask": (8, 256),
+              "v": (256, D)}
+    with pytest.raises((NotImplementedError, FusionError)):
+        build_chain(spec, shapes, mode="fused")
+
+
+def test_accumulator_at_chain_head_refuses_streaming_fusion():
+    """An accumulator stage with no loop-carried stat stage ahead of it
+    has nothing to jam behind: streaming fusion must raise FusionError
+    (build_chain converts it to the sequential-fallback refusal for
+    pattern='auto'; the sequential streaming form still builds)."""
+    spec = ChainSpec(
+        name="lone_matmul", inputs=(("p", 2), ("w", 2)),
+        outputs=("output",),
+        stages=(ChainStage("matmul", ("p", "w"), "output"),))
+    shapes = {"p": (8, 300), "w": (300, 12)}
+    with pytest.raises(FusionError):
+        build_chain(spec, shapes, mode="fused", pattern="streaming")
+    seq = build_chain(spec, shapes, mode="sequential",
+                      pattern="streaming")
+    rng = np.random.RandomState(11)
+    p = rng.randn(8, 300).astype(np.float32)
+    w = rng.randn(300, 12).astype(np.float32)
+    got = _run_chain_prog(seq, spec, {"p": p, "w": w},
+                          {"output": (8, 12)})["output"][:8, :12]
+    np.testing.assert_allclose(
+        got, p.astype(np.float64) @ w.astype(np.float64),
+        rtol=3e-5, atol=3e-5)

@@ -78,22 +78,26 @@ def test_new_chains_are_proposed_and_registered():
 # ---------------------------------------------------------------------------
 
 def test_non_fusable_node_splits_graph_into_two_chains():
+    # matmul is a stage now (DESIGN.md §13), so the canonical splitter is
+    # an extractor-declared barrier (rank-changing contraction the matmul
+    # template refuses — see test_fusion's negative-path coverage)
     g = OpGraph(
         name="block",
         inputs=(("x", 2), ("b", 1), ("w", 1)),
         outputs=("y",),
         nodes=(OpNode("add", ("x", "b"), "h1"),
                OpNode("gelu", ("h1",), "h2"),
-               OpNode("matmul", ("h2", "w"), "h3"),   # not fusable
+               OpNode("barrier.dot_general", ("h2", "w"), "h3",
+                      out_rank=2),            # not fusable
                OpNode("rmsnorm", ("h3", "w"), "h4"),
                OpNode("silu", ("h4",), "y")))
     specs = propose_chains(g)
     assert len(specs) == 2
     first, second = specs
-    # chain 1: add+gelu; its output h2 escapes (consumed by the matmul)
+    # chain 1: add+gelu; its output h2 escapes (consumed by the barrier)
     assert [st.op for st in first.stages] == ["add", "gelu"]
     assert first.outputs == ("h2",)
-    # chain 2: rmsnorm+silu; the matmul's output re-enters as an input
+    # chain 2: rmsnorm+silu; the barrier's output re-enters as an input
     assert [st.op for st in second.stages] == ["rmsnorm", "silu"]
     assert second.inputs[0] == ("h3", 2)
     assert second.outputs == ("y",)

@@ -1,5 +1,10 @@
-"""Flash attention Pallas kernel: shape/dtype sweep vs the pure-jnp oracle
-(the per-kernel requirement from the brief)."""
+"""Flash attention via the GENERATED fusion chain: shape/dtype sweep vs the
+pure-jnp oracle (``ref.py``).  The forward no longer runs a hand-written
+Pallas kernel — it compiles the proposer-derived flash_attention chain per
+(Sq, Skv, D) slice geometry (DESIGN.md §13), so this file is the
+end-to-end differential gate for that path: MHA/GQA/MQA head mappings,
+causal and full masks, cross-length KV, explicit sm_scale folding, and a
+bit-for-bit check against the reference at a resident-form geometry."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -19,31 +24,50 @@ def _mk(B, Sq, Skv, Hq, Hkv, D, dtype, seed=0):
 
 
 SHAPES = [
-    # (B, Sq, Skv, Hq, Hkv, D, bq, bk)
-    (1, 128, 128, 2, 2, 64, 64, 64),      # MHA square
-    (2, 256, 256, 4, 2, 64, 128, 128),    # GQA 2:1
-    (1, 128, 512, 8, 1, 32, 64, 128),     # MQA, cross longer KV
-    (2, 384, 384, 4, 4, 128, 128, 128),   # non-pow2 seq (3 blocks)
+    # (B, Sq, Skv, Hq, Hkv, D)
+    (1, 128, 128, 2, 2, 64),      # MHA square
+    (2, 256, 256, 4, 2, 64),      # GQA 2:1
+    (1, 128, 512, 8, 1, 32),      # MQA, cross longer KV
+    (2, 384, 384, 4, 4, 128),     # non-pow2 seq
 ]
 
 
 @pytest.mark.parametrize("shape", SHAPES)
 @pytest.mark.parametrize("causal", [True, False])
 def test_flash_matches_reference_f32(shape, causal):
-    B, Sq, Skv, Hq, Hkv, D, bq, bk = shape
+    B, Sq, Skv, Hq, Hkv, D = shape
     q, k, v = _mk(B, Sq, Skv, Hq, Hkv, D, jnp.float32)
-    out = flash_attention_fwd(q, k, v, causal=causal, block_q=bq,
-                              block_kv=bk, interpret=True)
+    out = flash_attention_fwd(q, k, v, causal=causal)
     ref = mha_reference(q, k, v, causal=causal)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=2e-5, atol=2e-5)
 
 
+def test_flash_bit_exact_at_resident_geometry():
+    """At a geometry where the whole row block is VMEM-resident the chain
+    degenerates to the same dot-softmax-dot sequence the reference runs:
+    the generated kernel must match ``mha_reference`` bit for bit."""
+    q, k, v = _mk(2, 16, 16, 4, 2, 16, jnp.float32)
+    out = flash_attention_fwd(q, k, v, causal=True)
+    ref = mha_reference(q, k, v, causal=True)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_flash_explicit_sm_scale_folded_into_q():
+    """The chain bakes the traced qk scale; an arbitrary sm_scale must be
+    folded into q without changing the result vs the reference."""
+    q, k, v = _mk(1, 64, 64, 2, 2, 32, jnp.float32)
+    for s in (0.5, 0.07, 1.0):
+        out = flash_attention_fwd(q, k, v, causal=True, sm_scale=s)
+        ref = mha_reference(q, k, v, causal=True, sm_scale=s)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+
 @pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
 def test_flash_dtypes(dtype):
     q, k, v = _mk(1, 128, 128, 2, 2, 64, dtype)
-    out = flash_attention_fwd(q, k, v, causal=True, block_q=64,
-                              block_kv=64, interpret=True)
+    out = flash_attention_fwd(q, k, v, causal=True)
     ref = mha_reference(q, k, v, causal=True)
     tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
     np.testing.assert_allclose(np.asarray(out, np.float32),
