@@ -18,7 +18,9 @@ regressions by accident.
 
 ``--check-regressions`` compares against the most recent previous
 ``BENCH_*.json`` in the results dir and exits non-zero when any task's
-tuned ratio drops by more than 2%.
+tuned ratio drops by more than 2% — or when the (injection-free) sweep
+recorded ANY degradation-ladder event (DESIGN.md §14): a clean CI run
+must land every task on its top applicable rung.
 """
 from __future__ import annotations
 
@@ -50,16 +52,27 @@ def run(which: str = "fused", budget: int = 6, emit=print, cache=None):
     from repro.bench.model import (analyze_program, eager_traffic,
                                    _padded_shapes_for, fast_ratio)
     from repro.core.codegen.emit import CODEGEN_VERSION
-    from repro.core.planner import generate
+    from repro.core.resilience import GuardedResolver, Quarantine
     from repro.core.tuning import tune as run_tune
 
+    # generation goes through the degradation ladder (DESIGN.md §14) with a
+    # private quarantine table: a clean run must land every task on its top
+    # applicable rung and record ZERO degradation events — any event in a CI
+    # sweep is a real generation/caching regression, and --check-regressions
+    # fails on it.
+    resolver = GuardedResolver(cache=cache, tune=False, verify=False,
+                               quarantine=Quarantine())
+    degradations = []
     tasks_out = []
     for task in _tasks(which):
-        r = generate(task, verify=False, cache=cache)
-        if not r.comp_ok or r.artifact is None:
+        res = resolver.resolve(task)
+        degradations.extend(ev.describe() for ev in res.events)
+        r = res.result
+        if r is None or not r.comp_ok or r.artifact is None:
+            err = r.error if r is not None else "fell through to eager rung"
             tasks_out.append({"name": task.name, "category": task.category,
-                              "ok": False, "error": r.error})
-            emit(f"bench,{task.name},FAILED,{r.error[:70]}")
+                              "ok": False, "rung": res.rung, "error": err})
+            emit(f"bench,{task.name},FAILED,rung={res.rung},{err[:70]}")
             continue
         prog = r.artifact.program
         gen = analyze_program(prog, _padded_shapes_for(prog, task.shapes))
@@ -68,7 +81,7 @@ def run(which: str = "fused", budget: int = 6, emit=print, cache=None):
         tr = run_tune(task, budget=budget, cache=cache)
         row = {
             "name": task.name, "category": task.category, "ok": True,
-            "backend": r.artifact.backend,
+            "backend": r.artifact.backend, "rung": res.rung,
             "ratio": ratio,
             "tuned_ratio": max(tr.best.ratio, ratio),
             "tuned_candidate": tr.best.candidate.describe(),
@@ -90,9 +103,11 @@ def run(which: str = "fused", budget: int = 6, emit=print, cache=None):
         "suite": which,
         "codegen_version": CODEGEN_VERSION,
         "tasks": tasks_out,
+        "degradation_events": degradations,
         "summary": {
             "n": len(tasks_out),
             "n_ok": len(ok),
+            "n_degradation_events": len(degradations),
             "fast_1_0": sum(t["tuned_ratio"] >= 1.0 for t in ok),
             "tuner_improved": sum(t["tune_gain"] > 1.0 + 1e-9 for t in ok),
             "mean_tuned_ratio": (sum(t["tuned_ratio"] for t in ok)
@@ -157,7 +172,13 @@ def main(argv=None):
         for name, before, now in bad:
             print(f"REGRESSION {name}: tuned ratio {before:.2f} -> "
                   f"{now:.2f}")
-        if bad:
+        # an injection-free sweep must be degradation-free: any ladder
+        # event here means a kernel silently fell off its top rung
+        # (DESIGN.md §14)
+        for ev in report["degradation_events"]:
+            print(f"DEGRADATION {ev['task']}: rung={ev['rung']} "
+                  f"cause={ev['cause']} {ev['detail']}")
+        if bad or report["degradation_events"]:
             return 1
     return 0
 

@@ -794,6 +794,11 @@ def build_chain(spec: ChainSpec, shapes: Dict[str, Tuple[int, ...]],
         raise ValueError(f"mode must be 'fused' or 'sequential', not {mode!r}")
     if pattern not in ("auto", "resident", "streaming"):
         raise ValueError(f"bad pattern {pattern!r}")
+    # fault hook (DESIGN.md §14): the token carries chain/mode/pattern so a
+    # FaultPlan can fail e.g. only ":fused:" builds — the sequential rung
+    # of the degradation ladder then still verifies and serves
+    from ..resilience.faults import fault_point
+    fault_point("fusion.build_chain", token=f"{spec.name}:{mode}:{pattern}")
     name = name or (spec.name if mode == "sequential"
                     else f"{spec.name}_fused")
     orig = {k: tuple(int(s) for s in v) for k, v in shapes.items()}

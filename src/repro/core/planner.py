@@ -302,6 +302,17 @@ def generate(task: KernelTask, knobs: Optional[Knobs] = None,
       with the best (variant, knobs) it finds; the winning candidate is
       remembered in the cache, so later tuned calls are O(1).
     """
+    # fault hook (DESIGN.md §14): an armed raise here models a front-end/
+    # builder exception ESCAPING the generator — the failure mode the
+    # degradation ladder and warm_kernel_cache's per-task isolation absorb
+    from .resilience.faults import fault_point
+    fault_point("planner.generate", token=task.name)
+
+    def _emit_result(res: GenResult) -> GenResult:
+        # exit transform hook: lets a FaultPlan poison a green result
+        # (e.g. NaN-producing artifact) to exercise the runtime sentinel
+        return fault_point("planner.generate:result", res, token=task.name)
+
     if task.op not in PLANNER_REGISTRY:
         return GenResult(task, None, False, False,
                          error=f"no expert example registered for op "
@@ -358,13 +369,13 @@ def generate(task: KernelTask, knobs: Optional[Knobs] = None,
                 # returns (True, True) there too)
                 comp_ok = (meta.get("exec_ok", True) is not False
                            if verify else True)
-                return GenResult(
+                return _emit_result(GenResult(
                     task, art, comp_ok,
                     bool(meta["pass_ok"]) if verify else True,
                     error=meta.get("error", "") if verify else "",
                     max_abs_err=(float("nan") if cached_err is None
                                  else float(cached_err)),
-                    cached=True, tune=tune_result)
+                    cached=True, tune=tune_result))
 
     resolved_op = task.op
 
@@ -391,7 +402,8 @@ def generate(task: KernelTask, knobs: Optional[Knobs] = None,
         if cache_obj is not None:
             cache_obj.put(cache_key, art, task=task, variant=variant,
                           resolved_op=resolved_op, pass_ok=None)
-        return GenResult(task, art, True, True, tune=tune_result)
+        return _emit_result(GenResult(task, art, True, True,
+                                      tune=tune_result))
 
     # ---- Comp@1 + Pass@1 at check shapes --------------------------------
     # Generated kernels are shape-specialized (as in the paper); numeric
@@ -454,6 +466,7 @@ def generate(task: KernelTask, knobs: Optional[Knobs] = None,
 
     # DSL-interpreter oracle equivalence is property-tested in tests/core
     # (lowered pallas == numpy interpreter on randomly generated programs).
-    return GenResult(task, art, True, chk.pass_ok, max_abs_err=chk.max_err,
-                     error=chk.error, oracle_ok=None, cached=cached_bench,
-                     tune=tune_result)
+    return _emit_result(GenResult(
+        task, art, True, chk.pass_ok, max_abs_err=chk.max_err,
+        error=chk.error, oracle_ok=None, cached=cached_bench,
+        tune=tune_result))

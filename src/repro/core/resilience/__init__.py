@@ -1,0 +1,30 @@
+"""Guarded kernel resolution, self-healing cache hooks, and the
+deterministic fault-injection harness (DESIGN.md §14).
+
+Three modules:
+
+* :mod:`.faults` — named hook points + deterministic :class:`FaultPlan`
+  injection (tests force builder exceptions, cache corruption, NaN
+  outputs, prefill crashes — no wall-clock, no ambient randomness);
+* :mod:`.ladder` — the :class:`GuardedResolver` degradation ladder
+  (cached-tuned-fused → regenerate → streaming → sequential → eager),
+  structured :class:`DegradationEvent` records, and the fleet-wide
+  :class:`Quarantine` table;
+* the cache's self-healing (checksums, schema validation,
+  evict-and-regenerate, tuned-pointer locking) lives in
+  :mod:`repro.core.tuning.cache` and is exercised through the
+  ``cache.*`` hook points here.
+"""
+from .faults import (FAULT_AUDIT, HOOK_POINTS, FaultInjected, FaultPlan,
+                     FaultSpec, active_plan, corrupt_cache_entry,
+                     fault_point, inject, poison_nan_result)
+from .ladder import (EVENT_LOG, GLOBAL_QUARANTINE, RUNGS, DegradationEvent,
+                     GuardedResolver, Quarantine, Resolution, drain_events)
+
+__all__ = [
+    "FAULT_AUDIT", "HOOK_POINTS", "FaultInjected", "FaultPlan", "FaultSpec",
+    "active_plan", "corrupt_cache_entry", "fault_point", "inject",
+    "poison_nan_result",
+    "EVENT_LOG", "GLOBAL_QUARANTINE", "RUNGS", "DegradationEvent",
+    "GuardedResolver", "Quarantine", "Resolution", "drain_events",
+]

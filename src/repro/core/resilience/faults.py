@@ -1,0 +1,240 @@
+"""Deterministic fault-injection harness (DESIGN.md §14).
+
+The runtime's guarded paths (degradation ladder, self-healing cache,
+serving retry/requeue) are only trustworthy if every failure branch is
+exercised on purpose — so each guarded subsystem exposes *named hook
+points* that a test arms with a :class:`FaultPlan`.  Plans are fully
+deterministic: firing is decided by per-site visit counters (``after`` /
+``times``) plus an optional token substring match — never wall-clock,
+never ambient randomness (the ``seed`` is recorded for provenance and
+reserved for future sampled schedules, it does not affect firing today).
+
+Hook points (the canonical names tests and DESIGN.md §14 refer to)::
+
+    planner.generate          entry of planner.generate (raise = front-end
+                              /builder exception escaping the generator)
+    planner.generate:result   exit transform of a successful GenResult
+                              (kind="call" — e.g. poison the artifact so
+                              its kernel emits NaN at runtime)
+    cache.get                 ArtifactCache.get — payload {"cache","key"};
+                              kind="call" corrupts the on-disk entry just
+                              before it is read, kind="raise" simulates a
+                              filesystem error escaping the store
+    cache.put                 ArtifactCache.put — an armed raise is
+                              swallowed by put (counted, entry unstored)
+    cache.materialize         ArtifactCache.materialize — an armed raise
+                              turns the hit into a miss
+    fusion.build_chain        chain harness entry; token is
+                              "<chain>:<mode>:<pattern>" so a plan can
+                              target only fused (or only streaming) builds
+    serve.admit               ServeEngine._admit (prefill crash)
+    serve.decode              ServeEngine.run's batched decode step
+
+A hook point is a no-op when no plan is active; every visit is counted in
+:data:`FAULT_AUDIT` either way, which is how CI proves the hooks stay
+wired (``REPRO_FAULT_INJECTION=1`` gates the audit assertion).
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+HOOK_POINTS = (
+    "planner.generate",
+    "planner.generate:result",
+    "cache.get",
+    "cache.put",
+    "cache.materialize",
+    "fusion.build_chain",
+    "serve.admit",
+    "serve.decode",
+)
+
+# every fault_point() visit lands here, plan or no plan — the CI audit
+# asserts each hook point was actually reached by the resilience suite
+FAULT_AUDIT: Dict[str, int] = {}
+
+
+class FaultInjected(RuntimeError):
+    """The exception an armed ``kind='raise'`` fault throws at its site."""
+
+    def __init__(self, site: str, token: str = ""):
+        self.site = site
+        self.token = token
+        super().__init__(f"injected fault at {site}"
+                         + (f" (token={token!r})" if token else ""))
+
+
+@dataclass
+class FaultSpec:
+    """One armed fault.
+
+    ``site``   — hook-point name (must be in :data:`HOOK_POINTS`);
+    ``kind``   — ``"raise"`` (throw :class:`FaultInjected`) or ``"call"``
+                 (return ``fn(payload)`` in place of the payload);
+    ``match``  — only fire when this substring appears in the visit token
+                 (e.g. a task name, cache key, or ``":fused"``);
+    ``after``  — skip the first N *matching* visits;
+    ``times``  — then fire on the next N matching visits (``None`` =
+                 every one).
+    """
+    site: str
+    kind: str = "raise"
+    match: Optional[str] = None
+    after: int = 0
+    times: Optional[int] = 1
+    fn: Optional[Callable[[Any], Any]] = None
+    # runtime state
+    seen: int = field(default=0, compare=False)
+    fired: int = field(default=0, compare=False)
+
+    def __post_init__(self):
+        if self.site not in HOOK_POINTS:
+            raise ValueError(f"unknown hook point {self.site!r}; "
+                             f"known: {HOOK_POINTS}")
+        if self.kind not in ("raise", "call"):
+            raise ValueError(f"kind must be 'raise' or 'call', "
+                             f"not {self.kind!r}")
+        if self.kind == "call" and self.fn is None:
+            raise ValueError("kind='call' needs fn")
+
+    def arm_for(self, token: str) -> bool:
+        """Count this visit; True when the fault fires on it."""
+        if self.match is not None and self.match not in token:
+            return False
+        self.seen += 1
+        if self.seen <= self.after:
+            return False
+        if self.times is not None and self.fired >= self.times:
+            return False
+        self.fired += 1
+        return True
+
+
+class FaultPlan:
+    """A deterministic set of :class:`FaultSpec` to activate together."""
+
+    def __init__(self, specs: List[FaultSpec], seed: int = 0):
+        self.specs = list(specs)
+        self.seed = int(seed)   # provenance only; firing is counter-driven
+
+    def specs_for(self, site: str) -> List[FaultSpec]:
+        return [s for s in self.specs if s.site == site]
+
+    def fired(self, site: Optional[str] = None) -> int:
+        return sum(s.fired for s in self.specs
+                   if site is None or s.site == site)
+
+
+_local = threading.local()
+
+
+def _stack() -> List[FaultPlan]:
+    st = getattr(_local, "stack", None)
+    if st is None:
+        st = _local.stack = []
+    return st
+
+
+def active_plan() -> Optional[FaultPlan]:
+    st = _stack()
+    return st[-1] if st else None
+
+
+@contextmanager
+def inject(plan: FaultPlan):
+    """Activate ``plan`` for the dynamic extent of the block (re-entrant:
+    the innermost plan wins)."""
+    _stack().append(plan)
+    try:
+        yield plan
+    finally:
+        _stack().pop()
+
+
+def fault_point(site: str, payload: Any = None, token: str = "") -> Any:
+    """The instrumented sites call this; returns ``payload`` (possibly
+    transformed by an armed ``kind='call'`` fault) or raises
+    :class:`FaultInjected` for an armed ``kind='raise'`` fault."""
+    FAULT_AUDIT[site] = FAULT_AUDIT.get(site, 0) + 1
+    plan = active_plan()
+    if plan is None:
+        return payload
+    for spec in plan.specs_for(site):
+        if not spec.arm_for(token):
+            continue
+        if spec.kind == "raise":
+            raise FaultInjected(site, token)
+        payload = spec.fn(payload)
+    return payload
+
+
+# --------------------------------------------------------------------------
+# Canned fault payload transformers (the corruption/poison vocabulary the
+# resilience tests share)
+# --------------------------------------------------------------------------
+
+def corrupt_cache_entry(how: str = "truncate_meta") -> Callable:
+    """``kind='call'`` transformer for the ``cache.get`` hook: damage the
+    on-disk entry just before the store reads it.  ``how`` is one of
+    ``truncate_meta`` (half the metadata JSON), ``garble_source`` (flip
+    the cached kernel source), ``version_skew`` (rewrite the recorded
+    codegen version) or ``drop_source`` (delete the .py half)."""
+
+    def _corrupt(payload):
+        cache, key = payload["cache"], payload["key"]
+        meta_p = cache.root / f"{key}.json"
+        src_p = cache.root / f"{key}.py"
+        if not meta_p.exists():
+            return payload
+        if how == "truncate_meta":
+            text = meta_p.read_text()
+            meta_p.write_text(text[: max(1, len(text) // 2)])
+        elif how == "garble_source":
+            src_p.write_text("this is not the kernel you cached(\n")
+        elif how == "version_skew":
+            import json
+            meta = json.loads(meta_p.read_text())
+            meta["codegen_version"] = -1
+            meta_p.write_text(json.dumps(meta))
+        elif how == "drop_source":
+            src_p.unlink(missing_ok=True)
+        else:
+            raise ValueError(f"unknown corruption {how!r}")
+        return payload
+    return _corrupt
+
+
+def poison_nan_result(result):
+    """``kind='call'`` transformer for ``planner.generate:result``: wrap
+    the GenResult's artifact so its runtime entry returns NaNs while every
+    recorded verdict (pass_ok, comp_ok) stays green — the mis-verified
+    kernel the first-call NaN sentinel exists to catch."""
+    import numpy as np
+    if result is None or getattr(result, "artifact", None) is None:
+        return result
+    art = result.artifact
+
+    class _PoisonedArtifact:
+        def __init__(self, inner):
+            self._inner = inner
+
+        def __getattr__(self, name):
+            return getattr(self._inner, name)
+
+        @property
+        def entry(self):
+            real = self._inner.entry
+
+            def poisoned(*arrays, **kw):
+                out = real(*arrays, **kw)
+                if isinstance(out, (tuple, list)):
+                    return type(out)(np.full_like(np.asarray(o), np.nan)
+                                     for o in out)
+                return np.full_like(np.asarray(out), np.nan)
+            return poisoned
+
+    result.artifact = _PoisonedArtifact(art)
+    return result

@@ -28,13 +28,26 @@ import hashlib
 import json
 import os
 import tempfile
+import time
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Any, Callable, Dict, Optional, Tuple
 
 from ..lowering.pipeline import Artifact, Knobs, _exec_source
+from ..resilience.faults import FaultInjected, fault_point
 
 ENV_CACHE_DIR = "REPRO_KERNEL_CACHE_DIR"
+
+# Metadata layout version (DESIGN.md §14).  Baked into every entry at
+# ``put`` and validated on ``get``: an entry written under a different
+# schema — or truncated, or with a source that no longer matches its
+# recorded checksum — is EVICTED and treated as a miss (the caller
+# regenerates and re-stores), never raised out of the store.
+CACHE_SCHEMA_VERSION = 1
+
+# how long a tuned-pointer lock may sit before a concurrent writer treats
+# its owner as dead and cleans it up
+TUNED_LOCK_STALE_S = 60.0
 
 
 def default_cache_dir() -> str:
@@ -132,6 +145,8 @@ class ArtifactCache:
         self.hits = 0
         self.misses = 0
         self.stores = 0
+        self.evictions = 0      # corrupt/skewed entries healed (DESIGN.md §14)
+        self.put_errors = 0     # failed stores swallowed (entry not cached)
 
     # -- resolution helper used by every `cache=` parameter ---------------
     @staticmethod
@@ -160,14 +175,59 @@ class ArtifactCache:
             "codegen_version": int(codegen_version),
         })
 
+    # -- self-healing (DESIGN.md §14) --------------------------------------
+    def _evict(self, key: str) -> None:
+        """Remove a corrupt/skewed entry so the caller's miss regenerates
+        and re-stores a clean one."""
+        for suffix in (".json", ".py"):
+            try:
+                (self.root / f"{key}{suffix}").unlink()
+            except OSError:
+                pass
+        self.evictions += 1
+
+    @staticmethod
+    def _entry_damage(meta: Any, source: str) -> Optional[str]:
+        """Why this entry must not be served (None = intact): truncated or
+        non-dict metadata, metadata schema skew, a recorded codegen version
+        that disagrees with the live emitter, or a source text that no
+        longer hashes to its stored checksum."""
+        if not isinstance(meta, dict):
+            return "metadata is not an object"
+        if meta.get("schema") != CACHE_SCHEMA_VERSION:
+            return (f"schema skew: entry {meta.get('schema')!r} "
+                    f"!= {CACHE_SCHEMA_VERSION}")
+        from ..codegen import emit as _emit
+        if meta.get("codegen_version") != _emit.CODEGEN_VERSION:
+            return (f"codegen version skew: entry "
+                    f"{meta.get('codegen_version')!r} "
+                    f"!= {_emit.CODEGEN_VERSION}")
+        want = meta.get("checksum")
+        got = hashlib.sha256(source.encode()).hexdigest()
+        if want != got:
+            return f"source checksum mismatch ({want!r} != {got[:12]}...)"
+        return None
+
     # -- lookup / store ----------------------------------------------------
     def get(self, key: str) -> Optional[CacheEntry]:
+        fault_point("cache.get", {"cache": self, "key": key}, token=key)
         meta_p = self.root / f"{key}.json"
         src_p = self.root / f"{key}.py"
+        if not meta_p.exists() and not src_p.exists():
+            self.misses += 1
+            return None
         try:
             meta = json.loads(meta_p.read_text())
             source = src_p.read_text()
         except (OSError, ValueError):
+            # present but unreadable (truncated JSON, dropped half):
+            # heal — evict so the regenerated entry stores cleanly
+            self._evict(key)
+            self.misses += 1
+            return None
+        damage = self._entry_damage(meta, source)
+        if damage is not None:
+            self._evict(key)
             self.misses += 1
             return None
         # NOTE: a found entry is not yet a hit — callers may still reject it
@@ -181,9 +241,17 @@ class ArtifactCache:
             ratio: Optional[float] = None, error: str = "",
             exec_ok: bool = True,
             verify_rtol: Optional[float] = None,
-            verify_atol: Optional[float] = None) -> None:
+            verify_atol: Optional[float] = None) -> bool:
+        """Store an entry.  Never raises: a failed store (disk error,
+        injected fault) is counted in ``put_errors`` and the entry simply
+        stays uncached — generation already has the artifact in hand."""
+        from ..codegen import emit as _emit
         fk = artifact.final_knobs or Knobs()
         meta = {
+            # self-healing fields (DESIGN.md §14): validated on get()
+            "schema": CACHE_SCHEMA_VERSION,
+            "codegen_version": _emit.CODEGEN_VERSION,
+            "checksum": hashlib.sha256(artifact.source.encode()).hexdigest(),
             "task": task_fingerprint(task),
             "op": task.op,
             "resolved_op": resolved_op,
@@ -205,10 +273,20 @@ class ArtifactCache:
             "verify_rtol": verify_rtol,
             "verify_atol": verify_atol,
         }
-        self._atomic_write(self.root / f"{key}.py", artifact.source)
-        self._atomic_write(self.root / f"{key}.json",
-                           json.dumps(meta, indent=1, sort_keys=True))
+        try:
+            fault_point("cache.put", {"cache": self, "key": key}, token=key)
+            self._atomic_write(self.root / f"{key}.py", artifact.source)
+            self._atomic_write(self.root / f"{key}.json",
+                               json.dumps(meta, indent=1, sort_keys=True))
+        except (OSError, FaultInjected):
+            # a half-written pair would be healed on the next get(), but
+            # don't leave one around on purpose
+            self._evict(key)
+            self.evictions -= 1          # not a heal, just cleanup
+            self.put_errors += 1
+            return False
         self.stores += 1
+        return True
 
     def update_meta(self, key: str, **fields) -> bool:
         """Merge ``fields`` into an existing entry's metadata (e.g. persist
@@ -244,6 +322,11 @@ class ArtifactCache:
         Python AST construction — no validate/pass2/emission), and the
         module comes from exec'ing the cached source.  Returns None on any
         inconsistency so the caller falls back to a plain miss."""
+        try:
+            fault_point("cache.materialize",
+                        {"cache": self, "entry": entry}, token=entry.key)
+        except FaultInjected:
+            return None                 # injected miss
         meta = entry.meta
         builder = self._builder_for(meta)
         if builder is None:
@@ -253,8 +336,14 @@ class ArtifactCache:
             return None
         try:
             prog = builder(task, task.shapes, kn)
+        except Exception:  # noqa: BLE001 — builder refusal/mismatch == miss
+            return None
+        try:
             module = _exec_source(entry.source, prog.name)
-        except Exception:  # noqa: BLE001 — corrupt/stale entry == miss
+        except Exception:  # noqa: BLE001
+            # the cached SOURCE is bad (won't exec / lost its entry fn):
+            # heal — evict so the caller's miss regenerates a clean entry
+            self._evict(entry.key)
             return None
         log = list(meta.get("pass_log", []))
         log.append(f"cache/hit: key={entry.key[:12]} "
@@ -307,15 +396,58 @@ class ArtifactCache:
             return None
         return rec
 
-    def put_tuned(self, task, candidate, ratio: float) -> None:
+    def _acquire_lock(self, lock: Path,
+                      stale_s: float = TUNED_LOCK_STALE_S) -> bool:
+        """O_EXCL lock file with stale cleanup: a lock whose mtime is
+        older than ``stale_s`` belonged to a writer that died mid-update —
+        clean it up and take over.  A FRESH lock means a live concurrent
+        writer owns the pointer: back off (return False) rather than
+        racing it."""
+        for _ in range(3):
+            try:
+                os.close(os.open(str(lock),
+                                 os.O_CREAT | os.O_EXCL | os.O_WRONLY))
+                return True
+            except FileExistsError:
+                try:
+                    age = time.time() - lock.stat().st_mtime
+                except OSError:
+                    continue            # released between checks: retry
+                if age <= stale_s:
+                    return False        # live writer: back off
+                try:
+                    lock.unlink()       # stale writer died: clean + retry
+                except OSError:
+                    pass
+        return False
+
+    def put_tuned(self, task, candidate, ratio: float) -> bool:
+        """Persist the tuner's best-candidate pointer.  Concurrent
+        writers are serialized through a lock file with stale-lock
+        cleanup (DESIGN.md §14); returns False when a live concurrent
+        writer holds the lock (its pointer wins) or the write failed."""
         from ..codegen import emit as _emit
         rec = {
             "candidate": dataclasses.asdict(candidate),
             "ratio": float(ratio),
             "codegen_version": _emit.CODEGEN_VERSION,
         }
-        self._atomic_write(self._tuned_path(task),
-                           json.dumps(rec, indent=1, sort_keys=True))
+        path = self._tuned_path(task)
+        lock = path.with_suffix(".lock")
+        if not self._acquire_lock(lock):
+            return False
+        try:
+            self._atomic_write(path, json.dumps(rec, indent=1,
+                                                sort_keys=True))
+        except OSError:
+            self.put_errors += 1
+            return False
+        finally:
+            try:
+                lock.unlink()
+            except OSError:
+                pass
+        return True
 
     # -- maintenance -------------------------------------------------------
     def clear(self) -> int:
@@ -334,4 +466,6 @@ class ArtifactCache:
 
     def stats(self) -> Dict[str, int]:
         return {"hits": self.hits, "misses": self.misses,
-                "stores": self.stores, "entries": self.num_entries()}
+                "stores": self.stores, "evictions": self.evictions,
+                "put_errors": self.put_errors,
+                "entries": self.num_entries()}

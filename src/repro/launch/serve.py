@@ -33,7 +33,12 @@ def main():
             for i in range(args.requests)]
     engine.run(reqs)
     for r in reqs:
-        print(f"req {r.uid}: {r.generated}")
+        tag = f"  [FAILED: {r.error}]" if r.error else ""
+        print(f"req {r.uid}: {r.generated}{tag}")
+    rep = engine.last_report
+    print(f"report: ok={rep.ok} completed={len(rep.completed)} "
+          f"failed={len(rep.failed)} steps={rep.decode_steps} "
+          f"requeues={rep.requeues} deadline_hit={rep.deadline_hit}")
 
 
 if __name__ == "__main__":

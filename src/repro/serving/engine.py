@@ -6,6 +6,14 @@ prefill for the new prompt and writing its cache into the slot (dynamic
 batch-index update).  The decode loop is one jitted `decode_step` for the
 whole batch every iteration — the standard TPU serving shape.
 
+Resilience (DESIGN.md §14): the engine never dies because one request
+does.  A crashing prefill is retried, then requeued, then isolated as a
+poison request; a crashing decode step is retried and, when it keeps
+failing, the most recently admitted request is evicted as the likely
+poison; a step-count deadline bounds the whole run.  ``run`` returns the
+requests (back-compat) and records a structured :class:`ServeReport` in
+``last_report``.
+
 The straggler/deadline story for multi-host serving (and the ragged
 dispatch notes) live in DESIGN.md §5; this single-host engine is what the
 serve example + tests drive.
@@ -13,6 +21,7 @@ serve example + tests drive.
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -20,12 +29,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.resilience.faults import fault_point
 from ..models import transformer as T
 from ..models.config import ArchConfig
 
 
 def warm_kernel_cache(cache=True, tasks=None, verify: bool = True,
-                      tune: bool = False, tune_budget: int = 8) -> Dict:
+                      tune: bool = False, tune_budget: int = 8,
+                      guard=None) -> Dict:
     """Pre-populate the persistent artifact cache (DESIGN.md §8) with the
     framework hot-spot kernels (rmsnorm/softmax/adamw/swiglu/add_rmsnorm +
     mHC) so serving-time kernel (re)generation skips the lowering pipeline.
@@ -34,23 +45,63 @@ def warm_kernel_cache(cache=True, tasks=None, verify: bool = True,
     every later ``planner.generate`` against the same cache is a hit.
     ``verify`` defaults to True so warmed entries carry a Pass@1 verdict and
     satisfy later ``generate(verify=True)`` calls (unverified entries would
-    be re-verified, defeating the warm-up).  Returns a report dict with
-    per-kernel outcomes and cache stats."""
+    be re-verified, defeating the warm-up).
+
+    The warm-up SURVIVES partial failures (DESIGN.md §14): a kernel whose
+    generation throws becomes an ``{"error": ...}`` row instead of killing
+    the whole warm-up, and every row carries an ok/degraded/quarantined/
+    error verdict.  Pass ``guard=True`` (or a configured
+    :class:`~repro.core.resilience.GuardedResolver`) to resolve each
+    kernel down the degradation ladder instead of failing it on the first
+    generation error.  Returns a report dict with per-kernel outcomes,
+    verdict counts, and cache stats."""
     from ..core.generate import framework_tasks
     from ..core.planner import generate
+    from ..core.resilience import GuardedResolver
     from ..core.tuning.cache import ArtifactCache
     cache_obj = ArtifactCache.resolve(cache)
     if cache_obj is None:
         raise ValueError("warm_kernel_cache needs a cache to warm; got "
                          f"cache={cache!r} (resolved to 'caching off')")
+    resolver = None
+    if guard is True:
+        resolver = GuardedResolver(cache=cache_obj, tune=tune,
+                                   tune_budget=tune_budget, verify=verify)
+    elif guard:
+        resolver = guard
     kernels = []
     for task in (tasks if tasks is not None else framework_tasks()):
-        r = generate(task, verify=verify, cache=cache_obj,
-                     tune=tune, tune_budget=tune_budget)
+        if resolver is not None:
+            res = resolver.resolve(task)
+            r = res.result
+            kernels.append({
+                "name": task.name,
+                "comp_ok": bool(r.comp_ok) if r is not None else None,
+                "pass_ok": (r.pass_ok if verify else None)
+                           if r is not None else None,
+                "error": r.error if r is not None else "",
+                "from_cache": bool(r.cached) if r is not None else False,
+                "rung": res.rung, "verdict": res.verdict,
+                "degradations": [ev.describe() for ev in res.events]})
+            continue
+        try:
+            r = generate(task, verify=verify, cache=cache_obj,
+                         tune=tune, tune_budget=tune_budget)
+        except Exception as e:  # noqa: BLE001 — isolate, record, continue
+            kernels.append({"name": task.name, "comp_ok": False,
+                            "pass_ok": None, "from_cache": False,
+                            "error": f"{type(e).__name__}: {e}",
+                            "verdict": "error"})
+            continue
+        ok = r.comp_ok and (r.pass_ok or not verify)
         kernels.append({"name": task.name, "comp_ok": r.comp_ok,
                         "pass_ok": r.pass_ok if verify else None,
-                        "error": r.error, "from_cache": r.cached})
-    return {"kernels": kernels, **cache_obj.stats()}
+                        "error": r.error, "from_cache": r.cached,
+                        "verdict": "ok" if ok else "error"})
+    verdicts: Dict[str, int] = {}
+    for row in kernels:
+        verdicts[row["verdict"]] = verdicts.get(row["verdict"], 0) + 1
+    return {"kernels": kernels, "verdicts": verdicts, **cache_obj.stats()}
 
 
 @dataclass
@@ -61,6 +112,23 @@ class Request:
     eos_id: Optional[int] = None
     generated: List[int] = field(default_factory=list)
     done: bool = False
+    error: str = ""               # set when the engine isolated the request
+
+
+@dataclass
+class ServeReport:
+    """Structured outcome of one ``ServeEngine.run`` (DESIGN.md §14)."""
+    completed: List[int] = field(default_factory=list)      # uids
+    failed: List[Dict[str, Any]] = field(default_factory=list)
+    decode_steps: int = 0
+    admit_retries: int = 0
+    requeues: int = 0
+    decode_retries: int = 0
+    deadline_hit: bool = False
+
+    @property
+    def ok(self) -> bool:
+        return not self.failed and not self.deadline_hit
 
 
 class ServeEngine:
@@ -81,7 +149,12 @@ class ServeEngine:
         self.caches = T.init_caches(cfg, batch_slots, max_len)
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
         self.slot_remaining = np.zeros(batch_slots, np.int64)
+        # admission order tick per slot: poison isolation evicts the most
+        # recently admitted request when the batched decode keeps crashing
+        self.slot_admitted_at = np.zeros(batch_slots, np.int64)
+        self._admit_tick = 0
         self.last_token = jnp.zeros((batch_slots, 1), jnp.int32)
+        self.last_report: Optional[ServeReport] = None
 
         self._decode = jax.jit(
             lambda p, t, c: T.decode_step(p, cfg, t, c))
@@ -90,18 +163,16 @@ class ServeEngine:
             static_argnames=())
 
     # ------------------------------------------------------------------
-    def _admit(self, req: Request, slot: int):
-        """Prefill `req` (batch of 1) and write its cache into `slot`."""
+    def _admit(self, req: Request, slot: int) -> bool:
+        """Prefill `req` (batch of 1) and write its cache into `slot`.
+
+        Returns True when the request RETIRED AT ADMISSION — its
+        prefill-produced first token already hit ``eos_id`` (or its token
+        budget is a single token), so it must not occupy the slot for a
+        decode step it does not need."""
+        fault_point("serve.admit", token=f"uid={req.uid}")
         batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
         logits, caches1 = self._prefill(self.params, batch)
-
-        def write(c_all, c_one):
-            if isinstance(c_one, int):
-                return c_all
-            return jax.lax.dynamic_update_slice(
-                c_all, c_one.astype(c_all.dtype),
-                (0,) * (c_all.ndim - c_one.ndim) + (slot,)
-                + (0,) * (c_one.ndim - 1)) if False else c_all
 
         # slot write: leaf shapes are (B, ...) or (repeats, B, ...)
         def write_leaf(c_all, c_one):
@@ -121,9 +192,17 @@ class ServeEngine:
                                    isinstance(x, int))
         nxt = int(jnp.argmax(logits[0, -1]))
         req.generated.append(nxt)
+        if req.max_new_tokens <= 1 or (
+                req.eos_id is not None and nxt == req.eos_id):
+            # first token is the last: retire now, leave the slot free
+            req.done = True
+            return True
         self.last_token = self.last_token.at[slot, 0].set(nxt)
         self.slot_req[slot] = req
         self.slot_remaining[slot] = req.max_new_tokens - 1
+        self._admit_tick += 1
+        self.slot_admitted_at[slot] = self._admit_tick
+        return False
 
     def _retire(self, slot: int):
         req = self.slot_req[slot]
@@ -132,18 +211,98 @@ class ServeEngine:
         self.slot_req[slot] = None
         self.slot_remaining[slot] = 0
 
+    def _fail_request(self, req: Request, phase: str, error: str,
+                      report: ServeReport):
+        req.done = True
+        req.error = error
+        report.failed.append({"uid": req.uid, "phase": phase,
+                              "error": error})
+
+    def _evict_newest(self, error: str, report: ServeReport) -> bool:
+        """Poison isolation for a persistently crashing decode step: the
+        most recently admitted request is the likely trigger — fail it,
+        free its slot, and let the batch continue."""
+        active = [b for b in range(self.B) if self.slot_req[b] is not None]
+        if not active:
+            return False
+        b = max(active, key=lambda i: self.slot_admitted_at[i])
+        req = self.slot_req[b]
+        self._fail_request(req, "decode", error, report)
+        self.slot_req[b] = None
+        self.slot_remaining[b] = 0
+        return True
+
     # ------------------------------------------------------------------
-    def run(self, requests: List[Request]) -> List[Request]:
-        queue = list(requests)
+    def run(self, requests: List[Request], *, admit_retries: int = 1,
+            decode_retries: int = 1,
+            max_steps: Optional[int] = None) -> List[Request]:
+        """Serve ``requests`` to completion.  Per-request failures are
+        retried (``admit_retries`` extra admission attempts, with the
+        request requeued behind the waiting queue between attempts;
+        ``decode_retries`` extra batched-step attempts before poison
+        isolation evicts the most recently admitted request), and
+        ``max_steps`` (default: a generous bound from the requests' token
+        budgets) deadlines the whole run so it can never spin forever.
+        Returns the requests; ``self.last_report`` carries the structured
+        :class:`ServeReport`."""
+        report = ServeReport()
+        self.last_report = report
+        queue = deque(requests)
+        admit_attempts: Dict[int, int] = {}
+        if max_steps is None:
+            max_steps = 2 * sum(max(1, r.max_new_tokens)
+                                for r in requests) + 8 * max(1, self.B)
         active = lambda: any(r is not None for r in self.slot_req)  # noqa
         while queue or active():
-            # fill free slots
+            # fill free slots (admission failures retry, then isolate)
             for b in range(self.B):
-                if self.slot_req[b] is None and queue:
-                    self._admit(queue.pop(0), b)
-            # one batched decode step
-            logits, self.caches = self._decode(self.params, self.last_token,
-                                               self.caches)
+                while self.slot_req[b] is None and queue:
+                    req = queue.popleft()
+                    try:
+                        retired = self._admit(req, b)
+                    except Exception as e:  # noqa: BLE001 — isolate request
+                        n = admit_attempts.get(req.uid, 0) + 1
+                        admit_attempts[req.uid] = n
+                        err = f"{type(e).__name__}: {e}"
+                        if n <= admit_retries:
+                            report.admit_retries += 1
+                            report.requeues += 1
+                            queue.append(req)       # retry behind the queue
+                        else:
+                            self._fail_request(req, "admit", err, report)
+                        continue
+                    if retired:                     # EOS at admission
+                        report.completed.append(req.uid)
+                        continue
+                    break                           # slot occupied
+            if not active():
+                if queue:
+                    continue        # everything admitted so far failed/EOSed
+                break
+            # one batched decode step (retried; then poison isolation)
+            step_err = None
+            for attempt in range(decode_retries + 1):
+                try:
+                    fault_point("serve.decode",
+                                token=f"step={report.decode_steps}")
+                    logits, caches = self._decode(self.params,
+                                                  self.last_token,
+                                                  self.caches)
+                    step_err = None
+                    break
+                except Exception as e:  # noqa: BLE001
+                    step_err = f"{type(e).__name__}: {e}"
+                    if attempt < decode_retries:
+                        report.decode_retries += 1
+            if step_err is not None:
+                # decode keeps crashing: evict the newest admission and
+                # try again next loop — the engine survives, the poison
+                # request is reported
+                if not self._evict_newest(step_err, report):
+                    break
+                continue
+            self.caches = caches
+            report.decode_steps += 1
             nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
             self.last_token = nxt[:, None]
             nxt_host = np.asarray(nxt)
@@ -156,5 +315,23 @@ class ServeEngine:
                 self.slot_remaining[b] -= 1
                 if self.slot_remaining[b] <= 0 or (
                         req.eos_id is not None and tok == req.eos_id):
+                    report.completed.append(req.uid)
                     self._retire(b)
+            if report.decode_steps >= max_steps:
+                # deadline: fail whatever is still in flight or waiting,
+                # but RETURN — a wedged decode must not hang the fleet
+                report.deadline_hit = True
+                for b in range(self.B):
+                    req = self.slot_req[b]
+                    if req is not None:
+                        self._fail_request(req, "deadline",
+                                           f"step budget {max_steps} "
+                                           f"exhausted", report)
+                        self.slot_req[b] = None
+                        self.slot_remaining[b] = 0
+                while queue:
+                    self._fail_request(queue.popleft(), "deadline",
+                                       "step budget exhausted before "
+                                       "admission", report)
+                break
         return requests

@@ -208,6 +208,65 @@ def test_tuned_pointer_survives_constrained_search(tasks, tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# Self-healing cache (DESIGN.md §14): a damaged on-disk entry is evicted and
+# regenerated instead of raising into the caller
+# ---------------------------------------------------------------------------
+
+def _corrupt_and_heal(tasks, tmp_path, damage):
+    cache = ArtifactCache(str(tmp_path))
+    task = tasks["relu"]
+    r1 = generate(task, verify=False, cache=cache)
+    assert r1.comp_ok and not r1.cached
+    key = cache.key_for(task, Knobs())
+    damage(cache, key)
+    r2 = generate(task, verify=False, cache=cache)   # heals: evict + rebuild
+    assert r2.comp_ok and not r2.cached
+    assert cache.evictions == 1, "damaged entry must be evicted, not served"
+    assert r2.artifact.source == r1.artifact.source
+    assert generate(task, verify=False, cache=cache).cached  # re-stored
+
+
+def test_cache_heals_truncated_meta_json(tasks, tmp_path):
+    def damage(cache, key):
+        p = cache.root / f"{key}.json"
+        p.write_text(p.read_text()[: len(p.read_text()) // 2])
+    _corrupt_and_heal(tasks, tmp_path, damage)
+
+
+def test_cache_heals_checksum_mismatch(tasks, tmp_path):
+    def damage(cache, key):
+        (cache.root / f"{key}.py").write_text("def broken(: pass\n")
+    _corrupt_and_heal(tasks, tmp_path, damage)
+
+
+def test_cache_heals_schema_or_version_skew(tasks, tmp_path):
+    import json as _json
+
+    def damage(cache, key):
+        p = cache.root / f"{key}.json"
+        meta = _json.loads(p.read_text())
+        meta["codegen_version"] = -1       # entry from an alien codegen
+        p.write_text(_json.dumps(meta))
+    _corrupt_and_heal(tasks, tmp_path, damage)
+
+
+def test_cache_entry_damage_classifier():
+    import hashlib
+    from repro.core.codegen import emit
+    from repro.core.tuning.cache import CACHE_SCHEMA_VERSION
+    src = "def k(): pass\n"
+    ok = {"schema": CACHE_SCHEMA_VERSION,
+          "codegen_version": emit.CODEGEN_VERSION,
+          "checksum": hashlib.sha256(src.encode()).hexdigest()}
+    assert ArtifactCache._entry_damage(ok, src) is None
+    assert "not an object" in ArtifactCache._entry_damage("nope", src)
+    assert "schema" in ArtifactCache._entry_damage({**ok, "schema": 99}, src)
+    assert "codegen" in ArtifactCache._entry_damage(
+        {**ok, "codegen_version": -1}, src)
+    assert "checksum" in ArtifactCache._entry_damage(ok, src + "# tampered")
+
+
+# ---------------------------------------------------------------------------
 # Serving warm-up wiring
 # ---------------------------------------------------------------------------
 

@@ -43,6 +43,47 @@ def test_serve_matches_unbatched_decode():
     assert req.generated == toks
 
 
+def test_eos_at_admission_retires_without_decoding():
+    """A request whose prefill-produced FIRST token already hits eos_id
+    (or whose budget is a single token) must retire at admission — not
+    occupy a slot and decode a full extra step (regression: the old engine
+    always decoded once, yielding 2 tokens for max_new_tokens=1)."""
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(params, cfg, batch_slots=2, max_len=32)
+    rng = np.random.RandomState(3)
+    prompt = rng.randint(0, cfg.vocab, 8).astype(np.int32)
+
+    probe = Request(uid=0, prompt=prompt, max_new_tokens=1)
+    eng.run([probe])
+    assert probe.done and len(probe.generated) == 1
+    assert eng.last_report.decode_steps == 0
+    assert eng.last_report.completed == [0]
+
+    # same prompt, generous budget, eos = the known first token: the EOS
+    # match at admission must retire it identically
+    req = Request(uid=1, prompt=prompt, max_new_tokens=5,
+                  eos_id=probe.generated[0])
+    eng.run([req])
+    assert req.done and req.generated == probe.generated
+    assert eng.last_report.decode_steps == 0
+    assert eng.last_report.ok and eng.last_report.completed == [1]
+
+
+def test_serve_report_on_clean_run():
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(params, cfg, batch_slots=2, max_len=64)
+    rng = np.random.RandomState(0)
+    reqs = [Request(uid=i, prompt=rng.randint(0, cfg.vocab, 8)
+                    .astype(np.int32), max_new_tokens=3) for i in range(3)]
+    eng.run(reqs)
+    rep = eng.last_report
+    assert rep.ok and not rep.failed and not rep.deadline_hit
+    assert sorted(rep.completed) == [0, 1, 2]
+    assert rep.requeues == 0 and rep.decode_retries == 0
+
+
 def test_traffic_model_exact_for_relu():
     from repro.bench import suite
     from repro.bench.model import analyze_program, _padded_shapes_for
