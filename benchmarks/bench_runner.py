@@ -21,6 +21,16 @@ regressions by accident.
 tuned ratio drops by more than 2% — or when the (injection-free) sweep
 recorded ANY degradation-ladder event (DESIGN.md §14): a clean CI run
 must land every task on its top applicable rung.
+
+The artifact also carries a ``serving`` section (DESIGN.md §15): a fully
+deterministic decode-serving simulation (smoke model, FaultClock-driven
+wall time, bucketed fused decode fast path resolved through the
+degradation ladder) reporting tokens/sec, p99 slot-refill latency, and
+the steady-state lowering-pipeline entry count — which must be ZERO on a
+warmed engine.  Under ``--check-regressions`` the serving rows are held
+to the STRICT bar: tokens/sec must not drop, p99 refill latency must not
+rise, and any steady-state lowering entry fails the run (the simulation
+is clock-injected and seeded, so there is no noise to tolerate).
 """
 from __future__ import annotations
 
@@ -46,6 +56,93 @@ def _tasks(which: str):
         by_name = {t.name: t for t in suite()}
         return fused + [by_name[n] for n in _QUICK_PICKS]
     return fused + list(suite())
+
+
+def serving_rows(emit=print, batch_slots: int = 4, max_len: int = 32,
+                 n_requests: int = 8, max_new: int = 6,
+                 admit_s: float = 0.030, step_s: float = 0.010):
+    """Deterministic decode-serving simulation (DESIGN.md §15).
+
+    Wall time is a :class:`FaultClock` advanced by ``kind='call'`` fault
+    transformers riding the serve hook points (``admit_s`` per admission
+    prefill, ``step_s`` per batched decode step) — never ambient time —
+    so tokens/sec and the slot-refill latency distribution are exactly
+    reproducible run to run.  The fused decode chain for every bucket in
+    the engine's kv ladder resolves through the degradation ladder up
+    front; the serve loop itself must then record ZERO lowering-pipeline
+    entries (``steady_lowering_entries``) and zero degradation events.
+    """
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.lowering.pipeline import PIPELINE_COUNTERS
+    from repro.core.resilience import FaultClock, FaultPlan, FaultSpec, inject
+    from repro.models import transformer as T
+    from repro.serving import (DecodeFastPath, Request, ServeEngine,
+                               kv_bucket_ladder)
+
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    # the fast path resolves each bucket down the ladder (no cache:
+    # regenerate is the top applicable rung and is event-free on a clean
+    # build) BEFORE traffic, mirroring a fleet warm-up
+    fastpath = DecodeFastPath(cfg)
+    fastpath.warm([(batch_slots, kv) for kv in kv_bucket_ladder(max_len)])
+    warm_rungs = sorted({r.rung for r in fastpath._memo.values()})
+
+    clk = FaultClock()
+    eng = ServeEngine(params, cfg, batch_slots, max_len,
+                      decode_fastpath=fastpath, clock=clk)
+    rng = np.random.RandomState(0)
+    # n distinct prompts < n requests: the tail repeats, exercising the
+    # shared-prefix admission path in the measured run
+    prompts = [rng.randint(0, cfg.vocab, 8).astype(np.int32)
+               for _ in range(max(1, n_requests - 3))]
+    reqs = [Request(uid=i, prompt=prompts[i % len(prompts)],
+                    max_new_tokens=max_new) for i in range(n_requests)]
+    plan = FaultPlan([
+        FaultSpec("serve.admit", kind="call", fn=clk.ticker(admit_s),
+                  times=None),
+        FaultSpec("serve.decode", kind="call", fn=clk.ticker(step_s),
+                  times=None),
+    ])
+    before = dict(PIPELINE_COUNTERS)
+    t0 = clk()
+    with inject(plan):
+        eng.run(reqs)
+    steady = sum(PIPELINE_COUNTERS[k] - before.get(k, 0)
+                 for k in PIPELINE_COUNTERS)
+    rep = eng.last_report
+    # every ladder event across warm-up AND the serve loop: a clean sweep
+    # records none
+    events = [ev.describe() for ev in fastpath.events]
+    tokens = sum(len(r.generated) for r in reqs)
+    elapsed = clk() - t0
+    refills = sorted(rep.slot_refill_s)
+    p99 = (float(np.percentile(refills, 99)) if refills else 0.0)
+    row = {
+        "ok": bool(rep.ok and steady == 0 and not events),
+        "batch_slots": batch_slots, "max_len": max_len,
+        "requests": n_requests, "tokens": tokens,
+        "decode_steps": rep.decode_steps,
+        "elapsed_s": elapsed,
+        "tokens_per_s": tokens / elapsed if elapsed > 0 else 0.0,
+        "p99_slot_refill_s": p99,
+        "slot_refills": len(refills),
+        "prefill_shared": rep.prefill_shared,
+        "steady_lowering_entries": int(steady),
+        "fastpath": {"buckets": [list(b) for b in fastpath.buckets],
+                     "rungs": warm_rungs, "hits": fastpath.hits,
+                     "misses": fastpath.misses,
+                     "errors": rep.fastpath_errors},
+        "degradation_events": events,
+    }
+    emit(f"serve,tokens_per_s={row['tokens_per_s']:.1f},"
+         f"p99_refill_ms={p99 * 1e3:.1f},"
+         f"steady_lowering={row['steady_lowering_entries']},"
+         f"rungs={'/'.join(warm_rungs)}")
+    return row
 
 
 def run(which: str = "fused", budget: int = 6, emit=print, cache=None):
@@ -97,12 +194,16 @@ def run(which: str = "fused", budget: int = 6, emit=print, cache=None):
              f"tuned={row['tuned_ratio']:.2f},"
              f"pick={row['tuned_candidate']}")
 
+    serving = serving_rows(emit)
+    degradations.extend(serving.pop("degradation_events"))
+
     ok = [t for t in tasks_out if t.get("ok")]
     report = {
         "date": datetime.date.today().isoformat(),
         "suite": which,
         "codegen_version": CODEGEN_VERSION,
         "tasks": tasks_out,
+        "serving": serving,
         "degradation_events": degradations,
         "summary": {
             "n": len(tasks_out),
@@ -135,11 +236,20 @@ def check_regressions(report, prev, tolerance: float = 0.02) -> list:
     FUSED-category chains are held to a STRICT bar: the roofline model is
     deterministic, so any drop below the last recorded tuned ratio is a
     real scheduling/stitching regression, not noise — tolerance does not
-    apply.  Other tasks keep the ``tolerance`` slack."""
-    if prev is None or prev.get("suite") != report.get("suite"):
-        return []
-    old = {t["name"]: t for t in prev.get("tasks", []) if t.get("ok")}
+    apply.  Other tasks keep the ``tolerance`` slack.  The serving rows
+    (tokens/sec, p99 slot-refill) are strict too, and a nonzero
+    steady-state lowering-entry count fails even without a previous
+    artifact."""
     bad = []
+    srv = report.get("serving")
+    if srv is not None and srv.get("steady_lowering_entries", 0) > 0:
+        # a warmed engine's steady-state decode entered the lowering
+        # pipeline: absolute failure, no previous artifact needed
+        bad.append(("serving.steady_lowering_entries", 0,
+                    srv["steady_lowering_entries"]))
+    if prev is None or prev.get("suite") != report.get("suite"):
+        return bad
+    old = {t["name"]: t for t in prev.get("tasks", []) if t.get("ok")}
     for t in report["tasks"]:
         if not t.get("ok") or t["name"] not in old:
             continue
@@ -147,6 +257,18 @@ def check_regressions(report, prev, tolerance: float = 0.02) -> list:
         tol = 0.0 if t.get("category") == "fused" else tolerance
         if before > 0 and t["tuned_ratio"] < before * (1 - tol) - 1e-12:
             bad.append((t["name"], before, t["tuned_ratio"]))
+    # serving rows: clock-injected and seeded, so the bar is STRICT —
+    # tokens/sec must not drop, p99 slot-refill latency must not rise
+    psrv = prev.get("serving")
+    if srv is not None and psrv is not None and srv.get("ok") \
+            and psrv.get("ok"):
+        if srv["tokens_per_s"] < psrv["tokens_per_s"] - 1e-9:
+            bad.append(("serving.tokens_per_s", psrv["tokens_per_s"],
+                        srv["tokens_per_s"]))
+        if srv["p99_slot_refill_s"] > psrv["p99_slot_refill_s"] + 1e-9:
+            bad.append(("serving.p99_slot_refill_s",
+                        psrv["p99_slot_refill_s"],
+                        srv["p99_slot_refill_s"]))
     return bad
 
 

@@ -510,7 +510,8 @@ def suite() -> List[KernelTask]:
 
 def fused_task(chain_name: str, big: Dict[str, Tuple[int, ...]],
                small: Dict[str, Tuple[int, ...]], ref,
-               make_inputs=None) -> KernelTask:
+               make_inputs=None, name: str = None,
+               extra_attrs: Dict = None) -> KernelTask:
     """FusedTask constructor: a KernelTask for a registered fusion chain.
 
     Tensor specs, pad values and the fingerprint-bearing chain structure
@@ -519,19 +520,68 @@ def fused_task(chain_name: str, big: Dict[str, Tuple[int, ...]],
     order.  ``attrs['chain_fingerprint']`` is the α-invariant structural
     fingerprint (DESIGN.md §11) — it keys artifact-cache entries by what
     the chain *computes*, so a declared fixture and its jaxpr-extracted
-    re-derivation can never fingerprint apart."""
+    re-derivation can never fingerprint apart.  ``name`` (default: the
+    chain name) lets one chain back several tasks at distinct geometries
+    (the decode buckets); ``extra_attrs`` ride the task attrs and hence
+    the artifact-cache key."""
     from ..core.fusion.chain import CHAINS
     from ..core.fusion.propose import chain_fingerprint
     spec = CHAINS[chain_name]
     tensors = [TensorSpec(n, F32, "in", r) for n, r in spec.inputs]
     tensors += [TensorSpec(n, F32, "out", len(big[n])) for n in spec.outputs]
     return KernelTask(
-        name=chain_name, category="fused", op=chain_name,
+        name=name or chain_name, category="fused", op=chain_name,
         tensors=tensors, shapes=dict(big), check_shapes=dict(small),
         ref=ref, make_inputs=make_inputs,
         attrs={"fusion_chain": spec.describe(),
                "chain_fingerprint": chain_fingerprint(spec),
-               "pad_values": dict(spec.pad_values)})
+               "pad_values": dict(spec.pad_values),
+               **(extra_attrs or {})})
+
+
+def decode_fused_task(group: int, head_dim: int, kv_len: int,
+                      batch_slots: int = None) -> KernelTask:
+    """The flash_attention chain at one decode-bucket slice geometry.
+
+    Serving's steady-state decode runs the chain per (batch, kv-head)
+    slice at Sq = group (the GQA query group), Skv = kv_len (the
+    power-of-two cache bucket, DESIGN.md §15) with the causal mask
+    replaced by a per-slot length mask.  The bucket rides the attrs so
+    each bucket keys a DISTINCT artifact-cache entry — a warmed fleet
+    resolves every bucket from cache and never enters the lowering
+    pipeline mid-traffic."""
+    from ..core.fusion.chain import CHAINS
+    fa_scale = float(dict(CHAINS["flash_attention"].attrs)["scale"])
+    big = {"q": (group, head_dim), "k": (kv_len, head_dim),
+           "mask": (group, kv_len), "v": (kv_len, head_dim),
+           "output": (group, head_dim)}
+    small = {"q": (group, 16), "k": (64, 16), "mask": (group, 64),
+             "v": (64, 16), "output": (group, 16)}
+
+    def _decode_ref(q, k, m, v, _s=fa_scale):
+        p = _softmax(_f64(q) @ _f64(k).T * _s + _f64(m))
+        return p @ _f64(v)
+
+    def _mk_decode(rng, shapes):
+        skv = shapes["mask"][1]
+        # a length mask: live prefix, -1e9 tail (pos >= cache_len)
+        live = rng.randint(1, skv + 1)
+        mask = np.where(np.arange(skv) < live, 0.0, -1.0e9) \
+            .astype(np.float32)
+        return {"q": rng.randn(*shapes["q"]).astype(np.float32),
+                "k": rng.randn(*shapes["k"]).astype(np.float32),
+                "mask": np.broadcast_to(
+                    mask, shapes["mask"]).copy(),
+                "v": rng.randn(*shapes["v"]).astype(np.float32)}
+
+    bucket = [int(batch_slots) if batch_slots else 0, int(kv_len)]
+    return fused_task(
+        "flash_attention", big, small, ref=_decode_ref,
+        make_inputs=_mk_decode,
+        name=f"decode_attention_b{bucket[0]}_kv{kv_len}",
+        extra_attrs={"decode_bucket": bucket,
+                     "decode_geometry": {"group": int(group),
+                                         "head_dim": int(head_dim)}})
 
 
 _silu64 = _ACT_REFS["silu"]

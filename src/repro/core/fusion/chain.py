@@ -184,11 +184,11 @@ class ChainSpec:
 # Ops whose streaming form carries a loop-carried scalar recurrence
 # (softmax/log_softmax: the 2-pass ONLINE form — running max + running
 # rescaled denominator, DESIGN.md §12 — replacing the paper's 3-pass
-# Fig.-2 template; rmsnorm: the 2-pass running sum-of-squares form).
-# layernorm is a stat too but has no streaming template yet: streaming
-# builds refuse and the chain falls back per build_chain's convention.
-# Every other STAGE_OP is tile-local ("map") and can be jammed into any
-# column-tile loop.
+# Fig.-2 template; rmsnorm: the 2-pass running sum-of-squares form;
+# layernorm: the 2-pass running sum + sum-of-squares form with the
+# E[x^2] - mu^2 variance, so streaming builds no longer refuse to the
+# sequential fallback).  Every other STAGE_OP is tile-local ("map") and
+# can be jammed into any column-tile loop.
 STREAM_STATS = ("softmax", "log_softmax", "rmsnorm", "layernorm")
 
 # Contraction stage ops (DESIGN.md §13).  "matmul_t" computes rows(R) @
@@ -609,6 +609,67 @@ def _stream_stage_program(spec: ChainSpec, idx: int, stage: ChainStage,
                         tl.mul(sq, xt, inv)
                         if w_t is not None:
                             tl.mul(sq, sq, wt)
+                        if blend is not None:
+                            _blend(blend, sq, t)
+                    with tl.copyout():
+                        tl.store(stage.output,
+                                 r * _c_of(stage.output) + t * tile_length,
+                                 sq)
+        elif stage.op == "layernorm":
+            # 2-pass form: pass 1 carries the running sum AND running
+            # sum-of-squares; the variance is E[x^2] - mu^2, so one pass
+            # suffices for both moments (padded lanes load 0 and
+            # contribute 0 to both sums; the original column count
+            # divides).  +eps keeps the f32 moment difference positive.
+            # The recipe's eps default is 1e-5 (the layernorm convention),
+            # NOT the harness-wide 1e-6 above — a traced non-default eps
+            # rides the chain attrs either way.
+            x_t = stage.inputs[0]
+            w_t = stage.inputs[1] if len(stage.inputs) > 1 else None
+            b_t = stage.inputs[2] if len(stage.inputs) > 2 else None
+            eps_ln = float(dict(spec.attrs).get("eps", 1e-5))
+            xt = tl.alloc_ub("xt", (tile_length,), tl.f32)
+            sq = tl.alloc_ub("sq", (tile_length,), tl.f32)
+            if w_t is not None:
+                wt = tl.alloc_ub("wt", (tile_length,), tl.f32)
+            if b_t is not None:
+                bt = tl.alloc_ub("bt", (tile_length,), tl.f32)
+            red = tl.alloc_ub("red", (1,), tl.f32)
+            blend = _alloc_blend()
+            with tl.for_range("r", pid * rows_per_core, rows_per_core) as r:
+                sx = tl.scalar("sum_x", 0.0)
+                ss = tl.scalar("sum_sq", 0.0)
+                with tl.for_range("t1", 0, n_tiles) as t:
+                    with tl.copyin():
+                        tl.load(x_t, _off(x_t, r, t), xt)
+                    with tl.compute():
+                        tl.reduce_sum(red, xt)
+                        tl.assign(sx, sx + tl.extract_scalar(red, 0))
+                        tl.square(sq, xt)
+                        tl.reduce_sum(red, sq)
+                        tl.assign(ss, ss + tl.extract_scalar(red, 0))
+                mu = tl.scalar("mean", 0.0)
+                inv = tl.scalar("inv_std", 0.0)
+                with tl.compute():
+                    tl.assign(mu, sx * (1.0 / orig_cols))
+                    # scalar rsqrt through a 1-element UB buffer
+                    tl.full(red, ss * (1.0 / orig_cols) - mu * mu + eps_ln)
+                    tl.rsqrt(red, red)
+                    tl.assign(inv, tl.extract_scalar(red, 0))
+                with tl.for_range("t2", 0, n_tiles) as t:
+                    with tl.copyin():
+                        tl.load(x_t, _off(x_t, r, t), xt)
+                        if w_t is not None:
+                            tl.load(w_t, t * tile_length, wt)
+                        if b_t is not None:
+                            tl.load(b_t, t * tile_length, bt)
+                    with tl.compute():
+                        tl.sub(sq, xt, mu)
+                        tl.mul(sq, sq, inv)
+                        if w_t is not None:
+                            tl.mul(sq, sq, wt)
+                        if b_t is not None:
+                            tl.add(sq, sq, bt)
                         if blend is not None:
                             _blend(blend, sq, t)
                     with tl.copyout():

@@ -771,21 +771,26 @@ class _Rewriter:
     def _dot_as_matmul(self, d: _Eqn):
         """Classify a dot_general as a per-slice row matmul.
 
-        Returns ``(R, W, op, wf_out)`` — the row tensor, the weight tensor,
-        the stage op ("matmul" contracts W's leading per-slice axis, i.e.
-        rows @ W; "matmul_t" its trailing, i.e. rows @ W.T) and the output
-        axis carrying W's free dimension — or None when the contraction
-        does not fit the template: multiple contracting pairs, no batch
-        dims (an unbatched ``h @ w`` stays a barrier), W with more than one
-        free axis per slice, or a row tensor that does not contract its
-        trailing axis.
+        Returns a list of candidate ``(R, W, op, wf_out)`` tuples — the row
+        tensor, the weight tensor, the stage op ("matmul" contracts W's
+        leading per-slice axis, i.e. rows @ W; "matmul_t" its trailing,
+        i.e. rows @ W.T) and the output axis carrying W's free dimension.
+        An orientation is dropped when the contraction does not fit the
+        template: multiple contracting pairs, no batch dims (an unbatched
+        ``h @ w`` stays a barrier), W with more than one free axis per
+        slice, or a row tensor that does not contract its trailing axis.
+        Both orientations can fit (single-token decode QK^T: q collapses
+        to one free axis so it is template-shaped as either rows or
+        weight); the caller picks the candidate whose output axis lands
+        where it needs it.
         """
         dn = d.params.get("dimension_numbers")
         if dn is None or len(d.ins) != 2:
-            return None
+            return []
         (lc, rc), (lb, rb) = dn
         if len(lc) != 1 or len(rc) != 1:
-            return None
+            return []
+        cands = []
         for r_i in (1, 0):               # traced attention puts rows on rhs
             w_i = 1 - r_i
             R, W = d.ins[r_i], d.ins[w_i]
@@ -809,8 +814,8 @@ class _Rewriter:
             nb = len(lb)
             lhs_free = len(d.ins[0].shape) - 1 - nb
             wf_out = nb if w_i == 0 else nb + lhs_free
-            return R, W, op, wf_out
-        return None
+            cands.append((R, W, op, wf_out))
+        return cands
 
     def _match_matmul(self, e: _Eqn, prod, counts) -> bool:
         """dot_general (optionally followed by a transpose that puts the
@@ -818,25 +823,19 @@ class _Rewriter:
         ins ``[rows, weight]``.  Leading output axes may land in any order:
         rows are opaque to the chain machinery."""
         if e.prim == "dot_general":
-            cls = self._dot_as_matmul(e)
-            if cls is None:
-                return False
-            R, W, op, wf_out = cls
-            if wf_out != len(e.out.shape) - 1:
-                return False
-            return self._replace(e, [], op, [R, W], counts)
+            for R, W, op, wf_out in self._dot_as_matmul(e):
+                if wf_out == len(e.out.shape) - 1:
+                    return self._replace(e, [], op, [R, W], counts)
+            return False
         if e.prim == "transpose":
             d = self._producer(prod, e.ins[0], "dot_general", strip=())
             if d is None:
                 return False
-            cls = self._dot_as_matmul(d)
-            if cls is None:
-                return False
-            R, W, op, wf_out = cls
             perm = e.params.get("permutation", ())
-            if not perm or perm[-1] != wf_out:
-                return False
-            return self._replace(e, [d], op, [R, W], counts)
+            for R, W, op, wf_out in self._dot_as_matmul(d):
+                if perm and perm[-1] == wf_out:
+                    return self._replace(e, [d], op, [R, W], counts)
+            return False
         return False
 
     def _scale_pass(self) -> None:

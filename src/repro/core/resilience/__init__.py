@@ -15,16 +15,18 @@ Three modules:
   :mod:`repro.core.tuning.cache` and is exercised through the
   ``cache.*`` hook points here.
 """
-from .faults import (FAULT_AUDIT, HOOK_POINTS, FaultInjected, FaultPlan,
-                     FaultSpec, active_plan, corrupt_cache_entry,
+from .faults import (FAULT_AUDIT, HOOK_POINTS, FaultClock, FaultInjected,
+                     FaultPlan, FaultSpec, active_plan, corrupt_cache_entry,
                      fault_point, inject, poison_nan_result)
 from .ladder import (EVENT_LOG, GLOBAL_QUARANTINE, RUNGS, DegradationEvent,
-                     GuardedResolver, Quarantine, Resolution, drain_events)
+                     GuardedResolver, PersistentQuarantine, Quarantine,
+                     Resolution, drain_events)
 
 __all__ = [
-    "FAULT_AUDIT", "HOOK_POINTS", "FaultInjected", "FaultPlan", "FaultSpec",
-    "active_plan", "corrupt_cache_entry", "fault_point", "inject",
-    "poison_nan_result",
+    "FAULT_AUDIT", "HOOK_POINTS", "FaultClock", "FaultInjected", "FaultPlan",
+    "FaultSpec", "active_plan", "corrupt_cache_entry", "fault_point",
+    "inject", "poison_nan_result",
     "EVENT_LOG", "GLOBAL_QUARANTINE", "RUNGS", "DegradationEvent",
-    "GuardedResolver", "Quarantine", "Resolution", "drain_events",
+    "GuardedResolver", "PersistentQuarantine", "Quarantine", "Resolution",
+    "drain_events",
 ]

@@ -29,6 +29,11 @@ Hook points (the canonical names tests and DESIGN.md §14 refer to)::
                               target only fused (or only streaming) builds
     serve.admit               ServeEngine._admit (prefill crash)
     serve.decode              ServeEngine.run's batched decode step
+    serve.decode_fastpath     DecodeFastPath bucket resolution; token is
+                              "bucket=<slots>x<kv>:<hit|miss>" so a plan
+                              can target only cold-bucket resolutions —
+                              an armed raise proves a fastpath failure
+                              never breaks the decode loop
 
 A hook point is a no-op when no plan is active; every visit is counted in
 :data:`FAULT_AUDIT` either way, which is how CI proves the hooks stay
@@ -50,6 +55,7 @@ HOOK_POINTS = (
     "fusion.build_chain",
     "serve.admit",
     "serve.decode",
+    "serve.decode_fastpath",
 )
 
 # every fault_point() visit lands here, plan or no plan — the CI audit
@@ -169,6 +175,35 @@ def fault_point(site: str, payload: Any = None, token: str = "") -> Any:
             raise FaultInjected(site, token)
         payload = spec.fn(payload)
     return payload
+
+
+class FaultClock:
+    """Deterministic injectable wall clock.
+
+    Starts at ``t0`` and only moves when :meth:`advance` is called —
+    typically from ``kind="call"`` fault transformers riding the serve
+    hook points, so wall-clock deadlines and slot-refill latencies are
+    exactly reproducible in tests and bench simulations (never ambient
+    ``time.monotonic``).  Drop-in for any ``clock`` parameter: calling the
+    instance returns the current time in seconds."""
+
+    def __init__(self, t0: float = 0.0):
+        self.t = float(t0)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        self.t += float(dt)
+        return self.t
+
+    def ticker(self, dt: float) -> Callable[[Any], Any]:
+        """A ``kind='call'`` transformer advancing the clock by ``dt``
+        per matching hook visit (and passing the payload through)."""
+        def _tick(payload):
+            self.advance(dt)
+            return payload
+        return _tick
 
 
 # --------------------------------------------------------------------------

@@ -23,8 +23,11 @@ sequential rung at runtime.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
 from dataclasses import dataclass, field
+from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -84,6 +87,83 @@ class Quarantine:
 
     def clear(self) -> None:
         self._failures.clear()
+
+
+class PersistentQuarantine(Quarantine):
+    """A quarantine table that survives process restarts.
+
+    The failure table lives in a JSON file next to the artifact cache
+    (:meth:`from_cache` puts it at ``<cache.root>/quarantine.json``), so
+    a restarting fleet member skips known-bad (fingerprint, rung) pairs
+    instead of re-failing its way down the ladder once per process.
+    Entries carry a last-failure timestamp and EXPIRE after
+    ``max_age_s`` (default 7 days) at load time — the bad build that
+    earned the quarantine may be long fixed, and a stale table must not
+    pin a healthy fused kernel to its eager floor forever.  Writes are
+    atomic (temp file + rename); a corrupt or unreadable table loads as
+    empty, matching the cache's self-healing posture.  ``clock`` is
+    injectable (epoch-seconds convention — timestamps are compared
+    across processes) so expiry tests stay deterministic."""
+
+    def __init__(self, path, threshold: int = 3,
+                 max_age_s: float = 7 * 24 * 3600.0,
+                 clock: Optional[Callable[[], float]] = None):
+        super().__init__(threshold)
+        self.path = Path(path)
+        self.max_age_s = float(max_age_s)
+        self.clock = clock if clock is not None else time.time
+        self._stamps: Dict[Tuple[str, str], float] = {}
+        self._load()
+
+    @classmethod
+    def from_cache(cls, cache, **kw) -> "PersistentQuarantine":
+        from ..tuning.cache import ArtifactCache
+        c = ArtifactCache.resolve(cache)
+        if c is None:
+            raise ValueError(f"no cache to persist next to: {cache!r}")
+        return cls(c.root / "quarantine.json", **kw)
+
+    def _load(self) -> None:
+        if not self.path.exists():
+            return
+        try:
+            data = json.loads(self.path.read_text())
+            rows = data.get("entries", ())
+        except (ValueError, OSError, AttributeError):
+            return                      # corrupt table: start empty
+        now = self.clock()
+        for row in rows:
+            try:
+                key = (str(row["fingerprint"]), str(row["rung"]))
+                count = int(row["count"])
+                updated = float(row["updated"])
+            except (KeyError, TypeError, ValueError):
+                continue                # malformed row: drop it
+            if now - updated > self.max_age_s:
+                continue                # stale entry: expired
+            self._failures[key] = count
+            self._stamps[key] = updated
+
+    def _store(self) -> None:
+        rows = [{"fingerprint": fp, "rung": rung, "count": n,
+                 "updated": self._stamps.get((fp, rung), self.clock())}
+                for (fp, rung), n in sorted(self._failures.items())]
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = self.path.with_name(self.path.name + ".tmp")
+        tmp.write_text(json.dumps({"version": 1, "entries": rows},
+                                  indent=1, sort_keys=True))
+        os.replace(tmp, self.path)
+
+    def note_failure(self, fingerprint: str, rung: str) -> int:
+        n = super().note_failure(fingerprint, rung)
+        self._stamps[(fingerprint, rung)] = self.clock()
+        self._store()
+        return n
+
+    def clear(self) -> None:
+        super().clear()
+        self._stamps.clear()
+        self._store()
 
 
 # the default fleet-wide table (tests construct their own)

@@ -125,3 +125,43 @@ def attention(q, k, v, *, causal: bool = True, sm_scale=None,
 
 # decode path (single token vs KV cache) — reference impl is the XLA path
 from .ref import decode_reference as mha_decode  # noqa: E402
+
+
+def decode_attention_fused(q, k_cache, v_cache, cache_len, *,
+                           sm_scale=None):
+    """Single-token decode over the KV cache through the GENERATED chain.
+
+    q: (B, 1, Hq, D); caches: (B, S, Hkv, D); cache_len: (B,) int32.
+    Returns (B, 1, Hq, D).  The decode-step extraction dedupes onto the
+    flash_attention chain (DESIGN.md §15), so the same cached 2-D kernel
+    serves decode: each (batch, kv-head) slice runs the chain at
+    Sq = group rows (the GQA query group attending that kv-head) with the
+    causal mask replaced by the per-slot additive LENGTH mask
+    where(pos < cache_len[b], 0, -3e38) — padded / not-yet-written cache
+    positions exp-underflow to exactly 0, matching decode_reference.
+    """
+    B, S, Hkv, D = k_cache.shape
+    Hq = q.shape[2]
+    group = Hq // Hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(D)
+
+    entry, baked = _chain_entry(group, S, D)
+    # (B, 1, Hq, D) -> (B, Hkv, group, D): heads are consecutive blocks
+    qf = (jnp.asarray(q, jnp.float32) * (sm_scale / baked)) \
+        .reshape(B, Hkv, group, D)
+    kf = jnp.asarray(k_cache, jnp.float32)
+    vf = jnp.asarray(v_cache, jnp.float32)
+    lens = jnp.asarray(cache_len, jnp.int32)
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :]
+    length_mask = jnp.where(pos < lens[:, None], 0.0, -3.0e38) \
+        .astype(jnp.float32)                            # (B, S)
+
+    batches = []
+    for b in range(B):
+        mask_b = jnp.broadcast_to(length_mask[b][None, :], (group, S))
+        heads = [entry(qf[b, j], kf[b, :, j, :], mask_b, vf[b, :, j, :])
+                 for j in range(Hkv)]                   # each (group, D)
+        batches.append(jnp.concatenate(heads, axis=0))  # (Hq, D)
+    out = jnp.stack(batches, axis=0)[:, None]           # (B, 1, Hq, D)
+    return out.astype(q.dtype)

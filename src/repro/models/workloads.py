@@ -50,6 +50,12 @@ _CFG = ArchConfig(name="trace", n_layers=1, d_model=64, n_heads=4,
 # the same config in its layernorm variant (post-LN blocks)
 _LN_CFG = ArchConfig(name="trace_ln", n_layers=1, d_model=64, n_heads=4,
                      n_kv_heads=2, d_ff=128, vocab=64, norm="layernorm")
+# decode trace config: full-precision KV cache so the single-token decode
+# block traces the fp32 attention interior (the int8 default adds
+# quantize/dequantize barriers around the same chain)
+_DEC_CFG = ArchConfig(name="trace_decode", n_layers=1, d_model=64, n_heads=4,
+                      n_kv_heads=2, d_ff=128, vocab=64, norm="rmsnorm",
+                      kv_cache_dtype="model", dtype="float32")
 
 _B, _S, _D, _FF = 2, 16, 64, 128
 
@@ -163,6 +169,29 @@ def _transformer_block(x, norm1_w, wq, wk, wv, wo, norm2_w,
     return x + out
 
 
+def _decode_attention(x, wq, wk, wv, wo, k_cache, v_cache, length):
+    # the scan-free single-token attention block of transformer.decode_step
+    # (models/layers.apply_attention, decode branch), traced VERBATIM: QKV
+    # projections + rope (barriers), the vmapped `dynamic_update_slice`
+    # cache writes (barriers whose outputs — the updated caches — re-enter
+    # the chain as plain inputs), GQA attention over the cached keys with
+    # the `where(pos < length, logits, -inf)` length mask, and the output
+    # projection (barrier).  The extractor canonicalizes the masked fill
+    # into the additive-mask idiom and classifies both cache contractions
+    # as matmul_t/matmul stages, so the proposer derives the decode
+    # attention chain (matmul_t -> scale -> add -> softmax -> matmul) —
+    # structurally IDENTICAL to flash_attention, onto whose fingerprint it
+    # dedupes (DESIGN.md §15).  ``length`` traces as f32 (the extractor
+    # traces every arg as f32) and is cast back to the cache's int32
+    # index dtype inside.
+    idx = length.astype(jnp.int32)
+    out, new_cache = L.apply_attention(
+        {"wq": wq, "wk": wk, "wv": wv, "wo": wo}, x, _DEC_CFG,
+        positions=idx[:, None],
+        cache={"k": k_cache, "v": v_cache, "length": idx})
+    return out, new_cache["k"], new_cache["v"]
+
+
 _HD = _CFG.resolved_head_dim
 
 WORKLOADS: Tuple[Workload, ...] = (
@@ -207,6 +236,18 @@ WORKLOADS: Tuple[Workload, ...] = (
               ("v", (_B, _S, _CFG.n_kv_heads, _HD))),
              doc="flash-attention reference: the full masked-attention "
                  "chain through both matmuls"),
+    Workload("decode_attention", _decode_attention,
+             (("x", (_B, 1, _D)),
+              ("wq", (_D, _CFG.n_heads * _HD)),
+              ("wk", (_D, _CFG.n_kv_heads * _HD)),
+              ("wv", (_D, _CFG.n_kv_heads * _HD)),
+              ("wo", (_CFG.n_heads * _HD, _D)),
+              ("k_cache", (_B, _S, _CFG.n_kv_heads, _HD)),
+              ("v_cache", (_B, _S, _CFG.n_kv_heads, _HD)),
+              ("length", (_B,))),
+             doc="single-token decode-step attention over the KV cache "
+                 "(cache read/update as chain inputs/outputs; dedupes "
+                 "onto flash_attention)"),
     Workload("transformer_block", _transformer_block,
              (("x", (_B, _S, _D)), ("norm1_w", (_D,)),
               ("wq", (_D, _CFG.n_heads * _HD)),

@@ -1,1 +1,9 @@
-from .engine import ServeEngine, Request
+from .engine import (DecodeFastPath, Request, ServeEngine, ServeReport,
+                     decode_bucket, kv_bucket_ladder, load_warmup_manifest,
+                     pow2_bucket, warm_from_manifest, warm_kernel_cache)
+
+__all__ = [
+    "DecodeFastPath", "Request", "ServeEngine", "ServeReport",
+    "decode_bucket", "kv_bucket_ladder", "load_warmup_manifest",
+    "pow2_bucket", "warm_from_manifest", "warm_kernel_cache",
+]

@@ -21,9 +21,12 @@ serve example + tests drive.
 from __future__ import annotations
 
 import dataclasses
+import json
+import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,9 +37,111 @@ from ..models import transformer as T
 from ..models.config import ArchConfig
 
 
+# --------------------------------------------------------------------------
+# Shape buckets (DESIGN.md §15).  A live fleet must NEVER enter the lowering
+# pipeline mid-traffic, so decode kernels are keyed by power-of-two
+# (batch_slots, kv_len) buckets: every kv length inside a bucket resolves
+# the same artifact-cache entry, and a warm-up pass over the bucket ladder
+# covers steady state exactly.
+# --------------------------------------------------------------------------
+
+KV_BUCKET_FLOOR = 16        # smallest kv bucket (f32 lane-tile friendly)
+
+
+def pow2_bucket(n: int, floor: int = 1) -> int:
+    """Smallest power of two >= max(n, floor)."""
+    n = max(int(n), int(floor), 1)
+    return 1 << (n - 1).bit_length()
+
+
+def decode_bucket(batch_slots: int, kv_len: int) -> Tuple[int, int]:
+    """The (batch_slots, kv_len) power-of-two bucket a decode step lands
+    in.  kv floors at :data:`KV_BUCKET_FLOOR` so short caches do not churn
+    tiny one-off kernels."""
+    return (pow2_bucket(batch_slots),
+            pow2_bucket(kv_len, floor=KV_BUCKET_FLOOR))
+
+
+def kv_bucket_ladder(max_len: int) -> List[int]:
+    """Every kv bucket a cache of capacity ``max_len`` can reach."""
+    out, kv = [], KV_BUCKET_FLOOR
+    while True:
+        out.append(kv)
+        if kv >= max_len:
+            return out
+        kv *= 2
+
+
+class DecodeFastPath:
+    """Bucketed fused decode-attention resolution (DESIGN.md §15).
+
+    The decode-step extraction dedupes onto the flash_attention chain, so
+    each (batch_slots, kv_len) bucket maps to one
+    :func:`repro.bench.tasks.decode_fused_task` resolved through the
+    degradation ladder (PR 7) and memoized: a warmed fleet serves every
+    bucket from the artifact cache (``cached_tuned`` rung, zero
+    lowering-pipeline entries) and an unwarmed one pays one generation
+    per bucket, never per step.  Resolution failures are the CALLER's
+    problem to contain — ``ServeEngine`` wraps the lookup so a fastpath
+    fault can never break the decode loop (the ``serve.decode_fastpath``
+    hook point injects exactly that).
+    """
+
+    def __init__(self, cfg: ArchConfig, cache=None, resolver=None,
+                 quarantine=None):
+        from ..core.resilience import (GuardedResolver, PersistentQuarantine,
+                                       Quarantine)
+        from ..core.tuning.cache import ArtifactCache
+        self.cfg = cfg
+        self.group = cfg.n_heads // cfg.n_kv_heads
+        self.head_dim = cfg.resolved_head_dim
+        cache_obj = ArtifactCache.resolve(cache) if cache is not None \
+            else None
+        if resolver is None:
+            if quarantine is None:
+                # the quarantine table persists NEXT TO the cache it guards
+                quarantine = (PersistentQuarantine.from_cache(cache_obj)
+                              if cache_obj is not None else Quarantine())
+            resolver = GuardedResolver(cache=cache_obj, tune=False,
+                                       verify=False, quarantine=quarantine)
+        self.resolver = resolver
+        self._memo: Dict[Tuple[int, int], Any] = {}
+        self.hits = 0
+        self.misses = 0
+        self.events: List[Any] = []
+
+    def resolve(self, batch_slots: int, kv_len: int):
+        """The ladder Resolution serving this step's bucket."""
+        bucket = decode_bucket(batch_slots, kv_len)
+        hit = bucket in self._memo
+        fault_point("serve.decode_fastpath",
+                    token=f"bucket={bucket[0]}x{bucket[1]}:"
+                          f"{'hit' if hit else 'miss'}")
+        if hit:
+            self.hits += 1
+            return self._memo[bucket]
+        from ..bench.tasks import decode_fused_task
+        self.misses += 1
+        task = decode_fused_task(self.group, self.head_dim, bucket[1],
+                                 batch_slots=bucket[0])
+        res = self.resolver.resolve(task)
+        self.events.extend(res.events)
+        self._memo[bucket] = res
+        return res
+
+    def warm(self, buckets) -> List[Any]:
+        return [self.resolve(bs, kv) for bs, kv in buckets]
+
+    @property
+    def buckets(self) -> List[Tuple[int, int]]:
+        return sorted(self._memo)
+
+
 def warm_kernel_cache(cache=True, tasks=None, verify: bool = True,
                       tune: bool = False, tune_budget: int = 8,
-                      guard=None) -> Dict:
+                      guard=None, decode_buckets=None,
+                      cfg: Optional[ArchConfig] = None,
+                      manifest_path=None) -> Dict:
     """Pre-populate the persistent artifact cache (DESIGN.md §8) with the
     framework hot-spot kernels (rmsnorm/softmax/adamw/swiglu/add_rmsnorm +
     mHC) so serving-time kernel (re)generation skips the lowering pipeline.
@@ -54,7 +159,15 @@ def warm_kernel_cache(cache=True, tasks=None, verify: bool = True,
     :class:`~repro.core.resilience.GuardedResolver`) to resolve each
     kernel down the degradation ladder instead of failing it on the first
     generation error.  Returns a report dict with per-kernel outcomes,
-    verdict counts, and cache stats."""
+    verdict counts, and cache stats.
+
+    ``decode_buckets`` + ``cfg`` extend the warm-up over the decode fast
+    path (DESIGN.md §15): each (batch_slots, kv_len) pair is canonicalized
+    to its power-of-two bucket and warmed as a
+    :func:`repro.bench.tasks.decode_fused_task`, so a fleet's
+    steady-state decode resolves every bucket from cache.
+    ``manifest_path`` publishes the warm-up as a JSON manifest another
+    fleet member replays with :func:`warm_from_manifest`."""
     from ..core.generate import framework_tasks
     from ..core.planner import generate
     from ..core.resilience import GuardedResolver
@@ -69,8 +182,23 @@ def warm_kernel_cache(cache=True, tasks=None, verify: bool = True,
                                    tune_budget=tune_budget, verify=verify)
     elif guard:
         resolver = guard
+    task_list = list(tasks if tasks is not None else framework_tasks())
+    decode_info = None
+    if decode_buckets:
+        if cfg is None:
+            raise ValueError("decode_buckets needs cfg for the attention "
+                             "geometry (group / head_dim)")
+        from ..bench.tasks import decode_fused_task
+        group = cfg.n_heads // cfg.n_kv_heads
+        head_dim = cfg.resolved_head_dim
+        buckets = sorted({decode_bucket(bs, kv)
+                          for bs, kv in decode_buckets})
+        task_list += [decode_fused_task(group, head_dim, kv, batch_slots=bs)
+                      for bs, kv in buckets]
+        decode_info = {"group": int(group), "head_dim": int(head_dim),
+                       "buckets": [list(b) for b in buckets]}
     kernels = []
-    for task in (tasks if tasks is not None else framework_tasks()):
+    for task in task_list:
         if resolver is not None:
             res = resolver.resolve(task)
             r = res.result
@@ -101,7 +229,55 @@ def warm_kernel_cache(cache=True, tasks=None, verify: bool = True,
     verdicts: Dict[str, int] = {}
     for row in kernels:
         verdicts[row["verdict"]] = verdicts.get(row["verdict"], 0) + 1
-    return {"kernels": kernels, "verdicts": verdicts, **cache_obj.stats()}
+    report = {"kernels": kernels, "verdicts": verdicts,
+              **cache_obj.stats()}
+    if decode_info is not None:
+        report["decode"] = decode_info
+    if manifest_path is not None:
+        manifest = {"version": 1,
+                    "kernels": [row["name"] for row in kernels],
+                    "verdicts": verdicts}
+        if decode_info is not None:
+            manifest["decode"] = decode_info
+        p = Path(manifest_path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        tmp = p.with_name(p.name + ".tmp")
+        tmp.write_text(json.dumps(manifest, indent=1, sort_keys=True))
+        tmp.replace(p)
+        report["manifest_path"] = str(p)
+    return report
+
+
+def load_warmup_manifest(path) -> Dict:
+    """Read a warm-up manifest published by :func:`warm_kernel_cache`."""
+    data = json.loads(Path(path).read_text())
+    if data.get("version") != 1:
+        raise ValueError(f"unsupported warm-up manifest version "
+                         f"{data.get('version')!r} in {path}")
+    return data
+
+
+def warm_from_manifest(path, cache=True, verify: bool = True,
+                       guard=None) -> Dict:
+    """Replay a published warm-up manifest into ``cache`` — the fleet
+    member side of the publishable warm-up (DESIGN.md §15): one member
+    warms and publishes, every other member replays the manifest so its
+    steady-state decode never enters the lowering pipeline.  Framework
+    kernels are matched by name (manifest rows naming kernels this build
+    no longer ships are skipped); decode buckets regenerate from the
+    recorded (group, head_dim, buckets) geometry."""
+    from ..core.generate import framework_tasks
+    from ..bench.tasks import decode_fused_task
+    manifest = load_warmup_manifest(path)
+    names = set(manifest.get("kernels", ()))
+    task_list = [t for t in framework_tasks() if t.name in names]
+    dec = manifest.get("decode")
+    if dec:
+        task_list += [decode_fused_task(dec["group"], dec["head_dim"],
+                                        int(kv), batch_slots=int(bs))
+                      for bs, kv in dec["buckets"]]
+    return warm_kernel_cache(cache, tasks=task_list, verify=verify,
+                             guard=guard)
 
 
 @dataclass
@@ -125,6 +301,9 @@ class ServeReport:
     requeues: int = 0
     decode_retries: int = 0
     deadline_hit: bool = False
+    prefill_shared: int = 0         # admissions served from a shared prefix
+    fastpath_errors: int = 0        # contained fastpath-resolution failures
+    slot_refill_s: List[float] = field(default_factory=list)
 
     @property
     def ok(self) -> bool:
@@ -134,21 +313,47 @@ class ServeReport:
 class ServeEngine:
     def __init__(self, params, cfg: ArchConfig, batch_slots: int,
                  max_len: int, greedy: bool = True,
-                 warm_kernels: bool = False, kernel_cache=None):
-        # optional setup-time kernel warm-up: populate the artifact cache
-        # so any on-demand kernel regeneration during serving is a cache
-        # hit instead of a full transcompile (DESIGN.md §8)
-        self.kernel_warmup = (
-            warm_kernel_cache(True if kernel_cache is None else kernel_cache)
-            if warm_kernels else None)
+                 warm_kernels: bool = False, kernel_cache=None,
+                 decode_fastpath=True, prefix_sharing: bool = True,
+                 clock=None):
         self.params = params
         self.cfg = cfg
         self.B = batch_slots
         self.max_len = max_len
         self.greedy = greedy
+        # injectable wall clock (FaultClock in tests/bench sims): drives
+        # wall-clock deadlines and slot-refill latency accounting
+        self.clock = clock if clock is not None else time.monotonic
+        # optional setup-time kernel warm-up: populate the artifact cache
+        # (framework kernels + THIS engine's decode bucket ladder) so any
+        # on-demand kernel resolution during serving is a cache hit
+        # instead of a full transcompile (DESIGN.md §8, §15)
+        self.kernel_warmup = None
+        if warm_kernels:
+            self.kernel_warmup = warm_kernel_cache(
+                True if kernel_cache is None else kernel_cache,
+                decode_buckets=[(batch_slots, kv)
+                                for kv in kv_bucket_ladder(max_len)]
+                if decode_fastpath else None,
+                cfg=cfg if decode_fastpath else None)
+        # the bucketed fused decode-attention fast path; pass a configured
+        # DecodeFastPath to share one across engines, False to disable
+        if isinstance(decode_fastpath, DecodeFastPath):
+            self.fastpath: Optional[DecodeFastPath] = decode_fastpath
+        elif decode_fastpath:
+            self.fastpath = DecodeFastPath(cfg, cache=kernel_cache)
+        else:
+            self.fastpath = None
+        self.prefix_sharing = bool(prefix_sharing)
+        self._prefix_counts: Dict[bytes, int] = {}
+        self._prefix_memo: Dict[bytes, Dict[str, Any]] = {}
         self.caches = T.init_caches(cfg, batch_slots, max_len)
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
         self.slot_remaining = np.zeros(batch_slots, np.int64)
+        # per-slot KV length (prompt + generated so far): drives the
+        # decode-bucket lookup each step
+        self.slot_len = np.zeros(batch_slots, np.int64)
+        self._slot_freed_at: List[Optional[float]] = [None] * batch_slots
         # admission order tick per slot: poison isolation evicts the most
         # recently admitted request when the batched decode keeps crashing
         self.slot_admitted_at = np.zeros(batch_slots, np.int64)
@@ -169,10 +374,37 @@ class ServeEngine:
         Returns True when the request RETIRED AT ADMISSION — its
         prefill-produced first token already hit ``eos_id`` (or its token
         budget is a single token), so it must not occupy the slot for a
-        decode step it does not need."""
+        decode step it does not need.
+
+        Prefix sharing (DESIGN.md §15): when several queued requests
+        carry the SAME prompt (N samples per prompt), the shared prefix
+        is prefilled ONCE — later admissions broadcast the memoized
+        first-token logits and per-request cache into their slot.  The
+        memo is lazy: only prompts with multiplicity > 1 are retained,
+        and an entry is dropped after its last sample admits.  Greedy
+        decode is bit-identical with sharing on or off (the jitted
+        prefill is deterministic, so the broadcast IS the recompute)."""
         fault_point("serve.admit", token=f"uid={req.uid}")
-        batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
-        logits, caches1 = self._prefill(self.params, batch)
+        rep = self.last_report
+        key = (np.asarray(req.prompt, np.int32).tobytes()
+               if self.prefix_sharing else None)
+        shared = self._prefix_memo.get(key) if key is not None else None
+        if shared is not None:
+            logits_last, caches1 = shared["logits"], shared["caches"]
+            shared["remaining"] -= 1
+            if shared["remaining"] <= 0:
+                self._prefix_memo.pop(key, None)
+            if rep is not None:
+                rep.prefill_shared += 1
+        else:
+            batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
+            logits, caches1 = self._prefill(self.params, batch)
+            logits_last = logits[0, -1]
+            n = self._prefix_counts.get(key, 1) if key is not None else 1
+            if n > 1:
+                self._prefix_memo[key] = {"logits": logits_last,
+                                          "caches": caches1,
+                                          "remaining": n - 1}
 
         # slot write: leaf shapes are (B, ...) or (repeats, B, ...)
         def write_leaf(c_all, c_one):
@@ -190,7 +422,7 @@ class ServeEngine:
         self.caches = jax.tree.map(write_leaf, self.caches, caches1,
                                    is_leaf=lambda x: x is None or
                                    isinstance(x, int))
-        nxt = int(jnp.argmax(logits[0, -1]))
+        nxt = int(jnp.argmax(logits_last))
         req.generated.append(nxt)
         if req.max_new_tokens <= 1 or (
                 req.eos_id is not None and nxt == req.eos_id):
@@ -200,8 +432,13 @@ class ServeEngine:
         self.last_token = self.last_token.at[slot, 0].set(nxt)
         self.slot_req[slot] = req
         self.slot_remaining[slot] = req.max_new_tokens - 1
+        self.slot_len[slot] = len(req.prompt)
         self._admit_tick += 1
         self.slot_admitted_at[slot] = self._admit_tick
+        freed = self._slot_freed_at[slot]
+        if freed is not None and rep is not None:
+            rep.slot_refill_s.append(max(0.0, self.clock() - freed))
+        self._slot_freed_at[slot] = None
         return False
 
     def _retire(self, slot: int):
@@ -210,6 +447,8 @@ class ServeEngine:
             req.done = True
         self.slot_req[slot] = None
         self.slot_remaining[slot] = 0
+        self.slot_len[slot] = 0
+        self._slot_freed_at[slot] = self.clock()
 
     def _fail_request(self, req: Request, phase: str, error: str,
                       report: ServeReport):
@@ -230,12 +469,30 @@ class ServeEngine:
         self._fail_request(req, "decode", error, report)
         self.slot_req[b] = None
         self.slot_remaining[b] = 0
+        self.slot_len[b] = 0
+        self._slot_freed_at[b] = self.clock()
         return True
+
+    def _deadline_fail(self, queue, reason: str, report: ServeReport):
+        """Shared deadline failure path (step budget or wall clock): fail
+        whatever is still in flight or waiting, but RETURN — a wedged
+        decode must not hang the fleet."""
+        report.deadline_hit = True
+        for b in range(self.B):
+            req = self.slot_req[b]
+            if req is not None:
+                self._fail_request(req, "deadline", reason, report)
+                self.slot_req[b] = None
+                self.slot_remaining[b] = 0
+                self.slot_len[b] = 0
+        while queue:
+            self._fail_request(queue.popleft(), "deadline",
+                               f"{reason} before admission", report)
 
     # ------------------------------------------------------------------
     def run(self, requests: List[Request], *, admit_retries: int = 1,
-            decode_retries: int = 1,
-            max_steps: Optional[int] = None) -> List[Request]:
+            decode_retries: int = 1, max_steps: Optional[int] = None,
+            deadline_s: Optional[float] = None) -> List[Request]:
         """Serve ``requests`` to completion.  Per-request failures are
         retried (``admit_retries`` extra admission attempts, with the
         request requeued behind the waiting queue between attempts;
@@ -243,7 +500,10 @@ class ServeEngine:
         isolation evicts the most recently admitted request), and
         ``max_steps`` (default: a generous bound from the requests' token
         budgets) deadlines the whole run so it can never spin forever.
-        Returns the requests; ``self.last_report`` carries the structured
+        ``deadline_s`` adds a WALL-CLOCK deadline on top of the step
+        budget, measured on the engine's injectable ``clock`` so tests
+        drive it deterministically via the fault harness.  Returns the
+        requests; ``self.last_report`` carries the structured
         :class:`ServeReport`."""
         report = ServeReport()
         self.last_report = report
@@ -252,8 +512,28 @@ class ServeEngine:
         if max_steps is None:
             max_steps = 2 * sum(max(1, r.max_new_tokens)
                                 for r in requests) + 8 * max(1, self.B)
+        t_run = self.clock()
+        # prefix sharing: prompt multiplicity across THIS run's requests
+        # decides which prefills are worth memoizing (lazy broadcast)
+        self._prefix_counts = {}
+        self._prefix_memo = {}
+        if self.prefix_sharing:
+            for r in requests:
+                k = np.asarray(r.prompt, np.int32).tobytes()
+                self._prefix_counts[k] = self._prefix_counts.get(k, 0) + 1
+        # empty slots start "freed" now, so first admissions count as
+        # refills against the run start
+        for b in range(self.B):
+            if self.slot_req[b] is None:
+                self._slot_freed_at[b] = t_run
         active = lambda: any(r is not None for r in self.slot_req)  # noqa
         while queue or active():
+            if deadline_s is not None and \
+                    self.clock() - t_run >= deadline_s:
+                self._deadline_fail(
+                    queue, f"wall-clock deadline {deadline_s:g}s "
+                           f"exhausted", report)
+                break
             # fill free slots (admission failures retry, then isolate)
             for b in range(self.B):
                 while self.slot_req[b] is None and queue:
@@ -279,6 +559,19 @@ class ServeEngine:
                 if queue:
                     continue        # everything admitted so far failed/EOSed
                 break
+            # resolve this step's fused decode kernel through the bucketed
+            # fast path (DESIGN.md §15).  Warmed: a pure cache materialize.
+            # Any resolution failure is CONTAINED — the jitted decode step
+            # below must never be broken by the fastpath.
+            if self.fastpath is not None:
+                occupied = [b for b in range(self.B)
+                            if self.slot_req[b] is not None]
+                kv = min(int(self.slot_len[occupied].max()) + 1,
+                         self.max_len)
+                try:
+                    self.fastpath.resolve(self.B, kv)
+                except Exception:  # noqa: BLE001 — isolate the fastpath
+                    report.fastpath_errors += 1
             # one batched decode step (retried; then poison isolation)
             step_err = None
             for attempt in range(decode_retries + 1):
@@ -313,25 +606,15 @@ class ServeEngine:
                 tok = int(nxt_host[b])
                 req.generated.append(tok)
                 self.slot_remaining[b] -= 1
+                self.slot_len[b] += 1
                 if self.slot_remaining[b] <= 0 or (
                         req.eos_id is not None and tok == req.eos_id):
                     report.completed.append(req.uid)
                     self._retire(b)
             if report.decode_steps >= max_steps:
-                # deadline: fail whatever is still in flight or waiting,
-                # but RETURN — a wedged decode must not hang the fleet
-                report.deadline_hit = True
-                for b in range(self.B):
-                    req = self.slot_req[b]
-                    if req is not None:
-                        self._fail_request(req, "deadline",
-                                           f"step budget {max_steps} "
-                                           f"exhausted", report)
-                        self.slot_req[b] = None
-                        self.slot_remaining[b] = 0
-                while queue:
-                    self._fail_request(queue.popleft(), "deadline",
-                                       "step budget exhausted before "
-                                       "admission", report)
+                self._deadline_fail(
+                    queue, f"step budget {max_steps} exhausted", report)
                 break
+        self._prefix_memo = {}
+        self._prefix_counts = {}
         return requests

@@ -494,3 +494,46 @@ def test_weightless_rmsnorm_non_default_eps_carried():
     assert [st.op for st in spec.stages] == ["rmsnorm", "silu"]
     eps = dict(spec.attrs)["eps"]
     assert abs(eps - 2e-5) < 1e-10          # f32-rounded trace constant
+
+
+def test_decode_attention_extracts_and_dedupes_onto_flash():
+    """The scan-free single-token decode block (KV-cache write + GQA
+    attention over the cached keys, traced VERBATIM from
+    layers.apply_attention's decode branch) yields ONE chain spanning both
+    cache contractions.  The vmapped dynamic_update_slice cache writes and
+    the QKV/rope/output projections stay barriers — the updated caches
+    re-enter the attention interior as plain chain inputs — and the
+    derived chain is structurally IDENTICAL to flash_attention: its
+    α-invariant fingerprint dedupes onto the registered chain, so the
+    decode path rides the same generated kernel with zero registry
+    churn."""
+    w = W["decode_attention"]
+    specs = extract_chains(w.fn, w.shapes, name=w.name)
+    assert len(specs) == 1
+    (spec,) = specs
+    assert [st.op for st in spec.stages] == [
+        "matmul_t", "scale", "add", "softmax", "matmul"]
+    # decode trace head_dim=16 → qk scale 1/sqrt(16)
+    assert abs(dict(spec.attrs)["scale"] - 0.25) < 1e-12
+    assert chain_fingerprint(spec) == \
+        chain_fingerprint(CHAINS["flash_attention"])
+    # dedupe: no separate registry entry, flash already carries the
+    # "extracted" source tag
+    assert "decode_attention" not in CHAINS
+    assert "extracted" in CHAIN_SOURCES["flash_attention"]
+
+
+def test_decode_attention_cache_ops_are_barriers_not_swallowed():
+    """The cache write (dynamic_update_slice under vmap → scatter-style
+    update) must segment the graph, not vanish into the chain: the fused
+    decode kernel reads the UPDATED cache, which is producible only if the
+    update runs as a barrier whose output feeds the chain."""
+    w = W["decode_attention"]
+    graph = extract_graph(w.fn, w.shapes, name=w.name)
+    ops = [n.op for n in graph.nodes]
+    # the vmapped dynamic_update_slice cache writes trace as scatters
+    assert ops.count("barrier.scatter") == 2           # k and v writes
+    # the four projections (wq/wk/wv/wo) are unbatched h @ w dots and
+    # stay barriers; BOTH cache contractions classify as stages
+    assert ops.count("barrier.dot_general") == 4
+    assert ops.count("matmul_t") == 1 and ops.count("matmul") == 1

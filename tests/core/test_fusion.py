@@ -1122,10 +1122,14 @@ def test_non_row_preserving_dot_general_stays_barrier():
     assert not any(n.op in ("matmul", "matmul_t") for n in graph.nodes)
 
 
-def test_batched_dot_general_stays_barrier():
-    """Batch dimensions are outside the 2-D stage template: a batched
-    contraction must stay a barrier, not mis-classify as a matmul
-    stage."""
+def test_batched_single_free_axis_dot_classifies_matmul_t():
+    """bsd,btd->bst is the decode-step QK^T shape (rows contract their
+    trailing axis against per-batch-slice key rows): it must classify as
+    a matmul_t stage in the rows-on-LHS orientation.  Pre-decode-path,
+    first-fit orientation selection picked the rows-on-RHS reading (whose
+    weight-free axis lands mid-output) and gave up — single-free-axis
+    batched dots fit the template BOTH ways, and the matcher must keep
+    trying orientations until one places the weight's free axis last."""
     import jax.numpy as jnp
     from repro.core.fusion import extract_graph
 
@@ -1135,6 +1139,23 @@ def test_batched_dot_general_stays_barrier():
 
     graph = extract_graph(fn, (("q", (2, 8, 16)), ("k", (2, 8, 16))),
                           name="batched")
+    assert any(n.op == "matmul_t" for n in graph.nodes)
+    assert not any(n.op == "barrier.dot_general" for n in graph.nodes)
+
+
+def test_multi_free_axis_weight_dot_stays_barrier():
+    """A weight operand with more than one free axis per batch slice is
+    outside the 2-D stage template in every orientation: the contraction
+    must stay a barrier, not mis-classify as a matmul stage."""
+    import jax.numpy as jnp
+    from repro.core.fusion import extract_graph
+
+    def fn(q, k):
+        s = jnp.einsum("bsd,btud->bstu", q, k)
+        return jnp.tanh(s)
+
+    graph = extract_graph(fn, (("q", (2, 8, 16)), ("k", (2, 4, 3, 16))),
+                          name="multifree")
     assert any(n.op == "barrier.dot_general" for n in graph.nodes)
     assert not any(n.op in ("matmul", "matmul_t") for n in graph.nodes)
 
@@ -1151,6 +1172,34 @@ def test_accumulator_vmem_overflow_refuses():
               "v": (256, D)}
     with pytest.raises((NotImplementedError, FusionError)):
         build_chain(spec, shapes, mode="fused")
+
+
+@pytest.mark.parametrize("rows,cols", [(5, 97), (3, 513)])
+def test_layernorm_streaming_template_non_lane_aligned(rows, cols):
+    """layernorm has a 2-pass streaming stage template (running sum +
+    sum-of-squares carries, E[x^2] - mu^2 variance): a pattern-FORCED
+    streaming fused build must succeed — no sequential-fallback refusal —
+    and match the composed f64 oracle at non-lane-aligned cols."""
+    spec = CHAINS["add_layernorm"]
+    shapes, inputs = _diff_inputs(spec, rows, cols, seed=23)
+    ref = _compose_ref64(spec, inputs)
+    full = spec.chain_shapes(shapes)
+    out_shapes = {t: full[t] for t in spec.outputs}
+    prog = build_chain(spec, shapes, mode="fused", pattern="streaming")
+    assert prog.meta["fusion"]["mode"] == "fused"
+    assert prog.meta["fusion"]["pattern"] == "streaming"
+    outs = _run_chain_prog(prog, spec, inputs, out_shapes)
+    for t in spec.outputs:
+        np.testing.assert_allclose(
+            outs[t][:ref[t].shape[0], :ref[t].shape[1]], ref[t],
+            rtol=3e-4, atol=2e-5,
+            err_msg=f"streaming layernorm output '{t}' diverges from "
+                    f"the composed f64 reference at ({rows}, {cols})")
+    # bit-exact against the sequential streaming form of the same chain
+    seq = build_chain(spec, shapes, mode="sequential", pattern="streaming")
+    souts = _run_chain_prog(seq, spec, inputs, out_shapes)
+    for t in spec.outputs:
+        np.testing.assert_allclose(outs[t], souts[t], rtol=0, atol=0)
 
 
 def test_accumulator_at_chain_head_refuses_streaming_fusion():

@@ -15,8 +15,9 @@ import pytest
 
 from repro.bench import suite
 from repro.core.planner import default_inputs, generate
-from repro.core.resilience import (FAULT_AUDIT, HOOK_POINTS, FaultInjected,
-                                   FaultPlan, FaultSpec, GuardedResolver,
+from repro.core.resilience import (FAULT_AUDIT, HOOK_POINTS, FaultClock,
+                                   FaultInjected, FaultPlan, FaultSpec,
+                                   GuardedResolver, PersistentQuarantine,
                                    Quarantine, corrupt_cache_entry,
                                    drain_events, fault_point, inject,
                                    poison_nan_result)
@@ -271,6 +272,91 @@ def test_put_tuned_backs_off_live_lock_and_cleans_stale(tasks, tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# Persistent quarantine: the failure table survives restarts (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+def test_persistent_quarantine_round_trips_across_instances(tmp_path):
+    p = tmp_path / "q.json"
+    q = PersistentQuarantine(p, threshold=2)
+    q.note_failure("fp1", "regenerate")
+    q.note_failure("fp1", "regenerate")
+    q.note_failure("fp2", "sequential")
+    assert q.blocked("fp1", "regenerate")
+    # "restart": a fresh instance loads the same table
+    q2 = PersistentQuarantine(p, threshold=2)
+    assert q2.blocked("fp1", "regenerate")
+    assert not q2.blocked("fp2", "sequential")
+    assert q2.entries() == {("fp1", "regenerate"): 2,
+                            ("fp2", "sequential"): 1}
+    q2.clear()
+    assert PersistentQuarantine(p, threshold=2).entries() == {}
+
+
+def test_persistent_quarantine_expires_stale_entries(tmp_path):
+    clk = FaultClock(t0=1000.0)
+    p = tmp_path / "q.json"
+    mk = lambda: PersistentQuarantine(p, threshold=1, max_age_s=100.0,  # noqa
+                                      clock=clk)
+    mk().note_failure("fp", "sequential")
+    clk.advance(50.0)
+    assert mk().blocked("fp", "sequential")      # still fresh
+    clk.advance(100.0)                           # now 150s old: expired
+    assert not mk().blocked("fp", "sequential")
+    assert mk().entries() == {}
+
+
+def test_persistent_quarantine_corrupt_table_loads_empty(tmp_path):
+    p = tmp_path / "q.json"
+    p.write_text("{this is not json")
+    q = PersistentQuarantine(p, threshold=1)
+    assert q.entries() == {}
+    q.note_failure("fp", "regenerate")           # and heals by overwriting
+    assert PersistentQuarantine(p).entries() == {("fp", "regenerate"): 1}
+
+
+def test_persistent_quarantine_from_cache_placement(tmp_path):
+    cache = ArtifactCache(str(tmp_path))
+    q = PersistentQuarantine.from_cache(cache, threshold=1)
+    q.note_failure("fp", "regenerate")
+    assert (tmp_path / "quarantine.json").exists()
+    with pytest.raises(ValueError, match="no cache to persist"):
+        PersistentQuarantine.from_cache(None)
+
+
+def test_persistent_quarantine_survives_resolver_restart(tasks, tmp_path):
+    """The ladder integration: failures noted through a GuardedResolver
+    persist, and a RESTARTED process (fresh table instance, injection off)
+    skips the quarantined rungs without re-attempting them."""
+    task = tasks["relu"]
+    p = tmp_path / "q.json"
+    plan = FaultPlan([FaultSpec("planner.generate", times=None)])
+    with inject(plan):
+        for _ in range(3):
+            GuardedResolver(cache=None, tune=False,
+                            quarantine=PersistentQuarantine(p)
+                            ).resolve(task)
+    res = GuardedResolver(cache=None, tune=False,
+                          quarantine=PersistentQuarantine(p)).resolve(task)
+    assert res.rung == "eager" and res.verdict == "quarantined"
+
+
+# ---------------------------------------------------------------------------
+# FaultClock: deterministic wall time driven by hook visits
+# ---------------------------------------------------------------------------
+
+def test_fault_clock_ticker_advances_per_hook_visit():
+    clk = FaultClock(t0=10.0)
+    plan = FaultPlan([FaultSpec("serve.decode", kind="call",
+                                fn=clk.ticker(0.5), times=None)])
+    with inject(plan):
+        payload = {"x": 1}
+        assert fault_point("serve.decode", payload, token="step=0") is payload
+        fault_point("serve.decode", token="step=1")
+    fault_point("serve.decode", token="step=2")  # no plan: clock frozen
+    assert clk() == 11.0
+
+
+# ---------------------------------------------------------------------------
 # Serving engine survival (retry / requeue / poison isolation / deadline)
 # ---------------------------------------------------------------------------
 
@@ -351,6 +437,46 @@ def test_serve_deadline_bounds_the_run(serve_env):
     assert rep.deadline_hit and not rep.ok
     assert rep.decode_steps == 2
     assert {f["phase"] for f in rep.failed} == {"deadline"}
+    assert all(r.done for r in reqs)
+
+
+def test_serve_fastpath_fault_never_breaks_the_decode_loop(serve_env):
+    """An armed raise at serve.decode_fastpath (every bucket resolution
+    fails) is CONTAINED: the run completes cleanly, every token is
+    generated, and the failures are only visible as fastpath_errors."""
+    eng = _engine(serve_env)
+    assert eng.fastpath is not None              # the default-on fast path
+    reqs = _requests(serve_env, 2)
+    plan = FaultPlan([FaultSpec("serve.decode_fastpath", times=None)])
+    with inject(plan):
+        eng.run(reqs)
+    rep = eng.last_report
+    assert rep.ok and sorted(rep.completed) == [0, 1]
+    assert all(len(r.generated) == 4 and not r.error for r in reqs)
+    assert rep.decode_steps > 0
+    assert rep.fastpath_errors == rep.decode_steps
+    assert plan.fired("serve.decode_fastpath") == rep.decode_steps
+
+
+def test_serve_wall_clock_deadline_on_injected_clock(serve_env):
+    """deadline_s is measured on the engine's injectable clock: a
+    FaultClock ticking 1s per decode step hits a 2.5s deadline after
+    exactly 3 steps — deterministically, no ambient time."""
+    from repro.serving import ServeEngine
+    cfg, params = serve_env
+    clk = FaultClock()
+    eng = ServeEngine(params, cfg, batch_slots=2, max_len=64,
+                      decode_fastpath=False, clock=clk)
+    reqs = _requests(serve_env, 2, max_new=6)
+    plan = FaultPlan([FaultSpec("serve.decode", kind="call",
+                                fn=clk.ticker(1.0), times=None)])
+    with inject(plan):
+        eng.run(reqs, deadline_s=2.5)
+    rep = eng.last_report
+    assert rep.deadline_hit and not rep.ok
+    assert rep.decode_steps == 3                 # t=3.0 >= 2.5 at loop top
+    assert {f["phase"] for f in rep.failed} == {"deadline"}
+    assert "wall-clock" in rep.failed[0]["error"]
     assert all(r.done for r in reqs)
 
 

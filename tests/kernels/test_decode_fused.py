@@ -1,0 +1,115 @@
+"""Differential gate for the fused decode-step attention path.
+
+``decode_attention_fused`` runs the GENERATED flash_attention chain (the
+decode extraction dedupes onto the same fingerprint — DESIGN.md §15) at a
+(group, kv_len, head_dim) slice geometry with a live-prefix length mask.
+This file pins the acceptance criterion: fused ≡ sequential-chain build ≡
+eager decode path (``decode_reference``) across GQA/MQA/MHA head mappings
+and kv lengths spanning multiple cache buckets.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import decode_reference
+from repro.kernels.flash_attention.ops import decode_attention_fused
+from repro.serving import decode_bucket
+
+
+def _mk_decode(B, S, Hq, Hkv, D, seed=0):
+    rng = np.random.RandomState(seed)
+    q = jnp.asarray(rng.randn(B, 1, Hq, D), jnp.float32) * 0.5
+    k = jnp.asarray(rng.randn(B, S, Hkv, D), jnp.float32) * 0.5
+    v = jnp.asarray(rng.randn(B, S, Hkv, D), jnp.float32) * 0.5
+    # ragged live prefixes: every batch row a different cache_len
+    lens = jnp.asarray(rng.randint(1, S + 1, size=(B,)), jnp.int32)
+    return q, k, v, lens
+
+
+SHAPES = [
+    # (B, S, Hq, Hkv, D) — GQA / MQA / MHA, kv_len across distinct buckets
+    (2, 16, 4, 2, 16),     # GQA 2:1, floor bucket
+    (1, 32, 8, 1, 32),     # MQA, next bucket up
+    (3, 64, 4, 4, 16),     # MHA, third bucket
+    (2, 48, 6, 2, 32),     # GQA 3:1, non-pow2 kv_len (bucket 64)
+]
+
+
+def test_shapes_span_multiple_kv_buckets():
+    """The sweep below is only a multi-bucket gate if the kv lengths
+    actually land in distinct buckets of the serving cache key."""
+    buckets = {decode_bucket(B, S)[1] for B, S, *_ in SHAPES}
+    assert len(buckets) >= 3, buckets
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_decode_fused_matches_eager_reference(shape):
+    """Fused generated-chain decode ≡ the eager decode path the model's
+    ``apply_attention`` runs (``decode_reference``), with ragged per-batch
+    cache lengths."""
+    B, S, Hq, Hkv, D = shape
+    q, k, v, lens = _mk_decode(B, S, Hq, Hkv, D, seed=sum(shape))
+    out = decode_attention_fused(q, k, v, lens)
+    ref = decode_reference(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    assert out.shape == (B, 1, Hq, D)
+    assert out.dtype == q.dtype
+
+
+def test_decode_fused_explicit_sm_scale():
+    q, k, v, lens = _mk_decode(2, 32, 4, 2, 16, seed=7)
+    for s in (0.5, 0.07, 1.0):
+        out = decode_attention_fused(q, k, v, lens, sm_scale=s)
+        ref = decode_reference(q, k, v, lens, sm_scale=s)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", [(2, 16, 4, 2, 16), (1, 32, 8, 1, 32)])
+def test_decode_fused_matches_sequential_chain_build(shape):
+    """Fused ≡ sequential: the same flash chain built with mode=
+    'sequential' (every stage its own staged kernel) at the decode slice
+    geometry must produce the same attention output through the artifact
+    entry — the decode fast path never changes numerics, only staging."""
+    from repro.core.fusion.chain import CHAINS, build_chain
+    from repro.core.lowering.pipeline import transcompile
+
+    B, S, Hq, Hkv, D = shape
+    group = Hq // Hkv
+    q, k, v, lens = _mk_decode(B, S, Hq, Hkv, D, seed=13)
+
+    spec = CHAINS["flash_attention"]
+    shapes = {"q": (group, D), "k": (S, D), "mask": (group, S),
+              "v": (S, D), "output": (group, D)}
+    prog = build_chain(spec, shapes, mode="sequential")
+    entry = transcompile(prog, verify_against_interp=False).entry
+    baked = float(dict(spec.attrs)["scale"])
+    sm_scale = 1.0 / np.sqrt(D)
+
+    fused = np.asarray(decode_attention_fused(q, k, v, lens))
+
+    qf = (jnp.asarray(q, jnp.float32) * (sm_scale / baked)).reshape(
+        B, Hkv, group, D)
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :]
+    mask = jnp.where(pos < lens[:, None], 0.0, -3.0e38).astype(jnp.float32)
+    for b in range(B):
+        mask_b = jnp.broadcast_to(mask[b][None, :], (group, S))
+        for j in range(Hkv):
+            seq = np.asarray(entry(qf[b, j], k[b, :, j, :].astype(jnp.float32),
+                                   mask_b, v[b, :, j, :].astype(jnp.float32)))
+            got = fused[b, 0, j * group:(j + 1) * group, :]
+            np.testing.assert_allclose(got, seq, rtol=2e-6, atol=2e-6)
+
+
+def test_decode_fused_masks_dead_tail_exactly():
+    """Positions at or beyond cache_len must contribute exactly zero:
+    perturbing the dead tail of the cache cannot change the output."""
+    B, S, Hq, Hkv, D = 2, 32, 4, 2, 16
+    q, k, v, _ = _mk_decode(B, S, Hq, Hkv, D, seed=3)
+    lens = jnp.asarray([5, 17], jnp.int32)
+    out = decode_attention_fused(q, k, v, lens)
+    k2 = k.at[0, 5:].set(1e4).at[1, 17:].set(-1e4)
+    v2 = v.at[0, 5:].set(1e4).at[1, 17:].set(-1e4)
+    out2 = decode_attention_fused(q, k2, v2, lens)
+    assert np.array_equal(np.asarray(out), np.asarray(out2))

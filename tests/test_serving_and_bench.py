@@ -2,10 +2,20 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.models import transformer as T
-from repro.serving import ServeEngine, Request
+from repro.serving import (DecodeFastPath, Request, ServeEngine,
+                           decode_bucket, kv_bucket_ladder,
+                           load_warmup_manifest, pow2_bucket,
+                           warm_from_manifest, warm_kernel_cache)
+
+
+@pytest.fixture(scope="module")
+def env():
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    return cfg, T.init_params(jax.random.PRNGKey(0), cfg)
 
 
 def test_serve_engine_continuous_batching():
@@ -82,6 +92,182 @@ def test_serve_report_on_clean_run():
     assert rep.ok and not rep.failed and not rep.deadline_hit
     assert sorted(rep.completed) == [0, 1, 2]
     assert rep.requeues == 0 and rep.decode_retries == 0
+
+
+# ---------------------------------------------------------------------------
+# Decode fast path: shape buckets, warm cache, zero-lowering steady state
+# (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+def test_pow2_bucket_and_ladder():
+    assert pow2_bucket(1) == 1 and pow2_bucket(3) == 4
+    assert pow2_bucket(16, floor=16) == 16
+    assert pow2_bucket(17, floor=16) == 32
+    assert decode_bucket(2, 16) == (2, 16)
+    assert decode_bucket(2, 17) == (2, 32)       # edge+1 crosses the bucket
+    assert decode_bucket(3, 5) == (4, 16)        # kv floors at 16
+    assert kv_bucket_ladder(64) == [16, 32, 64]
+    assert kv_bucket_ladder(100) == [16, 32, 64, 128]
+
+
+class _StubResolver:
+    """Records resolved tasks without entering the lowering pipeline."""
+
+    def __init__(self):
+        self.tasks = []
+
+    def resolve(self, task):
+        from repro.core.resilience import Resolution
+        self.tasks.append(task)
+        return Resolution(task.name, f"fp:{task.name}", "cached_tuned",
+                          None, (), runner=lambda *a: None)
+
+
+def test_bucket_boundary_keys_and_memo(env):
+    """kv at a bucket edge vs edge+1 resolve DISTINCT tasks (distinct
+    cache keys); every kv inside a bucket reuses the memoized resolution
+    — no re-lower within a bucket."""
+    from repro.core.tuning.cache import _digest, task_fingerprint
+    cfg, _ = env
+    stub = _StubResolver()
+    fp = DecodeFastPath(cfg, resolver=stub)
+    r_edge = fp.resolve(2, 32)
+    r_over = fp.resolve(2, 33)
+    assert [t.name for t in stub.tasks] == ["decode_attention_b2_kv32",
+                                            "decode_attention_b2_kv64"]
+    keys = {_digest(task_fingerprint(t)) for t in stub.tasks}
+    assert len(keys) == 2                        # distinct cache keys
+    assert r_edge is not r_over
+    # within-bucket kv lengths: memo hit, resolver NOT re-entered
+    assert fp.resolve(2, 20) is r_edge
+    assert fp.resolve(2, 32) is r_edge
+    assert fp.resolve(2, 40) is r_over
+    assert len(stub.tasks) == 2
+    assert fp.misses == 2 and fp.hits == 3
+    assert fp.buckets == [(2, 32), (2, 64)]
+
+
+def test_warmed_engine_steady_state_zero_lowering(env, tmp_path):
+    """THE fleet guarantee: a warmed engine's steady-state decode never
+    enters the lowering pipeline — PIPELINE_COUNTERS record zero
+    transcompiles across the whole serve loop, every bucket lands on the
+    cached_tuned rung, and zero degradation events fire."""
+    from repro.core.lowering.pipeline import PIPELINE_COUNTERS
+    from repro.core.resilience import drain_events
+    from repro.core.tuning import ArtifactCache
+    cfg, params = env
+    cache = ArtifactCache(str(tmp_path))
+    warm = warm_kernel_cache(
+        cache, tasks=[],            # decode buckets only: keep the test lean
+        decode_buckets=[(2, kv) for kv in kv_bucket_ladder(32)], cfg=cfg)
+    assert warm["verdicts"] == {"ok": len(warm["kernels"])}
+    drain_events()
+    before = dict(PIPELINE_COUNTERS)
+    eng = ServeEngine(params, cfg, batch_slots=2, max_len=32,
+                      kernel_cache=cache)
+    rng = np.random.RandomState(0)
+    reqs = [Request(uid=i, prompt=rng.randint(0, cfg.vocab, 8)
+                    .astype(np.int32), max_new_tokens=4) for i in range(3)]
+    eng.run(reqs)
+    rep = eng.last_report
+    assert rep.ok and rep.decode_steps > 0
+    assert dict(PIPELINE_COUNTERS) == before     # ZERO lowering entries
+    assert rep.fastpath_errors == 0
+    assert eng.fastpath.events == [] and drain_events() == []
+    assert eng.fastpath.misses == len(eng.fastpath.buckets)
+    assert eng.fastpath.hits == rep.decode_steps - eng.fastpath.misses
+    for res in eng.fastpath._memo.values():
+        assert res.rung == "cached_tuned" and res.result.cached
+
+
+def test_warmup_manifest_round_trip(env, tmp_path):
+    """One fleet member warms and PUBLISHES; another replays the manifest
+    into its own cache and reaches the same warmed state."""
+    from repro.core.tuning import ArtifactCache
+    cfg, _ = env
+    man = tmp_path / "warmup.json"
+    warm_kernel_cache(ArtifactCache(str(tmp_path / "a")), tasks=[],
+                      decode_buckets=[(2, 16), (2, 24)], cfg=cfg,
+                      manifest_path=man)
+    data = load_warmup_manifest(man)
+    assert data["version"] == 1
+    assert data["decode"]["buckets"] == [[2, 16], [2, 32]]  # canonicalized
+    assert set(data["kernels"]) == {"decode_attention_b2_kv16",
+                                    "decode_attention_b2_kv32"}
+    rep = warm_from_manifest(man, cache=ArtifactCache(str(tmp_path / "b")))
+    assert rep["verdicts"] == {"ok": 2}
+    assert {k["name"] for k in rep["kernels"]} == set(data["kernels"])
+    bad = tmp_path / "bad.json"
+    bad.write_text('{"version": 99}')
+    with pytest.raises(ValueError, match="manifest version"):
+        load_warmup_manifest(bad)
+
+
+def test_tokens_bit_identical_fastpath_on_off(env):
+    """The fast path only changes kernel STAGING, never numerics: greedy
+    tokens with the bucketed fast path (and prefix sharing) enabled are
+    bit-identical to the plain unbucketed engine."""
+    cfg, params = env
+    rng = np.random.RandomState(7)
+    prompts = [rng.randint(0, cfg.vocab, 8).astype(np.int32)
+               for _ in range(3)]
+
+    def serve(**kw):
+        eng = ServeEngine(params, cfg, batch_slots=2, max_len=32, **kw)
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=4)
+                for i, p in enumerate(prompts)]
+        eng.run(reqs)
+        assert eng.last_report.ok
+        return [r.generated for r in reqs]
+
+    plain = serve(decode_fastpath=False, prefix_sharing=False)
+    stub = DecodeFastPath(cfg, resolver=_StubResolver())
+    fast = serve(decode_fastpath=stub, prefix_sharing=True)
+    assert fast == plain
+    assert stub.misses >= 1                      # the fast path really ran
+
+
+# ---------------------------------------------------------------------------
+# Prefix sharing (N samples per prompt)
+# ---------------------------------------------------------------------------
+
+def test_prefix_sharing_prefills_once_per_distinct_prompt(env):
+    cfg, params = env
+    rng = np.random.RandomState(11)
+    shared = rng.randint(0, cfg.vocab, 8).astype(np.int32)
+    other = rng.randint(0, cfg.vocab, 8).astype(np.int32)
+    eng = ServeEngine(params, cfg, batch_slots=2, max_len=32,
+                      decode_fastpath=False)
+    prefills = []
+    orig = eng._prefill
+    eng._prefill = lambda p, b: (prefills.append(1) or orig(p, b))
+    reqs = [Request(uid=i, prompt=shared.copy(), max_new_tokens=4)
+            for i in range(3)]
+    reqs.append(Request(uid=3, prompt=other, max_new_tokens=4))
+    eng.run(reqs)
+    rep = eng.last_report
+    assert rep.ok and rep.prefill_shared == 2    # samples 2 and 3 broadcast
+    assert len(prefills) == 2                    # one per DISTINCT prompt
+    assert eng._prefix_memo == {}                # memo dropped after the run
+    # greedy: every sample of the shared prompt generates the same tokens
+    assert reqs[0].generated == reqs[1].generated == reqs[2].generated
+
+
+def test_prefix_sharing_tokens_bit_identical_on_off(env):
+    cfg, params = env
+    rng = np.random.RandomState(13)
+    prompt = rng.randint(0, cfg.vocab, 8).astype(np.int32)
+
+    def serve(sharing):
+        eng = ServeEngine(params, cfg, batch_slots=2, max_len=32,
+                          decode_fastpath=False, prefix_sharing=sharing)
+        reqs = [Request(uid=i, prompt=prompt.copy(), max_new_tokens=5)
+                for i in range(3)]
+        eng.run(reqs)
+        return [r.generated for r in reqs]
+
+    on, off = serve(True), serve(False)
+    assert on == off
 
 
 def test_traffic_model_exact_for_relu():
