@@ -31,6 +31,13 @@ warmed engine.  Under ``--check-regressions`` the serving rows are held
 to the STRICT bar: tokens/sec must not drop, p99 refill latency must not
 rise, and any steady-state lowering entry fails the run (the simulation
 is clock-injected and seeded, so there is no noise to tolerate).
+
+A ``train`` section (DESIGN.md §16) runs an end-to-end fused-backward
+train step — the mHC backward through the EXTRACTED ``mhc_stream_bwd``
+chain — against XLA autodiff on identical seeded data; a diverged or
+non-finite fused trajectory fails ``--check-regressions`` absolutely,
+and the recorded fused/XLA parameter divergence must not grow vs the
+previous artifact.
 """
 from __future__ import annotations
 
@@ -145,6 +152,63 @@ def serving_rows(emit=print, batch_slots: int = 4, max_len: int = 32,
     return row
 
 
+def train_step_rows(emit=print, steps: int = 4):
+    """End-to-end fused-backward train-step check (DESIGN.md §16).
+
+    Runs ``steps`` full train steps (loss -> grads -> AdamW) on a tiny
+    mHC-enabled smoke config twice — XLA autodiff vs
+    ``make_train_step(fused_backward=True)``, whose mHC backward runs the
+    EXTRACTED ``mhc_stream_bwd`` fusion chain — with identical seeds and
+    data, and reports the loss trajectories plus the max parameter
+    divergence.  Fully deterministic (seeded synthetic data, CPU
+    interpret-mode kernels), so ``--check-regressions`` holds the row to
+    a STRICT bar: the fused trajectory must stay finite and within f32
+    chain tolerance of the XLA one, and the divergence must not grow
+    materially vs the previous artifact."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.data import DataConfig, SyntheticLM
+    from repro.models import transformer as T
+    from repro.training import optimizer as opt
+    from repro.training.train import make_train_step
+
+    cfg = get_config("internlm2-1.8b", smoke=True).scaled(
+        hyper_connections=4, dtype="float32", vocab=64)
+    ocfg = opt.AdamWConfig(lr=3e-3, warmup_steps=1, total_steps=steps)
+    data = SyntheticLM(DataConfig(vocab=64, seq_len=16, global_batch=2))
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+
+    def drive(fused):
+        p, s = params, opt.init(params)
+        fn = jax.jit(make_train_step(cfg, ocfg, fused_backward=fused))
+        losses = []
+        for k in range(steps):
+            b = {kk: jnp.asarray(v) for kk, v in data.batch(k).items()}
+            p, s, m = fn(p, s, b)
+            losses.append(float(m["loss"]))
+        return p, losses
+
+    p_x, loss_x = drive(False)
+    p_f, loss_f = drive(True)
+    maxdiff = max(float(jnp.max(jnp.abs(a - b)))
+                  for a, b in zip(jax.tree.leaves(p_x),
+                                  jax.tree.leaves(p_f)))
+    ok = (bool(np.all(np.isfinite(loss_f)))
+          and abs(loss_f[0] - loss_x[0]) < 1e-5   # identical forward
+          and maxdiff < 5e-4)                     # f32 chain tolerance
+    row = {"ok": ok, "steps": steps,
+           "hyper_connections": cfg.hyper_connections,
+           "loss_xla": loss_x, "loss_fused": loss_f,
+           "max_param_diff": maxdiff}
+    emit(f"train,fused_bwd_ok={ok},steps={steps},"
+         f"loss0={loss_f[0]:.4f},lossN={loss_f[-1]:.4f},"
+         f"max_param_diff={maxdiff:.2e}")
+    return row
+
+
 def run(which: str = "fused", budget: int = 6, emit=print, cache=None):
     from repro.bench.model import (analyze_program, eager_traffic,
                                    _padded_shapes_for, fast_ratio)
@@ -196,6 +260,7 @@ def run(which: str = "fused", budget: int = 6, emit=print, cache=None):
 
     serving = serving_rows(emit)
     degradations.extend(serving.pop("degradation_events"))
+    train = train_step_rows(emit)
 
     ok = [t for t in tasks_out if t.get("ok")]
     report = {
@@ -204,6 +269,7 @@ def run(which: str = "fused", budget: int = 6, emit=print, cache=None):
         "codegen_version": CODEGEN_VERSION,
         "tasks": tasks_out,
         "serving": serving,
+        "train": train,
         "degradation_events": degradations,
         "summary": {
             "n": len(tasks_out),
@@ -247,6 +313,11 @@ def check_regressions(report, prev, tolerance: float = 0.02) -> list:
         # pipeline: absolute failure, no previous artifact needed
         bad.append(("serving.steady_lowering_entries", 0,
                     srv["steady_lowering_entries"]))
+    trn = report.get("train")
+    if trn is not None and not trn.get("ok", True):
+        # the fused-backward train step diverged from XLA autodiff (or
+        # went non-finite): absolute failure, no previous artifact needed
+        bad.append(("train.fused_backward_ok", True, False))
     if prev is None or prev.get("suite") != report.get("suite"):
         return bad
     old = {t["name"]: t for t in prev.get("tasks", []) if t.get("ok")}
@@ -269,6 +340,14 @@ def check_regressions(report, prev, tolerance: float = 0.02) -> list:
             bad.append(("serving.p99_slot_refill_s",
                         psrv["p99_slot_refill_s"],
                         srv["p99_slot_refill_s"]))
+    # train row: deterministic, so fused/XLA parameter divergence must
+    # not grow materially (10% headroom absorbs chain-codegen bit jitter)
+    ptrn = prev.get("train")
+    if trn is not None and ptrn is not None and trn.get("ok") \
+            and ptrn.get("ok"):
+        if trn["max_param_diff"] > ptrn["max_param_diff"] * 1.1 + 1e-7:
+            bad.append(("train.max_param_diff", ptrn["max_param_diff"],
+                        trn["max_param_diff"]))
     return bad
 
 

@@ -742,6 +742,129 @@ def build_fused_suite() -> List[KernelTask]:
                 "v": rng.randn(*shapes["v"]).astype(np.float32)}
     tasks.append(fused_task("flash_attention", big, small,
                             ref=_flash_ref, make_inputs=_mk_flash))
+
+    # ---------------- backward chains (jaxpr-EXTRACTED VJPs, DESIGN.md
+    # §16): chains traced from jax.grad of the model workloads.  The f64
+    # references mirror the transposed-jaxpr composites the extractor
+    # normalizes (softmax_bwd / log_softmax_bwd / rmsnorm_bwd) -----------
+
+    # d(scores) of the masked attention softmax: the forward re-adds the
+    # saved mask to recover z (rematerialized residual), then the softmax
+    # VJP composite y*(g - sum(g*y)) streams at row width
+    big, small = shp(
+        {"z": (8192, 8192), "mask": (8192, 8192), "g": (8192, 8192),
+         "output": (8192, 8192)},
+        {"z": (64, 384), "mask": (64, 384), "g": (64, 384),
+         "output": (64, 384)})
+
+    def _attn_scores_bwd_ref(z, m, g):
+        y = _softmax(_f64(z) + _f64(m))
+        return y * (_f64(g) - (_f64(g) * y).sum(-1, keepdims=True))
+
+    def _mk_attn_bwd(rng, shapes):
+        return {"z": rng.randn(*shapes["z"]).astype(np.float32),
+                "mask": np.where(rng.rand(*shapes["mask"]) > 0.25, 0.0,
+                                 -1.0e9).astype(np.float32),
+                "g": rng.randn(*shapes["g"]).astype(np.float32)}
+    tasks.append(fused_task("attn_scores_bwd", big, small,
+                            ref=_attn_scores_bwd_ref,
+                            make_inputs=_mk_attn_bwd))
+
+    # d(logits) of the biased LM head: g - softmax(z + bias) * sum(g)
+    big, small = shp(
+        {"z": (8192, 8192), "bias": (8192,), "g": (8192, 8192),
+         "output": (8192, 8192)},
+        {"z": (64, 384), "bias": (384,), "g": (64, 384),
+         "output": (64, 384)})
+    tasks.append(fused_task(
+        "lm_head_bwd", big, small,
+        ref=lambda z, b, g: _f64(g) - _softmax(_f64(z) + _f64(b))
+        * _f64(g).sum(-1, keepdims=True)))
+
+    # d(x) of the pre-norm residual block y = x + f(rmsnorm(x, w)):
+    # the rmsnorm input-VJP plus the residual skip's pass-through grad
+    big, small = shp(
+        {"x": (65536, 2048), "weight": (2048,), "g": (65536, 2048),
+         "output": (65536, 2048)},
+        {"x": (64, 384), "weight": (384,), "g": (64, 384),
+         "output": (64, 384)})
+
+    def _norm_residual_bwd_ref(x, w, g):
+        x64, g64 = _f64(x), _f64(g)
+        n = g64 * _f64(w)
+        inv = 1.0 / np.sqrt((x64 * x64).mean(-1, keepdims=True) + 1e-6)
+        s = (x64 * n).sum(-1, keepdims=True)
+        return g64 + (n * inv - x64 * s * inv ** 3 / x64.shape[-1])
+    tasks.append(fused_task("norm_residual_bwd", big, small,
+                            ref=_norm_residual_bwd_ref))
+
+    # cross-entropy gradient epilogue (extracted map-only chain — the
+    # softmax itself stays upstream because loss and grad branches share
+    # its exp/reduce residuals, DESIGN.md §16): emits both the per-token
+    # loss term onehot*logp and the grad probs - onehot
+    big, small = shp(
+        {"onehot": (16384, 4096), "logits": (16384, 4096),
+         "x2": (16384, 4096), "output": (16384, 4096),
+         "h1": (16384, 4096)},
+        {"onehot": (64, 384), "logits": (64, 384), "x2": (64, 384),
+         "output": (64, 384), "h1": (64, 384)})
+    ce_scale = float(dict(_CHAINS["ce_grad"].attrs)["scale"])
+    tasks.append(fused_task(
+        "ce_grad", big, small,
+        ref=lambda oh, lg, x2, _s=ce_scale: (
+            _f64(oh) * _s + _f64(x2), _f64(oh) * _f64(lg))))
+
+    # mHC stream-mixer backward (the mhc_post_grad source chain): one
+    # stream's cotangent is a 4-way scalar-weighted sum of the upstream
+    # grads; the dynamic mix weights arrive as 1-element GM tensors
+    big, small = shp(
+        {"input": (16384, 4096), "x1": (1,), "x2": (16384, 4096),
+         "x3": (1,), "x4": (16384, 4096), "x5": (1,),
+         "x6": (16384, 4096), "x7": (1,), "output": (16384, 4096)},
+        {"input": (64, 384), "x1": (1,), "x2": (64, 384), "x3": (1,),
+         "x4": (64, 384), "x5": (1,), "x6": (64, 384), "x7": (1,),
+         "output": (64, 384)})
+
+    def _mhc_bwd_ref(a, s1, b, s2, c, s3, d, s4):
+        return (_f64(a) * _f64(s1).reshape(()) +
+                _f64(b) * _f64(s2).reshape(()) +
+                _f64(c) * _f64(s3).reshape(()) +
+                _f64(d) * _f64(s4).reshape(()))
+    tasks.append(fused_task("mhc_stream_bwd_c0", big, small,
+                            ref=_mhc_bwd_ref))
+
+    # SwiGLU backward, silu-branch cluster: sigmoid(input) feeds four
+    # reuse sites (a DAG chain with multi-consumer links); emits the
+    # silu'(gate)-weighted grad plus three residual products the
+    # surrounding matmul-VJPs consume
+    big, small = shp(
+        {"input": (16384, 4096), "x1": (16384, 4096),
+         "x2": (16384, 4096), "h1": (16384, 4096), "h4": (16384, 4096),
+         "h5": (16384, 4096), "output": (16384, 4096)},
+        {"input": (64, 384), "x1": (64, 384), "x2": (64, 384),
+         "h1": (64, 384), "h4": (64, 384), "h5": (64, 384),
+         "output": (64, 384)})
+
+    def _mlp_bwd_c0_ref(x, x1, x2):
+        x64 = _f64(x)
+        s = 1.0 / (1.0 + np.exp(-x64))
+        h2 = _f64(x1) * _f64(x2)
+        return s, x64 * h2, h2 * s, (x64 * s) * _f64(x1)
+    tasks.append(fused_task("mlp_bwd_c0", big, small,
+                            ref=_mlp_bwd_c0_ref))
+
+    # SwiGLU backward, up-branch epilogue: grad*gate-silu product folded
+    # into the accumulated residual grad
+    big, small = shp(
+        {"input": (16384, 4096), "x1": (16384, 4096),
+         "x2": (16384, 4096), "x3": (16384, 4096),
+         "output": (16384, 4096)},
+        {"input": (64, 384), "x1": (64, 384), "x2": (64, 384),
+         "x3": (64, 384), "output": (64, 384)})
+    tasks.append(fused_task(
+        "mlp_bwd_c1", big, small,
+        ref=lambda x, x1, x2, x3: _f64(x2) * (_f64(x) * _f64(x1))
+        + _f64(x3)))
     return tasks
 
 

@@ -88,6 +88,102 @@ def _rc_scale(ctx: RecipeCtx):
     ctx.out("output", y)
 
 
+def _rc_sigmoid(ctx: RecipeCtx):
+    # silu's VJP factors through sigmoid(x) (the saved-residual product
+    # rule), so backward chains carry it as a plain map stage
+    y = ctx.tmp("y")
+    tl.sigmoid(y, ctx.buf("input"))
+    ctx.out("output", y)
+
+
+def _rc_neg(ctx: RecipeCtx):
+    y = ctx.tmp("y")
+    tl.neg(y, ctx.buf("input"))
+    ctx.out("output", y)
+
+
+def _rc_smul(ctx: RecipeCtx):
+    # dynamic-scalar multiply: the scalar is a 1-element GM tensor (a
+    # traced runtime value, e.g. one mhc mixing weight — unlike "scale"
+    # it is NOT a trace-time constant), loaded once into a 1-element
+    # tile and read through extract_scalar
+    y = ctx.tmp("y")
+    tl.mul(y, ctx.buf("a"), tl.extract_scalar(ctx.buf("s"), 0))
+    ctx.out("output", y)
+
+
+def _rc_rmsnorm_bwd(ctx: RecipeCtx):
+    """Input gradient of weighted rmsnorm (the traced VJP composite):
+    with n = g*w, h = mean(x^2) + eps, i = rsqrt(h), s = sum(x*n):
+    dx = n*i - x * s * i^3 / cols   (i/h = i^3 since i = rsqrt(h))."""
+    x = ctx.buf("input")
+    w = ctx.buf("weight")
+    g = ctx.buf("grad")
+    R, C = ctx.tile_shape
+    cols = float(ctx.extras["cols"])
+    eps = float(ctx.attrs.get("eps", 1e-6))
+    red = ctx.tmp("red", (R, 1))
+    inv = ctx.tmp("inv", (R, 1))
+    n, t, y = ctx.tmp("n"), ctx.tmp("t"), ctx.tmp("y")
+    tl.square(t, x)
+    tl.reduce_sum(inv, t, axis=1)
+    tl.mul(inv, inv, 1.0 / cols)
+    tl.add(inv, inv, eps)
+    tl.rsqrt(inv, inv)
+    tl.mul(n, g, w)
+    tl.mul(t, x, n)
+    tl.reduce_sum(red, t, axis=1)
+    tl.mul(red, red, inv)
+    tl.mul(red, red, inv)
+    tl.mul(red, red, inv)
+    tl.mul(red, red, -1.0 / cols)
+    tl.mul(y, n, inv)
+    tl.mul(t, x, red)
+    tl.add(y, y, t)
+    ctx.out("output", y)
+
+
+def _rc_softmax_bwd(ctx: RecipeCtx):
+    """Input gradient of row softmax (the traced VJP composite): with
+    y = softmax(z), dz = y * (g - sum(g * y))."""
+    z = ctx.buf("input")
+    g = ctx.buf("grad")
+    R, C = ctx.tile_shape
+    red = ctx.tmp("red", (R, 1))
+    dot = ctx.tmp("dot", (R, 1))
+    y, t = ctx.tmp("y"), ctx.tmp("t")
+    tl.reduce_max(red, z, axis=1)
+    tl.sub(y, z, red)
+    tl.exp(y, y)
+    tl.reduce_sum(red, y, axis=1)
+    tl.div(y, y, red)
+    tl.mul(t, g, y)
+    tl.reduce_sum(dot, t, axis=1)
+    tl.sub(t, g, dot)
+    tl.mul(y, y, t)
+    ctx.out("output", y)
+
+
+def _rc_log_softmax_bwd(ctx: RecipeCtx):
+    """Input gradient of row log_softmax (the traced VJP composite):
+    dz = g - softmax(z) * sum(g)."""
+    z = ctx.buf("input")
+    g = ctx.buf("grad")
+    R, C = ctx.tile_shape
+    red = ctx.tmp("red", (R, 1))
+    sg = ctx.tmp("sg", (R, 1))
+    y = ctx.tmp("y")
+    tl.reduce_max(red, z, axis=1)
+    tl.sub(y, z, red)
+    tl.exp(y, y)
+    tl.reduce_sum(red, y, axis=1)
+    tl.div(y, y, red)
+    tl.reduce_sum(sg, g, axis=1)
+    tl.mul(y, y, sg)
+    tl.sub(y, g, y)
+    ctx.out("output", y)
+
+
 def _rc_matmul(ctx: RecipeCtx):
     # matmul stages never reach the generic recipe path: both harnesses
     # special-case them (their operand buffers are not row-tile shaped)
@@ -101,11 +197,17 @@ STAGE_OPS: Dict[str, StageOp] = {
     "sub": StageOp(("a", "b"), _rc_sub),
     "swiglu": StageOp(("a", "b"), _rc_swiglu),
     "scale": StageOp(("input",), _rc_scale),
+    "sigmoid": StageOp(("input",), _rc_sigmoid),
+    "neg": StageOp(("input",), _rc_neg),
+    "smul": StageOp(("a", "s"), _rc_smul),
     "matmul": StageOp(("a", "b"), _rc_matmul),
     "matmul_t": StageOp(("a", "b"), _rc_matmul),
     "softmax": StageOp(("input",), NORM.softmax_recipe),
     "log_softmax": StageOp(("input",), NORM.log_softmax_recipe),
     "rmsnorm": StageOp(("input", "weight"), NORM.rmsnorm_recipe),
+    "rmsnorm_bwd": StageOp(("input", "weight", "grad"), _rc_rmsnorm_bwd),
+    "softmax_bwd": StageOp(("input", "grad"), _rc_softmax_bwd),
+    "log_softmax_bwd": StageOp(("input", "grad"), _rc_log_softmax_bwd),
     "layernorm": StageOp(("input", "weight", "bias"),
                          NORM.layernorm_recipe),
 }
@@ -187,9 +289,26 @@ class ChainSpec:
 # Fig.-2 template; rmsnorm: the 2-pass running sum-of-squares form;
 # layernorm: the 2-pass running sum + sum-of-squares form with the
 # E[x^2] - mu^2 variance, so streaming builds no longer refuse to the
-# sequential fallback).  Every other STAGE_OP is tile-local ("map") and
-# can be jammed into any column-tile loop.
-STREAM_STATS = ("softmax", "log_softmax", "rmsnorm", "layernorm")
+# sequential fallback; rmsnorm_bwd: the 2-pass form carrying sum(x^2)
+# AND sum(x*g*w) together).  Every other STAGE_OP is tile-local ("map")
+# and can be jammed into any column-tile loop.  softmax_bwd/log_softmax_bwd
+# are the transposed 2-pass online forms: the same running (max,
+# denominator) carry as forward softmax plus one more carried dot
+# (sum(g*e), rescaled alongside the denominator) resp. plain sum(g).
+STREAM_STATS = ("softmax", "log_softmax", "rmsnorm", "layernorm",
+                "rmsnorm_bwd", "softmax_bwd", "log_softmax_bwd")
+
+
+def _stage_attrs(spec: ChainSpec, stage: ChainStage) -> Dict[str, Any]:
+    """Resolve the chain attrs for ONE stage: when the proposer found the
+    same attr key on several stages with different values it qualified
+    each as ``key@<stage output>`` — overlay this stage's qualified
+    values back onto the plain keys the recipes read."""
+    attrs = {k: v for k, v in spec.attrs if "@" not in k}
+    for k, v in spec.attrs:
+        if k.endswith(f"@{stage.output}"):
+            attrs[k.split("@", 1)[0]] = v
+    return attrs
 
 # Contraction stage ops (DESIGN.md §13).  "matmul_t" computes rows(R) @
 # W^T — its streamed axis is the OUTPUT's trailing dim (each column tile
@@ -212,6 +331,10 @@ def _stream_tensors(spec: ChainSpec) -> set:
         if st.op == "matmul":
             ts.add(st.inputs[0])
         elif st.op == "matmul_t":
+            ts.add(st.output)
+        elif st.op == "smul":
+            # the 1-element scalar operand is never streamed
+            ts.add(st.inputs[0])
             ts.add(st.output)
         else:
             ts.update(st.inputs)
@@ -385,17 +508,23 @@ def _resident_map(spec, stage, sop, shapes, row0, br, _cdim, orig_cols,
     is_vector: Dict[str, bool] = {}
     for canon, t in zip(sop.canon, stage.inputs):
         if t not in by_tensor:
-            is_vector[t] = len(shapes[t]) == 1    # row-broadcast vector
-            if is_vector[t] and prod(shapes[t]) != cols_sp:
-                raise FusionError(
-                    f"chain '{spec.name}': rank-1 operand '{t}' must "
-                    f"match the trailing dim {cols_sp}")
-            by_tensor[t] = tl.alloc_ub(
-                f"{t}_t", (1, cols_s) if is_vector[t] else (br, cols_s),
-                tl.f32)
+            if stage.op == "smul" and canon == "s":
+                # dynamic scalar operand: a 1-element GM tensor, loaded
+                # once (offset 0) and read through extract_scalar
+                is_vector[t] = True
+                by_tensor[t] = tl.alloc_ub(f"{t}_t", (1, 1), tl.f32)
+            else:
+                is_vector[t] = len(shapes[t]) == 1   # row-broadcast vector
+                if is_vector[t] and prod(shapes[t]) != cols_sp:
+                    raise FusionError(
+                        f"chain '{spec.name}': rank-1 operand '{t}' must "
+                        f"match the trailing dim {cols_sp}")
+                by_tensor[t] = tl.alloc_ub(
+                    f"{t}_t", (1, cols_s) if is_vector[t] else (br, cols_s),
+                    tl.f32)
         bufs[canon] = by_tensor[t]
     ctx = RecipeCtx(pb=P,
-                    attrs={**dict(spec.attrs),
+                    attrs={**_stage_attrs(spec, stage),
                            "input": "input", "output": "output"},
                     bufs=bufs, tile_shape=(br, cols_s), dtype=tl.f32)
     ctx.extras["cols"] = orig_cols
@@ -478,13 +607,18 @@ def _stream_stage_program(spec: ChainSpec, idx: int, stage: ChainStage,
     if stream_cp == cols_p:
         n_tiles = h.let("n_tiles", c // tile_length)
     else:
-        n_tiles = h.let("n_tiles", stream_cp // int(tile))
+        # a stage streaming a DIFFERENT width than the primary (e.g. a
+        # head matmul's contraction vs its epilogue's output columns)
+        # gets a width-suffixed tile count so the merged host plan never
+        # conflicts on 'n_tiles'
+        n_tiles = h.let(f"n_tiles_{stream_cp}", stream_cp // int(tile))
 
     h.launch(grid="n_cores")
 
     tensors = [(t, tl.f32, "in", len(shapes[t])) for t in stage.inputs]
     tensors.append((stage.output, tl.f32, "out", len(shapes[stage.output])))
-    eps = float(dict(spec.attrs).get("eps", 1e-6))
+    st_attrs = _stage_attrs(spec, stage)
+    eps = float(st_attrs.get("eps", 1e-6))
     nu_out = spec.link_pad(stage.output)
     with P.kernel(tensors=tensors):
         pid = tl.program_id(0)
@@ -615,6 +749,138 @@ def _stream_stage_program(spec: ChainSpec, idx: int, stage: ChainStage,
                         tl.store(stage.output,
                                  r * _c_of(stage.output) + t * tile_length,
                                  sq)
+        elif stage.op == "rmsnorm_bwd":
+            # 2-pass input-gradient form: pass 1 carries BOTH running
+            # sums the VJP needs — sum(x^2) for the rms and sum(x*g*w)
+            # for the projection term; the row scalars then give
+            # i = rsqrt(mean(x^2) + eps) and coef = -s * i^3 / cols, and
+            # pass 2 stores dx = g*w*i + x*coef tile-by-tile.
+            x_t, w_t, g_t = stage.inputs
+            xt = tl.alloc_ub("xt", (tile_length,), tl.f32)
+            gt = tl.alloc_ub("gt", (tile_length,), tl.f32)
+            wt = tl.alloc_ub("wt", (tile_length,), tl.f32)
+            nt = tl.alloc_ub("nt", (tile_length,), tl.f32)
+            red = tl.alloc_ub("red", (1,), tl.f32)
+            blend = _alloc_blend()
+            with tl.for_range("r", pid * rows_per_core, rows_per_core) as r:
+                ss = tl.scalar("sum_sq", 0.0)
+                sn = tl.scalar("sum_xn", 0.0)
+                with tl.for_range("t1", 0, n_tiles) as t:
+                    with tl.copyin():
+                        tl.load(x_t, _off(x_t, r, t), xt)
+                        tl.load(w_t, t * tile_length, wt)
+                        tl.load(g_t, _off(g_t, r, t), gt)
+                    with tl.compute():
+                        tl.square(nt, xt)
+                        tl.reduce_sum(red, nt)
+                        tl.assign(ss, ss + tl.extract_scalar(red, 0))
+                        tl.mul(nt, gt, wt)
+                        tl.mul(nt, nt, xt)
+                        tl.reduce_sum(red, nt)
+                        tl.assign(sn, sn + tl.extract_scalar(red, 0))
+                inv = tl.scalar("inv_rms", 0.0)
+                coef = tl.scalar("coef", 0.0)
+                with tl.compute():
+                    # scalar rsqrt through a 1-element UB buffer
+                    tl.full(red, ss * (1.0 / orig_cols) + eps)
+                    tl.rsqrt(red, red)
+                    tl.assign(inv, tl.extract_scalar(red, 0))
+                    tl.assign(coef,
+                              sn * inv * inv * inv * (-1.0 / orig_cols))
+                with tl.for_range("t2", 0, n_tiles) as t:
+                    with tl.copyin():
+                        tl.load(x_t, _off(x_t, r, t), xt)
+                        tl.load(w_t, t * tile_length, wt)
+                        tl.load(g_t, _off(g_t, r, t), gt)
+                    with tl.compute():
+                        tl.mul(nt, gt, wt)
+                        tl.mul(nt, nt, inv)
+                        tl.mul(xt, xt, coef)
+                        tl.add(nt, nt, xt)
+                        if blend is not None:
+                            _blend(blend, nt, t)
+                    with tl.copyout():
+                        tl.store(stage.output,
+                                 r * _c_of(stage.output) + t * tile_length,
+                                 nt)
+        elif stage.op in ("softmax_bwd", "log_softmax_bwd"):
+            # transposed 2-pass ONLINE forms.  softmax_bwd carries the
+            # forward (running max m, rescaled denominator d) pair PLUS a
+            # third carry q = sum(g * exp(z - m)) rescaled alongside d,
+            # then stores dz = y * (g - q/d) with y = exp(z - m)/d.
+            # log_softmax_bwd carries (m, d) plus the plain cotangent sum
+            # sg = sum(g) (no rescale: sg never references m), then stores
+            # dz = g - y * sg.
+            z_t, g_t = stage.inputs
+            xt = tl.alloc_ub("xt", (tile_length,), tl.f32)
+            gt = tl.alloc_ub("gt", (tile_length,), tl.f32)
+            yt = tl.alloc_ub("yt", (tile_length,), tl.f32)
+            red = tl.alloc_ub("red", (1,), tl.f32)
+            ea = tl.alloc_ub("ea", (1,), tl.f32)
+            blend = _alloc_blend()
+            with tl.for_range("r", pid * rows_per_core, rows_per_core) as r:
+                rmax = tl.scalar("row_max", -3.0e38)
+                rden = tl.scalar("row_den", 0.0)
+                racc = tl.scalar("row_acc", 0.0)   # q resp. sg
+                with tl.for_range("t1", 0, n_tiles) as t:
+                    with tl.copyin():
+                        tl.load(z_t, _off(z_t, r, t), xt,
+                                pad_value=spec.pad_value(z_t))
+                        tl.load(g_t, _off(g_t, r, t), gt,
+                                pad_value=spec.pad_value(g_t))
+                    with tl.compute():
+                        tl.reduce_max(red, xt)
+                        tm = tl.extract_scalar(red, 0)
+                        # alpha = exp(m_old - m_new), through a 1-element
+                        # buffer (no scalar transcendental in the DSL)
+                        tl.full(ea, rmax - tl.smax(rmax, tm))
+                        tl.exp(ea, ea)
+                        tl.sub(yt, xt, tl.smax(rmax, tm))
+                        tl.exp(yt, yt)
+                        # rmax must update while `red` still holds the
+                        # tile max; the sums then overwrite `red`
+                        tl.assign(rmax, tl.smax(rmax, tm))
+                        tl.reduce_sum(red, yt)
+                        tl.assign(rden,
+                                  rden * tl.extract_scalar(ea, 0)
+                                  + tl.extract_scalar(red, 0))
+                        if stage.op == "softmax_bwd":
+                            tl.mul(yt, yt, gt)
+                            tl.reduce_sum(red, yt)
+                            tl.assign(racc,
+                                      racc * tl.extract_scalar(ea, 0)
+                                      + tl.extract_scalar(red, 0))
+                        else:
+                            tl.reduce_sum(red, gt)
+                            tl.assign(racc,
+                                      racc + tl.extract_scalar(red, 0))
+                if stage.op == "softmax_bwd":
+                    # kq = q / d, through a 1-element buffer
+                    kq = tl.scalar("row_kq", 0.0)
+                    with tl.compute():
+                        tl.full(red, racc)
+                        tl.div(red, red, rden)
+                        tl.assign(kq, tl.extract_scalar(red, 0))
+                with tl.for_range("t2", 0, n_tiles) as t:
+                    with tl.copyin():
+                        tl.load(z_t, _off(z_t, r, t), xt)
+                        tl.load(g_t, _off(g_t, r, t), gt)
+                    with tl.compute():
+                        tl.sub(yt, xt, rmax)
+                        tl.exp(yt, yt)
+                        tl.div(yt, yt, rden)          # y = softmax(z)
+                        if stage.op == "softmax_bwd":
+                            tl.sub(gt, gt, kq)
+                            tl.mul(yt, yt, gt)
+                        else:
+                            tl.mul(yt, yt, racc)
+                            tl.sub(yt, gt, yt)
+                        if blend is not None:
+                            _blend(blend, yt, t)
+                    with tl.copyout():
+                        tl.store(stage.output,
+                                 r * _c_of(stage.output) + t * tile_length,
+                                 yt)
         elif stage.op == "layernorm":
             # 2-pass form: pass 1 carries the running sum AND running
             # sum-of-squares; the variance is E[x^2] - mu^2, so one pass
@@ -627,7 +893,7 @@ def _stream_stage_program(spec: ChainSpec, idx: int, stage: ChainStage,
             x_t = stage.inputs[0]
             w_t = stage.inputs[1] if len(stage.inputs) > 1 else None
             b_t = stage.inputs[2] if len(stage.inputs) > 2 else None
-            eps_ln = float(dict(spec.attrs).get("eps", 1e-5))
+            eps_ln = float(st_attrs.get("eps", 1e-5))
             xt = tl.alloc_ub("xt", (tile_length,), tl.f32)
             sq = tl.alloc_ub("sq", (tile_length,), tl.f32)
             if w_t is not None:
@@ -765,13 +1031,21 @@ def _stream_stage_program(spec: ChainSpec, idx: int, stage: ChainStage,
             # broadcast — their tile is the same shape)
             by_tensor: Dict[str, A.Buffer] = {}
             bufs: Dict[str, A.Buffer] = {}
+            scalar_ts = set()
             for canon, t in zip(sop.canon, stage.inputs):
                 if t not in by_tensor:
-                    by_tensor[t] = tl.alloc_ub(f"{t}_t", (tile_length,),
-                                               tl.f32)
+                    if stage.op == "smul" and canon == "s":
+                        # dynamic scalar operand: 1-element tile, loaded
+                        # at offset 0 every tile visit (the stitcher's
+                        # load dedup collapses the reloads)
+                        scalar_ts.add(t)
+                        by_tensor[t] = tl.alloc_ub(f"{t}_t", (1,), tl.f32)
+                    else:
+                        by_tensor[t] = tl.alloc_ub(f"{t}_t", (tile_length,),
+                                                   tl.f32)
                 bufs[canon] = by_tensor[t]
             ctx = RecipeCtx(pb=P,
-                            attrs={**dict(spec.attrs),
+                            attrs={**st_attrs,
                                    "input": "input", "output": "output"},
                             bufs=bufs, tile_shape=(tile_length,),
                             dtype=tl.f32)
@@ -780,7 +1054,9 @@ def _stream_stage_program(spec: ChainSpec, idx: int, stage: ChainStage,
                 with tl.for_range("t", 0, n_tiles) as t:
                     with tl.copyin():
                         for t_name, buf in by_tensor.items():
-                            tl.load(t_name, _off(t_name, r, t), buf,
+                            tl.load(t_name,
+                                    0 if t_name in scalar_ts
+                                    else _off(t_name, r, t), buf,
                                     pad_value=spec.pad_value(t_name))
                     with tl.compute():
                         sop.recipe(ctx)

@@ -73,9 +73,12 @@ PRIM_MAP: Dict[str, str] = {
 }
 
 # call-like primitives whose sub-jaxpr is inlined during flattening
+# (``remat2`` is the modern ``jax.checkpoint`` primitive: VJPs of
+# checkpointed functions arrive wrapped in it, and refusing to inline it
+# made every checkpointed backward graph an opaque barrier)
 INLINE_PRIMS = frozenset((
     "pjit", "closed_call", "core_call", "named_call", "remat",
-    "checkpoint", "custom_jvp_call", "custom_vjp_call",
+    "remat2", "checkpoint", "custom_jvp_call", "custom_vjp_call",
     "custom_jvp_call_jaxpr", "custom_vjp_call_jaxpr",
 ))
 
@@ -171,6 +174,13 @@ class _Builder:
         alias = self._alias_identity(prim, ins)
         if alias is not None and tuple(alias.shape) == tuple(out_shape):
             return alias
+        if prim == "neg" and len(ins) == 1:
+            # fold neg of a scalar constant so downstream mul-by-const
+            # normalization (scale / identity aliasing) sees the signed
+            # value — VJP graphs negate literal cotangent seeds
+            c = _scalar_const(ins[0])
+            if c is not None:
+                return self.val(out_shape, "const", const=np.asarray(-c))
         out = self.val(out_shape, "op")
         self.eqns.append(_Eqn(prim, list(ins), out, dict(params)))
         return out
@@ -192,9 +202,13 @@ class _Builder:
                 else self.val(out_shape, "op", base=src, bkind="scalar")
         if sizes_kept and dims == tuple(range(r_out - r_in, r_out)):
             return self.val(out_shape, "op", base=src, bkind="trail")
-        if sizes_kept and dims == tuple(range(r_in)) and \
-                all(s == 1 for s in out_shape[r_in:]):
-            return self.val(out_shape, "op", base=src, bkind="keep")
+        if sizes_kept and dims == tuple(range(r_in)):
+            if all(s == 1 for s in out_shape[r_in:]):
+                return self.val(out_shape, "op", base=src, bkind="keep")
+            # leading-axes-kept broadcast along new trailing axes: the
+            # transposed-jaxpr form of a keepdims expansion (VJP graphs
+            # drop the size-1 axis before re-broadcasting a row stat)
+            return self.val(out_shape, "op", base=src, bkind="row")
         return self.emit("broadcast_in_dim", [src], out_shape,
                          {"dims": dims})
 
@@ -221,6 +235,9 @@ class _Builder:
             env[iv] = a
         for eqn in jaxpr.eqns:
             prim = eqn.primitive.name
+            if prim == "add_any":
+                # cotangent accumulation: semantically a plain add
+                prim = "add"
             ins = [self.read(env, v) for v in eqn.invars]
             if prim in INLINE_PRIMS:
                 sub = None
@@ -255,6 +272,30 @@ class _Builder:
                     env[eqn.outvars[0]] = self.val(out_shape, "op",
                                                    base=ins[0],
                                                    bkind="trail")
+                    continue
+                if (in_shape and out_shape == in_shape
+                        + (1,) * (len(out_shape) - len(in_shape))):
+                    # appended size-1 axes: a keepdims expansion
+                    env[eqn.outvars[0]] = self.val(out_shape, "op",
+                                                   base=ins[0],
+                                                   bkind="keep")
+                    continue
+                if (out_shape and in_shape == out_shape
+                        + (1,) * (len(in_shape) - len(out_shape))):
+                    # dropped trailing size-1 axes: pure alias (VJP
+                    # graphs squeeze a keepdims stat before
+                    # re-broadcasting it along the row)
+                    env[eqn.outvars[0]] = self.val(out_shape, "op",
+                                                   base=ins[0])
+                    continue
+            if prim in ("reduce_sum", "reduce_max", "reduce_min",
+                        "reduce_prod"):
+                axes = tuple(int(a) for a in eqn.params.get("axes", ()))
+                if axes and ins[0].shape and \
+                        all(ins[0].shape[a] == 1 for a in axes):
+                    # reducing size-1 axes moves no data: pure alias
+                    env[eqn.outvars[0]] = self.val(
+                        eqn.outvars[0].aval.shape, "op", base=ins[0])
                     continue
             if prim == "integer_pow" and int(eqn.params.get("y", 0)) == 2:
                 env[eqn.outvars[0]] = self.emit(
@@ -307,12 +348,14 @@ class _Rewriter:
     def __init__(self, eqns: List[_Eqn], outputs: List[_Val]):
         self.eqns = eqns
         self.outputs = outputs
+        self._synth = -2000            # fresh vids for rewrite-built vals
 
     def _prod(self) -> Dict[int, int]:
         return {_base(e.out).vid: i for i, e in enumerate(self.eqns)}
 
     def _producer(self, prod, v: _Val, prim: str,
-                  strip: Tuple[str, ...] = ("keep",)) -> Optional[_Eqn]:
+                  strip: Tuple[str, ...] = ("keep", "row")) -> \
+            Optional[_Eqn]:
         """The eqn producing ``v`` (looking through the given broadcast
         kinds) when its primitive is ``prim``."""
         b = v
@@ -339,6 +382,14 @@ class _Rewriter:
         position, iff every dead eqn's output is used only inside the
         pattern.  ``params`` carries recipe-relevant values recovered from
         the pattern (e.g. a norm's traced eps)."""
+        new = _Eqn(prim, list(ins), anchor.out, dict(params or {}))
+        return self._replace_multi(anchor, dead, [new], counts)
+
+    def _replace_multi(self, anchor: _Eqn, dead: List[_Eqn],
+                       new_eqns: List[_Eqn], counts) -> bool:
+        """Like ``_replace`` but splices a short sequence of eqns at the
+        anchor's position (used when a composite match leaves residue, e.g.
+        a residual add wrapped around a matched backward body)."""
         in_pattern = {id(anchor)} | {id(d) for d in dead}
         for d in dead:
             uses = counts.get(_base(d.out).vid, 0)
@@ -347,11 +398,10 @@ class _Rewriter:
                            _base(d.out).vid)
             if uses != internal:
                 return False
-        new = _Eqn(prim, list(ins), anchor.out, dict(params or {}))
         out: List[_Eqn] = []
         for e in self.eqns:
             if e is anchor:
-                out.append(new)
+                out.extend(new_eqns)
             elif id(e) in in_pattern:
                 continue
             else:
@@ -359,7 +409,35 @@ class _Rewriter:
         self.eqns[:] = out
         return True
 
+    def _rewrap(self, v: _Val, new_base: _Val) -> _Val:
+        """A value shaped like ``v`` but aliasing ``new_base`` through the
+        same broadcast kind (used when a rewrite looks through a broadcast
+        and must re-wrap a different underlying tensor)."""
+        if v.base is None or not v.bkind:
+            return new_base
+        self._synth -= 1
+        return _Val(self._synth, v.shape, "op", base=new_base,
+                    bkind=v.bkind)
+
     # -- individual patterns ----------------------------------------------
+
+    def _match_recip_mul(self, e: _Eqn, prod, counts) -> bool:
+        # mul(x, bcast(div(1, s))) -> div(x, bcast(s)): the transposed
+        # form of a row divide (VJP graphs multiply by a broadcast
+        # reciprocal); normalizing it back to div lets the softmax
+        # matcher recognize backward-traced softmax bodies
+        if e.prim != "mul" or len(e.ins) != 2:
+            return False
+        for i, j in ((0, 1), (1, 0)):
+            dv = self._producer(prod, e.ins[i], "div")
+            if dv is None or _scalar_const(dv.ins[0]) != 1.0:
+                continue
+            s = dv.ins[1]
+            if _base(s).kind == "const":
+                continue
+            wrap = self._rewrap(e.ins[i], s)
+            return self._replace(e, [dv], "div", [e.ins[j], wrap], counts)
+        return False
 
     def _match_relu(self, e: _Eqn, prod, counts) -> bool:
         if e.prim != "max" or len(e.ins) != 2:
@@ -548,6 +626,117 @@ class _Rewriter:
         return self._replace(e, [lg, rs, ex, sb, rm], "log_softmax", [x],
                              counts)
 
+    def _match_log_softmax_bwd(self, e: _Eqn, prod, counts) -> bool:
+        # dz of log_softmax, as the transposed jaxpr emits it:
+        #     dz = g + softmax(z) * rowsum(-g)
+        # spelled  add(g, mul(row(div(rowsum(neg(g)), s)), e))  with
+        # e = exp(z - max_row(z)), s = rowsum(e).  The cotangent-side
+        # numerator rides INSIDE the softmax divide, so the forward
+        # softmax matcher can never claim this graph.
+        if e.prim != "add" or len(e.ins) != 2:
+            return False
+        for i, j in ((0, 1), (1, 0)):
+            g_v = e.ins[j]
+            if _base(g_v).kind == "const":
+                continue
+            m = self._producer(prod, e.ins[i], "mul")
+            if m is None:
+                continue
+            e_full, stat = self._split_rowstat(m)
+            if e_full is None or stat is None:
+                continue
+            ex = self._producer(prod, e_full, "exp")
+            if ex is None:
+                continue
+            sb = self._producer(prod, ex.ins[0], "sub")
+            if sb is None:
+                continue
+            z = sb.ins[0]
+            rm = self._producer(prod, sb.ins[1], "reduce_max")
+            if rm is None or not self._last_axis(rm) or \
+                    _base(rm.ins[0]).vid != _base(z).vid:
+                continue
+            dv = self._producer(prod, stat, "div")
+            if dv is None or len(dv.ins) != 2:
+                continue
+            rs_e = self._producer(prod, dv.ins[1], "reduce_sum")
+            if rs_e is None or not self._last_axis(rs_e) or \
+                    _base(rs_e.ins[0]).vid != _base(e_full).vid:
+                continue
+            rs_g = self._producer(prod, dv.ins[0], "reduce_sum")
+            if rs_g is None or not self._last_axis(rs_g):
+                continue
+            ng = self._producer(prod, rs_g.ins[0], "neg")
+            if ng is None or _base(ng.ins[0]).vid != _base(g_v).vid:
+                continue
+            return self._replace(e, [m, ex, sb, rm, dv, rs_e, rs_g, ng],
+                                 "log_softmax_bwd", [z, g_v], counts)
+        return False
+
+    def _match_softmax_bwd(self, e: _Eqn, prod, counts) -> bool:
+        # dz of softmax:  dz = y * (g - rowsum(g * y)),  y = softmax(z).
+        # The transposed jaxpr spells it
+        #     mul(add(div(g, s), row(neg(rowsum(mul(mul(g, s^-2), e))))), e)
+        # with e = exp(z - max_row(z)), s = rowsum(e)  (the s^-2 factor is
+        # the transposed quotient rule folded into one integer_pow).
+        if e.prim != "mul" or len(e.ins) != 2:
+            return False
+        for i, j in ((0, 1), (1, 0)):
+            ex = self._producer(prod, e.ins[i], "exp")
+            if ex is None:
+                continue
+            sb = self._producer(prod, ex.ins[0], "sub")
+            if sb is None:
+                continue
+            z = sb.ins[0]
+            rm = self._producer(prod, sb.ins[1], "reduce_max")
+            if rm is None or not self._last_axis(rm) or \
+                    _base(rm.ins[0]).vid != _base(z).vid:
+                continue
+            ad = self._producer(prod, e.ins[j], "add")
+            if ad is None or len(ad.ins) != 2:
+                continue
+            for p, q in ((0, 1), (1, 0)):
+                dv = self._producer(prod, ad.ins[p], "div")
+                if dv is None:
+                    continue
+                g_v = dv.ins[0]
+                if _base(g_v).kind == "const":
+                    continue
+                rs_e = self._producer(prod, dv.ins[1], "reduce_sum")
+                if rs_e is None or not self._last_axis(rs_e) or \
+                        _base(rs_e.ins[0]).vid != _base(ex.out).vid:
+                    continue
+                ng = self._producer(prod, ad.ins[q], "neg")
+                if ng is None:
+                    continue
+                rs_t = self._producer(prod, ng.ins[0], "reduce_sum")
+                if rs_t is None or not self._last_axis(rs_t):
+                    continue
+                pm = self._producer(prod, rs_t.ins[0], "mul")
+                if pm is None or len(pm.ins) != 2:
+                    continue
+                # mul(mul(g, s^-2), e) in either association
+                gm = ip = None
+                for a, b_ in ((0, 1), (1, 0)):
+                    if _base(pm.ins[a]).vid == _base(ex.out).vid:
+                        gm = self._producer(prod, pm.ins[b_], "mul")
+                if gm is None or len(gm.ins) != 2:
+                    continue
+                for a, b_ in ((0, 1), (1, 0)):
+                    cand = self._producer(prod, gm.ins[a], "integer_pow")
+                    if cand is not None and \
+                            cand.params.get("y") == -2 and \
+                            _base(gm.ins[b_]).vid == _base(g_v).vid:
+                        ip = cand
+                if ip is None or \
+                        _base(ip.ins[0]).vid != _base(rs_e.out).vid:
+                    continue
+                return self._replace(
+                    e, [ex, sb, rm, ad, dv, rs_e, ng, rs_t, pm, gm, ip],
+                    "softmax_bwd", [z, g_v], counts)
+        return False
+
     def _mean_of(self, prod, v: _Val,
                  n_cols: int) -> Tuple[Optional[_Eqn], List[_Eqn]]:
         """Match ``v == mean(u, -1)`` in either lowering — ``sum(u)/C`` or
@@ -705,6 +894,209 @@ class _Rewriter:
                 dead = [im, rq, ad, rs, sq] + dead_mean
                 return self._replace(e, dead, "rmsnorm", [x, w], counts,
                                      params={"eps": float(eps)})
+        return False
+
+    def _split_rowstat(self, m: _Eqn) -> Tuple[Optional[_Val],
+                                               Optional[_Val]]:
+        """Split a binary mul into (full-row operand, per-row stat
+        operand) — the stat side is a keepdims (R,1) value or a row
+        re-broadcast of an (R,) value."""
+        if len(m.ins) != 2:
+            return None, None
+        a0, a1 = m.ins
+        ok0 = _operand_ok(a0, m.out.shape)
+        ok1 = _operand_ok(a1, m.out.shape)
+        if ok0 and not ok1:
+            return a0, a1
+        if ok1 and not ok0:
+            return a1, a0
+        return None, None
+
+    def _match_rmsnorm_bwd(self, e: _Eqn, prod, counts) -> bool:
+        # dx of weighted rmsnorm, exactly as the transposed jaxpr emits
+        # it (three-term add tree; h = mean(x^2)+eps, i = rsqrt(h),
+        # n = g*w, s = sum(x*n, -1), v = s * (-0.5 * i/h) / N):
+        #     dx = n*i + x*v + v*x
+        if e.prim != "add" or len(e.ins) != 2:
+            return False
+        # Flatten the whole same-shape add tree rooted at the anchor: the
+        # three backward terms may be interleaved with residue terms (the
+        # residual cotangent in vjp(x + norm(x)) lands INSIDE the tree, so
+        # no 3-term subtree exists).  Residue terms are re-materialized as
+        # adds around the matched composite.
+        terms: List[_Val] = []
+        tree: List[_Eqn] = []
+        stack = [e.ins[0], e.ins[1]]
+        while stack:
+            v = stack.pop()
+            sub = self._producer(prod, v, "add")
+            if sub is not None and len(sub.ins) == 2 and \
+                    sub.out.shape == e.out.shape:
+                tree.append(sub)
+                stack.extend(sub.ins)
+            else:
+                terms.append(v)
+        if len(terms) < 3:
+            return False
+        for _once in (0,):
+            ni_m = None
+            xv_cands = []   # (term, mul eqn) candidates for the x*v pair
+            extras = []     # residue terms, re-added around the composite
+            for t in terms:
+                m = self._producer(prod, t, "mul")
+                if m is None:
+                    extras.append(t)
+                    continue
+                _, stat = self._split_rowstat(m)
+                if ni_m is None and stat is not None and \
+                        self._producer(prod, stat, "rsqrt") is not None:
+                    ni_m = m
+                else:
+                    xv_cands.append((t, m))
+            if ni_m is None or len(xv_cands) < 2:
+                continue
+            # the two symmetric x*v terms share one x and one v base
+            xv_ms = None
+            for a in range(len(xv_cands)):
+                for b in range(a + 1, len(xv_cands)):
+                    m1, m2 = xv_cands[a][1], xv_cands[b][1]
+                    xa, va = self._split_rowstat(m1)
+                    xb, vb = self._split_rowstat(m2)
+                    if xa is not None and xb is not None and \
+                            _base(xa).vid == _base(xb).vid and \
+                            _base(va).vid == _base(vb).vid:
+                        xv_ms = [m1, m2]
+                        extras.extend(t for k, (t, _m) in
+                                      enumerate(xv_cands) if k not in (a, b))
+                        break
+                if xv_ms is not None:
+                    break
+            if xv_ms is None:
+                continue
+            n_v, i_v = self._split_rowstat(ni_m)
+            if n_v is None:
+                continue
+            i_rq = self._producer(prod, i_v, "rsqrt")
+            # n = g * w  (w a trailing-broadcast learned gain)
+            nm = self._producer(prod, n_v, "mul")
+            if nm is None or len(nm.ins) != 2:
+                continue
+            w_v = g_v = None
+            for a, b_ in ((0, 1), (1, 0)):
+                cand = nm.ins[a]
+                if cand.bkind == "trail" and len(_base(cand).shape) == 1 \
+                        and _base(cand).kind != "const":
+                    w_v, g_v = cand, nm.ins[b_]
+            if w_v is None or _base(g_v).kind == "const":
+                continue
+            # the two symmetric x*v terms share x and v
+            x1, v1 = self._split_rowstat(xv_ms[0])
+            x2, v2 = self._split_rowstat(xv_ms[1])
+            if x1 is None or x2 is None or \
+                    _base(x1).vid != _base(x2).vid or \
+                    _base(v1).vid != _base(v2).vid:
+                continue
+            x_v = x1
+            if _base(x_v).kind == "const" or len(_base(x_v).shape) < 2:
+                continue
+            n_cols = _base(x_v).shape[-1]
+            # v = (s * k) / N   (either mean lowering)
+            dv = self._producer(prod, v1, "div")
+            sk_v = None
+            dead_vmean: List[_Eqn] = []
+            if dv is not None and \
+                    _scalar_const(dv.ins[1]) == float(n_cols):
+                sk_v, dead_vmean = dv.ins[0], [dv]
+            else:
+                mm = self._const_mul(prod, v1, 1.0 / n_cols)
+                if mm is not None:
+                    sk_v = mm
+                    dead_vmean = [self._producer(prod, v1, "mul")]
+            if sk_v is None:
+                continue
+            sk = self._producer(prod, sk_v, "mul")
+            if sk is None or len(sk.ins) != 2:
+                continue
+            s_rs = k_v = None
+            for a, b_ in ((0, 1), (1, 0)):
+                rs_c = self._producer(prod, sk.ins[a], "reduce_sum")
+                if rs_c is not None and self._last_axis(rs_c):
+                    s_rs, k_v = rs_c, sk.ins[b_]
+            if s_rs is None:
+                continue
+            # s = sum(x * n, -1)
+            pm = self._producer(prod, s_rs.ins[0], "mul")
+            if pm is None or len(pm.ins) != 2:
+                continue
+            pv = {_base(pm.ins[0]).vid, _base(pm.ins[1]).vid}
+            if pv != {_base(x_v).vid, _base(n_v).vid}:
+                continue
+            # k = -0.5 * (i / h)
+            ih_v = self._const_mul(prod, k_v, -0.5)
+            if ih_v is None:
+                continue
+            k_m = self._producer(prod, k_v, "mul")
+            ih = self._producer(prod, ih_v, "div")
+            if ih is None or len(ih.ins) != 2:
+                continue
+            if _base(ih.ins[0]).vid != _base(i_v).vid:
+                continue
+            h_v = ih.ins[1]
+            if _base(h_v).vid != _base(i_rq.ins[0]).vid:
+                continue
+            # h = mean(x^2, -1) + eps
+            ad = self._producer(prod, i_rq.ins[0], "add")
+            if ad is None:
+                continue
+            eps = mean_v = None
+            for p, q in ((0, 1), (1, 0)):
+                c = _scalar_const(ad.ins[p])
+                if c is not None and 0 < c < 1e-3:
+                    eps, mean_v = c, ad.ins[q]
+            if mean_v is None:
+                continue
+            mu_rs, mu_dead = self._mean_of(prod, mean_v, n_cols)
+            if mu_rs is None:
+                continue
+            sq = self._producer(prod, mu_rs.ins[0], "square")
+            if sq is not None and _base(sq.ins[0]).vid != _base(x_v).vid:
+                sq = None
+            if sq is None:
+                mq = self._producer(prod, mu_rs.ins[0], "mul")
+                if mq is not None and \
+                        _base(mq.ins[0]).vid == _base(x_v).vid and \
+                        _base(mq.ins[1]).vid == _base(x_v).vid:
+                    sq = mq
+            if sq is None:
+                continue
+            dead_ids: Dict[int, _Eqn] = {}
+            for d in (tree + [ni_m, xv_ms[0], xv_ms[1], nm, i_rq, ih,
+                              k_m, sk, s_rs, pm, ad, mu_rs, sq]
+                      + dead_vmean + mu_dead):
+                dead_ids[id(d)] = d
+            dead_ids.pop(id(e), None)
+            if not extras:
+                return self._replace(e, list(dead_ids.values()),
+                                     "rmsnorm_bwd", [x_v, w_v, g_v], counts,
+                                     params={"eps": float(eps)})
+            # residual form: splice the composite plus adds that restore
+            # the residue terms the tree carried around it
+            new_eqns: List[_Eqn] = []
+            self._synth -= 1
+            acc = _Val(self._synth, e.out.shape, "op")
+            new_eqns.append(_Eqn("rmsnorm_bwd", [x_v, w_v, g_v], acc,
+                                 {"eps": float(eps)}))
+            for k, ex in enumerate(extras):
+                if k == len(extras) - 1:
+                    nxt = e.out
+                else:
+                    self._synth -= 1
+                    nxt = _Val(self._synth, e.out.shape, "op")
+                new_eqns.append(_Eqn("add", [ex, acc], nxt, {}))
+                acc = nxt
+            if self._replace_multi(e, list(dead_ids.values()), new_eqns,
+                                   counts):
+                return True
         return False
 
     def _match_rmsnorm_noweight(self, e: _Eqn, prod, counts) -> bool:
@@ -896,11 +1288,15 @@ class _Rewriter:
         return changed
 
     def run(self) -> None:
-        matchers = (self._match_relu, self._match_silu,
+        matchers = (self._match_recip_mul, self._match_relu,
+                    self._match_silu,
                     self._match_gelu_tanh, self._match_gelu_erf,
                     self._match_softmax, self._match_log_softmax,
+                    self._match_softmax_bwd,
+                    self._match_log_softmax_bwd,
                     self._match_rmsnorm, self._match_layernorm,
                     self._match_swiglu, self._match_matmul,
+                    self._match_rmsnorm_bwd,
                     self._match_rmsnorm_noweight)
         changed = True
         while changed:
@@ -949,13 +1345,41 @@ def _fusable_eqn(e: _Eqn) -> Optional[Tuple[str, List[_Val]]]:
     sound operand roles, else None (barrier)."""
     comps = ("softmax", "log_softmax", "rmsnorm", "layernorm", "gelu",
              "silu", "relu", "swiglu", "square", "tanh", "exp", "abs",
-             "neg", "sqrt", "sigmoid", "scale", "matmul", "matmul_t")
+             "neg", "sqrt", "sigmoid", "scale", "matmul", "matmul_t",
+             "rmsnorm_bwd", "softmax_bwd", "log_softmax_bwd")
     op = e.prim if e.prim in comps else PRIM_MAP.get(e.prim)
     if op is None:
         return None
     if len(e.out.shape) < 2:
         return None                      # rank-1 math cannot anchor a row
     ins = list(e.ins)
+    if op == "mul" and len(ins) == 2:
+        # tensor x traced rank-0 scalar -> 'smul' stage (the scalar rides
+        # as a () input; VJP graphs of mixing layers scale whole streams
+        # by scalar coefficients)
+        for i, j in ((0, 1), (1, 0)):
+            s, t = _base(ins[i]), ins[j]
+            if (not s.shape and s.kind != "const"
+                    and ins[i].bkind in ("", "scalar")
+                    and _operand_ok(t, e.out.shape)
+                    and len(_base(t).shape) >= 2):
+                return "smul", [t, ins[i]]
+    if op == "rmsnorm_bwd":
+        if len(ins) != 3:
+            return None
+        x, w, g = ins
+        if not (_operand_ok(x, e.out.shape)
+                and _operand_ok(g, e.out.shape)
+                and _operand_ok(w, e.out.shape)
+                and len(_base(w).shape) == 1):
+            return None
+        return op, ins
+    if op in ("softmax_bwd", "log_softmax_bwd"):
+        if len(ins) != 2 or not all(
+                _operand_ok(v, e.out.shape) and len(_base(v).shape) >= 2
+                for v in ins):
+            return None
+        return op, ins
     if op in ("matmul", "matmul_t"):
         # operand trailing dims legitimately differ from the output's
         # (the contraction consumes them), so the row-operand gate below
@@ -992,10 +1416,26 @@ def _fusable_eqn(e: _Eqn) -> Optional[Tuple[str, List[_Val]]]:
     return op, ins
 
 
+def _prune_dead(eqns: List[_Eqn], outputs: List[_Val]) -> List[_Eqn]:
+    """Keep only eqns (transitively) feeding the traced outputs."""
+    prod = {_base(e.out).vid: e for e in eqns}
+    live: Set[int] = set()
+    stack = [_base(o).vid for o in outputs]
+    while stack:
+        vid = stack.pop()
+        e = prod.get(vid)
+        if e is None or id(e) in live:
+            continue
+        live.add(id(e))
+        for v in e.ins:
+            stack.append(_base(v).vid)
+    return [e for e in eqns if id(e) in live]
+
+
 # recipe-default eps per normalizing composite: a traced value that matches
 # the default is elided from node attrs (keeps declared-fixture
 # fingerprints byte-stable); anything else rides into the chain attrs
-_EPS_DEFAULT = {"rmsnorm": 1e-6, "layernorm": 1e-5}
+_EPS_DEFAULT = {"rmsnorm": 1e-6, "layernorm": 1e-5, "rmsnorm_bwd": 1e-6}
 
 
 def _node_attrs(e: _Eqn, op: str) -> Tuple[Tuple[str, object], ...]:
@@ -1027,23 +1467,17 @@ def extract_graph(fn: Callable,
     b = _Builder()
     args = [b.val(shp, "ext", name=arg) for arg, shp in shapes]
     outs = b.process_jaxpr(closed.jaxpr, list(closed.consts), args)
-    rw = _Rewriter(b.eqns, outs)
+    # prune dead eqns BEFORE rewriting as well as after: VJP traces carry
+    # dead forward-residual arithmetic whose uses of pattern-internal
+    # values would otherwise defeat the composite matchers' only-used-
+    # inside-the-pattern check
+    eqns = _prune_dead(b.eqns, outs)
+    rw = _Rewriter(eqns, outs)
     rw.run()
     eqns, outputs = rw.eqns, rw.outputs
 
     # ---- liveness: keep only eqns feeding the traced outputs -------------
-    prod = {_base(e.out).vid: e for e in eqns}
-    live: Set[int] = set()
-    stack = [_base(o).vid for o in outputs]
-    while stack:
-        vid = stack.pop()
-        e = prod.get(vid)
-        if e is None or id(e) in live:
-            continue
-        live.add(id(e))
-        for v in e.ins:
-            stack.append(_base(v).vid)
-    eqns = [e for e in eqns if id(e) in live]
+    eqns = _prune_dead(eqns, outputs)
 
     # ---- naming ----------------------------------------------------------
     names: Dict[int, str] = {}
@@ -1145,6 +1579,13 @@ def canonicalize_spec(spec):
     def r(t):
         return ren.get(t, t)
 
+    def rk(k):
+        # per-stage qualified attr keys ('scale@%t3') carry tensor names
+        if "@" in k:
+            base_k, t = k.split("@", 1)
+            return f"{base_k}@{r(t)}"
+        return k
+
     from .chain import ChainSpec, ChainStage   # late: avoids import cycle
     return ChainSpec(
         name=spec.name,
@@ -1155,7 +1596,7 @@ def canonicalize_spec(spec):
         keep=tuple((r(a), r(b)) for a, b in spec.keep),
         route=tuple((r(a), r(b)) for a, b in spec.route),
         pad_values=tuple((r(t), v) for t, v in spec.pad_values),
-        attrs=spec.attrs)
+        attrs=tuple(sorted((rk(k), v) for k, v in spec.attrs)))
 
 
 def extract_chains(fn: Callable,

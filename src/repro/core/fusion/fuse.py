@@ -351,8 +351,11 @@ def fuse_programs(progs: Sequence[A.Program], *, name: str,
     Raises :class:`FusionError` for legality failures and
     ``NotImplementedError`` when the combined VMEM footprint exceeds the
     Pass-0 budget (``revalidate=True``)."""
-    if len(progs) < 2:
-        raise FusionError("need at least two programs to fuse")
+    if not progs:
+        raise FusionError("empty chain")
+    # a single-stage chain "fuses" to its normalized single-program form —
+    # the stitchers handle it (a lone head accumulator seeds the merged
+    # row directly), so matmul-only chains no longer refuse fusion
     pats = [program_pattern(p) for p in progs]
     if all(p == "single_visit" for p in pats):
         return _fuse_single_visit(progs, name=name, keep=keep,
@@ -533,6 +536,17 @@ def _route_links(links: _Links, route: Optional[Mapping[str, str]],
     r = _Routing(route=route, extra=[], scratch=[], link_shapes={})
     exposed_new: Set[str] = set()
     target_lives: Dict[str, List[Tuple[int, int]]] = {}
+    # a real (non-link) output tensor is written at its producing stage and
+    # must survive to the end of the chain: seed its live range so no link
+    # round-trips through it AFTER that write (a leaf output produced
+    # mid-chain — e.g. a VJP chain's saved-activation output — would
+    # otherwise be silently clobbered by a later link's copyout).  A link
+    # whose last copyin lands at or before the output's producing stage may
+    # still take the target over (the stage reads before it writes).
+    _END = 1 << 30
+    for _t, _i in links.produced.items():
+        if _t not in links.links:
+            target_lives.setdefault(_t, []).append((_i, _END))
 
     def _claim(target: str, link: str) -> bool:
         # half-open [produced, last consumer): the target is written at the
@@ -1271,22 +1285,75 @@ def _fuse_streaming(progs: Sequence[A.Program], *, name: str,
                for it in row_post])
         final_pass = rebuilt
 
+    # ---- head-accumulator stitching (matmul-at-head chains) --------------
+    acc_head = False
+    row_links_done: Set[str] = set()    # links already produced at row scope
+
+    def _append_row_stage(stage: _SStage) -> None:
+        """Stitch a stage BEHIND a head accumulator at row scope.
+
+        A head accumulator (lone matmul) finishes its whole output row in
+        VMEM before any consumer could run, so there is no tile stream to
+        jam consumers into.  Instead the consumer's entire row body rides
+        along in the same row visit: each link out of the already-stitched
+        body round-trips ONCE through a claimed spill target (the usual
+        size-compatible-output / scratch-GM rule) and the consumer re-reads
+        the spill at its own tiling — no span agreement needed, it is a
+        real GM round trip.  One row loop, one kernel launch; the
+        sequential form re-walks the row once per stage."""
+        nonlocal merged_items
+        consumed_here = sorted(
+            {st.tensor for st, _ in A.walk_stmts(stage.row.body)
+             if isinstance(st, A.Load) and st.tensor in links.links},
+            key=lambda l: links.produced[l])
+        remap: Dict[str, str] = {}
+        for link in consumed_here:
+            if link not in row_links_done:
+                raise FusionError(
+                    f"stage {stage.index}: consumes link '{link}' before "
+                    f"any stitched stage produced it")
+            target = keep.get(link) or spills.get(link)
+            if target is None:
+                target = _claim_spill(link)
+            elif link in keep:
+                spills[link] = target
+            # retarget the producer's store (idempotent after the first
+            # consumer) and this stage's own re-reads
+            merged_items = [_retarget_tensors(it, {link: target})
+                            for it in merged_items]
+            remap[link] = target
+            link_consumers[link] -= 1
+        merged_items.extend(_retarget_tensors(it, remap)
+                            for it in stage.row.body)
+        if stage.out_tensor in links.links:
+            row_links_done.add(stage.out_tensor)
+
     # ---- drive -----------------------------------------------------------
     for stage in stages:
-        if stage.pattern == "stat":
+        if acc_head:
+            _append_row_stage(stage)
+        elif stage.pattern == "stat":
             if merged_items is None:
                 _splice_stat(stage)
             else:
                 _splice_next_stat(stage)
         elif stage.pattern == "acc" and merged_items is None:
-            # a loop-carried accumulator consumes its link tile-by-tile:
-            # without a spliced stat pass to ride there is no tile stream
-            # to jam into (a map prefix alone could, but the jam state
-            # has no pass boundary for the row-scope drain) — refuse, so
-            # the chain falls back to its sequential streaming form
-            raise FusionError(
-                f"stage {stage.index} ('{stage.prog.name}'): accumulator "
-                f"stages fuse only behind a loop-carried stat stage")
+            if jam_loads or jam_computes or jam_stores or link_store:
+                # a loop-carried accumulator consumes its link tile-by-
+                # tile: jammed map prefixes have no pass boundary for the
+                # row-scope drain — refuse, so the chain falls back to
+                # its sequential streaming form
+                raise FusionError(
+                    f"stage {stage.index} ('{stage.prog.name}'): "
+                    f"accumulator stages fuse only behind a loop-carried "
+                    f"stat stage or at the chain head")
+            # HEAD accumulator: nothing upstream to jam into it, so its
+            # row body seeds the merged row and every later stage rides
+            # along at row scope
+            acc_head = True
+            merged_items = list(stage.row.body)
+            if stage.out_tensor in links.links:
+                row_links_done.add(stage.out_tensor)
         elif merged_items is None:
             _jam_map_into(stage, jam_loads, jam_computes, jam_stores, _JT)
         else:
@@ -1350,7 +1417,7 @@ def _fuse_streaming(progs: Sequence[A.Program], *, name: str,
     meta = _merged_meta(progs, values, final, link_shapes)
     meta["fusion"] = {"mode": "fused", "pattern": "streaming",
                       "links": list(links.links), "kept": dict(keep),
-                      "spills": dict(spills),
+                      "spills": dict(spills), "head_acc": acc_head,
                       "stages": [p.name for p in progs]}
     if scratch_extra:
         meta["scratch_outs"] = [t for t, _ in scratch_extra]

@@ -83,7 +83,16 @@ class OpGraph:
 NEUTRAL_ROW_PAD: Dict[str, float] = {"softmax": -3.0e38,
                                      "log_softmax": -3.0e38,
                                      "rmsnorm": 0.0,
-                                     "layernorm": 0.0}
+                                     "layernorm": 0.0,
+                                     "rmsnorm_bwd": 0.0,
+                                     "softmax_bwd": -3.0e38,
+                                     "log_softmax_bwd": -3.0e38}
+
+# backward stat ops whose EXTRA row inputs (beyond inputs[0]) also feed a
+# row reduction and therefore need a 0 pad of their own: log_softmax_bwd
+# reduces the raw cotangent (rowsum(-g)); softmax_bwd's g only ever enters
+# multiplied by y, which the -3e38 z-pad already zeroes in padded lanes
+STAT_EXTRA_ZERO_PAD: Dict[str, Tuple[int, ...]] = {"log_softmax_bwd": (1,)}
 
 # stat stages that can ABSORB a downstream neutral-pad requirement on their
 # own output (DESIGN.md §12): no pad value survives a row reduction, so
@@ -152,6 +161,8 @@ def _infer_pad_values(stages: Sequence[OpNode],
             nu = NEUTRAL_ROW_PAD.get(st.op)
             if nu is not None:
                 _require(req, st.inputs[0], nu)
+            for k in STAT_EXTRA_ZERO_PAD.get(st.op, ()):
+                _require(req, st.inputs[k], 0.0)
             if st.op in MATMUL_OPS:
                 _require(req, st.inputs[0], 0.0)
         for idx in reversed(range(len(stages))):   # consumers first
@@ -167,6 +178,15 @@ def _infer_pad_values(stages: Sequence[OpNode],
                         f"matmul '{st.op}' producing '{st.output}' can "
                         f"only guarantee a 0 pad, not {nu}")
                 # zero-filled operand tails already establish the 0 tail
+            elif st.op == "smul" and nu == 0.0:
+                # tensor x dynamic scalar: only a 0 pad survives (the
+                # scalar's value is unknown at propose time)
+                _require(req, st.inputs[0], 0.0)
+            elif st.op in ("softmax_bwd", "log_softmax_bwd") and nu == 0.0:
+                # both GUARANTEE a 0 output tail: y = softmax(z) is 0 in
+                # padded lanes (z pads -3e38) and every output term carries
+                # a factor of y or the 0-padded cotangent
+                pass
             elif st.op in _BINARY_IDENTITY and len(st.inputs) == 2:
                 a, b = (1, 0) if idx in swaps else (0, 1)
                 _require(req, st.inputs[a], nu)
@@ -399,16 +419,28 @@ def propose_chains(graph: OpGraph, fusable: Optional[Set[str]] = None):
             key=lambda kv: (0, chain_inputs.index(kv[0]))
             if kv[0] in chain_inputs else (1, stage_order.index(kv[0]))))
         # merge per-node attrs (e.g. a traced non-default norm eps) into
-        # the component's attrs; conflicting values refuse rather than
-        # silently picking one
+        # the component's attrs.  When two stages carry the same key with
+        # DIFFERENT values (a backward graph routinely holds several
+        # 'scale' stages with distinct constants), every carrier of that
+        # key is qualified per-stage as ``key@output`` instead of
+        # refusing; recipe readers look the qualified key up first and
+        # fall back to the chain-wide one.  Single-carrier chains keep
+        # the unqualified key, so existing fingerprints stay byte-stable.
         cattrs: Dict[str, object] = dict(graph.attrs)
+        carriers: Dict[str, List[OpNode]] = {}
+        for n in comp:
+            for k, _v in getattr(n, "attrs", ()) or ():
+                carriers.setdefault(k, []).append(n)
         for n in comp:
             for k, v in getattr(n, "attrs", ()) or ():
-                if k in cattrs and cattrs[k] != v:
-                    raise ProposeError(
-                        f"component {ci} of '{graph.name}': conflicting "
-                        f"'{k}' attrs {cattrs[k]} vs {v}")
-                cattrs[k] = v
+                vals = {dict(getattr(m, "attrs", ()) or ())[k]
+                        for m in carriers[k]}
+                conflict = len(vals) > 1 or (
+                    k in dict(graph.attrs) and dict(graph.attrs)[k] != v)
+                if conflict:
+                    cattrs[f"{k}@{n.output}"] = v
+                else:
+                    cattrs[k] = v
         name = graph.name if len(
             [c for c in comps if len(c) >= 2]) == 1 else \
             f"{graph.name}_c{ci}"

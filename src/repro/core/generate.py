@@ -73,6 +73,16 @@ def framework_tasks():
              by_fused["rmsnorm_swiglu"], by_fused["attn_scores"],
              by_fused["swiglu_proj"], by_fused["mask_softmax"],
              by_fused["double_softmax"], by_fused["flash_attention"]]
+    # backward chains (jaxpr-extracted VJPs, DESIGN.md §16): one artifact
+    # per legality class — streaming softmax/log_softmax VJPs, the rmsnorm
+    # input-VJP + residual skip, the ce grad epilogue (map-only — the
+    # softmax stays upstream, shared loss/grad residuals), the mHC
+    # stream-mixer cotangent (mhc_post_grad's source chain) and both
+    # SwiGLU backward clusters
+    picks += [by_fused["attn_scores_bwd"], by_fused["lm_head_bwd"],
+              by_fused["norm_residual_bwd"], by_fused["ce_grad"],
+              by_fused["mhc_stream_bwd_c0"], by_fused["mlp_bwd_c0"],
+              by_fused["mlp_bwd_c1"]]
     picks += mhc_tasks()
     return picks
 

@@ -7,4 +7,6 @@ jitted callable; `<name>(*arrays)` is the cached convenience entry.
 from . import (rmsnorm, softmax, adamw, swiglu, add_rmsnorm,
                bias_gelu, rmsnorm_swiglu, attn_scores, swiglu_proj,
                mask_softmax, double_softmax, flash_attention,
-               mhc_post, mhc_post_grad)
+               mhc_post, mhc_post_grad,
+               attn_scores_bwd, lm_head_bwd, norm_residual_bwd,
+               ce_grad, mhc_stream_bwd_c0, mlp_bwd_c0, mlp_bwd_c1)

@@ -1,0 +1,92 @@
+"""Re-derived mhc_post backward through the traced-VJP fusion chain.
+
+The hand-written generated artifact (``kernels/generated/mhc_post_grad.py``)
+computes the data-path gradient of the mhc stream mixer — dh = M^T-mix of
+the output cotangents, do = beta-mix — with the sinkhorn plan inlined.
+This module derives the SAME computation from the extraction pipeline
+instead (DESIGN.md §16): ``models/workloads.py`` traces ``jax.vjp`` of the
+per-stream decomposed ``mhc_post`` data path, the rewriter folds each
+dynamic stream product into an ``smul`` stage, and the proposer registers
+the mixing chain (all five cotangent trees — four dh streams and do —
+fingerprint-dedupe onto :data:`MHC_BWD_CHAIN`, provenance ``"extracted"``).
+The assembly here stitches that ONE generated chain kernel over the output
+streams: column j of the sinkhorn plan drives dh[:, j, :], beta drives do.
+Sinkhorn itself stays a tiny (n, n) XLA computation outside the kernel,
+exactly as the hand-written artifact's rationale records (DESIGN.md §7).
+
+``tests/kernels/test_mhc_bwd.py`` pins this assembly numerically against
+the hand-written generated kernel AND the float64 oracle — the backward
+analogue of the forward golden re-derivations.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+# the registered chain the mhc_stream_bwd workload extraction derives
+MHC_BWD_CHAIN = "mhc_stream_bwd_c0"
+
+
+@functools.lru_cache(maxsize=8)
+def _chain_entry(rows: int, cols: int):
+    """Compile the fused stream-mixing chain at one (rows, cols) slice.
+
+    Rank-2 chain inputs are the per-stream cotangent slices; rank-0 inputs
+    (the traced dynamic scalars) materialize as 1-element GM tensors."""
+    from ..core.fusion.chain import CHAINS, build_fused
+    from ..core.lowering.pipeline import transcompile
+    spec = CHAINS[MHC_BWD_CHAIN]
+    shapes = {t: ((rows, cols) if r == 2 else (1,)) for t, r in spec.inputs}
+    for t in spec.outputs:
+        shapes[t] = (rows, cols)
+    prog = build_fused(spec, shapes)
+    art = transcompile(prog, verify_against_interp=False)
+    return art.entry
+
+
+def _stream_pairing(spec):
+    """The (matrix operand, scalar operand) pair of every smul stage, in
+    the order the matrix operands appear in ``spec.inputs`` — which is the
+    traced forward stream order (canonicalization names inputs by first
+    use, and the decomposed workload consumes streams in order)."""
+    pairs = {st.inputs[0]: st.inputs[1]
+             for st in spec.stages if st.op == "smul"}
+    mats = [t for t, r in spec.inputs if r == 2]
+    return [(m, pairs[m]) for m in mats]
+
+
+def mhc_post_grad_derived(g, logits, beta, *, sinkhorn_iters: int = 5):
+    """Data-path gradient of ``models/layers.mhc_post`` via the extracted
+    chain: ``g`` (R, n, d) output cotangents, ``logits`` (n, n) sinkhorn
+    logits, ``beta`` (n,).  Returns ``(dh, do)`` with dh (R, n, d) and
+    do (R, d), matching ``bench/mhc.mhc_post_grad_ref`` and the
+    hand-written generated kernel."""
+    from ..core.fusion.chain import CHAINS
+    from ..models.layers import sinkhorn
+    spec = CHAINS[MHC_BWD_CHAIN]
+    pairing = _stream_pairing(spec)
+    n = len(pairing)
+    R, n_g, d = g.shape
+    if n_g != n:
+        raise ValueError(
+            f"mhc_post_grad_derived: {n_g} streams, but the extracted "
+            f"chain mixes {n}")
+    gf = jnp.asarray(g, jnp.float32)
+    M = sinkhorn(jnp.asarray(logits, jnp.float32), sinkhorn_iters)
+    betaf = jnp.asarray(beta, jnp.float32)
+    entry = _chain_entry(R, d)
+    gs = [gf[:, i, :] for i in range(n)]
+
+    def mix(scalars):
+        # bind the chain inputs in spec order: stream slices to the rank-2
+        # operands, their paired mixing weights to the rank-0 operands
+        by_name = {}
+        for i, (m, s) in enumerate(pairing):
+            by_name[m] = gs[i]
+            by_name[s] = scalars[i][None]       # 1-element GM tensor
+        return entry(*[by_name[t] for t, _ in spec.inputs])
+
+    dh = [mix([M[i, j] for i in range(n)]) for j in range(n)]
+    do = mix([betaf[i] for i in range(n)])
+    return jnp.stack(dh, axis=1), do

@@ -65,11 +65,19 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--mesh-shape", default="1,1")
+    ap.add_argument("--hyper-connections", type=int, default=0,
+                    help="mHC residual stream count (0 disables)")
+    ap.add_argument("--fused-mhc-bwd", action="store_true",
+                    help="run the mHC backward through the extracted "
+                         "mhc_stream_bwd fusion chain (DESIGN.md §16); "
+                         "requires --hyper-connections > 0 to matter")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
     ap.add_argument("--ckpt-every", type=int, default=10)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.hyper_connections:
+        cfg = cfg.scaled(hyper_connections=args.hyper_connections)
     shape = tuple(int(x) for x in args.mesh_shape.split(","))
     axes = ("data", "model")[: len(shape)] if len(shape) <= 2 \
         else ("pod", "data", "model")
@@ -96,7 +104,8 @@ def main():
     bshard = S.batch_shardings(mesh, batch0)
     params = jax.device_put(params, pshard)
     state = jax.device_put(state, oshard)
-    step_fn = jax.jit(make_train_step(cfg, ocfg, args.grad_accum),
+    step_fn = jax.jit(make_train_step(cfg, ocfg, args.grad_accum,
+                                      fused_backward=args.fused_mhc_bwd),
                       in_shardings=(pshard, oshard, bshard),
                       donate_argnums=(0, 1))
 

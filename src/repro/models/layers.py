@@ -768,8 +768,88 @@ def mhc_pre(p, streams):
 
 
 def mhc_post(p, streams, layer_out, cfg: ArchConfig):
-    """The mHC_post op (kernels/generated/mhc_post.py is its kernel)."""
-    M = sinkhorn(p["logits"], cfg.sinkhorn_iters).astype(streams.dtype)
+    """The mHC_post op (kernels/generated/mhc_post.py is its kernel).
+
+    Under :func:`mhc_post_impl`'s ``"fused_bwd"`` scope (trace-time
+    dispatch — ``make_train_step(fused_backward=True)`` activates it) the
+    custom-VJP variant runs the EXTRACTED backward chain for the
+    data-path cotangents (DESIGN.md §16)."""
+    if _MHC_POST_IMPL[0] == "fused_bwd":
+        return _mhc_post_fused(p, streams, layer_out, cfg.sinkhorn_iters)
+    return _mhc_post_math(p, streams, layer_out, cfg.sinkhorn_iters)
+
+
+def _mhc_post_math(p, streams, layer_out, iters: int):
+    M = sinkhorn(p["logits"], iters).astype(streams.dtype)
     mixed = jnp.einsum("ij,jbsd->ibsd", M, streams)
     return mixed + p["beta"].astype(streams.dtype)[:, None, None, None] \
         * layer_out[None]
+
+
+# trace-time mhc_post implementation switch (one-element list so the
+# context manager mutates in place): "xla" | "fused_bwd"
+_MHC_POST_IMPL = ["xla"]
+
+
+class mhc_post_impl:
+    """``with mhc_post_impl("fused_bwd"): ...`` — route every mhc_post
+    traced in the scope through the custom-VJP variant whose backward is
+    the extracted ``mhc_stream_bwd`` fusion chain."""
+
+    def __init__(self, impl: str):
+        if impl not in ("xla", "fused_bwd"):
+            raise ValueError(f"unknown mhc_post impl {impl!r}")
+        self.impl = impl
+
+    def __enter__(self):
+        self.prev = _MHC_POST_IMPL[0]
+        _MHC_POST_IMPL[0] = self.impl
+        return self
+
+    def __exit__(self, *exc):
+        _MHC_POST_IMPL[0] = self.prev
+        return False
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _mhc_post_fused(p, streams, layer_out, iters):
+    return _mhc_post_math(p, streams, layer_out, iters)
+
+
+def _mhc_post_fused_fwd(p, streams, layer_out, iters):
+    return (_mhc_post_math(p, streams, layer_out, iters),
+            (p, streams, layer_out))
+
+
+def _mhc_post_fused_bwd(iters, res, g):
+    """Backward of mhc_post with the DATA-PATH cotangents (d_streams,
+    d_layer_out) computed by the extracted mhc_stream_bwd chain
+    (kernels/mhc_bwd.py) — the n+1 mixing trees run as ONE generated
+    fused kernel per mix.  The tiny (n, n) parameter gradients (sinkhorn
+    pullback, beta dot) stay XLA, mirroring the forward artifact's
+    rationale (DESIGN.md §7, §16)."""
+    from ..kernels.mhc_bwd import mhc_post_grad_derived
+    p, streams, layer_out = res
+    n, B, S, d = g.shape
+    g32 = g.astype(jnp.float32)
+    # (n, B, S, d) -> (B*S, n, d): the chain mixes streams per row
+    g_rows = jnp.transpose(g32, (1, 2, 0, 3)).reshape(B * S, n, d)
+    dh, do = mhc_post_grad_derived(g_rows, p["logits"], p["beta"],
+                                   sinkhorn_iters=iters)
+    d_streams = jnp.transpose(dh.reshape(B, S, n, d),
+                              (2, 0, 1, 3)).astype(streams.dtype)
+    d_layer_out = do.reshape(B, S, d).astype(layer_out.dtype)
+    # parameter gradients: dM pulled back through sinkhorn, beta dot
+    s32 = streams.astype(jnp.float32)
+    dM = jnp.einsum("ibsd,jbsd->ij", g32, s32)
+    _, sk_vjp = jax.vjp(lambda lg: sinkhorn(lg, iters), p["logits"])
+    d_logits = sk_vjp(dM.astype(p["logits"].dtype))[0]
+    d_beta = jnp.einsum("ibsd,bsd->i", g32,
+                        layer_out.astype(jnp.float32)) \
+        .astype(p["beta"].dtype)
+    dp = {"alpha": jnp.zeros_like(p["alpha"]), "logits": d_logits,
+          "beta": d_beta}
+    return dp, d_streams, d_layer_out
+
+
+_mhc_post_fused.defvjp(_mhc_post_fused_fwd, _mhc_post_fused_bwd)

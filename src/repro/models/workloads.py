@@ -192,6 +192,94 @@ def _decode_attention(x, wq, wk, wv, wo, k_cache, v_cache, length):
     return out, new_cache["k"], new_cache["v"]
 
 
+# --------------------------------------------------------------------------
+# Backward passes (DESIGN.md §16): jax.vjp through the SAME layer
+# implementations, traced so the extractor sees the transposed-jaxpr idioms
+# real training emits — cotangent broadcasts, mul-chains over saved forward
+# residuals, and row-axis reduce_sums.  The rewriter folds these into the
+# *_bwd composites (rmsnorm_bwd / softmax_bwd / log_softmax_bwd) and the
+# proposer derives backward chains from them exactly like forward ones.
+# --------------------------------------------------------------------------
+
+def _norm_residual_bwd(x, weight, g):
+    # input gradient of the pre-norm residual block y = x + norm(x): the
+    # transposed jaxpr interleaves the residual cotangent INTO the
+    # rmsnorm_bwd add-tree; the matcher re-materializes it as a trailing
+    # add, deriving the [rmsnorm_bwd, add] chain
+    _, vjp = jax.vjp(
+        lambda xx: xx + L.apply_norm({"scale": weight}, xx, _CFG), x)
+    return vjp(g)[0]
+
+
+def _ckpt_norm_bwd(x, weight, g):
+    # the SAME block under jax.checkpoint (gradient rematerialization):
+    # the VJP jaxpr re-runs the forward under remat2/stop_gradient
+    # wrapping, which the extractor aliases through on the backward path
+    # just like forward.  Must fingerprint-dedupe onto norm_residual_bwd.
+    f = jax.checkpoint(
+        lambda xx: xx + L.apply_norm({"scale": weight}, xx, _CFG))
+    _, vjp = jax.vjp(f, x)
+    return vjp(g)[0]
+
+
+def _mlp_bwd(x, w_gate, w_up, w_down, g):
+    # input gradient through the real swiglu MLP: the transposed matmuls
+    # are barriers, leaving the silu-backward interior (sigmoid mul-chain
+    # from the product rule over the saved gate residual) and the two-
+    # branch cotangent merge as the extractable inter-matmul segments
+    _, vjp = jax.vjp(
+        lambda xx: L.apply_mlp(
+            {"w_gate": w_gate, "w_up": w_up, "w_down": w_down},
+            xx, "swiglu"), x)
+    return vjp(g)[0]
+
+
+def _attn_scores_bwd(z, mask, g):
+    # score gradient of masked attention probabilities: softmax_bwd's
+    # transposed form (y * (g - rowsum(g * y)) recomputed from the saved
+    # exp/denominator residuals) behind the forward mask add
+    _, vjp = jax.vjp(lambda x: jax.nn.softmax(x + mask, axis=-1), z)
+    return vjp(g)[0]
+
+
+def _lm_head_bwd(z, bias, g):
+    # logit gradient of the LM-head epilogue: log_softmax_bwd
+    # (g - softmax(z) * rowsum(g)) behind the forward bias add
+    _, vjp = jax.vjp(lambda x: jax.nn.log_softmax(x + bias, axis=-1), z)
+    return vjp(g)[0]
+
+
+def _ce_grad(logits, onehot):
+    # fused loss+grad: the manual stable-logsumexp cross entropy with a
+    # stop_gradient'd max shift (the idiom training code writes by hand).
+    # KNOWN PARTIAL COVERAGE (DESIGN.md §16): the loss and grad branches
+    # share the exp/reduce_sum residuals, so neither the log_softmax nor
+    # the log_softmax_bwd composite can claim them — extraction still
+    # yields the map-only epilogue chain, and the stop_gradient wrapping
+    # exercises the backward aliasing rule.
+    def loss(lg):
+        m = jax.lax.stop_gradient(jnp.max(lg, axis=-1, keepdims=True))
+        logz = jnp.squeeze(m, -1) + jnp.log(jnp.sum(jnp.exp(lg - m), -1))
+        gold = jnp.sum(onehot * lg, axis=-1)
+        return jnp.sum(logz - gold)
+    return jax.value_and_grad(loss)(logits)
+
+
+def _mhc_stream_bwd(M, beta, g):
+    # backward of the mhc_post stream mixer (models/layers.mhc_post) in
+    # its per-stream decomposed form: dh[j] = sum_i M[i,j] * g[i] and
+    # do = sum_i beta[i] * g[i].  The einsum form is a single opaque
+    # barrier; decomposed, every stream product is an smul (dynamic
+    # scalar multiply) and the extractor derives the smul/add mixing
+    # chain — all five trees (4 dh streams + do) fingerprint-dedupe onto
+    # ONE registered chain, the building block kernels/mhc_bwd.py
+    # assembles into the derived mhc_post_grad.
+    gs = [g[:, i, :] for i in range(4)]
+    dh = [sum(M[i, j] * gs[i] for i in range(4)) for j in range(4)]
+    do = sum(beta[i] * gs[i] for i in range(4))
+    return jnp.stack(dh, axis=1), do
+
+
 _HD = _CFG.resolved_head_dim
 
 WORKLOADS: Tuple[Workload, ...] = (
@@ -258,4 +346,35 @@ WORKLOADS: Tuple[Workload, ...] = (
               ("w_up", (_D, _FF)), ("w_down", (_FF, _D))),
              doc="full pre-norm transformer layer (validation: all chains "
                  "must dedupe onto registered fingerprints)"),
+    # ---- backward passes (DESIGN.md §16) ---------------------------------
+    Workload("norm_residual_bwd", _norm_residual_bwd,
+             (("x", (_B * _S, _D)), ("weight", (_D,)),
+              ("g", (_B * _S, _D))),
+             doc="VJP of the pre-norm residual block: rmsnorm_bwd + "
+                 "residual cotangent add"),
+    Workload("ckpt_norm_bwd", _ckpt_norm_bwd,
+             (("x", (_B * _S, _D)), ("weight", (_D,)),
+              ("g", (_B * _S, _D))),
+             doc="the same VJP under jax.checkpoint (dedupes onto "
+                 "norm_residual_bwd)"),
+    Workload("mlp_bwd", _mlp_bwd,
+             (("x", (_B * _S, _D)), ("w_gate", (_D, _FF)),
+              ("w_up", (_D, _FF)), ("w_down", (_FF, _D)),
+              ("g", (_B * _S, _D))),
+             doc="VJP through the real swiglu MLP: silu-backward interior "
+                 "+ two-branch cotangent merge"),
+    Workload("attn_scores_bwd", _attn_scores_bwd,
+             (("z", (_S, _S)), ("mask", (_S, _S)), ("g", (_S, _S))),
+             doc="VJP of masked attention probabilities (softmax_bwd)"),
+    Workload("lm_head_bwd", _lm_head_bwd,
+             (("z", (_B * _S, _D)), ("bias", (_D,)), ("g", (_B * _S, _D))),
+             doc="VJP of the LM-head epilogue (log_softmax_bwd)"),
+    Workload("ce_grad", _ce_grad,
+             (("logits", (_S, _D)), ("onehot", (_S, _D))),
+             doc="fused stable-CE loss+grad pair (known partial coverage, "
+                 "stop_gradient aliasing)"),
+    Workload("mhc_stream_bwd", _mhc_stream_bwd,
+             (("M", (4, 4)), ("beta", (4,)), ("g", (_B * 4, 4, _S))),
+             doc="per-stream decomposed mhc_post backward: the smul/add "
+                 "mixing chain mhc_post_grad re-derives from"),
 )

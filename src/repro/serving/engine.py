@@ -23,7 +23,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import time
-from collections import deque
+from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Tuple
@@ -302,6 +302,7 @@ class ServeReport:
     decode_retries: int = 0
     deadline_hit: bool = False
     prefill_shared: int = 0         # admissions served from a shared prefix
+    prefill_memo_evictions: int = 0  # LRU evictions from the prefix memo
     fastpath_errors: int = 0        # contained fastpath-resolution failures
     slot_refill_s: List[float] = field(default_factory=list)
 
@@ -315,7 +316,7 @@ class ServeEngine:
                  max_len: int, greedy: bool = True,
                  warm_kernels: bool = False, kernel_cache=None,
                  decode_fastpath=True, prefix_sharing: bool = True,
-                 clock=None):
+                 prefix_memo_slots: int = 8, clock=None):
         self.params = params
         self.cfg = cfg
         self.B = batch_slots
@@ -345,8 +346,13 @@ class ServeEngine:
         else:
             self.fastpath = None
         self.prefix_sharing = bool(prefix_sharing)
+        # LRU cap on memoized prefills (each entry holds a full
+        # per-request KV cache, so an unbounded per-run memo scales with
+        # the number of DISTINCT duplicated prompts — PR 8's memo did)
+        self.prefix_memo_slots = max(0, int(prefix_memo_slots))
         self._prefix_counts: Dict[bytes, int] = {}
-        self._prefix_memo: Dict[bytes, Dict[str, Any]] = {}
+        self._prefix_memo: "OrderedDict[bytes, Tuple[Any, Any]]" = \
+            OrderedDict()
         self.caches = T.init_caches(cfg, batch_slots, max_len)
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
         self.slot_remaining = np.zeros(batch_slots, np.int64)
@@ -380,31 +386,41 @@ class ServeEngine:
         carry the SAME prompt (N samples per prompt), the shared prefix
         is prefilled ONCE — later admissions broadcast the memoized
         first-token logits and per-request cache into their slot.  The
-        memo is lazy: only prompts with multiplicity > 1 are retained,
-        and an entry is dropped after its last sample admits.  Greedy
-        decode is bit-identical with sharing on or off (the jitted
-        prefill is deterministic, so the broadcast IS the recompute)."""
+        memo is lazy AND bounded: only prompts with multiplicity > 1 are
+        retained, an entry is dropped after its last sample admits, and
+        at most ``prefix_memo_slots`` fingerprints stay resident (LRU —
+        an evicted prompt's next admission simply re-prefills).  Greedy
+        decode is bit-identical with sharing on or off and across
+        evictions (the jitted prefill is deterministic, so the broadcast
+        IS the recompute)."""
         fault_point("serve.admit", token=f"uid={req.uid}")
         rep = self.last_report
         key = (np.asarray(req.prompt, np.int32).tobytes()
                if self.prefix_sharing else None)
+        left = 0
+        if key is not None:
+            # queued samples of this prompt remaining AFTER this one
+            left = self._prefix_counts.get(key, 1) - 1
+            self._prefix_counts[key] = left
         shared = self._prefix_memo.get(key) if key is not None else None
         if shared is not None:
-            logits_last, caches1 = shared["logits"], shared["caches"]
-            shared["remaining"] -= 1
-            if shared["remaining"] <= 0:
-                self._prefix_memo.pop(key, None)
+            logits_last, caches1 = shared
+            if left <= 0:
+                self._prefix_memo.pop(key, None)   # last sample admitted
+            else:
+                self._prefix_memo.move_to_end(key)  # LRU touch
             if rep is not None:
                 rep.prefill_shared += 1
         else:
             batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
             logits, caches1 = self._prefill(self.params, batch)
             logits_last = logits[0, -1]
-            n = self._prefix_counts.get(key, 1) if key is not None else 1
-            if n > 1:
-                self._prefix_memo[key] = {"logits": logits_last,
-                                          "caches": caches1,
-                                          "remaining": n - 1}
+            if key is not None and left > 0:
+                self._prefix_memo[key] = (logits_last, caches1)
+                while len(self._prefix_memo) > self.prefix_memo_slots:
+                    self._prefix_memo.popitem(last=False)
+                    if rep is not None:
+                        rep.prefill_memo_evictions += 1
 
         # slot write: leaf shapes are (B, ...) or (repeats, B, ...)
         def write_leaf(c_all, c_one):
@@ -516,7 +532,7 @@ class ServeEngine:
         # prefix sharing: prompt multiplicity across THIS run's requests
         # decides which prefills are worth memoizing (lazy broadcast)
         self._prefix_counts = {}
-        self._prefix_memo = {}
+        self._prefix_memo = OrderedDict()
         if self.prefix_sharing:
             for r in requests:
                 k = np.asarray(r.prompt, np.int32).tobytes()
@@ -615,6 +631,6 @@ class ServeEngine:
                 self._deadline_fail(
                     queue, f"step budget {max_steps} exhausted", report)
                 break
-        self._prefix_memo = {}
+        self._prefix_memo = OrderedDict()
         self._prefix_counts = {}
         return requests

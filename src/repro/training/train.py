@@ -24,14 +24,26 @@ def make_loss_fn(cfg: ArchConfig):
 
 
 def make_train_step(cfg: ArchConfig, ocfg: opt.AdamWConfig,
-                    grad_accum: int = 1):
+                    grad_accum: int = 1, fused_backward: bool = False):
     """Returns train_step(params, opt_state, batch) -> (params, opt_state,
     metrics).  With grad_accum > 1 the global batch is split along axis 0
     into microbatches accumulated under a lax.scan (keeps peak activation
-    memory at one microbatch)."""
+    memory at one microbatch).
+
+    ``fused_backward=True`` routes the model's mHC stream mixers through
+    their custom-VJP variant at trace time: the backward pass's stream
+    cotangents run the EXTRACTED ``mhc_stream_bwd`` fusion chain
+    (DESIGN.md §16) instead of XLA einsums.  No-op for configs without
+    hyper-connections."""
+    from ..models import layers as L
     loss_fn = make_loss_fn(cfg)
 
     def grads_of(params, batch):
+        if fused_backward:
+            # trace-time dispatch: the scope only matters while the
+            # jaxpr is built, so it composes with jit/scan
+            with L.mhc_post_impl("fused_bwd"):
+                return jax.value_and_grad(loss_fn)(params, batch)
         return jax.value_and_grad(loss_fn)(params, batch)
 
     def train_step(params, opt_state, batch):

@@ -391,19 +391,26 @@ def test_default_eps_is_elided_from_attrs():
     assert dict(specs[0].attrs) == {}
 
 
-def test_conflicting_eps_in_one_component_refuses():
-    """Two norms with different eps in ONE fusable component cannot share
-    the chain-level attrs dict: refuse instead of silently picking one."""
+def test_conflicting_eps_in_one_component_qualifies_per_stage():
+    """Two norms with different eps in ONE fusable component used to refuse
+    outright; the proposer now qualifies each value as ``eps@<stage out>``
+    so both stages keep their own eps (needed for traced VJP chains whose
+    stages legitimately disagree on scalar attrs)."""
     from repro.models import layers as L
     from repro.models.workloads import _CFG
-    with pytest.raises(ProposeError):
-        extract_chains(
-            lambda x, w, w2: L.apply_norm(
-                {"scale": w2},
-                L.apply_norm({"scale": w}, x, _CFG, eps=1e-4),
-                _CFG, eps=2e-4),
-            (("input", (4, 64)), ("w", (64,)), ("w2", (64,))),
-            name="eps_conflict")
+    specs = extract_chains(
+        lambda x, w, w2: L.apply_norm(
+            {"scale": w2},
+            L.apply_norm({"scale": w}, x, _CFG, eps=1e-4),
+            _CFG, eps=2e-4),
+        (("input", (4, 64)), ("w", (64,)), ("w2", (64,))),
+        name="eps_conflict")
+    assert len(specs) == 1
+    spec = specs[0]
+    assert [st.op for st in spec.stages] == ["rmsnorm", "rmsnorm"]
+    attrs = dict(spec.attrs)
+    assert attrs[f"eps@{spec.stages[0].output}"] == pytest.approx(1e-4)
+    assert attrs[f"eps@{spec.stages[1].output}"] == pytest.approx(2e-4)
 
 
 # ---------------------------------------------------------------------------
@@ -537,3 +544,28 @@ def test_decode_attention_cache_ops_are_barriers_not_swallowed():
     # stay barriers; BOTH cache contractions classify as stages
     assert ops.count("barrier.dot_general") == 4
     assert ops.count("matmul_t") == 1 and ops.count("matmul") == 1
+
+
+# ---------------------------------------------------------------------------
+# Backward-path stop_gradient aliasing (DESIGN.md §16): remat'd VJPs
+# ---------------------------------------------------------------------------
+
+def test_checkpointed_norm_vjp_extracts_and_dedupes():
+    """VJP of the pre-norm residual block under jax.checkpoint: the
+    transposed jaxpr re-runs the forward with the saved residuals wrapped
+    in stop_gradient (remat).  The extractor must alias straight through
+    those wrappers on the backward path — same rule as forward — so the
+    checkpointed trace yields the SAME [rmsnorm_bwd, add] chain and
+    fingerprint-dedupes onto norm_residual_bwd instead of refusing."""
+    w = W["ckpt_norm_bwd"]
+    specs = extract_chains(w.fn, w.shapes, name=w.name)
+    assert specs, "checkpointed VJP extraction refused (stop_gradient)"
+    ops = [[st.op for st in s.stages] for s in specs]
+    assert ["rmsnorm_bwd", "add"] in ops, ops
+    (spec,) = [s for s in specs
+               if [st.op for st in s.stages] == ["rmsnorm_bwd", "add"]]
+    assert chain_fingerprint(spec) == \
+        chain_fingerprint(CHAINS["norm_residual_bwd"])
+    # dedupe means NO separate ckpt chain got registered
+    assert not any(n.startswith("ckpt_norm") for n in CHAINS)
+    assert CHAIN_SOURCES["norm_residual_bwd"] == ("extracted",)

@@ -255,7 +255,10 @@ def test_node_attrs_merge_into_component_attrs():
     assert dict(spec.attrs) == {"eps": 1e-4}
 
 
-def test_conflicting_node_attrs_refuse():
+def test_conflicting_node_attrs_qualify_per_stage():
+    # conflicting per-node attr values no longer refuse: each is kept
+    # under a ``key@<node output>`` qualified name so every stage can
+    # recover its own value
     g = OpGraph(
         name="eps_conflict",
         inputs=(("x", 2), ("w", 1), ("w2", 1)),
@@ -264,5 +267,8 @@ def test_conflicting_node_attrs_refuse():
                       attrs=(("eps", 1e-4),)),
                OpNode("rmsnorm", ("h", "w2"), "y",
                       attrs=(("eps", 2e-4),))))
-    with pytest.raises(ProposeError):
-        propose_chains(g)
+    chains = propose_chains(g)
+    assert len(chains) == 1
+    attrs = dict(chains[0].attrs)
+    assert attrs["eps@h"] == pytest.approx(1e-4)
+    assert attrs["eps@y"] == pytest.approx(2e-4)

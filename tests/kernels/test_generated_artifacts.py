@@ -238,3 +238,113 @@ def test_generated_double_softmax_is_multi_stat_streaming():
     with pytest.raises(ValueError, match="row count"):
         G.double_softmax.make({"input": (512, 786432),
                                "output": (512, 786432)})
+
+
+# ---------------- backward-chain artifacts (DESIGN.md §16) ----------------
+# Checked-in artifacts of the jaxpr-EXTRACTED VJP chains — each backward
+# legality class gets one standalone kernel, verified against the
+# transposed-jaxpr composite in float64.
+
+@pytest.mark.parametrize("rows", [64, 128])
+def test_generated_attn_scores_bwd(rows):
+    """softmax VJP behind a rematerialized mask-add: y*(g - sum(g*y))."""
+    rng = np.random.RandomState(19)
+    z = rng.randn(rows, 8192).astype(np.float32)
+    m = np.where(rng.rand(rows, 8192) > 0.25, 0.0, -1.0e9) \
+        .astype(np.float32)
+    g = rng.randn(rows, 8192).astype(np.float32)
+    out = G.attn_scores_bwd.attn_scores_bwd_fused(z, m, g, interpret=True)
+    s = z.astype(np.float64) + m.astype(np.float64)
+    e = np.exp(s - s.max(-1, keepdims=True))
+    y = e / e.sum(-1, keepdims=True)
+    g64 = g.astype(np.float64)
+    want = y * (g64 - (g64 * y).sum(-1, keepdims=True))
+    np.testing.assert_allclose(np.asarray(out), want, rtol=2e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("rows", [64, 128])
+def test_generated_lm_head_bwd(rows):
+    """log_softmax VJP behind the bias-add: g - softmax(z+b)*sum(g)."""
+    rng = np.random.RandomState(21)
+    z = rng.randn(rows, 8192).astype(np.float32)
+    b = rng.randn(8192).astype(np.float32)
+    g = rng.randn(rows, 8192).astype(np.float32)
+    out = G.lm_head_bwd.lm_head_bwd_fused(z, b, g, interpret=True)
+    s = z.astype(np.float64) + b.astype(np.float64)
+    e = np.exp(s - s.max(-1, keepdims=True))
+    y = e / e.sum(-1, keepdims=True)
+    g64 = g.astype(np.float64)
+    want = g64 - y * g64.sum(-1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=2e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("rows", [64, 128])
+def test_generated_norm_residual_bwd(rows):
+    """rmsnorm input-VJP plus the residual skip's pass-through grad."""
+    rng = np.random.RandomState(23)
+    x = rng.randn(rows, 2048).astype(np.float32)
+    w = rng.randn(2048).astype(np.float32)
+    g = rng.randn(rows, 2048).astype(np.float32)
+    out = G.norm_residual_bwd.norm_residual_bwd_fused(x, w, g,
+                                                      interpret=True)
+    x64, g64 = x.astype(np.float64), g.astype(np.float64)
+    n = g64 * w.astype(np.float64)
+    inv = 1.0 / np.sqrt((x64 * x64).mean(-1, keepdims=True) + 1e-6)
+    s = (x64 * n).sum(-1, keepdims=True)
+    want = g64 + n * inv - x64 * s * inv ** 3 / x64.shape[-1]
+    np.testing.assert_allclose(np.asarray(out), want, rtol=2e-4, atol=1e-5)
+
+
+def test_generated_ce_grad():
+    """Cross-entropy grad epilogue: (probs - onehot, onehot*logp)."""
+    rng = np.random.RandomState(25)
+    oh = (rng.rand(64, 4096) < (1.0 / 4096)).astype(np.float32)
+    lg = rng.randn(64, 4096).astype(np.float32)
+    x2 = rng.randn(64, 4096).astype(np.float32)
+    dout, loss_term = G.ce_grad.ce_grad_fused(oh, lg, x2, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(dout), x2.astype(np.float64) - oh, rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(loss_term), oh.astype(np.float64) * lg,
+        rtol=2e-4, atol=1e-5)
+
+
+def test_generated_mhc_stream_bwd():
+    """The mhc_post_grad source chain: 4-way scalar-weighted grad sum with
+    dynamic 1-element mix weights (smul via extract_scalar)."""
+    rng = np.random.RandomState(27)
+    mats = [rng.randn(64, 4096).astype(np.float32) for _ in range(4)]
+    scals = [rng.randn(1).astype(np.float32) for _ in range(4)]
+    out = G.mhc_stream_bwd_c0.mhc_stream_bwd_c0_fused(
+        mats[0], scals[0], mats[1], scals[1], mats[2], scals[2],
+        mats[3], scals[3], interpret=True)
+    want = sum(m.astype(np.float64) * float(s[0])
+               for m, s in zip(mats, scals))
+    np.testing.assert_allclose(np.asarray(out), want, rtol=2e-4, atol=1e-5)
+    src = __import__("inspect").getsource(G.mhc_stream_bwd_c0)
+    assert "Store/Load round trips deleted" in src
+
+
+def test_generated_mlp_bwd_chains():
+    """Both SwiGLU backward clusters: the sigmoid-reuse DAG (4 outputs)
+    and the up-branch epilogue."""
+    rng = np.random.RandomState(29)
+    x, x1, x2, x3 = (rng.randn(64, 4096).astype(np.float32)
+                     for _ in range(4))
+    h1, h4, h5, out = G.mlp_bwd_c0.mlp_bwd_c0_fused(x, x1, x2,
+                                                    interpret=True)
+    x64 = x.astype(np.float64)
+    sg = 1.0 / (1.0 + np.exp(-x64))
+    h2 = x1.astype(np.float64) * x2.astype(np.float64)
+    np.testing.assert_allclose(np.asarray(h1), sg, rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h4), x64 * h2,
+                               rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h5), h2 * sg,
+                               rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out), (x64 * sg)
+                               * x1.astype(np.float64),
+                               rtol=2e-4, atol=1e-5)
+    y = G.mlp_bwd_c1.mlp_bwd_c1_fused(x, x1, x2, x3, interpret=True)
+    want = x2.astype(np.float64) * (x64 * x1.astype(np.float64)) \
+        + x3.astype(np.float64)
+    np.testing.assert_allclose(np.asarray(y), want, rtol=2e-4, atol=1e-5)

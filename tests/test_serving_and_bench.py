@@ -270,6 +270,46 @@ def test_prefix_sharing_tokens_bit_identical_on_off(env):
     assert on == off
 
 
+def test_prefix_memo_lru_cap_evicts_and_stays_bit_identical(env):
+    """FIXED (PR 8 follow-up): the prefill memo was per-run and UNBOUNDED —
+    every distinct duplicated prompt parked a full KV cache for the whole
+    run.  It is now an LRU capped at ``prefix_memo_slots`` admitted-prompt
+    fingerprints: overflow evicts the least-recently-used entry, an
+    evicted prompt's next sample re-prefills, and greedy outputs stay
+    bit-identical before/after eviction (and vs sharing off)."""
+    cfg, params = env
+    rng = np.random.RandomState(17)
+    # 3 distinct prompts, 2 samples each, interleaved so a 1-slot memo
+    # must evict between the two samples of every prompt
+    prompts = [rng.randint(0, cfg.vocab, 8).astype(np.int32)
+               for _ in range(3)]
+    order = [0, 1, 2, 0, 1, 2]
+
+    def serve(sharing, slots=1):
+        eng = ServeEngine(params, cfg, batch_slots=1, max_len=32,
+                          decode_fastpath=False, prefix_sharing=sharing,
+                          prefix_memo_slots=slots)
+        reqs = [Request(uid=i, prompt=prompts[k].copy(), max_new_tokens=4)
+                for i, k in enumerate(order)]
+        eng.run(reqs)
+        return eng, [r.generated for r in reqs]
+
+    eng1, capped = serve(True, slots=1)
+    rep = eng1.last_report
+    assert rep.ok
+    assert rep.prefill_memo_evictions > 0       # the cap actually bit
+    assert len(eng1._prefix_memo) == 0          # dropped after the run
+    assert rep.prefill_shared < len(order) - len(prompts) + 1
+
+    eng8, roomy = serve(True, slots=8)
+    assert eng8.last_report.prefill_memo_evictions == 0
+    # all second samples broadcast when the memo never overflows
+    assert eng8.last_report.prefill_shared == 3
+
+    _, off = serve(False)
+    assert capped == roomy == off               # bit-identical throughout
+
+
 def test_traffic_model_exact_for_relu():
     from repro.bench import suite
     from repro.bench.model import analyze_program, _padded_shapes_for
