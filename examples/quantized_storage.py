@@ -1,0 +1,55 @@
+"""Quantized-storage walkthrough (DESIGN.md §17): the storage-dtype
+axis as a tuner-DISCOVERED dimension, and axis-safe cache keys.
+
+    PYTHONPATH=src python examples/quantized_storage.py
+"""
+import dataclasses
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.bench.tasks import fused_suite  # noqa: E402
+from repro.core.planner import generate  # noqa: E402
+from repro.core.tuning import ArtifactCache, tune  # noqa: E402
+
+
+def main():
+    fused = {t.name: t for t in fused_suite()}
+
+    # 1. Discovery: the storage axis is OPEN on this task
+    #    (attrs['tuner_axes']), so the hill climb walks the
+    #    variant x storage_dtype product and finds (fused, int8) on its
+    #    own at the bandwidth-bound geometry — nothing is pinned.
+    task = fused["rmsnorm_swiglu_int8"]
+    with tempfile.TemporaryDirectory() as d:
+        tr = tune(task, budget=8, cache=d)
+    best = tr.best.candidate
+    print(f"discovered: variant={best.variant} "
+          f"storage_dtype={best.storage_dtype} "
+          f"(modeled {tr.best.ratio:.2f}x vs eager)")
+    f32_fused = max((t.ratio for t in tr.trials
+                     if t.candidate.variant == "fused"
+                     and t.candidate.storage_dtype == "f32"), default=0.0)
+    print(f"  vs best f32 fused point: {f32_fused:.2f}x")
+
+    # 2. Pinning: a serving path that KNOWS its dtype pins the axis via
+    #    task.attrs['axes']; the artifact cache fingerprints the
+    #    assignment, so the f32 and int8 entries can never cross-serve.
+    base = fused["bias_gelu"]
+    int8 = dataclasses.replace(
+        base, name="bias_gelu_int8",
+        attrs={**base.attrs, "axes": {"storage_dtype": "int8"}})
+    with tempfile.TemporaryDirectory() as d:
+        cache = ArtifactCache(d)
+        r32 = generate(base, cache=cache)
+        r8 = generate(int8, cache=cache)
+        print(f"f32:  Pass@1={r32.pass_ok} cached={r32.cached}")
+        print(f"int8: Pass@1={r8.pass_ok} cached={r8.cached} "
+              f"(regenerated — the warmed f32 entry did not serve it)")
+        print(f"int8 again: cached={generate(int8, cache=cache).cached}")
+
+
+if __name__ == "__main__":
+    main()

@@ -59,6 +59,13 @@ def analyze_program(prog: A.Program,
     plan = eval_host(prog.host, shapes)
     grid = plan[prog.host.grid]
     t = Traffic()
+    # HBM bytes move at the GM tensor's storage dtype, not the UB tile's
+    # compute dtype: a quantized int8 tensor (DESIGN.md §17) costs 1 B/elem
+    # over the bus even though its tile is f32 — this is exactly how the
+    # tuner *discovers* narrow-storage variants at bandwidth-bound
+    # geometries.  (For every pre-quantization program GM == tile dtype,
+    # so f32 modeled numbers are unchanged.)
+    gm_dt = {tp.name: tp.dtype for tp in prog.kernel.tensors}
 
     def visit(body, mult: int):
         for st in body:
@@ -66,11 +73,13 @@ def analyze_program(prog: A.Program,
                 visit(st.body, mult * st.count)
             elif isinstance(st, A.CopyIn):
                 for ld in st.body:
-                    t.loaded += ld.dst.size * ld.dst.dtype.nbytes * mult
+                    nb = gm_dt.get(ld.tensor, ld.dst.dtype).nbytes
+                    t.loaded += ld.dst.size * nb * mult
                     t.transfers += mult
             elif isinstance(st, A.CopyOut):
                 for s in st.body:
-                    t.stored += s.src.size * s.src.dtype.nbytes * mult
+                    nb = gm_dt.get(s.tensor, s.src.dtype).nbytes
+                    t.stored += s.src.size * nb * mult
                     t.transfers += mult
             elif isinstance(st, A.ComputeBlock):
                 for op in st.body:

@@ -540,7 +540,8 @@ def fused_task(chain_name: str, big: Dict[str, Tuple[int, ...]],
 
 
 def decode_fused_task(group: int, head_dim: int, kv_len: int,
-                      batch_slots: int = None) -> KernelTask:
+                      batch_slots: int = None,
+                      kv_dtype: str = "f32") -> KernelTask:
     """The flash_attention chain at one decode-bucket slice geometry.
 
     Serving's steady-state decode runs the chain per (batch, kv-head)
@@ -549,7 +550,12 @@ def decode_fused_task(group: int, head_dim: int, kv_len: int,
     replaced by a per-slot length mask.  The bucket rides the attrs so
     each bucket keys a DISTINCT artifact-cache entry — a warmed fleet
     resolves every bucket from cache and never enters the lowering
-    pipeline mid-traffic."""
+    pipeline mid-traffic.
+
+    ``kv_dtype`` keys the bucket on the storage-dtype axis (DESIGN.md
+    §17): a non-f32 value suffixes the task name AND pins
+    ``attrs['axes']``, so the planner builds (and fingerprints) the
+    quantized-storage chain — an f32-warmed cache can never serve it."""
     from ..core.fusion.chain import CHAINS
     fa_scale = float(dict(CHAINS["flash_attention"].attrs)["scale"])
     big = {"q": (group, head_dim), "k": (kv_len, head_dim),
@@ -575,13 +581,17 @@ def decode_fused_task(group: int, head_dim: int, kv_len: int,
                 "v": rng.randn(*shapes["v"]).astype(np.float32)}
 
     bucket = [int(batch_slots) if batch_slots else 0, int(kv_len)]
+    kv_dtype = str(kv_dtype or "f32")
+    name = f"decode_attention_b{bucket[0]}_kv{kv_len}"
+    extra = {"decode_bucket": bucket,
+             "decode_geometry": {"group": int(group),
+                                 "head_dim": int(head_dim)}}
+    if kv_dtype != "f32":
+        name += f"_{kv_dtype}"
+        extra["axes"] = {"storage_dtype": kv_dtype}
     return fused_task(
         "flash_attention", big, small, ref=_decode_ref,
-        make_inputs=_mk_decode,
-        name=f"decode_attention_b{bucket[0]}_kv{kv_len}",
-        extra_attrs={"decode_bucket": bucket,
-                     "decode_geometry": {"group": int(group),
-                                         "head_dim": int(head_dim)}})
+        make_inputs=_mk_decode, name=name, extra_attrs=extra)
 
 
 _silu64 = _ACT_REFS["silu"]
@@ -865,6 +875,34 @@ def build_fused_suite() -> List[KernelTask]:
         "mlp_bwd_c1", big, small,
         ref=lambda x, x1, x2, x3: _f64(x2) * (_f64(x) * _f64(x1))
         + _f64(x3)))
+
+    # quantized-storage discovery tasks (DESIGN.md §17): the SAME two
+    # bandwidth-bound geometries as above (one resident chain, one
+    # streaming), but with the storage-dtype axis OPENED for the tuner
+    # (``tuner_axes`` — a numerics-changing axis is a per-task opt-in).
+    # The hill climb must DISCOVER the int8-storage fused variant from
+    # the roofline byte counts; the checked-in ``*_int8`` artifacts and
+    # the bench quantized section come from these rows.
+    big, small = shp(
+        {"input": (16384, 4096), "weight": (4096,), "gate": (16384, 4096),
+         "output": (16384, 4096)},
+        {"input": (64, 384), "weight": (384,), "gate": (64, 384),
+         "output": (64, 384)})
+    tasks.append(fused_task(
+        "rmsnorm_swiglu", big, small,
+        ref=lambda x, w, g: _silu64(_rmsnorm(x, w)) * _f64(g),
+        name="rmsnorm_swiglu_int8",
+        extra_attrs={"tuner_axes": ("storage_dtype",)}))
+    big, small = shp(
+        {"input": (256, 786432), "scale": (786432,), "mask": (786432,),
+         "output": (256, 786432)},
+        {"input": (64, 384), "scale": (384,), "mask": (384,),
+         "output": (64, 384)})
+    tasks.append(fused_task(
+        "attn_scores", big, small,
+        ref=lambda x, s, m: _softmax(_f64(x) * _f64(s) + _f64(m)),
+        name="attn_scores_int8",
+        extra_attrs={"tuner_axes": ("storage_dtype",)}))
     return tasks
 
 

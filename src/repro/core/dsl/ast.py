@@ -41,10 +41,13 @@ class DType(enum.Enum):
     f16 = "float16"
     i32 = "int32"
     b8 = "bool"
+    i8 = "int8"
+    fp8 = "float8_e4m3fn"
 
     @property
     def nbytes(self) -> int:
-        return {"float32": 4, "bfloat16": 2, "float16": 2, "int32": 4, "bool": 1}[self.value]
+        return {"float32": 4, "bfloat16": 2, "float16": 2, "int32": 4,
+                "bool": 1, "int8": 1, "float8_e4m3fn": 1}[self.value]
 
     @property
     def jnp_name(self) -> str:
@@ -59,6 +62,8 @@ bf16 = DType.bf16
 f16 = DType.f16
 i32 = DType.i32
 b8 = DType.b8
+i8 = DType.i8
+fp8 = DType.fp8
 
 
 # --------------------------------------------------------------------------

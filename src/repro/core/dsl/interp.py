@@ -22,7 +22,13 @@ class DSLInterpError(Exception):
 
 
 def _np_dtype(dt: A.DType):
-    return np.dtype(dt.value)
+    try:
+        return np.dtype(dt.value)
+    except TypeError:
+        # narrow float formats (float8_e4m3fn, bfloat16) are not numpy
+        # built-ins; ml_dtypes registers them on import
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, dt.value))
 
 
 def _eval_scalar(e: A.SExpr, env: Dict[str, Any], bufs: Dict[str, np.ndarray]):

@@ -39,7 +39,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 from . import ast as A
 from .ast import (  # re-exported for convenience
-    DType, f32, bf16, f16, i32, b8,
+    DType, f32, bf16, f16, i32, b8, i8, fp8,
     SExpr, SConst, SVar, SVarKind, SExtract, as_sexpr, smin, smax,
     HExpr, HConst, HDim, HVar, HBin, as_hexpr, hmin, hmax, hcdiv,
     Buffer, MemSpace, Role, TensorParam,
@@ -387,7 +387,7 @@ for _name in A.ALL_OPS:
 # Scalar min/max on index expressions use tl.smin/tl.smax.
 
 __all__ = [
-    "DType", "f32", "bf16", "f16", "i32", "b8",
+    "DType", "f32", "bf16", "f16", "i32", "b8", "i8", "fp8",
     "NUM_CORES", "VMEM_BUDGET", "StaticInt",
     "ProgramBuilder", "HostBuilder", "DSLBuildError",
     "program_id", "alloc_ub", "alloc_l1", "for_range",

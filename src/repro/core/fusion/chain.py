@@ -403,13 +403,268 @@ for _spec, _wname in _extracted:
 
 
 # --------------------------------------------------------------------------
+# Quantized storage (DESIGN.md §17): int8 / fp8 GM tensors, f32 compute.
+#
+# A quantized build stores eligible GM tensors at 1-byte dtypes and fuses
+# the ``scale·dequant`` into the first consuming pass (a fresh UB tile, so
+# the raw loaded tile survives for the stitcher's spill stores) and a
+# ``quantize·scale`` epilogue before every store.  The int8 epilogue is
+# deterministic round-half-up (``floor(x·inv + 0.5)``, clamped to ±127),
+# NOT stochastic rounding and NOT round-half-even: artifacts must be
+# byte-reproducible and the fused and sequential forms must round-trip
+# bit-identically through GM.  fp8 (e4m3fn) rounds at the store's dtype
+# cast itself, which only the real GM round trip performs — so fp8 is
+# boundary-only (chain inputs/outputs, never links) to keep fused ≡
+# sequential exact.
+# --------------------------------------------------------------------------
+
+import math as _math  # noqa: E402
+
+from .fuse import _map_sexpr, _renamed_buffer  # noqa: E402
+
+# Quantized chains pad trailing dims so a 1-byte row still fills a full
+# 512-byte DMA burst; chain-wide (stages share tile widths/spans).
+QLANE = 512
+
+_INT8_MAX = 127.0
+_FP8_MAX = 448.0            # float8_e4m3fn largest finite value
+
+# Stage ops whose output is range-bounded (|y| <= 1): their static
+# quantization range is exact.  Raw chain INPUTS get the |x| <= 8 budget
+# the harness's randn-scaled data stays inside (8 sigma); PRODUCED
+# tensors (links/outputs) are op results — products of several inputs
+# whose tails pass 8 — so they carry the wider |x| <= 32 range.  The
+# int8 half-step at 32 is 32/254 ~= 0.126, still inside Q_VERIFY_TOL.
+_Q_UNIT_PRODUCERS = ("softmax", "sigmoid")
+_Q_AMAX_INPUT = 8.0
+_Q_AMAX_PRODUCED = 32.0
+
+# Documented dtype-derived verification tolerances (vs the f64 oracle).
+# int8: the input half-step at the |x|<=8 range is 8/254 ~= 0.031; a
+# multiplicative stage amplifies it by its partner operand (randn tail
+# ~ 8 within the harness geometries) -> abs term ~ 0.25, plus the
+# produced-tensor half-step 32/254 ~= 0.126 -> atol 0.5, with 25%
+# relative slack where the reference is large.  fp8 e4m3 carries 3
+# mantissa bits (~6% relative step), again amplified through the chain.
+Q_VERIFY_TOL = {"int8": (0.25, 0.5), "fp8": (0.5, 0.5)}
+
+
+@dataclass(frozen=True)
+class QuantPlan:
+    """Per-tensor static scales for one storage dtype.  ``scales`` maps a
+    chain GM tensor to ``(scale, inv)`` with ``dequant(q) = q * scale``
+    and ``quant(x) = round_clamp(x * inv)`` — both derived exactly from
+    the static amax so they reproduce bitwise everywhere."""
+    dtype: str                                    # "int8" | "fp8"
+    scales: Tuple[Tuple[str, Tuple[float, float]], ...]
+
+    def table(self) -> Dict[str, Tuple[float, float]]:
+        return dict(self.scales)
+
+
+def _chain_ranks(spec: ChainSpec) -> Dict[str, int]:
+    ranks = {t: int(r) for t, r in spec.inputs}
+    for st in spec.stages:
+        ranks[st.output] = ranks.get(st.inputs[0], 2)
+    return ranks
+
+
+def _q_eligible(spec: ChainSpec, t: str, ranks: Dict[str, int]) -> bool:
+    """A tensor can live in GM at a 1-byte dtype iff its padded regions
+    stay representable AND exact: the entry/link pad must be the shared
+    zero-point 0 (a softmax-neutral -3e38 pad has no int8 encoding —
+    zero-point vs neutral-pad, DESIGN.md §17), and it must not feed or
+    leave a contraction stage (matmul amplifies quantization error
+    across the summed axis — accuracy policy)."""
+    if ranks.get(t, 1) < 2:
+        return False
+    if spec.pad_value(t) != 0.0:
+        return False
+    lp = spec.link_pad(t)
+    if lp is not None and lp != 0.0:
+        return False
+    keep_ts = set(dict(spec.keep)) | set(dict(spec.keep).values())
+    if t in keep_ts:
+        return False
+    for st in spec.stages:
+        if st.op in MATMUL_OPS and (t in st.inputs or t == st.output):
+            return False
+    return True
+
+
+def _quant_plan(spec: ChainSpec, storage_dtype: Optional[str]
+                ) -> Optional[QuantPlan]:
+    if storage_dtype in (None, "f32"):
+        return None
+    if storage_dtype not in ("int8", "fp8"):
+        raise FusionError(f"unknown storage dtype '{storage_dtype}'")
+    ranks = _chain_ranks(spec)
+    chain_ins = [t for t, _ in spec.inputs]
+    links = [st.output for st in spec.stages
+             if st.output not in spec.outputs]
+    if storage_dtype == "fp8":
+        cands = [*chain_ins, *spec.outputs]
+    else:
+        cands = [*chain_ins, *links, *spec.outputs]
+    produced_by = {st.output: st.op for st in spec.stages}
+    scales: Dict[str, Tuple[float, float]] = {}
+    for t in cands:
+        if t in scales or not _q_eligible(spec, t, ranks):
+            continue
+        if t in produced_by:
+            amax = (1.0 if produced_by[t] in _Q_UNIT_PRODUCERS
+                    else _Q_AMAX_PRODUCED)
+        else:
+            amax = _Q_AMAX_INPUT
+        if storage_dtype == "int8":
+            scales[t] = (amax / _INT8_MAX, _INT8_MAX / amax)
+        else:
+            # power-of-two scale: the dequant multiply is exact, so the
+            # numpy and jnp quantizers agree bitwise
+            s = 2.0 ** _math.ceil(_math.log2(amax / _FP8_MAX))
+            scales[t] = (s, 1.0 / s)
+    boundary = set(chain_ins) | set(spec.outputs)
+    if not (set(scales) & boundary):
+        raise NotImplementedError(
+            f"chain '{spec.name}' has no {storage_dtype}-eligible boundary "
+            f"tensor (pad values / ranks / matmul adjacency forbid it)")
+    return QuantPlan(storage_dtype, tuple(sorted(scales.items())))
+
+
+def chain_storage_dtypes(chain: str) -> Tuple[str, ...]:
+    """Non-f32 storage dtypes the chain's structure admits (registry
+    query: drives ``register_storage_dtypes`` and the differential
+    harness's automatic quantized rows)."""
+    spec = CHAINS[chain]
+    out = []
+    for dt in ("int8", "fp8"):
+        try:
+            _quant_plan(spec, dt)
+        except NotImplementedError:
+            continue
+        out.append(dt)
+    return tuple(out)
+
+
+def _apply_quant(prog: A.Program, qplan: QuantPlan) -> A.Program:
+    """Rewrite ONE stage program for quantized GM storage, in place.
+
+    Flips quantized tensor params to the storage dtype (both backends and
+    the interpreter auto-cast loads into the f32 UB tile), inserts a
+    ``mul(dq, raw, scale)`` dequant into the first compute block after
+    each load — into a FRESH buffer, so spill stores still see the raw
+    tile — rewrites downstream reads, and appends the quantize epilogue
+    (into another fresh buffer) before each store of a quantized tensor,
+    retargeting the store.  New-buffer discipline keeps every stitcher
+    invariant (overwrite guard, spill-store reads) intact."""
+    q = qplan.table()
+    k = prog.kernel
+    if not any(tp.name in q for tp in k.tensors):
+        return prog
+    qdt = tl.i8 if qplan.dtype == "int8" else tl.fp8
+    qmax = _INT8_MAX if qplan.dtype == "int8" else _FP8_MAX
+    k.tensors = [A.TensorParam(tp.name, qdt, tp.role, tp.rank)
+                 if tp.name in q else tp for tp in k.tensors]
+    new_allocs: Dict[str, A.Buffer] = {}
+
+    def _sub_op(op: A.Op, subst: Dict[str, A.Buffer]) -> A.Op:
+        new = A.Op(op=op.op, dst=op.dst,
+                   srcs=[subst.get(s.name, s) if isinstance(s, A.Buffer)
+                         else _map_sexpr(s, subst) for s in op.srcs],
+                   attrs=dict(op.attrs))
+        # the raw tile was overwritten: later reads mean the new value
+        subst.pop(new.dst.name, None)
+        return new
+
+    def _epilogue(src: A.Buffer, inv: float) -> Tuple[A.Buffer, List[A.Op]]:
+        sq = new_allocs.get(f"{src.name}_q")
+        if sq is None:
+            sq = _renamed_buffer(src, f"{src.name}_q")
+            new_allocs[sq.name] = sq
+        ops = [A.Op("mul", sq, [src, A.as_sexpr(float(inv))])]
+        if qplan.dtype == "int8":
+            ops.append(A.Op("add", sq, [sq, A.as_sexpr(0.5)]))
+            ops.append(A.Op("floor", sq, [sq]))
+            ops.append(A.Op("clamp", sq, [sq, A.as_sexpr(-_INT8_MAX),
+                                          A.as_sexpr(_INT8_MAX)]))
+        else:
+            ops.append(A.Op("clamp", sq, [sq, A.as_sexpr(-_FP8_MAX),
+                                          A.as_sexpr(_FP8_MAX)]))
+        return sq, ops
+
+    def rewrite(body: List[A.Stmt], subst: Dict[str, A.Buffer],
+                pending: Dict[str, Tuple[A.Buffer, float]]) -> None:
+        last_compute: Optional[A.ComputeBlock] = None
+        for st in body:
+            if isinstance(st, A.CopyIn):
+                for ld in st.body:
+                    if isinstance(ld, A.Load) and ld.tensor in q:
+                        pending[ld.dst.name] = (ld.dst, q[ld.tensor][0])
+                        subst.pop(ld.dst.name, None)
+            elif isinstance(st, A.ComputeBlock):
+                pre: List[A.Stmt] = []
+                for name in sorted(pending):
+                    buf, scale = pending[name]
+                    dq = new_allocs.get(f"{buf.name}_dq")
+                    if dq is None:
+                        dq = _renamed_buffer(buf, f"{buf.name}_dq")
+                        new_allocs[dq.name] = dq
+                    pre.append(A.Op("mul", dq,
+                                    [buf, A.as_sexpr(float(scale))]))
+                    subst[name] = dq
+                pending.clear()
+                new_body: List[A.Stmt] = list(pre)
+                for o in st.body:
+                    if isinstance(o, A.Op):
+                        new_body.append(_sub_op(o, subst))
+                    elif isinstance(o, A.ScalarDecl):
+                        new_body.append(
+                            A.ScalarDecl(o.var, _map_sexpr(o.init, subst)))
+                    elif isinstance(o, A.ScalarAssign):
+                        new_body.append(
+                            A.ScalarAssign(o.var, _map_sexpr(o.expr, subst)))
+                    else:
+                        new_body.append(o)
+                st.body[:] = new_body
+                last_compute = st
+            elif isinstance(st, A.CopyOut):
+                for i, s_ in enumerate(st.body):
+                    if not (isinstance(s_, A.Store) and s_.tensor in q):
+                        continue
+                    if last_compute is None:
+                        raise FusionError(
+                            f"quantized store of '{s_.tensor}' has no "
+                            f"preceding compute block for its epilogue")
+                    src = subst.get(s_.src.name, s_.src)
+                    sq, ops = _epilogue(src, q[s_.tensor][1])
+                    last_compute.body.extend(ops)
+                    st.body[i] = A.Store(tensor=s_.tensor, start=s_.start,
+                                         src=sq, valid=s_.valid)
+            elif isinstance(st, A.ForRange):
+                # inner scope: substitutions established inside must not
+                # leak out (the loop may re-load per iteration)
+                rewrite(st.body, dict(subst), dict(pending))
+
+    rewrite(k.body, {}, {})
+    # allocate the fresh dequant/epilogue tiles at kernel scope, next to
+    # the other stage buffers (footprint probing then prices them)
+    allocs = [A.AllocUB(b) for _, b in sorted(new_allocs.items())]
+    last_alloc = 0
+    for i, st in enumerate(k.body):
+        if isinstance(st, A.AllocUB):
+            last_alloc = i + 1
+    k.body[last_alloc:last_alloc] = allocs
+    return prog
+
+
+# --------------------------------------------------------------------------
 # Shared row-resident stage harness
 # --------------------------------------------------------------------------
 
 def _stage_program(spec: ChainSpec, idx: int, stage: ChainStage,
                    shapes: Dict[str, Tuple[int, ...]],
                    orig_full: Dict[str, Tuple[int, ...]],
-                   block_rows: int) -> A.Program:
+                   block_rows: int, lane: int = LANE) -> A.Program:
     sop = STAGE_OPS.get(stage.op)
     if sop is None:
         raise FusionError(f"no fusable stage recipe for op '{stage.op}'")
@@ -434,7 +689,7 @@ def _stage_program(spec: ChainSpec, idx: int, stage: ChainStage,
     h = P.host()
     numel = h.numel(primary)
     cols_v = h.dim(primary, rank_p - 1)
-    h.let("cols_padded_unit", LANE,
+    h.let("cols_padded_unit", int(lane),
           rationale="lane alignment for the trailing axis (pass 4)")
     rows_v = h.let("rows", numel // cols_v)
     br = h.let("block_rows", int(block_rows),
@@ -1084,9 +1339,16 @@ def _divisors_desc(n: int) -> List[int]:
 
 def _stitch(spec: ChainSpec, shapes: Dict[str, Tuple[int, ...]],
             orig_full: Dict[str, Tuple[int, ...]], block_rows: int,
-            mode: str, name: str, revalidate: bool) -> A.Program:
-    progs = [_stage_program(spec, i, st, shapes, orig_full, block_rows)
+            mode: str, name: str, revalidate: bool,
+            lane: int = LANE,
+            qplan: Optional[QuantPlan] = None) -> A.Program:
+    progs = [_stage_program(spec, i, st, shapes, orig_full, block_rows,
+                            lane)
              for i, st in enumerate(spec.stages)]
+    if qplan is not None:
+        # per-stage, BEFORE stitching: the stitcher then sees the narrow
+        # GM dtypes and routes/spills links dtype-consistently
+        progs = [_apply_quant(p, qplan) for p in progs]
     order = [t for t, _ in spec.inputs] + list(spec.outputs)
     if mode == "fused":
         return fuse_programs(progs, name=name, keep=dict(spec.keep),
@@ -1098,10 +1360,12 @@ def _stitch(spec: ChainSpec, shapes: Dict[str, Tuple[int, ...]],
 
 def _stitch_streaming(spec: ChainSpec, shapes: Dict[str, Tuple[int, ...]],
                       orig_full: Dict[str, Tuple[int, ...]], tile: int,
-                      mode: str, name: str,
-                      revalidate: bool) -> A.Program:
+                      mode: str, name: str, revalidate: bool,
+                      qplan: Optional[QuantPlan] = None) -> A.Program:
     progs = [_stream_stage_program(spec, i, st, shapes, orig_full, tile)
              for i, st in enumerate(spec.stages)]
+    if qplan is not None:
+        progs = [_apply_quant(p, qplan) for p in progs]
     order = [t for t, _ in spec.inputs] + list(spec.outputs)
     if mode == "fused":
         return fuse_programs(progs, name=name, keep=dict(spec.keep),
@@ -1118,19 +1382,26 @@ def _footprint(prog: A.Program) -> int:
 
 def build_chain(spec: ChainSpec, shapes: Dict[str, Tuple[int, ...]],
                 knobs: Optional[Knobs] = None, *, mode: str = "fused",
-                name: Optional[str] = None,
-                pattern: str = "auto") -> A.Program:
+                name: Optional[str] = None, pattern: str = "auto",
+                storage_dtype: Optional[str] = None) -> A.Program:
     """Build the chain as one DSL program (``mode='fused'`` or
     ``'sequential'``), ready for the transcompiler.
 
     ``pattern`` picks the stage harness: ``'resident'`` (single-visit row
     blocks), ``'streaming'`` (per-core row loops over column tiles, with
     loop-carried stats), or ``'auto'`` — resident when a row block fits
-    VMEM, streaming otherwise."""
+    VMEM, streaming otherwise.
+
+    ``storage_dtype`` (``'int8'``/``'fp8'``) stores eligible GM tensors
+    narrow with f32 compute (DESIGN.md §17); raises NotImplementedError
+    — the standard refusal the tuner gate and ladder understand — when
+    the chain admits no quantized boundary tensor."""
     if mode not in ("fused", "sequential"):
         raise ValueError(f"mode must be 'fused' or 'sequential', not {mode!r}")
     if pattern not in ("auto", "resident", "streaming"):
         raise ValueError(f"bad pattern {pattern!r}")
+    qplan = _quant_plan(spec, storage_dtype)
+    lane = QLANE if qplan is not None else LANE
     # fault hook (DESIGN.md §14): the token carries chain/mode/pattern so a
     # FaultPlan can fail e.g. only ":fused:" builds — the sequential rung
     # of the degradation ladder then still verifies and serves
@@ -1146,13 +1417,15 @@ def build_chain(spec: ChainSpec, shapes: Dict[str, Tuple[int, ...]],
     refusal: Optional[NotImplementedError] = None
     if pattern in ("auto", "resident"):
         try:
-            return _build_resident(spec, orig, full, orig_cols, mode, name)
+            return _build_resident(spec, orig, full, orig_cols, mode, name,
+                                   lane, qplan)
         except NotImplementedError as e:
             if pattern == "resident":
                 raise
             refusal = e
     try:
-        return _build_streaming(spec, orig, full, orig_cols, mode, name)
+        return _build_streaming(spec, orig, full, orig_cols, mode, name,
+                                lane, qplan)
     except FusionError as e:
         if pattern == "streaming":
             raise
@@ -1164,19 +1437,21 @@ def build_chain(spec: ChainSpec, shapes: Dict[str, Tuple[int, ...]],
 
 
 def _build_resident(spec: ChainSpec, orig, full, orig_cols: int, mode: str,
-                    name: str) -> A.Program:
-    padded = {t: (*s[:-1], _rup(s[-1], LANE)) for t, s in full.items()}
+                    name: str, lane: int = LANE,
+                    qplan: Optional[QuantPlan] = None) -> A.Program:
+    padded = {t: (*s[:-1], _rup(s[-1], lane)) for t, s in full.items()}
     rows = prod(padded[spec.primary][:-1])
 
     # exact footprint is affine in block_rows: probe at two sizes
     b1 = _footprint(_stitch(spec, padded, full, 1, mode, name,
-                            revalidate=False))
+                            revalidate=False, lane=lane, qplan=qplan))
     if b1 > tl.VMEM_BUDGET:
         raise NotImplementedError(
             f"{mode} chain '{spec.name}' needs {b1} B of UB at "
             f"block_rows=1 > VMEM budget {tl.VMEM_BUDGET} B")
     slope = max(1, _footprint(_stitch(spec, padded, full, 2, mode,
-                                      name, revalidate=False)) - b1)
+                                      name, revalidate=False, lane=lane,
+                                      qplan=qplan)) - b1)
     br_max = max(1, (tl.VMEM_BUDGET - (b1 - slope)) // slope)
     last_refusal: Optional[NotImplementedError] = None
     for br in _divisors_desc(rows):
@@ -1184,11 +1459,12 @@ def _build_resident(spec: ChainSpec, orig, full, orig_cols: int, mode: str,
             continue
         try:
             prog = _stitch(spec, padded, full, br, mode, name,
-                           revalidate=True)
+                           revalidate=True, lane=lane, qplan=qplan)
         except NotImplementedError as e:    # footprint estimate off: step down
             last_refusal = e
             continue
-        return _finalize(prog, spec, orig, orig_cols, "resident")
+        return _finalize(prog, spec, orig, orig_cols, "resident",
+                         lane, qplan)
     raise last_refusal or NotImplementedError(
         f"{mode} chain '{spec.name}' does not fit VMEM at any block_rows")
 
@@ -1197,7 +1473,8 @@ _STREAM_TILE_CAP = 4096     # elements; matches the expert examples' default
 
 
 def _stream_tile(spec: ChainSpec, full, orig_cols: int, mode: str,
-                 name: str) -> int:
+                 name: str, lane: int = LANE,
+                 qplan: Optional[QuantPlan] = None) -> int:
     """Plan the chain-wide column tile: probe the stitched footprint at
     two tile lengths (affine in tile), cap by the VMEM budget, and prefer
     a tile that divides the lane-padded STREAM width (less padding) — the
@@ -1206,48 +1483,54 @@ def _stream_tile(spec: ChainSpec, full, orig_cols: int, mode: str,
     stream_ts = _stream_tensors(spec)
     stream_cols = max(int(full[st.inputs[0] if st.op == "matmul"
                            else st.output][-1]) for st in spec.stages)
-    b1 = _footprint(_stitch_streaming(spec, _tile_pad(full, LANE, stream_ts),
-                                      full, LANE, mode, name,
-                                      revalidate=False))
+    b1 = _footprint(_stitch_streaming(spec,
+                                      _tile_pad(full, lane, stream_ts, lane),
+                                      full, lane, mode, name,
+                                      revalidate=False, qplan=qplan))
     b2 = _footprint(_stitch_streaming(spec,
-                                      _tile_pad(full, 2 * LANE, stream_ts),
-                                      full, 2 * LANE, mode, name,
-                                      revalidate=False))
+                                      _tile_pad(full, 2 * lane, stream_ts,
+                                                lane),
+                                      full, 2 * lane, mode, name,
+                                      revalidate=False, qplan=qplan))
     per_lane = max(1, b2 - b1)
     base = b1 - per_lane
     if base + per_lane > tl.VMEM_BUDGET:
         raise NotImplementedError(
             f"{mode} streaming chain '{spec.name}' needs {base + per_lane} "
-            f"B of UB at tile={LANE} > VMEM budget {tl.VMEM_BUDGET} B")
+            f"B of UB at tile={lane} > VMEM budget {tl.VMEM_BUDGET} B")
     max_lanes = int((tl.VMEM_BUDGET - base) // per_lane)
-    cols_lanes = -(-stream_cols // LANE)
-    lanes = max(1, min(max_lanes, _STREAM_TILE_CAP // LANE, cols_lanes))
+    cols_lanes = -(-stream_cols // lane)
+    lanes = max(1, min(max_lanes, _STREAM_TILE_CAP // lane, cols_lanes))
     divs = [d for d in _divisors_desc(cols_lanes) if d <= lanes]
     if divs and divs[0] * 8 >= lanes:   # a near-cap divisor: no padding
         lanes = divs[0]
-    return lanes * LANE
+    return lanes * lane
 
 
-def _tile_pad(full, tile, stream_ts=None):
+def _tile_pad(full, tile, stream_ts=None, lane: int = LANE):
     """Pad trailing dims for the streaming harness: streamed tensors to a
     tile multiple, the rest (e.g. matmul weight operands, whose trailing
     dim is not the streamed axis) to the lane width only."""
     return {t: (*s[:-1],
                 _rup(s[-1], tile if stream_ts is None or t in stream_ts
-                     else LANE))
+                     else lane))
             for t, s in full.items()}
 
 
 def _build_streaming(spec: ChainSpec, orig, full, orig_cols: int,
-                     mode: str, name: str) -> A.Program:
-    tile = _stream_tile(spec, full, orig_cols, mode, name)
+                     mode: str, name: str, lane: int = LANE,
+                     qplan: Optional[QuantPlan] = None) -> A.Program:
+    tile = _stream_tile(spec, full, orig_cols, mode, name, lane, qplan)
     stream_ts = _stream_tensors(spec)
     last_refusal: Optional[NotImplementedError] = None
-    while tile >= LANE:
+    while tile >= lane:
         try:
-            prog = _stitch_streaming(spec, _tile_pad(full, tile, stream_ts),
-                                     full, tile, mode, name, revalidate=True)
-            return _finalize(prog, spec, orig, orig_cols, "streaming")
+            prog = _stitch_streaming(spec,
+                                     _tile_pad(full, tile, stream_ts, lane),
+                                     full, tile, mode, name, revalidate=True,
+                                     qplan=qplan)
+            return _finalize(prog, spec, orig, orig_cols, "streaming",
+                             lane, qplan)
         except NotImplementedError as e:   # footprint estimate off
             last_refusal = e
             tile //= 2
@@ -1257,7 +1540,8 @@ def _build_streaming(spec: ChainSpec, orig, full, orig_cols: int,
 
 
 def _finalize(prog: A.Program, spec: ChainSpec, orig,
-              orig_cols: int, pattern: str) -> A.Program:
+              orig_cols: int, pattern: str, lane: int = LANE,
+              qplan: Optional[QuantPlan] = None) -> A.Program:
     tensor_names = [tp.name for tp in prog.kernel.tensors]
     full = spec.chain_shapes(orig)
     stream_ts = _stream_tensors(spec)
@@ -1267,10 +1551,25 @@ def _finalize(prog: A.Program, spec: ChainSpec, orig,
             return "cols_padded_unit"
         # streamed axes pad to the tile; anything else (matmul weight
         # operands, scratch spills of already-padded links) to the lane
-        return "tile_length" if t in stream_ts or t not in full else LANE
+        return "tile_length" if t in stream_ts or t not in full else lane
     prog.meta["gm_layout"] = {
         t: {"pad_axis": -1, "pad_multiple": _pad_unit(t),
             "pad_value": spec.pad_value(t)} for t in tensor_names}
+    if qplan is not None:
+        # drives the entry wrapper's quantize/dequantize glue (emit.py)
+        # and the interp-verify tolerance widening (pipeline.py)
+        q = qplan.table()
+        rtol, atol = Q_VERIFY_TOL[qplan.dtype]
+        prog.meta["quant"] = {
+            "dtype": qplan.dtype,
+            "in": {tp.name: {"scale": q[tp.name][0], "inv": q[tp.name][1]}
+                   for tp in prog.kernel.tensors
+                   if tp.role is A.Role.IN and tp.name in q},
+            "out": {tp.name: {"scale": q[tp.name][0], "inv": q[tp.name][1]}
+                    for tp in prog.kernel.tensors
+                    if tp.role is A.Role.OUT and tp.name in q},
+            "rtol": rtol, "atol": atol,
+        }
     prog.meta["orig_shapes"] = {t: orig[t] for t in tensor_names
                                 if t in orig}
     # the convenience entry infers OUT shapes from the first input; bake a
@@ -1324,32 +1623,48 @@ def _finalize(prog: A.Program, spec: ChainSpec, orig,
 
 def build_fused(spec_or_name, shapes: Dict[str, Tuple[int, ...]],
                 knobs: Optional[Knobs] = None, *, fallback: bool = True,
-                name: Optional[str] = None) -> A.Program:
+                name: Optional[str] = None,
+                storage_dtype: Optional[str] = None) -> A.Program:
     """Fuse the chain; when the combined VMEM footprint refuses and
-    ``fallback=True``, return the unfused sequential program instead."""
+    ``fallback=True``, return the unfused sequential program instead.
+    The sequential fallback keeps ``storage_dtype`` (a quantized request
+    never silently degrades to f32 — a chain that admits no quantization
+    raises NotImplementedError from both forms)."""
     spec = CHAINS[spec_or_name] if isinstance(spec_or_name, str) \
         else spec_or_name
     try:
-        return build_chain(spec, shapes, knobs, mode="fused", name=name)
+        return build_chain(spec, shapes, knobs, mode="fused", name=name,
+                           storage_dtype=storage_dtype)
     except NotImplementedError:
         if not fallback:
             raise
-        return build_chain(spec, shapes, knobs, mode="sequential")
+        return build_chain(spec, shapes, knobs, mode="sequential",
+                           storage_dtype=storage_dtype)
 
 
 # --------------------------------------------------------------------------
 # Planner / tuner integration
 # --------------------------------------------------------------------------
 
-def _chain_builder(chain: str, mode: str, pattern: str = "auto") -> Callable:
+def _chain_builder(chain: str, mode: str, pattern: str = "auto",
+                   axes: Optional[Dict[str, str]] = None) -> Callable:
     spec = CHAINS[chain]
+    axes = dict(axes or {})
+    storage = axes.get("storage_dtype")
+    if storage == "f32":
+        storage = None
 
     def build(task, shapes, knobs=None):
         nm = task.name if mode == "sequential" else f"{task.name}_fused"
         return build_chain(spec, shapes, knobs, mode=mode, name=nm,
-                           pattern=pattern)
+                           pattern=pattern, storage_dtype=storage)
     build.__name__ = f"build_{chain}_{mode}_{pattern}"
     build.knob_free = True      # block_rows/tile is planned, knobs unused
+    build.axes = dict(axes)
+    if storage is not None:
+        # quantized artifacts verify against the f32/f64 reference at the
+        # documented dtype-derived tolerance, not the planner's default
+        build.verify_rtol, build.verify_atol = Q_VERIFY_TOL[storage]
 
     def check_builder_for(prog) -> Optional[Callable]:
         """Family-aware verification hook (used by the planner's check
@@ -1359,9 +1674,19 @@ def _chain_builder(chain: str, mode: str, pattern: str = "auto") -> Callable:
         to the bench artifact's pattern instead."""
         pat = (prog.meta.get("fusion") or {}).get("pattern")
         if pat in ("resident", "streaming") and pat != pattern:
-            return _chain_builder(chain, mode, pat)
+            return _chain_builder(chain, mode, pat, axes)
         return None
     build.check_builder_for = check_builder_for
+
+    def with_axes(new_axes) -> Callable:
+        """Specialize this builder to a dtype-axis assignment (the tuner /
+        planner hook behind the compositional search space): same chain,
+        mode and pattern, different storage dtype."""
+        merged = {**axes, **dict(new_axes or {})}
+        if merged == axes:
+            return build
+        return _chain_builder(chain, mode, pattern, merged)
+    build.with_axes = with_axes
     return build
 
 
@@ -1398,12 +1723,20 @@ def register_planner_chains(registry: Dict[str, Callable]) -> None:
                             streaming_sequential_builder(cname))
 
 
-def register_fusion_variants(register_variant: Callable) -> None:
+def register_fusion_variants(register_variant: Callable,
+                             register_storage_dtypes:
+                             Optional[Callable] = None) -> None:
     """Register every chain's fused form (and, where the default is a
     hand-written builder, the sequential baseline too) as tuner-searchable
-    variants."""
+    variants, plus — when the registry exposes the dtype axis — each
+    chain's admissible storage dtypes for the compositional axis-product
+    space (DESIGN.md §17)."""
     for cname in CHAINS:
         register_variant(cname, "fused", fused_builder(cname))
+        if register_storage_dtypes is not None:
+            extra = chain_storage_dtypes(cname)
+            if extra:
+                register_storage_dtypes(cname, ("f32", *extra))
     # the planner default for add_rmsnorm is the hand-written expert
     # builder; expose the auto-derived sequential baseline alongside it
     if "add_rmsnorm" in CHAINS:

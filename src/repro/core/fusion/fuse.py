@@ -561,9 +561,18 @@ def _route_links(links: _Links, route: Optional[Mapping[str, str]],
 
     for link in sorted(links.links, key=lambda l: links.produced[l]):
         r.link_shapes[link] = tuple(all_ts.get(link, ()))
+        if (link in route and route[link] in links.params
+                and route[link] != link
+                and links.params[route[link]].dtype
+                is not links.params[link].dtype):
+            # a storage-dtype mismatch makes the round trip lossy (an f32
+            # link written through an int8 target would truncate): ignore
+            # the declared target and fall through to the auto path
+            del route[link]
         if link not in route:
             cands = [t for t, i in links.produced.items()
-                     if t not in links.links and _numel(t) == _numel(link)]
+                     if t not in links.links and _numel(t) == _numel(link)
+                     and links.params[t].dtype is links.params[link].dtype]
             for t in cands:
                 if _claim(t, link):
                     route[link] = t
@@ -848,16 +857,21 @@ def _fuse_streaming(progs: Sequence[A.Program], *, name: str,
     scratch_extra: List[Tuple[str, A.TensorParam]] = []   # scratch GM spills
 
     def _claim_spill(link: str) -> str:
-        if link in route:
-            target = route[link]
-        else:
+        target = route.get(link)
+        if (target is not None and target in links.params
+                and links.params[target].dtype
+                is not links.params[link].dtype):
+            # lossy round trip (storage-dtype mismatch): ignore the
+            # declared target, fall through to the auto path
             target = None
+        if target is None:
             order = tensor_order or links.order
             for t in order:
                 tp = links.params.get(t)
                 if (tp is not None and tp.role is A.Role.OUT
                         and t not in links.links and t not in claimed
-                        and _numel(t) == _numel(link)):
+                        and _numel(t) == _numel(link)
+                        and tp.dtype is links.params[link].dtype):
                     target = t
                     break
             if target is None:

@@ -83,6 +83,11 @@ def framework_tasks():
               by_fused["norm_residual_bwd"], by_fused["ce_grad"],
               by_fused["mhc_stream_bwd_c0"], by_fused["mlp_bwd_c0"],
               by_fused["mlp_bwd_c1"]]
+    # quantized-storage chains (DESIGN.md §17): the storage-dtype axis is
+    # OPEN on these tasks (attrs['tuner_axes']), so the checked-in
+    # artifacts are the tuner's DISCOVERED int8-storage fused variants at
+    # bandwidth-bound geometries — not a hand-pinned dtype
+    picks += [by_fused["rmsnorm_swiglu_int8"], by_fused["attn_scores_int8"]]
     picks += mhc_tasks()
     return picks
 
@@ -98,11 +103,32 @@ def main():
     ap.add_argument("--cache", default=None, metavar="DIR",
                     help="artifact-cache directory ('default' for the "
                          "user cache dir)")
+    ap.add_argument("--storage-dtype", default=None,
+                    choices=("f32", "int8", "fp8"),
+                    help="pin the storage-dtype axis (DESIGN.md §17): "
+                         "regenerate ONLY the fusion-chain artifacts that "
+                         "admit the dtype, pinned to it, written as "
+                         "<name>_<dtype>.py")
     args = ap.parse_args()
     cache = True if args.cache == "default" else args.cache
     os.makedirs(args.out, exist_ok=True)
     from .fusion.chain import CHAINS
-    for task in framework_tasks():
+    tasks = framework_tasks()
+    if args.storage_dtype and args.storage_dtype != "f32":
+        import dataclasses
+        from .fusion.chain import chain_storage_dtypes
+        dt = args.storage_dtype
+        tasks, seen = [], set()
+        for task in framework_tasks():
+            if (task.op not in CHAINS or task.op in seen
+                    or dt not in chain_storage_dtypes(task.op)):
+                continue
+            seen.add(task.op)
+            tasks.append(dataclasses.replace(
+                task, name=f"{task.op}_{dt}",
+                attrs={**task.attrs, "axes": {"storage_dtype": dt}}))
+        print(f"storage dtype {dt}: {len(tasks)} admissible chain tasks")
+    for task in tasks:
         # chain tasks always regenerate through the tuner: their checked-in
         # artifact is the tuner-selected (fused) variant, and an untuned
         # run would silently overwrite it with the sequential baseline

@@ -18,7 +18,8 @@ from .analysis import assigned_scalars, written_buffers
 JNP_DT = {
     A.DType.f32: "jnp.float32", A.DType.bf16: "jnp.bfloat16",
     A.DType.f16: "jnp.float16", A.DType.i32: "jnp.int32",
-    A.DType.b8: "jnp.bool_",
+    A.DType.b8: "jnp.bool_", A.DType.i8: "jnp.int8",
+    A.DType.fp8: "jnp.float8_e4m3fn",
 }
 
 # op name -> python expression template; {0},{1},... are operand slots

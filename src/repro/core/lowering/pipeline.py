@@ -121,11 +121,33 @@ def transcompile(prog: A.Program, force_backend: Optional[str] = None,
                 "compile", f"make() failed: {type(e).__name__}: {e}", source)
         ins = [tp for tp in prog.kernel.tensors
                if tp.role in (A.Role.IN, A.Role.INOUT)]
+        # quantized storage (meta['quant'], DESIGN.md §17): the module
+        # entry keeps the f32-in/f32-out contract and quantizes narrow-GM
+        # tensors itself; the interpreter instead receives the identical
+        # integer codes (the numpy quantizer below is bitwise the entry's
+        # jnp one) and its narrow outputs dequantize before comparison.
+        quant = prog.meta.get("quant") or {}
+        qdt = quant.get("dtype")
+        qin_t = quant.get("in", {})
+        qout_t = quant.get("out", {})
+
+        def _np_quant(a, inv):
+            a = np.asarray(a, np.float32)
+            if qdt == "int8":
+                return np.clip(
+                    np.floor(a * np.float32(inv) + np.float32(0.5)),
+                    -127.0, 127.0).astype(np.int8)
+            import ml_dtypes
+            return np.clip(a * np.float32(inv),
+                           -448.0, 448.0).astype(ml_dtypes.float8_e4m3fn)
+
         rng = np.random.RandomState(0)
         arrays = []
         for tp in ins:
             shp = shapes[tp.name]
-            if tp.dtype in (A.DType.i32,):
+            if tp.name in qin_t:
+                arrays.append(rng.randn(*shp).astype(np.float32))
+            elif tp.dtype in (A.DType.i32,):
                 arrays.append(rng.randint(0, 4, shp).astype(np.int32))
             elif tp.dtype is A.DType.b8:
                 arrays.append(rng.rand(*shp) > 0.5)
@@ -142,13 +164,20 @@ def transcompile(prog: A.Program, force_backend: Optional[str] = None,
             outs = [tp for tp in prog.kernel.tensors
                     if tp.role in (A.Role.OUT, A.Role.INOUT)]
             out_shapes = {tp.name: shapes[tp.name] for tp in outs}
-            want = interpret(prog, {tp.name: a for tp, a in zip(ins, arrays)},
-                             out_shapes)
+            interp_ins = {
+                tp.name: (_np_quant(a, qin_t[tp.name]["inv"])
+                          if tp.name in qin_t else a)
+                for tp, a in zip(ins, arrays)}
+            want = interpret(prog, interp_ins, out_shapes)
+            vr = max(rtol, float(quant.get("rtol", 0.0)))
+            va = max(atol, float(quant.get("atol", 0.0)))
             got = res if isinstance(res, (tuple, list)) else (res,)
             for tp, g in zip(outs, got):
                 wv = want[tp.name].astype(np.float64)
+                if tp.name in qout_t:
+                    wv = wv * float(qout_t[tp.name]["scale"])
                 gv = np.asarray(g, dtype=np.float64)
-                if not np.allclose(gv, wv, rtol=rtol, atol=atol):
+                if not np.allclose(gv, wv, rtol=vr, atol=va):
                     err = float(np.max(np.abs(gv - wv)))
                     raise TranscompileError(
                         "verify",

@@ -279,6 +279,14 @@ def resolve_and_build(task: KernelTask, builder: Callable, variant: str,
         if variant != "default" or fb_op not in PLANNER_REGISTRY:
             raise
         fb_builder = PLANNER_REGISTRY[fb_op]
+        # carry the dtype-axis specialization across the fallback: a
+        # quantized request must not silently degrade to the f32 fallback
+        axes = getattr(builder, "axes", None)
+        if axes:
+            with_axes = getattr(fb_builder, "with_axes", None)
+            if with_axes is None:
+                raise
+            fb_builder = with_axes(axes)
         art = generate_with_feedback(
             lambda kn: fb_builder(task, shapes, kn), knobs,
             **transcompile_kwargs)
@@ -323,6 +331,14 @@ def generate(task: KernelTask, knobs: Optional[Knobs] = None,
     builder_fn = PLANNER_REGISTRY[task.op]
     variant = "default"
     tune_result = None
+    axes: Dict[str, str] = {}
+    # pinned dtype axes (task.attrs['axes'], e.g. a serving engine keyed
+    # on --kv-dtype): applied ALWAYS — tuned or not — and folded into the
+    # cache fingerprint below, so a warmed f32 entry can never serve a
+    # quantized request
+    pinned_axes = {k: str(v)
+                   for k, v in dict(task.attrs.get("axes") or {}).items()
+                   if str(v) != "f32"}
     if tune:
         from .tuning.space import Candidate, variants_for
         from .tuning.tuner import tune as run_tune
@@ -333,13 +349,20 @@ def generate(task: KernelTask, knobs: Optional[Knobs] = None,
             rec = cache_obj.get_tuned(task)
             if rec is not None:
                 try:
-                    best_cand = Candidate(**rec["candidate"])
-                except TypeError:
+                    # from_dict tolerates schema skew both ways: legacy
+                    # pre-axis pointers fill the axis defaults, future
+                    # extra keys drop (the migration path for the
+                    # axis-product refactor)
+                    best_cand = Candidate.from_dict(rec["candidate"])
+                except (TypeError, ValueError):
                     best_cand = None
         if best_cand is None:
-            start = None if knobs is None else Candidate(
-                max_tile=knobs.max_tile, pad=knobs.pad,
-                backend=knobs.backend)
+            start = None
+            if knobs is not None or pinned_axes:
+                base = ({} if knobs is None else
+                        {"max_tile": knobs.max_tile, "pad": knobs.pad,
+                         "backend": knobs.backend})
+                start = Candidate(**base, **pinned_axes)
             tune_result = run_tune(task, budget=tune_budget, cache=cache_obj,
                                    start=start, rtol=rtol, atol=atol)
             best_cand = tune_result.best.candidate
@@ -349,12 +372,25 @@ def generate(task: KernelTask, knobs: Optional[Knobs] = None,
                 builder_fn = vb
                 variant = best_cand.variant
         knobs = best_cand.to_knobs()
+        axes = best_cand.dtype_axes()
+    axes = {**axes, **pinned_axes}
+    if axes:
+        with_axes = getattr(builder_fn, "with_axes", None)
+        if with_axes is None:
+            return GenResult(task, None, False, False,
+                             error=f"op '{task.op}' (variant '{variant}') "
+                                   f"does not support dtype axes {axes}")
+        builder_fn = with_axes(axes)
+    # quantized builders verify at their dtype-derived bar, never tighter
+    rtol = max(rtol, float(getattr(builder_fn, "verify_rtol", 0.0)))
+    atol = max(atol, float(getattr(builder_fn, "verify_atol", 0.0)))
 
     # ---- artifact cache fast path ---------------------------------------
     req_knobs = knobs or Knobs()
     cache_key = None
     if cache_obj is not None:
-        cache_key = cache_obj.key_for(task, req_knobs, variant=variant)
+        cache_key = cache_obj.key_for(task, req_knobs, variant=variant,
+                                      axes=axes)
         entry = cache_obj.get(cache_key)
         if entry is not None and not (
                 verify and
@@ -401,7 +437,7 @@ def generate(task: KernelTask, knobs: Optional[Knobs] = None,
     if not verify:
         if cache_obj is not None:
             cache_obj.put(cache_key, art, task=task, variant=variant,
-                          resolved_op=resolved_op, pass_ok=None)
+                          resolved_op=resolved_op, pass_ok=None, axes=axes)
         return _emit_result(GenResult(task, art, True, True,
                                       tune=tune_result))
 
@@ -417,6 +453,11 @@ def generate(task: KernelTask, knobs: Optional[Knobs] = None,
     check_builder_fn = builder_fn
     if variant == "default" and resolved_op != task.op:
         check_builder_fn = PLANNER_REGISTRY.get(resolved_op, builder_fn)
+        if axes and check_builder_fn is not builder_fn:
+            # the registry fallback is unspecialized — re-apply the dtype
+            # axes (or keep the already-specialized original builder)
+            wa = getattr(check_builder_fn, "with_axes", None)
+            check_builder_fn = (wa(axes) if wa is not None else builder_fn)
     elif art is not None:
         # family hook (fusion chains): a pattern-auto builder resolves by
         # shape, so the small check shapes could verify a resident program
@@ -447,7 +488,7 @@ def generate(task: KernelTask, knobs: Optional[Knobs] = None,
                 cache_obj.put(cache_key, art, task=task, variant=variant,
                               resolved_op=resolved_op, pass_ok=False,
                               exec_ok=False, error=chk.error,
-                              verify_rtol=rtol, verify_atol=atol)
+                              verify_rtol=rtol, verify_atol=atol, axes=axes)
         return GenResult(task, art, False, False, error=chk.error,
                          cached=cached_bench, tune=tune_result)
     if cache_obj is not None:
@@ -462,7 +503,7 @@ def generate(task: KernelTask, knobs: Optional[Knobs] = None,
             cache_obj.put(cache_key, art, task=task, variant=variant,
                           resolved_op=resolved_op, pass_ok=chk.pass_ok,
                           max_abs_err=chk.max_err, error=chk.error,
-                          verify_rtol=rtol, verify_atol=atol)
+                          verify_rtol=rtol, verify_atol=atol, axes=axes)
 
     # DSL-interpreter oracle equivalence is property-tested in tests/core
     # (lowered pallas == numpy interpreter on randomly generated programs).

@@ -19,13 +19,17 @@ integrated path, or :func:`tune` / :class:`ArtifactCache` directly.
 """
 from .cache import ArtifactCache, CacheEntry, task_fingerprint
 from .space import (BACKEND_CHOICES, Candidate, TILE_LADDER,
-                    VARIANT_REGISTRY, neighbors, register_variant,
+                    VARIANT_REGISTRY, axis_domains, neighbors,
+                    register_axis, register_storage_dtypes,
+                    register_variant, reset_registry, storage_dtypes_for,
                     variants_for)
 from .tuner import Trial, TuneResult, tune
 
 __all__ = [
     "ArtifactCache", "CacheEntry", "task_fingerprint",
     "BACKEND_CHOICES", "Candidate", "TILE_LADDER", "VARIANT_REGISTRY",
-    "neighbors", "register_variant", "variants_for",
+    "axis_domains", "neighbors", "register_axis",
+    "register_storage_dtypes", "register_variant", "reset_registry",
+    "storage_dtypes_for", "variants_for",
     "Trial", "TuneResult", "tune",
 ]

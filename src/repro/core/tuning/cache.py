@@ -164,16 +164,25 @@ class ArtifactCache:
     # -- keys --------------------------------------------------------------
     def key_for(self, task, knobs: Optional[Knobs] = None,
                 variant: str = "default",
-                codegen_version: Optional[int] = None) -> str:
+                codegen_version: Optional[int] = None,
+                axes: Optional[Dict[str, str]] = None) -> str:
+        """``axes`` is the candidate's non-default dtype-axis assignment
+        (``Candidate.dtype_axes()``).  It enters the digest ONLY when
+        non-empty, so every pure-f32 key is byte-identical to the
+        pre-axis scheme — and a tuned f32 artifact can never be served
+        for an int8 request (the assignments digest differently)."""
         if codegen_version is None:
             from ..codegen import emit as _emit   # read live (tests bump it)
             codegen_version = _emit.CODEGEN_VERSION
-        return _digest({
+        payload = {
             "task": task_fingerprint(task),
             "knobs": knobs_fingerprint(knobs or Knobs()),
             "variant": variant,
             "codegen_version": int(codegen_version),
-        })
+        }
+        if axes:
+            payload["axes"] = _stable(dict(axes))
+        return _digest(payload)
 
     # -- self-healing (DESIGN.md §14) --------------------------------------
     def _evict(self, key: str) -> None:
@@ -241,7 +250,8 @@ class ArtifactCache:
             ratio: Optional[float] = None, error: str = "",
             exec_ok: bool = True,
             verify_rtol: Optional[float] = None,
-            verify_atol: Optional[float] = None) -> bool:
+            verify_atol: Optional[float] = None,
+            axes: Optional[Dict[str, str]] = None) -> bool:
         """Store an entry.  Never raises: a failed store (disk error,
         injected fault) is counted in ``put_errors`` and the entry simply
         stays uncached — generation already has the artifact in hand."""
@@ -272,6 +282,9 @@ class ArtifactCache:
             # later request must not be served this verdict
             "verify_rtol": verify_rtol,
             "verify_atol": verify_atol,
+            # non-default dtype-axis assignment (DESIGN.md §17): needed to
+            # re-specialize the builder at materialize()
+            "axes": dict(axes) if axes else {},
         }
         try:
             fault_point("cache.put", {"cache": self, "key": key}, token=key)
@@ -360,8 +373,20 @@ class ArtifactCache:
         variant = meta.get("variant", "default")
         op = meta.get("op", "")
         if variant != "default":
-            return variants_for(op).get(variant)
-        return PLANNER_REGISTRY.get(meta.get("resolved_op", op))
+            builder = variants_for(op).get(variant)
+        else:
+            builder = PLANNER_REGISTRY.get(meta.get("resolved_op", op))
+        axes = meta.get("axes")
+        if builder is not None and axes:
+            # the entry was generated under a non-default dtype-axis
+            # assignment: a builder that cannot re-specialize must not
+            # serve it (rebuilding the f32 program against quantized
+            # cached source would diverge) — treat as a miss
+            with_axes = getattr(builder, "with_axes", None)
+            if with_axes is None:
+                return None
+            builder = with_axes(axes)
+        return builder
 
     @staticmethod
     def verdict_covers(meta: Dict[str, Any], rtol: float,

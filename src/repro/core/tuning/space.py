@@ -1,5 +1,5 @@
-"""Autotuner search space — knob axes + registered program variants
-(DESIGN.md §8).
+"""Autotuner search space — knob axes + a compositional program-axis
+product (DESIGN.md §8, §17).
 
 Role in the paper's pipeline: the paper's feedback loop (§4.2) only
 *repairs* kernels until they compile and verify; it never *searches* for
@@ -8,19 +8,34 @@ the fastest one.  This module defines what there is to search over:
 * the :class:`~repro.core.lowering.pipeline.Knobs` axes the expert
   examples already consume — tile length (``max_tile``), pad policy
   (``pad``), and the forced lowering backend (``backend``), and
-* **program variants**: alternative expert builders for the same op that
-  change the dataflow itself (e.g. the pool2d row-reuse builder, which
-  carries overlapping window rows in UB instead of reloading them).
+* **program axes**: orthogonal execution-strategy choices that change the
+  dataflow or the storage economics of the SAME computation.  A
+  :class:`Candidate` carries one value per registered axis:
 
-Variants are registered in :data:`VARIANT_REGISTRY` via
-:func:`register_variant`; the ``"default"`` variant is always the
-planner's own expert example for the op.  The tuner explores variants
-like any other axis, so hand-written §Perf kernels become *discoverable*
-instead of hand-wired.
+  - ``variant`` — alternative expert builders for the op (e.g. the
+    pool2d row-reuse builder, the fused form of a chain);
+  - ``compute_dtype`` — arithmetic precision (today always ``"f32"``;
+    the axis exists so later PRs register values instead of re-plumbing);
+  - ``storage_dtype`` — GM storage precision (``"int8"`` / ``"fp8"``
+    quantized storage with f32 compute, DESIGN.md §17).
+
+Axes COMPOSE rather than enumerate: the searchable space for an op is
+the product of each axis's registered domain, and :func:`neighbors`
+walks it one axis at a time.  A new scenario axis (LoRA-per-tenant,
+say) registers a domain function via :func:`register_axis` instead of
+multiplying entries into a flat variant table.
+
+``variant`` values are registered in :data:`VARIANT_REGISTRY` via
+:func:`register_variant` (kept as the compatibility surface over the
+axis product); the ``"default"`` variant is always the planner's own
+expert example for the op.  Non-default dtype axes specialize the
+variant's builder through its ``with_axes(axes)`` hook — a builder
+without the hook simply has a single-point dtype domain.
 """
 from __future__ import annotations
 
 import dataclasses as _dc
+import threading
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -35,24 +50,83 @@ BACKEND_CHOICES: Tuple[Optional[str], ...] = (None, "pipelined", "explicit")
 
 @dataclass(frozen=True)
 class Candidate:
-    """One point in the search space (hashable; deterministic repr)."""
+    """One point in the search space (hashable; deterministic repr).
+
+    The knob fields (``max_tile``/``pad``/``backend``) parameterize ONE
+    program; the axis fields (``variant``/``compute_dtype``/
+    ``storage_dtype``) select WHICH program family builds.  The axis
+    assignment is part of every cache fingerprint (``cache.key_for``)
+    so a tuned f32 artifact can never be served for an int8 request."""
     variant: str = "default"
     max_tile: int = 4096
     pad: bool = False
     backend: Optional[str] = None
+    compute_dtype: str = "f32"
+    storage_dtype: str = "f32"
 
     def to_knobs(self) -> Knobs:
         return Knobs(pad=self.pad, max_tile=self.max_tile,
                      backend=self.backend)
 
+    def axes(self) -> Dict[str, str]:
+        """The full program-axis assignment (one value per registered
+        axis), in registry order."""
+        return {name: getattr(self, name) for name in _AXIS_DOMAINS}
+
+    def dtype_axes(self) -> Dict[str, str]:
+        """The non-default dtype-axis assignment — empty for a pure-f32
+        candidate, so f32 cache keys stay byte-identical to the flat
+        pre-axis scheme."""
+        return {name: v for name, v in self.axes().items()
+                if name != "variant" and v != AXIS_DEFAULT}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "Candidate":
+        """Rebuild from a serialized dict, tolerating BOTH directions of
+        schema skew: a legacy 4-field dict (pre-axis tuned pointer)
+        fills the axis defaults; unknown future keys are dropped."""
+        names = {f.name for f in _dc.fields(cls)}
+        return cls(**{k: v for k, v in dict(d).items() if k in names})
+
     def describe(self) -> str:
-        return (f"variant={self.variant} tile={self.max_tile} "
-                f"pad={self.pad} backend={self.backend or 'auto'}")
+        s = (f"variant={self.variant} tile={self.max_tile} "
+             f"pad={self.pad} backend={self.backend or 'auto'}")
+        for name, v in self.axes().items():
+            if name != "variant" and v != AXIS_DEFAULT:
+                s += f" {name}={v}"
+        return s
 
 
 # --------------------------------------------------------------------------
-# Variant registry: op -> {variant name -> builder(task, shapes, knobs)}
+# Axis registry: axis name -> domain function (op -> ordered value tuple).
+# ``variant`` / ``compute_dtype`` / ``storage_dtype`` are built in; new
+# axes register a Candidate field + a domain function.
 # --------------------------------------------------------------------------
+
+AXIS_DEFAULT = "f32"            # the default value of every dtype axis
+
+_AXIS_DOMAINS: Dict[str, Callable[[str], Tuple]] = {}
+
+
+def register_axis(name: str, domain_for: Callable[[str], Tuple]) -> None:
+    """Register a program axis.  ``domain_for(op)`` returns the ordered
+    tuple of admissible values for ``op`` (first value = the default).
+    ``name`` must be a :class:`Candidate` field so assignments are
+    hashable candidate state, not side-channel context."""
+    if name in _AXIS_DOMAINS:
+        raise ValueError(f"axis '{name}' is already registered")
+    if name not in {f.name for f in _dc.fields(Candidate)}:
+        raise ValueError(f"axis '{name}' is not a Candidate field")
+    _AXIS_DOMAINS[name] = domain_for
+
+
+def axis_domains(op: str) -> Dict[str, Tuple]:
+    """The full axis product for ``op``: axis name -> ordered domain."""
+    _ensure_builtin_variants()
+    return {name: tuple(fn(op)) for name, fn in _AXIS_DOMAINS.items()}
+
+
+# -- variant axis (the compatibility surface) -------------------------------
 
 VARIANT_REGISTRY: Dict[str, Dict[str, Callable]] = {}
 
@@ -62,7 +136,8 @@ def register_variant(op: str, name: str, builder: Callable) -> None:
 
     ``builder(task, shapes, knobs) -> A.Program`` — same signature as the
     planner registry.  ``name`` must not be ``"default"`` (that slot is the
-    planner's own expert example)."""
+    planner's own expert example).  Re-registering the same (op, name)
+    replaces the builder — registration is idempotent by construction."""
     if name == "default":
         raise ValueError("'default' is reserved for the planner builder")
     VARIANT_REGISTRY.setdefault(op, {})[name] = builder
@@ -78,6 +153,36 @@ def variants_for(op: str) -> Dict[str, Callable]:
         out["default"] = PLANNER_REGISTRY[op]
     out.update(VARIANT_REGISTRY.get(op, {}))
     return out
+
+
+# -- dtype axes -------------------------------------------------------------
+
+# op -> extra storage dtypes beyond the default (registered by the chains
+# with quantization-eligible tensors, fusion/chain.register_fusion_variants)
+STORAGE_DTYPES: Dict[str, Tuple[str, ...]] = {}
+# op -> extra compute dtypes (empty today; the axis exists for later PRs)
+COMPUTE_DTYPES: Dict[str, Tuple[str, ...]] = {}
+
+
+def register_storage_dtypes(op: str, kinds: Tuple[str, ...]) -> None:
+    """Open the storage-dtype axis for ``op`` (e.g. ``("int8", "fp8")``).
+    Idempotent: re-registration replaces the domain."""
+    STORAGE_DTYPES[op] = tuple(k for k in kinds if k != AXIS_DEFAULT)
+
+
+def storage_dtypes_for(op: str) -> Tuple[str, ...]:
+    _ensure_builtin_variants()
+    return (AXIS_DEFAULT,) + STORAGE_DTYPES.get(op, ())
+
+
+def compute_dtypes_for(op: str) -> Tuple[str, ...]:
+    _ensure_builtin_variants()
+    return (AXIS_DEFAULT,) + COMPUTE_DTYPES.get(op, ())
+
+
+register_axis("variant", lambda op: tuple(variants_for(op)))
+register_axis("compute_dtype", compute_dtypes_for)
+register_axis("storage_dtype", storage_dtypes_for)
 
 
 # -- built-in variants ------------------------------------------------------
@@ -99,48 +204,90 @@ _BUILTIN_VARIANTS = (("avg_pool2d", "rowreuse", "avg_pool2d_rowreuse"),
                      # transfer-count tie-break
                      ("mhc_post", "rowblock", "mhc_post_blocked"))
 _builtins_done = False
+_builtins_lock = threading.Lock()
 
 
 def _ensure_builtin_variants() -> None:
+    """Install the built-in variant/axis registrations exactly once.
+
+    Idempotent AND thread-unambiguous: the double-checked lock means
+    concurrent first callers serialize (one thread runs the registration
+    to completion; the rest observe the finished registry), and repeat
+    calls are free.  ``reset_registry()`` re-arms it for tests."""
     global _builtins_done
     if _builtins_done:
         return
-    from ..planner import PLANNER_REGISTRY    # lazy: avoid import cycle
-    for op, name, registry_key in _BUILTIN_VARIANTS:
-        if registry_key in PLANNER_REGISTRY:
-            register_variant(op, name, PLANNER_REGISTRY[registry_key])
-    # fused operator chains (DESIGN.md §9–§11): fused-vs-sequential rides
-    # the same variant axis, so the tuner discovers fusion on its own.
-    # CHAINS itself is populated by jaxpr extraction over the model
-    # workload library (fingerprint-deduped against the declared golden
-    # fixtures), so a chain first observed in traced model code — e.g.
-    # mask_softmax — becomes tuner-searchable with no registration code.
-    from ..fusion.chain import register_fusion_variants
-    register_fusion_variants(register_variant)
-    _builtins_done = True
+    with _builtins_lock:
+        if _builtins_done:
+            return
+        from ..planner import PLANNER_REGISTRY   # lazy: avoid import cycle
+        for op, name, registry_key in _BUILTIN_VARIANTS:
+            if registry_key in PLANNER_REGISTRY:
+                register_variant(op, name, PLANNER_REGISTRY[registry_key])
+        # fused operator chains (DESIGN.md §9–§11): fused-vs-sequential
+        # rides the variant axis, so the tuner discovers fusion on its
+        # own, and chains with quantization-eligible tensors open the
+        # storage-dtype axis (DESIGN.md §17).  CHAINS itself is populated
+        # by jaxpr extraction over the model workload library
+        # (fingerprint-deduped against the declared golden fixtures), so
+        # a chain first observed in traced model code — e.g. mask_softmax
+        # — becomes tuner-searchable with no registration code.
+        from ..fusion.chain import register_fusion_variants
+        register_fusion_variants(register_variant, register_storage_dtypes)
+        _builtins_done = True
+
+
+def reset_registry() -> None:
+    """Drop every registered variant and dtype-axis domain and re-arm the
+    built-in registration (tests; replaces import-order-dependent
+    monkeypatching of the module-level state)."""
+    global _builtins_done
+    with _builtins_lock:
+        VARIANT_REGISTRY.clear()
+        STORAGE_DTYPES.clear()
+        COMPUTE_DTYPES.clear()
+        _builtins_done = False
 
 
 # --------------------------------------------------------------------------
 # Neighborhood structure for the hill climb
 # --------------------------------------------------------------------------
 
-def neighbors(cand: Candidate, op: str) -> List[Candidate]:
+def neighbors(cand: Candidate, op: str,
+              open_axes: Optional[Tuple[str, ...]] = None) -> List[Candidate]:
     """Single-axis moves from ``cand``, in a fixed, deterministic order.
 
-    Order encodes the expected impact: dataflow variants first (they change
-    traffic asymptotically), then tile length (VMEM residency vs grid
-    overhead), then pad policy and backend.
+    Order encodes the expected impact: program axes first (variant, then
+    the dtype axes — they change traffic asymptotically), then tile
+    length (VMEM residency vs grid overhead), then pad policy and
+    backend.  The program-axis moves walk the registered axis PRODUCT
+    one coordinate at a time, so the climb reaches e.g.
+    (variant=fused, storage_dtype=int8) through two single-axis steps.
+
+    ``open_axes`` gates the DTYPE axes: ``None`` opens every registered
+    axis (the full product), while a tuple opens only the named ones —
+    the tuner passes ``task.attrs["tuner_axes"]`` so quantized search is
+    a per-task opt-in (a numerics-changing axis must never silently
+    enter an existing op's search).  The ``variant`` axis is always
+    open.
 
     Ops whose builders all declare ``knob_free = True`` (e.g. fusion
-    chains, which plan their own block size) expose only the variant axis
-    — knob moves would rebuild and re-gate byte-identical programs."""
+    chains, which plan their own block size) expose only the program
+    axes — knob moves would rebuild and re-gate byte-identical
+    programs."""
     out: List[Candidate] = []
 
-    builders = variants_for(op)
-    for vname in builders:
-        if vname != cand.variant:
-            out.append(_dc.replace(cand, variant=vname))
+    domains = axis_domains(op)
+    for axis, values in domains.items():
+        if (axis != "variant" and open_axes is not None
+                and axis not in open_axes):
+            continue
+        cur = getattr(cand, axis)
+        for v in values:
+            if v != cur:
+                out.append(_dc.replace(cand, **{axis: v}))
 
+    builders = variants_for(op)
     if all(getattr(b, "knob_free", False) for b in builders.values()):
         return out
 

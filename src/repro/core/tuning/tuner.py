@@ -81,12 +81,27 @@ def _evaluate(task, cand: Candidate, cache: Optional[ArtifactCache],
     builder = variants_for(task.op).get(cand.variant)
     if builder is None:
         return Trial(cand, 0.0, False, f"unknown variant '{cand.variant}'")
+    axes = cand.dtype_axes()
+    if axes:
+        # non-default dtype-axis assignment: specialize the builder (a
+        # builder without the hook has a single-point dtype domain — the
+        # candidate cannot build)
+        with_axes = getattr(builder, "with_axes", None)
+        if with_axes is None:
+            return Trial(cand, 0.0, False,
+                         f"variant '{cand.variant}' does not support "
+                         f"axes {axes}")
+        builder = with_axes(axes)
+    # quantized builders carry their dtype-derived verification bar; the
+    # gate never tightens below the caller's request
+    rtol = max(rtol, float(getattr(builder, "verify_rtol", 0.0)))
+    atol = max(atol, float(getattr(builder, "verify_atol", 0.0)))
     knobs = cand.to_knobs()
 
     # Bench-shape artifact (feeds the cost model) — through the cache.
     art, from_cache, cached_verdict_ok = None, False, False
     resolved_op = task.op
-    key = (cache.key_for(task, knobs, variant=cand.variant)
+    key = (cache.key_for(task, knobs, variant=cand.variant, axes=axes)
            if cache is not None else None)
     if cache is not None:
         entry = cache.get(key)
@@ -145,6 +160,11 @@ def _evaluate(task, cand: Candidate, cache: Optional[ArtifactCache],
         if cand.variant == "default" and resolved_op != task.op:
             from ..planner import PLANNER_REGISTRY
             gate_builder = PLANNER_REGISTRY.get(resolved_op, builder)
+            if axes and gate_builder is not builder:
+                # the fallback registry builder is unspecialized; re-apply
+                # the candidate's axes (or keep the specialized original)
+                wa = getattr(gate_builder, "with_axes", None)
+                gate_builder = wa(axes) if wa is not None else builder
         else:
             # same-family hook for pattern-auto builders (fusion chains):
             # force the check build to the bench artifact's resident /
@@ -178,7 +198,7 @@ def _evaluate(task, cand: Candidate, cache: Optional[ArtifactCache],
                       resolved_op=resolved_op, pass_ok=False,
                       max_abs_err=gate_err, error=err_msg,
                       exec_ok=gate_exec_ok,
-                      verify_rtol=rtol, verify_atol=atol)
+                      verify_rtol=rtol, verify_atol=atol, axes=axes)
         return Trial(cand, 0.0, False, err_msg or "correctness gate failed",
                      from_cache=from_cache)
 
@@ -188,7 +208,7 @@ def _evaluate(task, cand: Candidate, cache: Optional[ArtifactCache],
                   pass_ok=(True if gate_ran else None),
                   max_abs_err=gate_err, ratio=ratio,
                   verify_rtol=rtol if gate_ran else None,
-                  verify_atol=atol if gate_ran else None)
+                  verify_atol=atol if gate_ran else None, axes=axes)
     return Trial(cand, ratio, True, from_cache=from_cache,
                  transfers=transfers)
 
@@ -243,9 +263,13 @@ def tune(task, budget: int = 12, cache=None,
             return True
         return t.ratio > base * (1 + _EPS) and t.transfers <= over.transfers
 
+    # dtype axes are a per-task opt-in (task.attrs['tuner_axes']): a
+    # numerics-changing axis never silently enters an existing op's
+    # search, and f32 tuned pointers stay byte-stable
+    open_axes = tuple(task.attrs.get("tuner_axes", ()) or ())
     while result.evaluations < budget:
         step_best: Optional[Trial] = None
-        for nb in neighbors(current, task.op):
+        for nb in neighbors(current, task.op, open_axes):
             if result.evaluations >= budget:
                 break
             if nb in seen:

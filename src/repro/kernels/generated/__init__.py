@@ -9,4 +9,5 @@ from . import (rmsnorm, softmax, adamw, swiglu, add_rmsnorm,
                mask_softmax, double_softmax, flash_attention,
                mhc_post, mhc_post_grad,
                attn_scores_bwd, lm_head_bwd, norm_residual_bwd,
-               ce_grad, mhc_stream_bwd_c0, mlp_bwd_c0, mlp_bwd_c1)
+               ce_grad, mhc_stream_bwd_c0, mlp_bwd_c0, mlp_bwd_c1,
+               rmsnorm_swiglu_int8, attn_scores_int8)

@@ -40,6 +40,11 @@ def main():
                     help="wall-clock deadline for the whole run")
     ap.add_argument("--no-fastpath", action="store_true",
                     help="disable the bucketed fused decode fast path")
+    ap.add_argument("--kv-dtype", default="f32",
+                    choices=("f32", "int8", "fp8"),
+                    help="storage-dtype axis for the decode buckets "
+                         "(DESIGN.md §17); a dtype the decode chain does "
+                         "not admit falls back to f32 with a warning")
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="disable shared-prefix admission")
     ap.add_argument("--cache", default=None,
@@ -67,7 +72,8 @@ def main():
                          max_len=args.max_len,
                          warm_kernels=args.warm, kernel_cache=cache,
                          decode_fastpath=not args.no_fastpath,
-                         prefix_sharing=not args.no_prefix_sharing)
+                         prefix_sharing=not args.no_prefix_sharing,
+                         kv_dtype=args.kv_dtype)
     if args.warm and engine.kernel_warmup is not None:
         print(f"warm-up: {engine.kernel_warmup['verdicts']}")
         if args.publish_manifest:
@@ -77,7 +83,8 @@ def main():
                 True if cache is None else cache,
                 decode_buckets=[(args.slots, kv)
                                 for kv in kv_bucket_ladder(args.max_len)],
-                cfg=cfg, manifest_path=args.publish_manifest)
+                cfg=cfg, manifest_path=args.publish_manifest,
+                kv_dtype=args.kv_dtype)
             print(f"published manifest -> {args.publish_manifest}")
     rng = np.random.RandomState(0)
     reqs = [Request(uid=i, prompt=rng.randint(0, cfg.vocab, 8)
@@ -95,6 +102,7 @@ def main():
           f"fastpath_errors={rep.fastpath_errors}")
     if engine.fastpath is not None:
         print(f"fastpath: buckets={engine.fastpath.buckets} "
+              f"kv_dtype={engine.fastpath.kv_dtype} "
               f"hits={engine.fastpath.hits} "
               f"misses={engine.fastpath.misses}")
 

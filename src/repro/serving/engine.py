@@ -23,6 +23,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import time
+import warnings
 from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 from pathlib import Path
@@ -88,13 +89,29 @@ class DecodeFastPath:
     """
 
     def __init__(self, cfg: ArchConfig, cache=None, resolver=None,
-                 quarantine=None):
+                 quarantine=None, kv_dtype: str = "f32"):
         from ..core.resilience import (GuardedResolver, PersistentQuarantine,
                                        Quarantine)
         from ..core.tuning.cache import ArtifactCache
         self.cfg = cfg
         self.group = cfg.n_heads // cfg.n_kv_heads
         self.head_dim = cfg.resolved_head_dim
+        # storage-dtype axis for the decode chain (DESIGN.md §17): every
+        # bucket this instance resolves is keyed by it (task name + pinned
+        # axes enter the cache fingerprint).  A dtype the chain's structure
+        # does not admit (flash_attention today: both matmuls make every
+        # tensor contraction-adjacent) clamps to f32 with a warning rather
+        # than failing each bucket down the degradation ladder.
+        self.requested_kv_dtype = str(kv_dtype or "f32")
+        self.kv_dtype = self.requested_kv_dtype
+        if self.kv_dtype != "f32":
+            from ..core.fusion.chain import chain_storage_dtypes
+            if self.kv_dtype not in chain_storage_dtypes("flash_attention"):
+                warnings.warn(
+                    f"kv_dtype '{self.kv_dtype}' is not admissible for the "
+                    f"decode attention chain (quantization eligibility, "
+                    f"DESIGN.md §17); serving buckets fall back to f32")
+                self.kv_dtype = "f32"
         cache_obj = ArtifactCache.resolve(cache) if cache is not None \
             else None
         if resolver is None:
@@ -114,8 +131,9 @@ class DecodeFastPath:
         """The ladder Resolution serving this step's bucket."""
         bucket = decode_bucket(batch_slots, kv_len)
         hit = bucket in self._memo
+        dtag = "" if self.kv_dtype == "f32" else f":{self.kv_dtype}"
         fault_point("serve.decode_fastpath",
-                    token=f"bucket={bucket[0]}x{bucket[1]}:"
+                    token=f"bucket={bucket[0]}x{bucket[1]}{dtag}:"
                           f"{'hit' if hit else 'miss'}")
         if hit:
             self.hits += 1
@@ -123,7 +141,8 @@ class DecodeFastPath:
         from ..bench.tasks import decode_fused_task
         self.misses += 1
         task = decode_fused_task(self.group, self.head_dim, bucket[1],
-                                 batch_slots=bucket[0])
+                                 batch_slots=bucket[0],
+                                 kv_dtype=self.kv_dtype)
         res = self.resolver.resolve(task)
         self.events.extend(res.events)
         self._memo[bucket] = res
@@ -141,7 +160,7 @@ def warm_kernel_cache(cache=True, tasks=None, verify: bool = True,
                       tune: bool = False, tune_budget: int = 8,
                       guard=None, decode_buckets=None,
                       cfg: Optional[ArchConfig] = None,
-                      manifest_path=None) -> Dict:
+                      manifest_path=None, kv_dtype: str = "f32") -> Dict:
     """Pre-populate the persistent artifact cache (DESIGN.md §8) with the
     framework hot-spot kernels (rmsnorm/softmax/adamw/swiglu/add_rmsnorm +
     mHC) so serving-time kernel (re)generation skips the lowering pipeline.
@@ -193,10 +212,22 @@ def warm_kernel_cache(cache=True, tasks=None, verify: bool = True,
         head_dim = cfg.resolved_head_dim
         buckets = sorted({decode_bucket(bs, kv)
                           for bs, kv in decode_buckets})
-        task_list += [decode_fused_task(group, head_dim, kv, batch_slots=bs)
+        kv_dtype = str(kv_dtype or "f32")
+        if kv_dtype != "f32":
+            # same admissibility clamp as DecodeFastPath: warming an
+            # inadmissible dtype would fail every bucket down the ladder
+            from ..core.fusion.chain import chain_storage_dtypes
+            if kv_dtype not in chain_storage_dtypes("flash_attention"):
+                warnings.warn(
+                    f"kv_dtype '{kv_dtype}' is not admissible for the "
+                    f"decode attention chain; warming f32 buckets instead")
+                kv_dtype = "f32"
+        task_list += [decode_fused_task(group, head_dim, kv, batch_slots=bs,
+                                        kv_dtype=kv_dtype)
                       for bs, kv in buckets]
         decode_info = {"group": int(group), "head_dim": int(head_dim),
-                       "buckets": [list(b) for b in buckets]}
+                       "buckets": [list(b) for b in buckets],
+                       "kv_dtype": kv_dtype}
     kernels = []
     for task in task_list:
         if resolver is not None:
@@ -316,7 +347,8 @@ class ServeEngine:
                  max_len: int, greedy: bool = True,
                  warm_kernels: bool = False, kernel_cache=None,
                  decode_fastpath=True, prefix_sharing: bool = True,
-                 prefix_memo_slots: int = 8, clock=None):
+                 prefix_memo_slots: int = 8, clock=None,
+                 kv_dtype: str = "f32"):
         self.params = params
         self.cfg = cfg
         self.B = batch_slots
@@ -336,13 +368,15 @@ class ServeEngine:
                 decode_buckets=[(batch_slots, kv)
                                 for kv in kv_bucket_ladder(max_len)]
                 if decode_fastpath else None,
-                cfg=cfg if decode_fastpath else None)
+                cfg=cfg if decode_fastpath else None,
+                kv_dtype=kv_dtype)
         # the bucketed fused decode-attention fast path; pass a configured
         # DecodeFastPath to share one across engines, False to disable
         if isinstance(decode_fastpath, DecodeFastPath):
             self.fastpath: Optional[DecodeFastPath] = decode_fastpath
         elif decode_fastpath:
-            self.fastpath = DecodeFastPath(cfg, cache=kernel_cache)
+            self.fastpath = DecodeFastPath(cfg, cache=kernel_cache,
+                                           kv_dtype=kv_dtype)
         else:
             self.fastpath = None
         self.prefix_sharing = bool(prefix_sharing)

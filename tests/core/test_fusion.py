@@ -755,12 +755,104 @@ def test_differential_fused_sequential_f64(chain, rows, cols):
 
 def test_every_registered_chain_has_differential_coverage():
     """The no-untested-chain gate, stated directly: the parametrization
-    above covers set(CHAINS) exactly, and every registered chain's stage
-    vocabulary is evaluable by the f64 oracle."""
+    above covers set(CHAINS) exactly, every registered chain's stage
+    vocabulary is evaluable by the f64 oracle, and every (chain, storage
+    dtype) the structure admits has a quantized differential row — a new
+    chain (or a newly eligible dtype) is picked up at collection time, not
+    by hand-listing."""
     for name, spec in CHAINS.items():
         shapes, inputs = _diff_inputs(spec, 3, 65, 0)
         outs = _compose_ref64(spec, inputs)
         assert set(outs) == set(spec.outputs), name
+    want_quant = {(c, dt) for c in CHAINS for dt in chain_storage_dtypes(c)}
+    assert set(_QUANT_ROWS) == want_quant
+    assert any(dt == "int8" for _, dt in _QUANT_ROWS)
+    # matmul adjacency forbids quantized storage on flash_attention
+    assert not any(c == "flash_attention" for c, _ in _QUANT_ROWS)
+
+
+# ---------------------------------------------------------------------------
+# Quantized-storage differential rows (DESIGN.md §17): every (chain, dtype)
+# the structure admits, derived from sorted(CHAINS) — never hand-listed
+# ---------------------------------------------------------------------------
+
+from repro.core.fusion.chain import Q_VERIFY_TOL, chain_storage_dtypes
+
+_QUANT_ROWS = [(chain, dt) for chain in sorted(CHAINS)
+               for dt in chain_storage_dtypes(chain)]
+
+
+def _np_quantize(a, inv, dt):
+    """Bitwise the entry wrapper's jnp quantizer (pipeline.py interp
+    verify uses the identical numpy form)."""
+    a = np.asarray(a, np.float32)
+    if dt == "int8":
+        return np.clip(np.floor(a * np.float32(inv) + np.float32(0.5)),
+                       -127.0, 127.0).astype(np.int8)
+    import ml_dtypes
+    return np.clip(a * np.float32(inv),
+                   -448.0, 448.0).astype(ml_dtypes.float8_e4m3fn)
+
+
+@pytest.mark.parametrize("chain,dt", _QUANT_ROWS,
+                         ids=[f"{c}-{d}" for c, d in _QUANT_ROWS])
+def test_differential_quantized_storage(chain, dt):
+    """Quantized chains, differentially: for every admitted (chain,
+    storage dtype) — fused ≡ sequential BIT-EXACT on the raw storage
+    codes per pattern (the whole point of deterministic quantizers and
+    fp8's boundary-only rule), and every dequantized output within the
+    documented dtype-derived tolerance of the composed f64 oracle."""
+    rows, cols = 5, 97
+    seed = zlib.crc32(f"q-{chain}-{dt}".encode()) % (2 ** 31)
+    spec = CHAINS[chain]
+    shapes, inputs = _diff_inputs(spec, rows, cols, seed)
+    ref = _compose_ref64(spec, inputs)
+    full = spec.chain_shapes(shapes)
+    out_shapes = {t: full[t] for t in spec.outputs}
+    built = {}
+    for pattern in ("resident", "streaming"):
+        for mode in ("fused", "sequential"):
+            try:
+                prog = build_chain(spec, shapes, mode=mode, name=None,
+                                   pattern=pattern, storage_dtype=dt)
+            except (NotImplementedError, FusionError):
+                continue   # pattern structurally unsupported at this shape
+            quant = prog.meta.get("quant") or {}
+            assert quant.get("dtype") == dt, \
+                f"{chain} {pattern}/{mode}: quant meta missing"
+            qin, qout = quant.get("in", {}), quant.get("out", {})
+            ins = {t: (_np_quantize(v, qin[t]["inv"], dt) if t in qin
+                       else v) for t, v in inputs.items()}
+            raw = _run_chain_prog(prog, spec, ins, out_shapes)
+            deq = {t: (np.asarray(raw[t], np.float64)
+                       * float(qout[t]["scale"]) if t in qout
+                       else np.asarray(raw[t], np.float64))
+                   for t in spec.outputs}
+            built[(pattern, mode)] = (raw, deq, set(qout))
+    assert any(m == "fused" for _, m in built), (chain, dt, "no fused")
+    assert any(m == "sequential" for _, m in built), (chain, dt,
+                                                      "no sequential")
+    # at least one chain OUTPUT actually lives at the narrow dtype
+    # somewhere (otherwise the row tests nothing)
+    assert any(qo for _, (_, _, qo) in built.items()), (chain, dt)
+    rtol, atol = Q_VERIFY_TOL[dt]
+    for (pattern, mode), (_raw, deq, _qo) in built.items():
+        for t in spec.outputs:
+            g = deq[t][:ref[t].shape[0], :ref[t].shape[1]]
+            assert np.allclose(g, ref[t], rtol=rtol, atol=atol), \
+                (f"{chain}[{dt}] {pattern}/{mode} output '{t}' diverges "
+                 f"from the f64 oracle beyond the documented tolerance "
+                 f"(max abs err {np.max(np.abs(g - ref[t])):.4g})")
+    for pattern in ("resident", "streaming"):
+        f = built.get((pattern, "fused"))
+        s = built.get((pattern, "sequential"))
+        if f is not None and s is not None:
+            for t in spec.outputs:
+                np.testing.assert_array_equal(
+                    np.asarray(f[0][t]).view(np.uint8),
+                    np.asarray(s[0][t]).view(np.uint8),
+                    err_msg=f"{chain}[{dt}] {pattern}: fused != "
+                            f"sequential (storage codes must be bit-exact)")
 
 
 try:

@@ -1,0 +1,337 @@
+"""Compositional axis product + quantized storage (DESIGN.md §17).
+
+The search space is a product of registered program axes (variant ×
+compute_dtype × storage_dtype), not a flat variant table: these tests pin
+the migration contract (legacy tuned pointers / pure-f32 cache keys stay
+byte-identical), the registry lifecycle (idempotent built-in registration,
+``reset_registry``), the neighborhood structure (single-axis moves walk
+the full product; dtype axes are per-task opt-in), the cache axis-safety
+invariant (a tuned f32 artifact is never served for an int8 request), and
+the acceptance bar: the tuner DISCOVERS int8-storage fused variants at
+bandwidth-bound geometries and keeps f32 at compute-bound ones.
+"""
+import dataclasses
+import json
+import threading
+
+import pytest
+
+from repro.bench import suite
+from repro.bench.tasks import fused_suite
+from repro.core.fusion.chain import chain_storage_dtypes
+from repro.core.lowering.pipeline import Knobs
+from repro.core.planner import generate
+from repro.core.resilience import (GuardedResolver, PersistentQuarantine,
+                                   Quarantine, drain_events)
+from repro.core.tuning import ArtifactCache, Candidate, neighbors, tune
+from repro.core.tuning import space
+
+
+@pytest.fixture(scope="module")
+def tasks():
+    return {t.name: t for t in suite()}
+
+
+@pytest.fixture(scope="module")
+def fused():
+    return {t.name: t for t in fused_suite()}
+
+
+def _pin_storage(task, dt, suffix=None):
+    """A copy of ``task`` with the storage-dtype axis pinned via
+    ``attrs['axes']`` (the planner applies it tuned or not)."""
+    return dataclasses.replace(
+        task, name=f"{task.name}_{suffix or dt}",
+        attrs={**task.attrs, "axes": {"storage_dtype": dt}})
+
+
+# ---------------------------------------------------------------------------
+# Candidate schema migration
+# ---------------------------------------------------------------------------
+
+def test_candidate_from_dict_tolerates_schema_skew():
+    """Legacy 4-field tuned pointers fill axis defaults; unknown future
+    keys are dropped — both directions of skew round-trip."""
+    legacy = {"variant": "rowreuse", "max_tile": 512, "pad": True,
+              "backend": "explicit"}
+    c = Candidate.from_dict(legacy)
+    assert c.variant == "rowreuse" and c.max_tile == 512
+    assert c.compute_dtype == "f32" and c.storage_dtype == "f32"
+    assert c.dtype_axes() == {}
+
+    future = {**dataclasses.asdict(Candidate()), "sparsity": "2:4"}
+    assert Candidate.from_dict(future) == Candidate()
+
+    q = Candidate.from_dict({"variant": "fused", "storage_dtype": "int8"})
+    assert q.dtype_axes() == {"storage_dtype": "int8"}
+    assert "storage_dtype=int8" in q.describe()
+
+
+def test_legacy_tuned_pointer_consumed_without_research(tasks, tmp_path):
+    """A pre-axis tuned pointer (4-field candidate dict, written by an
+    older build) must be consumed as-is: no new search, axis defaults
+    filled in."""
+    from repro.core.codegen import emit
+    cache = ArtifactCache(str(tmp_path))
+    task = tasks["max_pool2d"]
+    rec = {"candidate": {"variant": "rowreuse", "max_tile": 4096,
+                         "pad": False, "backend": None},
+           "ratio": 2.0, "codegen_version": emit.CODEGEN_VERSION}
+    cache._tuned_path(task).write_text(json.dumps(rec))
+    r = generate(task, tune=True, tune_budget=6, cache=cache)
+    assert r.comp_ok and r.pass_ok
+    assert r.tune is None, "legacy pointer must skip the search"
+    assert r.artifact.program.name.endswith("_rowreuse")
+
+
+# ---------------------------------------------------------------------------
+# Registry lifecycle (idempotence / reset / thread-unambiguity)
+# ---------------------------------------------------------------------------
+
+def test_builtin_registration_idempotent_and_resettable():
+    space._ensure_builtin_variants()
+    snap_variants = {op: tuple(v) for op, v in
+                     space.VARIANT_REGISTRY.items()}
+    snap_storage = dict(space.STORAGE_DTYPES)
+    for _ in range(3):
+        space._ensure_builtin_variants()
+    assert {op: tuple(v) for op, v in
+            space.VARIANT_REGISTRY.items()} == snap_variants, \
+        "repeat registration must not duplicate or reorder variants"
+    assert dict(space.STORAGE_DTYPES) == snap_storage
+
+    space.reset_registry()
+    assert not space.VARIANT_REGISTRY and not space.STORAGE_DTYPES
+    # any registry query re-arms the built-ins
+    assert "rowreuse" in space.variants_for("avg_pool2d")
+    assert {op: tuple(v) for op, v in
+            space.VARIANT_REGISTRY.items()} == snap_variants
+    assert dict(space.STORAGE_DTYPES) == snap_storage
+
+
+def test_builtin_registration_thread_unambiguous():
+    """Concurrent first callers must all observe the COMPLETED registry
+    (double-checked lock), never a half-registered one."""
+    space.reset_registry()
+    barrier = threading.Barrier(8)
+    results, errors = [], []
+
+    def worker():
+        try:
+            barrier.wait()
+            d = space.axis_domains("rmsnorm_swiglu")
+            results.append((d["variant"], d["storage_dtype"]))
+        except Exception as e:  # noqa: BLE001 — collected for the assert
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert len(set(results)) == 1, "threads observed different registries"
+    variants, dtypes = results[0]
+    assert "fused" in variants
+    assert "int8" in dtypes and "fp8" in dtypes
+
+
+def test_register_axis_rejects_duplicates_and_non_fields():
+    with pytest.raises(ValueError):
+        space.register_axis("storage_dtype", lambda op: ("f32",))
+    with pytest.raises(ValueError):
+        space.register_axis("not_a_candidate_field", lambda op: ("f32",))
+
+
+def test_storage_axis_domains_follow_chain_eligibility():
+    """The registered storage domain per op IS the chain's structural
+    eligibility: flash_attention (everything matmul-adjacent) stays
+    single-point, quantizable chains open int8+fp8."""
+    assert space.storage_dtypes_for("rmsnorm_swiglu") == ("f32", "int8",
+                                                          "fp8")
+    assert space.storage_dtypes_for("attn_scores") == ("f32", "int8", "fp8")
+    assert chain_storage_dtypes("flash_attention") == ()
+    assert space.storage_dtypes_for("flash_attention") == ("f32",)
+    # non-chain ops have a single-point storage domain
+    assert space.storage_dtypes_for("relu") == ("f32",)
+
+
+# ---------------------------------------------------------------------------
+# Neighborhood structure: the product, one axis at a time
+# ---------------------------------------------------------------------------
+
+_AXIS_FIELDS = ("variant", "compute_dtype", "storage_dtype")
+
+
+def _ndiff(a, b):
+    return sum(getattr(a, f.name) != getattr(b, f.name)
+               for f in dataclasses.fields(Candidate))
+
+
+def test_neighbors_walk_the_full_axis_product():
+    base = Candidate()
+    op = "rmsnorm_swiglu"
+    moves = neighbors(base, op)            # open_axes=None: all axes open
+    assert moves == neighbors(base, op), "neighborhood must be deterministic"
+    # every move flips exactly one candidate field
+    assert all(_ndiff(base, c) == 1 for c in moves)
+    # chain builders are knob_free: ONLY program-axis moves
+    assert all(any(getattr(c, f) != getattr(base, f) for f in _AXIS_FIELDS)
+               for c in moves)
+    assert {c.variant for c in moves} >= {"fused"}
+    assert {c.storage_dtype for c in moves} >= {"int8", "fp8"}
+    # the product point (fused, int8) is reachable in two single-axis steps
+    two_hop = {(c2.variant, c2.storage_dtype)
+               for c in moves for c2 in neighbors(c, op)}
+    assert ("fused", "int8") in two_hop and ("fused", "fp8") in two_hop
+    # closure over repeated stepping covers the whole variant × storage
+    # product (compute_dtype is single-point today)
+    seen, frontier = {(base.variant, base.storage_dtype)}, [base]
+    while frontier:
+        nxt = []
+        for c in frontier:
+            for n in neighbors(c, op):
+                key = (n.variant, n.storage_dtype)
+                if key not in seen:
+                    seen.add(key)
+                    nxt.append(n)
+        frontier = nxt
+    want = {(v, d) for v in space.variants_for(op)
+            for d in space.storage_dtypes_for(op)}
+    assert seen == want, "climb cannot reach the full axis product"
+
+
+def test_neighbors_dtype_axes_are_opt_in():
+    """The dtype axes are gated by ``open_axes`` (the tuner passes
+    ``task.attrs['tuner_axes']``): closed by default, variant always
+    open — a numerics-changing axis never silently enters a search."""
+    base = Candidate()
+    closed = neighbors(base, "rmsnorm_swiglu", open_axes=())
+    assert closed, "variant axis must stay open"
+    assert all(c.storage_dtype == "f32" and c.compute_dtype == "f32"
+               for c in closed)
+    opened = neighbors(base, "rmsnorm_swiglu", open_axes=("storage_dtype",))
+    assert {c.storage_dtype for c in opened} >= {"int8", "fp8"}
+    # a pinned non-default assignment is preserved across variant moves
+    pinned = Candidate(storage_dtype="int8")
+    assert all(c.storage_dtype == "int8"
+               for c in neighbors(pinned, "rmsnorm_swiglu", open_axes=())
+               if c.variant != pinned.variant)
+
+
+# ---------------------------------------------------------------------------
+# Cache axis-safety: the fingerprint carries the full axis assignment
+# ---------------------------------------------------------------------------
+
+def test_cache_key_separates_axis_assignments(fused, tmp_path):
+    cache = ArtifactCache(str(tmp_path))
+    task = fused["bias_gelu"]
+    k_f32 = cache.key_for(task, Knobs(), variant="fused")
+    # pure-f32 keys are byte-identical to the pre-axis scheme: an empty
+    # assignment must not perturb the digest (no mass invalidation)
+    assert k_f32 == cache.key_for(task, Knobs(), variant="fused", axes={})
+    assert k_f32 == cache.key_for(task, Knobs(), variant="fused", axes=None)
+    k_i8 = cache.key_for(task, Knobs(), variant="fused",
+                         axes={"storage_dtype": "int8"})
+    k_f8 = cache.key_for(task, Knobs(), variant="fused",
+                         axes={"storage_dtype": "fp8"})
+    assert len({k_f32, k_i8, k_f8}) == 3, \
+        "axis assignments must fingerprint separately"
+
+
+def test_warmed_f32_cache_misses_for_int8_and_regenerates_clean(
+        fused, tmp_path):
+    """The end-to-end axis-safety story through the resilience ladder: a
+    warmed f32 entry is NEVER served for an int8 request — the int8
+    request regenerates on the top rung with ZERO degradation events and
+    no quarantine traffic, and the f32 entry still hits afterwards."""
+    cache = ArtifactCache(str(tmp_path))
+    quar = PersistentQuarantine.from_cache(cache)
+    base = fused["bias_gelu"]
+    drain_events()
+
+    resolver = GuardedResolver(cache, tune=True, tune_budget=2,
+                               quarantine=quar)
+    r32 = resolver.resolve(base)
+    assert r32.rung == "cached_tuned" and not r32.events
+    stores_after_f32 = cache.stores
+    assert stores_after_f32 > 0
+
+    r8 = resolver.resolve(_pin_storage(base, "int8"))
+    assert r8.rung == "cached_tuned" and r8.verdict == "ok"
+    assert not r8.events, "int8 regen must not descend the ladder"
+    assert cache.stores > stores_after_f32, \
+        "int8 request must regenerate, not be served the f32 artifact"
+    assert not drain_events()
+
+    # clean regeneration never touches the quarantine table — the
+    # persistent file is not even created
+    assert quar.entries() == {}
+    assert not (cache.root / "quarantine.json").exists()
+    # a restarted fleet member (fresh persistent table) resolves the
+    # quantized task on the top rung, from cache, with no degradation
+    quar2 = PersistentQuarantine.from_cache(cache)
+    resolver2 = GuardedResolver(cache, tune=True, tune_budget=2,
+                                quarantine=quar2)
+    r8b = resolver2.resolve(_pin_storage(base, "int8"))
+    assert r8b.rung == "cached_tuned" and not r8b.events
+    assert r8b.result.cached, "second int8 resolve must hit its own entry"
+    # and the original f32 entry is still intact
+    r32b = resolver2.resolve(base)
+    assert r32b.rung == "cached_tuned" and not r32b.events
+    assert r32b.result.cached
+
+
+def test_quarantined_f32_rung_does_not_block_int8_fingerprint(fused):
+    """Quarantine is keyed by task fingerprint: poisoning the f32 task's
+    top rungs must not impede the int8-pinned task (distinct
+    fingerprint), and vice versa."""
+    base = fused["bias_gelu"]
+    int8 = _pin_storage(base, "int8")
+    quar = Quarantine(threshold=1)
+    fp32 = GuardedResolver._fingerprint(base)
+    fp8_ = GuardedResolver._fingerprint(int8)
+    assert fp32 != fp8_
+    quar.note_failure(fp32, "regenerate")
+    assert quar.blocked(fp32, "regenerate")
+    assert not quar.blocked(fp8_, "regenerate")
+
+
+# ---------------------------------------------------------------------------
+# The acceptance bar: discovery, positive and negative
+# ---------------------------------------------------------------------------
+
+def test_tuner_discovers_int8_storage_at_bandwidth_bound_geometry(
+        fused, tmp_path):
+    """No hand-pinning: with the storage axis OPEN (attrs['tuner_axes']),
+    the climb finds (variant=fused, storage_dtype=int8) on its own at the
+    bandwidth-bound geometry, and it models strictly faster than the best
+    f32 fused point (narrower HBM traffic is the entire win)."""
+    task = fused["rmsnorm_swiglu_int8"]
+    assert task.attrs.get("tuner_axes") == ("storage_dtype",)
+    tr = tune(task, budget=8, cache=str(tmp_path))
+    best = tr.best.candidate
+    assert best.variant == "fused", tr.summary()
+    assert best.storage_dtype == "int8", tr.summary()
+    assert tr.best.ok
+    f32_fused = [t for t in tr.trials if t.candidate.variant == "fused"
+                 and t.candidate.storage_dtype == "f32" and t.ok]
+    assert f32_fused, "the climb must have evaluated the f32 fused point"
+    assert tr.best.ratio > max(t.ratio for t in f32_fused), \
+        "int8 storage must model faster than f32 at this geometry"
+
+
+def test_tuner_keeps_f32_at_compute_bound_small_geometry(fused, tmp_path):
+    """The negative: at a small-column geometry the quantized lane pad
+    (QLANE=512) inflates narrow tensors past their f32 footprint, so the
+    tuner must keep the f32 fused variant — quantization is discovered
+    only where it pays."""
+    base = fused["rmsnorm_swiglu_int8"]
+    small_shapes = {t: ((256, 96) if len(s) == 2 else (96,))
+                    for t, s in base.shapes.items()}
+    task = dataclasses.replace(base, name="rmsnorm_swiglu_small_q",
+                               shapes=small_shapes)
+    tr = tune(task, budget=8, cache=str(tmp_path))
+    assert tr.best.candidate.variant == "fused", tr.summary()
+    assert tr.best.candidate.storage_dtype == "f32", \
+        f"tuner must not quantize a compute-bound geometry: {tr.summary()}"

@@ -348,3 +348,48 @@ def test_generated_mlp_bwd_chains():
     want = x2.astype(np.float64) * (x64 * x1.astype(np.float64)) \
         + x3.astype(np.float64)
     np.testing.assert_allclose(np.asarray(y), want, rtol=2e-4, atol=1e-5)
+
+
+# ---------------- quantized-storage artifacts (DESIGN.md §17) --------------
+# Checked-in artifacts of the tuner-DISCOVERED int8-storage fused chains —
+# the storage axis is open on their tasks (attrs['tuner_axes']), never
+# hand-pinned, so regeneration re-finds (fused, int8) by search.
+
+def test_generated_rmsnorm_swiglu_int8():
+    """The resident quantized chain: f32-in/f32-out entry contract (the
+    wrapper quantizes narrow GM tensors itself), dequant fused into the
+    first compute pass, output within the documented int8 tolerance."""
+    from repro.core.fusion.chain import Q_VERIFY_TOL
+    rng = np.random.RandomState(17)
+    x = rng.randn(64, 4096).astype(np.float32)
+    w = rng.uniform(0.5, 1.5, 4096).astype(np.float32)
+    g = rng.randn(64, 4096).astype(np.float32)
+    y = G.rmsnorm_swiglu_int8.rmsnorm_swiglu_int8_fused(x, w, g,
+                                                        interpret=True)
+    x64, w64, g64 = (np.asarray(v, np.float64) for v in (x, w, g))
+    h = x64 / np.sqrt((x64 * x64).mean(-1, keepdims=True) + 1e-6) * w64
+    want = h / (1 + np.exp(-h)) * g64
+    rtol, atol = Q_VERIFY_TOL["int8"]
+    assert np.allclose(np.asarray(y), want, rtol=rtol, atol=atol), \
+        f"max abs err {np.max(np.abs(np.asarray(y) - want)):.4g}"
+    src = __import__("inspect").getsource(G.rmsnorm_swiglu_int8)
+    # the quantize glue and narrow GM storage are visible in the source
+    assert "astype(jnp.int8)" in src
+    assert "storage_dtype=int8" in src or "int8" in src
+
+
+def test_generated_attn_scores_int8_is_streaming_and_quantized():
+    """The streaming quantized chain: loop-carry stitching survived the
+    quant rewrite (running scalars visible), narrow GM params + the
+    round-half-up quantizer are in the emitted source, and make()
+    refuses foreign shapes.  (Numerics are covered at check shapes by
+    the quantized differential rows in tests/core/test_fusion.py —
+    the 786k-wide bench shape is not test-budget material.)"""
+    import inspect
+    src = inspect.getsource(G.attn_scores_int8)
+    assert "running scalars loop-carried" in src
+    assert "astype(jnp.int8)" in src
+    assert "jnp.floor" in src and "jnp.clip" in src   # round-half-up glue
+    with pytest.raises(ValueError, match="trailing dimension"):
+        G.attn_scores_int8.make({"input": (32, 512), "scale": (512,),
+                                 "mask": (512,), "output": (32, 512)})
